@@ -1,0 +1,44 @@
+//! Budget sweep (paper contribution 4: "impact of memory limit"):
+//! sweep the budget from 95% down toward the structural floor and
+//! report the duration/memory trade-off curve plus solve time.
+
+use moccasin::coordinator::{Coordinator, SolveRequest};
+use moccasin::generators::paper_graph;
+use moccasin::graph::topological_order;
+use moccasin::util::fmt_u64;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "G1".into());
+    let g = paper_graph(&name).expect("G1..G4, RW1..RW4, CM1, CM2");
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    let floor = g.working_set_floor();
+    println!(
+        "{name}: n={} m={}, peak={}, working-set floor={} ({:.0}%)",
+        g.n(), g.m(), fmt_u64(peak), fmt_u64(floor),
+        100.0 * floor as f64 / peak as f64
+    );
+    println!("{:>8} {:>12} {:>8} {:>8} {:>9}", "budget%", "budget", "TDI%", "remats", "time(s)");
+    let mut coord = Coordinator::new();
+    for pct in [95, 90, 85, 80, 75, 70, 65, 60] {
+        let budget = peak * pct / 100;
+        if budget < floor {
+            println!("{pct:>7}% {:>12} below working-set floor — provably infeasible", fmt_u64(budget));
+            continue;
+        }
+        let t0 = Instant::now();
+        let resp = coord.solve(
+            &g,
+            &SolveRequest { budget, time_limit: Duration::from_secs(20), ..Default::default() },
+        );
+        match resp.solution {
+            Some(sol) => println!(
+                "{pct:>7}% {:>12} {:>8.2} {:>8} {:>9.2}",
+                fmt_u64(budget), sol.eval.tdi_percent, sol.eval.remat_count,
+                t0.elapsed().as_secs_f64()
+            ),
+            None => println!("{pct:>7}% {:>12} no solution found", fmt_u64(budget)),
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Inference-serving scenario: a mobile-class inference graph (the
+//! paper's RW class) deployed against several device memory classes;
+//! for each class the coordinator computes a schedule and reports the
+//! achievable latency overhead — the compile-time product a deployment
+//! toolchain would ship.
+
+use moccasin::coordinator::{Coordinator, SolveRequest};
+use moccasin::generators::real_world_like;
+use moccasin::graph::topological_order;
+use moccasin::util::fmt_u64;
+use std::time::Duration;
+
+fn main() {
+    // mid-size commercial-like inference graph
+    let g = real_world_like("mobile-vision", 200, 520, 42);
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    println!(
+        "model graph: n={} m={}, unconstrained activation peak = {} units",
+        g.n(), g.m(), fmt_u64(peak)
+    );
+
+    // hypothetical device tiers with shrinking local SRAM
+    let tiers = [("flagship", 1.0f64), ("mid-tier", 0.85), ("budget", 0.7), ("iot", 0.55)];
+    let mut coord = Coordinator::new();
+    println!("{:<10} {:>12} {:>9} {:>8}", "device", "local mem", "TDI%", "remats");
+    for (tier, frac) in tiers {
+        let budget = (peak as f64 * frac) as u64;
+        let resp = coord.solve(
+            &g,
+            &SolveRequest { budget, time_limit: Duration::from_secs(15), ..Default::default() },
+        );
+        match resp.solution {
+            Some(sol) => println!(
+                "{tier:<10} {:>12} {:>9.2} {:>8}",
+                fmt_u64(budget), sol.eval.tdi_percent, sol.eval.remat_count
+            ),
+            None => println!(
+                "{tier:<10} {:>12}   does not fit even with rematerialization",
+                fmt_u64(budget)
+            ),
+        }
+    }
+    println!("(cache stats: {} misses, {} hits)", coord.misses, coord.hits);
+}

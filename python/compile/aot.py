@@ -1,0 +1,103 @@
+"""AOT lowering: JAX segments → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids. Each
+function is lowered with `return_tuple=True`, so the Rust side unwraps a
+tuple even for single outputs (see /opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile's
+`artifacts` target). Also writes `manifest.json` describing shapes so
+the Rust executor can size its tensor pool without parsing HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import DIMS
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    d = DIMS
+    act = f32(d.batch, d.seq, d.d_model)
+    specs = {
+        "embed_fwd": (model.embed_fwd, [i32(d.batch, d.seq), f32(d.vocab, d.d_model)]),
+        "block_fwd": (
+            model.block_fwd,
+            [
+                act,
+                f32(d.d_model, 3 * d.d_model),
+                f32(d.d_model, d.d_model),
+                f32(d.d_model, d.d_ff),
+                f32(d.d_ff, d.d_model),
+            ],
+        ),
+        "block_bwd": (
+            model.block_bwd,
+            [
+                act,
+                f32(d.d_model, 3 * d.d_model),
+                f32(d.d_model, d.d_model),
+                f32(d.d_model, d.d_ff),
+                f32(d.d_ff, d.d_model),
+                act,
+            ],
+        ),
+        "loss_grad": (
+            model.loss_grad,
+            [act, f32(d.d_model, d.vocab), i32(d.batch, d.seq)],
+        ),
+    }
+
+    manifest = {
+        "dims": d._asdict(),
+        "activation_bytes": 4 * d.batch * d.seq * d.d_model,
+        "artifacts": {},
+    }
+    for name, (fn, ex) in specs.items():
+        text = to_hlo_text(fn, *ex)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "num_inputs": len(ex),
+            "input_shapes": [list(s.shape) for s in ex],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

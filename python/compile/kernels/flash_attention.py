@@ -1,0 +1,85 @@
+"""L1: tiled flash-attention Pallas kernel (TPU-shaped, interpret mode).
+
+The workload's compute hot-spot. GPU flash-attention tiles for shared
+memory and tensor cores; the TPU adaptation (DESIGN.md
+§Hardware-Adaptation) tiles for VMEM via `BlockSpec`s — one (block_q, d)
+query panel resident per grid step, K/V panels streamed HBM→VMEM by the
+index maps — and feeds the MXU with `jnp.dot` panels, accumulating with
+the online-softmax recurrence in f32.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for both the pytest
+oracle checks and the AOT artifacts the Rust runtime loads. Real-TPU
+perf is estimated from the block shapes' VMEM footprint in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sm_scale: float):
+    """One (block_q, d) query panel against all K/V, online softmax."""
+    q = q_ref[...].astype(jnp.float32) * sm_scale  # (bq, d)
+    k = k_ref[...].astype(jnp.float32)  # (S, d)
+    v = v_ref[...].astype(jnp.float32)  # (S, d)
+    seq_len = k.shape[0]
+    bq = q.shape[0]
+
+    # online-softmax accumulators
+    m0 = jnp.full((bq,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, q.shape[1]), dtype=jnp.float32)
+
+    def body(start, carry):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, start * block_k, block_k)
+        vb = jax.lax.dynamic_slice_in_dim(v, start * block_k, block_k)
+        s = q @ kb.T  # (bq, bk) — MXU panel
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ vb
+        return m_new, l_new, acc_new
+
+    num_blocks = seq_len // block_k
+    m, l, acc = jax.lax.fori_loop(0, num_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K):
+    """Non-causal single-head attention over (B, S, D) tensors.
+
+    S must be divisible by the block sizes (padded by callers otherwise).
+    """
+    b, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    sm_scale = 1.0 / (d**0.5)
+
+    kernel = functools.partial(_attn_kernel, block_k=block_k, sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s // block_q),
+        in_specs=[
+            # query panel: one (block_q, d) tile per grid step in VMEM
+            pl.BlockSpec((None, block_q, d), lambda ib, iq: (ib, iq, 0)),
+            # K/V: full sequence per batch element (streamed inside the
+            # kernel block_k at a time)
+            pl.BlockSpec((None, s, d), lambda ib, iq: (ib, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda ib, iq: (ib, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda ib, iq: (ib, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)

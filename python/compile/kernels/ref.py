@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground
+truth every kernel is tested against)."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Plain softmax attention, f32 accumulation."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (d**0.5)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,130 @@
+"""L2: the workload model — a small transformer LM, segmented.
+
+The training compute graph of this model (embed → K transformer blocks →
+loss head, mirrored by the backward chain) is exactly the "U-net-like"
+structure the paper identifies as the profitable case for
+rematerialization (§1.1). Each segment is AOT-lowered to one HLO
+artifact by `aot.py`; the Rust executor runs the MOCCASIN schedule over
+these artifacts with a budget-enforcing tensor pool, re-invoking
+`block_fwd` whenever the schedule rematerializes an activation.
+
+The attention hot-spot inside `block_fwd` is the L1 Pallas
+flash-attention kernel. The backward segment uses the reference math
+(autodiff through an interpret-mode Pallas call is not supported for
+export); pytest asserts the two forwards agree, so the gradients are
+gradients of the function the kernel computes.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention
+from .kernels.ref import attention_ref
+
+
+class ModelDims(NamedTuple):
+    vocab: int = 256
+    d_model: int = 128
+    d_ff: int = 512
+    seq: int = 64
+    batch: int = 8
+    blocks: int = 4
+
+
+DIMS = ModelDims()
+
+
+def init_params(dims: ModelDims, seed: int = 0):
+    """Embedding, per-block weights, unembedding."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 2 + 4 * dims.blocks)
+    scale = lambda *shape: 1.0 / (shape[0] ** 0.5)
+    embed = jax.random.normal(ks[0], (dims.vocab, dims.d_model)) * 0.02
+    unembed = jax.random.normal(ks[1], (dims.d_model, dims.vocab)) * scale(dims.d_model)
+    blocks = []
+    for i in range(dims.blocks):
+        b = ks[2 + 4 * i : 6 + 4 * i]
+        blocks.append(
+            dict(
+                wqkv=jax.random.normal(b[0], (dims.d_model, 3 * dims.d_model))
+                * scale(dims.d_model),
+                wo=jax.random.normal(b[1], (dims.d_model, dims.d_model)) * scale(dims.d_model),
+                w1=jax.random.normal(b[2], (dims.d_model, dims.d_ff)) * scale(dims.d_model),
+                w2=jax.random.normal(b[3], (dims.d_ff, dims.d_model)) * scale(dims.d_ff),
+            )
+        )
+    return embed, blocks, unembed
+
+
+def _rms_norm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _block_body(x, wqkv, wo, w1, w2, attn_fn):
+    """Pre-norm transformer block: attention + MLP with residuals."""
+    h = _rms_norm(x)
+    qkv = h @ wqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    a = attn_fn(q, k, v)
+    x = x + a @ wo
+    h = _rms_norm(x)
+    x = x + jax.nn.gelu(h @ w1) @ w2
+    return x
+
+
+def embed_fwd(tokens, embed):
+    """tokens (B,S) i32 → activations (B,S,D)."""
+    return (embed[tokens],)
+
+
+def block_fwd(x, wqkv, wo, w1, w2):
+    """Forward segment with the Pallas attention kernel."""
+    return (_block_body(x, wqkv, wo, w1, w2, flash_attention),)
+
+
+def block_fwd_ref(x, wqkv, wo, w1, w2):
+    """Same segment on the pure-jnp oracle (bwd path + tests)."""
+    return (_block_body(x, wqkv, wo, w1, w2, attention_ref),)
+
+
+def block_bwd(x, wqkv, wo, w1, w2, dy):
+    """VJP of the block wrt input and weights."""
+    def f(x, wqkv, wo, w1, w2):
+        return _block_body(x, wqkv, wo, w1, w2, attention_ref)
+
+    _, vjp = jax.vjp(f, x, wqkv, wo, w1, w2)
+    return tuple(vjp(dy))  # (dx, dwqkv, dwo, dw1, dw2)
+
+
+def loss_grad(a, unembed, targets):
+    """Cross-entropy over the unembedding; returns (loss, da, dunembed)."""
+
+    def f(a, unembed):
+        logits = a @ unembed
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+        return nll.mean()
+
+    loss, (da, dun) = jax.value_and_grad(f, argnums=(0, 1))(a, unembed)
+    return (loss, da, dun)
+
+
+def train_reference_step(tokens, targets, embed, blocks, unembed, lr):
+    """Pure-JAX full training step (oracle for the Rust executor)."""
+    def loss_fn(blocks, unembed):
+        (a,) = embed_fwd(tokens, embed)
+        for b in blocks:
+            (a,) = block_fwd_ref(a, b["wqkv"], b["wo"], b["w1"], b["w2"])
+        logits = a @ unembed
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+        return nll.mean()
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(blocks, unembed)
+    gblocks, gun = grads
+    new_blocks = [
+        {k: b[k] - lr * gb[k] for k in b} for b, gb in zip(blocks, gblocks)
+    ]
+    return loss, new_blocks, unembed - lr * gun

@@ -1,0 +1,91 @@
+"""L2 correctness: segment shapes, kernel-vs-ref block equivalence,
+gradient sanity, and a few reference training steps that must reduce
+the loss (the oracle the Rust executor's loss curve is compared to)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.model import DIMS, ModelDims
+
+
+def small_dims():
+    return ModelDims(vocab=64, d_model=32, d_ff=64, seq=32, batch=2, blocks=2)
+
+
+def test_block_fwd_matches_ref():
+    d = small_dims()
+    embed, blocks, _ = model.init_params(d, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (d.batch, d.seq, d.d_model))
+    b = blocks[0]
+    (y_kernel,) = model.block_fwd(x, b["wqkv"], b["wo"], b["w1"], b["w2"])
+    (y_ref,) = model.block_fwd_ref(x, b["wqkv"], b["wo"], b["w1"], b["w2"])
+    np.testing.assert_allclose(y_kernel, y_ref, rtol=3e-5, atol=3e-5)
+
+
+def test_block_bwd_shapes_and_finite():
+    d = small_dims()
+    _, blocks, _ = model.init_params(d, seed=1)
+    b = blocks[0]
+    x = jax.random.normal(jax.random.PRNGKey(3), (d.batch, d.seq, d.d_model))
+    dy = jax.random.normal(jax.random.PRNGKey(4), (d.batch, d.seq, d.d_model))
+    dx, dwqkv, dwo, dw1, dw2 = model.block_bwd(x, b["wqkv"], b["wo"], b["w1"], b["w2"], dy)
+    assert dx.shape == x.shape
+    assert dwqkv.shape == b["wqkv"].shape
+    assert dwo.shape == b["wo"].shape
+    assert dw1.shape == b["w1"].shape
+    assert dw2.shape == b["w2"].shape
+    for g in (dx, dwqkv, dwo, dw1, dw2):
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_block_bwd_is_vjp_of_fwd():
+    # directional-derivative check: <f(x+eps u) - f(x-eps u)>/2eps ≈ <dy, J u>
+    d = small_dims()
+    _, blocks, _ = model.init_params(d, seed=5)
+    b = blocks[0]
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (d.batch, d.seq, d.d_model))
+    u = jax.random.normal(jax.random.PRNGKey(7), x.shape)
+    dy = jax.random.normal(jax.random.PRNGKey(8), x.shape)
+    eps = 1e-3
+    (fp,) = model.block_fwd_ref(x + eps * u, b["wqkv"], b["wo"], b["w1"], b["w2"])
+    (fm,) = model.block_fwd_ref(x - eps * u, b["wqkv"], b["wo"], b["w1"], b["w2"])
+    lhs = jnp.vdot(dy, (fp - fm) / (2 * eps))
+    dx = model.block_bwd(x, b["wqkv"], b["wo"], b["w1"], b["w2"], dy)[0]
+    rhs = jnp.vdot(dx, u)
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-2, atol=1e-3)
+
+
+def test_loss_grad_outputs():
+    d = small_dims()
+    _, _, unembed = model.init_params(d, seed=2)
+    a = jax.random.normal(jax.random.PRNGKey(9), (d.batch, d.seq, d.d_model))
+    targets = jax.random.randint(jax.random.PRNGKey(10), (d.batch, d.seq), 0, d.vocab)
+    loss, da, dun = model.loss_grad(a, unembed, targets)
+    assert loss.shape == ()
+    assert float(loss) > 0.0
+    assert da.shape == a.shape
+    assert dun.shape == unembed.shape
+
+
+def test_reference_training_reduces_loss():
+    d = small_dims()
+    embed, blocks, unembed = model.init_params(d, seed=3)
+    key = jax.random.PRNGKey(11)
+    # tiny synthetic corpus: next-token = (token + 1) % vocab
+    tokens = jax.random.randint(key, (d.batch, d.seq), 0, d.vocab)
+    targets = (tokens + 1) % d.vocab
+    losses = []
+    for _ in range(10):
+        loss, blocks, unembed = model.train_reference_step(
+            tokens, targets, embed, blocks, unembed, lr=0.2
+        )
+        losses.append(float(loss))
+    assert min(losses) < losses[0] * 0.9, losses
+
+
+def test_default_dims_consistent():
+    assert DIMS.seq % 64 == 0 or DIMS.seq % 32 == 0
+    assert DIMS.d_ff == 4 * DIMS.d_model

@@ -1,0 +1,44 @@
+//! Hot-path micro-benchmarks (custom harness): sequence evaluation and
+//! cumulative propagation throughput — the inner loops of Phase 1/LNS.
+
+use moccasin::generators::random_layered;
+use moccasin::graph::{topological_order, Evaluator};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<40} {:>12.1} us/iter", per * 1e6);
+}
+
+fn main() {
+    println!("== hot-path micro benches ==");
+    for (n, m) in [(100usize, 236usize), (250, 944), (1000, 5875)] {
+        let g = random_layered(&format!("rl{n}"), n, m, n as u64);
+        let order = topological_order(&g).unwrap();
+        let mut ev = Evaluator::new(&g);
+        bench(&format!("eval_sequence n={n}"), 2000, || {
+            let e = ev.eval(&order).unwrap();
+            std::hint::black_box(e.peak_mem);
+        });
+        bench(&format!("eval_profile n={n}"), 1000, || {
+            let e = ev.eval_profile(&order).unwrap();
+            std::hint::black_box(e.1.len());
+        });
+    }
+    // Phase-1 planner end to end on a mid graph
+    let g = random_layered("rl250", 250, 944, 2);
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    bench("phase1_greedy n=250 @90%", 5, || {
+        let s = moccasin::moccasin::greedy::greedy_remat(&g, &order, (peak as f64 * 0.9) as u64);
+        std::hint::black_box(s.map(|x| x.eval.duration));
+    });
+}

@@ -1,0 +1,16 @@
+//! Solver benchmarks (custom harness): quick versions of the paper's
+//! experiment grid — one row per table/figure family. Full runs:
+//! `moccasin bench all --time-limit 60`.
+
+use moccasin::bench;
+use std::time::Duration;
+
+fn main() {
+    let tl = Duration::from_secs(8);
+    println!("== solver bench (quick; full grid via `moccasin bench all`) ==");
+    bench::table1();
+    bench::ablation_topo();
+    bench::fig1(tl);
+    bench::fig6(tl, true);
+    bench::ablation_c(tl);
+}

@@ -1,0 +1,341 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§3). Each function prints the series/rows the paper
+//! reports and writes a CSV under `results/`. Absolute solve times are
+//! not comparable to the paper's 16-core workstation runs (our CP
+//! substrate is in-tree, not CP-SAT/Gurobi — see DESIGN.md
+//! "Substitutions"); the *shape* — who wins, who times out, where
+//! feasibility breaks — is the reproduction target.
+
+use crate::coordinator::{Backend, Coordinator, SolveRequest};
+use crate::generators::{paper_graph, random_layered, rw2};
+use crate::graph::{random_topological_order, topological_order, Graph};
+use crate::moccasin::{MoccasinSolver, StagedModel};
+use crate::util::Rng;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+fn results_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+fn write_csv(name: &str, contents: &str) {
+    let path = results_dir().join(name);
+    if let Err(e) = std::fs::write(&path, contents) {
+        eprintln!("warning: could not write {path:?}: {e}");
+    } else {
+        println!("  [csv] {}", path.display());
+    }
+}
+
+fn budget_at(g: &Graph, frac: f64) -> u64 {
+    let order = topological_order(g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    ((peak as f64) * frac) as u64
+}
+
+/// Figure 1: solve-progress (TDI % vs time) on the RW2-class graph
+/// (n=442, m=1247) at an 80% budget, MOCCASIN vs CHECKMATE.
+pub fn fig1(time_limit: Duration) {
+    println!("== Figure 1: solve progress, RW2 (442, 1247), M = 80% ==");
+    let g = rw2();
+    let budget = budget_at(&g, 0.8);
+    let base = g.total_duration() as f64;
+    let mut csv = String::from("method,elapsed_s,tdi_percent\n");
+    let mut coord = Coordinator::new();
+    for (name, backend) in
+        [("moccasin", Backend::Moccasin), ("checkmate", Backend::CheckmateMilp)]
+    {
+        let resp = coord.solve(
+            &g,
+            &SolveRequest { budget, time_limit, backend, ..Default::default() },
+        );
+        println!("-- {name}: {} improving solutions", resp.trace.len());
+        for (t, dur) in &resp.trace {
+            let tdi = 100.0 * (*dur as f64 - base) / base;
+            println!("   t={:>8.2}s  TDI={tdi:.2}%", t.as_secs_f64());
+            let _ = writeln!(csv, "{name},{:.3},{tdi:.4}", t.as_secs_f64());
+        }
+        if resp.trace.is_empty() {
+            println!("   (no solution within {time_limit:?} — {:?})", resp.error);
+            let _ = writeln!(csv, "{name},,");
+        }
+    }
+    write_csv("fig1.csv", &csv);
+}
+
+/// Figure 5: progress curves for RL G1–G4 under several budgets.
+pub fn fig5(time_limit: Duration, quick: bool) {
+    println!("== Figure 5: solve progress, random layered G1..G4 ==");
+    let graphs: &[&str] = if quick { &["G1", "G2"] } else { &["G1", "G2", "G3", "G4"] };
+    let fracs: &[f64] = if quick { &[0.9, 0.8] } else { &[0.95, 0.9, 0.85, 0.8] };
+    let mut csv = String::from("graph,budget_frac,method,elapsed_s,tdi_percent\n");
+    let mut coord = Coordinator::new();
+    for &name in graphs {
+        let g = paper_graph(name).unwrap();
+        let base = g.total_duration() as f64;
+        for &frac in fracs {
+            let budget = budget_at(&g, frac);
+            for (mname, backend) in
+                [("moccasin", Backend::Moccasin), ("checkmate", Backend::CheckmateMilp)]
+            {
+                let resp = coord.solve(
+                    &g,
+                    &SolveRequest { budget, time_limit, backend, ..Default::default() },
+                );
+                let last = resp
+                    .trace
+                    .last()
+                    .map(|(t, d)| {
+                        format!(
+                            "TDI {:.2}% @ {:.2}s",
+                            100.0 * (*d as f64 - base) / base,
+                            t.as_secs_f64()
+                        )
+                    })
+                    .unwrap_or_else(|| "no solution".into());
+                println!("  {name} M={frac:.2} {mname:9}: {last}");
+                for (t, d) in &resp.trace {
+                    let _ = writeln!(
+                        csv,
+                        "{name},{frac},{mname},{:.3},{:.4}",
+                        t.as_secs_f64(),
+                        100.0 * (*d as f64 - base) / base
+                    );
+                }
+            }
+        }
+    }
+    write_csv("fig5.csv", &csv);
+}
+
+/// Figure 6: time-to-best-solution vs n (log-log), M = 90%.
+pub fn fig6(time_limit: Duration, quick: bool) {
+    println!("== Figure 6: time to best solution vs n (M = 90%) ==");
+    let sizes: &[(usize, usize)] = if quick {
+        &[(25, 55), (50, 115), (100, 236), (175, 600)]
+    } else {
+        &[(25, 55), (50, 115), (100, 236), (175, 600), (250, 944), (500, 2461), (1000, 5875)]
+    };
+    let mut csv = String::from("n,m,method,time_to_best_s,tdi_percent,found\n");
+    let mut coord = Coordinator::new();
+    for &(n, m) in sizes {
+        let g = random_layered(&format!("rl{n}"), n, m, n as u64);
+        let base = g.total_duration() as f64;
+        let budget = budget_at(&g, 0.9);
+        for (mname, backend) in
+            [("moccasin", Backend::Moccasin), ("checkmate", Backend::CheckmateMilp)]
+        {
+            let resp = coord.solve(
+                &g,
+                &SolveRequest { budget, time_limit, backend, ..Default::default() },
+            );
+            match resp.trace.last() {
+                Some((t, d)) => {
+                    let tdi = 100.0 * (*d as f64 - base) / base;
+                    println!("  n={n:5} {mname:9}: best at {:.2}s (TDI {tdi:.2}%)", t.as_secs_f64());
+                    let _ = writeln!(csv, "{n},{m},{mname},{:.3},{tdi:.4},1", t.as_secs_f64());
+                }
+                None => {
+                    println!("  n={n:5} {mname:9}: no solution within {time_limit:?}");
+                    let _ = writeln!(csv, "{n},{m},{mname},,,0");
+                }
+            }
+        }
+    }
+    write_csv("fig6.csv", &csv);
+}
+
+/// Table 1: formulation complexity — actual variable/constraint counts
+/// from both model builders across n.
+pub fn table1() {
+    println!("== Table 1: formulation sizes (measured, C = 2) ==");
+    println!(
+        "{:>6} {:>8} | {:>12} {:>12} {:>12} | {:>14} {:>14}",
+        "n", "m", "mocc #bool", "mocc #int", "mocc #cons", "cm #bool", "cm #cons"
+    );
+    let mut csv =
+        String::from("n,m,moccasin_bools,moccasin_ints,moccasin_cons,checkmate_bools,checkmate_cons\n");
+    for &(n, m) in &[(25usize, 55usize), (50, 115), (100, 236), (250, 944), (500, 2461)] {
+        let g = random_layered(&format!("rl{n}"), n, m, n as u64);
+        let order = topological_order(&g).unwrap();
+        let budget = budget_at(&g, 0.9);
+        let sm = StagedModel::build(&g, &order, budget, &vec![2; g.n()]);
+        let (mb, mi, mc) = sm.complexity();
+        let (cb, cc) = crate::checkmate::formulation_size(&g, &order, budget);
+        println!(
+            "{n:>6} {m:>8} | {mb:>12} {mi:>12} {mc:>12} | {cb:>14} {cc:>14}"
+        );
+        let _ = writeln!(csv, "{n},{m},{mb},{mi},{mc},{cb},{cc}");
+    }
+    write_csv("table1.csv", &csv);
+}
+
+/// Table 2/3: TDI %, peak memory and time-to-best for the three methods
+/// on the paper's instances at 80% and 90% budgets.
+pub fn table2(time_limit: Duration, quick: bool) {
+    println!("== Table 2/3: all methods on all paper instances ==");
+    let names: &[&str] = if quick {
+        &["G1", "G2", "RW1", "CM1"]
+    } else {
+        &["G1", "G2", "G3", "G4", "RW1", "RW2", "RW3", "RW4", "CM1", "CM2"]
+    };
+    println!(
+        "{:<5} {:>11} | {:>8} {:>11} {:>8} | {:>8} {:>11} {:>8} | {:>8} {:>11} {:>8}",
+        "graph", "M", "cmTDI%", "cmPeak", "cmT(s)", "lpTDI%", "lpPeak", "lpT(s)", "moTDI%",
+        "moPeak", "moT(s)"
+    );
+    let mut csv = String::from(
+        "graph,n,m,budget,method,tdi_percent,peak_mem,time_s,feasible\n",
+    );
+    let mut coord = Coordinator::new();
+    for &name in names {
+        let g = paper_graph(name).unwrap();
+        let base = g.total_duration() as f64;
+        for frac in [0.9, 0.8] {
+            let budget = budget_at(&g, frac);
+            let mut cells: Vec<String> = Vec::new();
+            for (mname, backend) in [
+                ("checkmate_milp", Backend::CheckmateMilp),
+                ("lp_rounding", Backend::CheckmateLpRounding),
+                ("moccasin", Backend::Moccasin),
+            ] {
+                let resp = coord.solve(
+                    &g,
+                    &SolveRequest { budget, time_limit, backend, ..Default::default() },
+                );
+                match (&resp.solution, resp.trace.last()) {
+                    (Some(sol), last) => {
+                        let t = last.map(|(t, _)| t.as_secs_f64()).unwrap_or(0.0);
+                        let tdi = 100.0 * (sol.eval.duration as f64 - base) / base;
+                        let feas = sol.eval.peak_mem <= budget;
+                        cells.push(format!(
+                            "{tdi:>8.1} {:>11} {t:>8.1}",
+                            crate::util::fmt_u64(sol.eval.peak_mem)
+                        ));
+                        let _ = writeln!(
+                            csv,
+                            "{name},{},{},{budget},{mname},{tdi:.3},{},{t:.2},{}",
+                            g.n(),
+                            g.m(),
+                            sol.eval.peak_mem,
+                            u8::from(feas)
+                        );
+                    }
+                    _ => {
+                        cells.push(format!("{:>8} {:>11} {:>8}", "-", "-", "-"));
+                        let _ = writeln!(
+                            csv,
+                            "{name},{},{},{budget},{mname},,,,0",
+                            g.n(),
+                            g.m()
+                        );
+                    }
+                }
+            }
+            println!(
+                "{name:<5} {:>11} | {} | {} | {}",
+                crate::util::fmt_u64(budget),
+                cells[0],
+                cells[1],
+                cells[2]
+            );
+        }
+    }
+    write_csv("table2.csv", &csv);
+}
+
+/// C_v ablation (§3 / contribution 2): solution quality vs C.
+pub fn ablation_c(time_limit: Duration) {
+    println!("== Ablation: max rematerializations per node C ==");
+    let g = paper_graph("G1").unwrap();
+    let base = g.total_duration() as f64;
+    let budget = budget_at(&g, 0.8);
+    // Note: C binds the CP model (exact / window re-solves). The
+    // Phase-1 planner and removal polish are C-oblivious, so we report
+    // the *achieved* max per-node interval count alongside — the paper's
+    // finding (C=2 suffices) shows as achieved-C rarely exceeding 2.
+    let mut csv = String::from("c,tdi_percent,remats,achieved_max_c,feasible\n");
+    for c in 1..=4usize {
+        let solver = MoccasinSolver { c, time_limit, ..Default::default() };
+        let out = solver.solve(&g, budget, None);
+        match out.best {
+            Some(sol) => {
+                let tdi = 100.0 * (sol.eval.duration as f64 - base) / base;
+                let achieved = crate::moccasin::solution::intervals_per_node(&g, &sol.seq)
+                    .into_iter()
+                    .max()
+                    .unwrap_or(0);
+                println!(
+                    "  C={c}: TDI {tdi:.2}%  ({} remats, achieved max C = {achieved})",
+                    sol.eval.remat_count
+                );
+                let _ = writeln!(csv, "{c},{tdi:.4},{},{achieved},1", sol.eval.remat_count);
+            }
+            None => {
+                println!("  C={c}: infeasible");
+                let _ = writeln!(csv, "{c},,,,0");
+            }
+        }
+    }
+    write_csv("ablation_c.csv", &csv);
+}
+
+/// Input-topological-order ablation (§1.1): peak-memory variability
+/// across 50 random topological orders per graph.
+pub fn ablation_topo() {
+    println!("== Ablation: peak memory across 50 random topological orders ==");
+    let mut csv = String::from("graph,min_peak,median_peak,max_peak,spread_percent\n");
+    for name in ["G1", "G2", "RW1", "CM1"] {
+        let g = paper_graph(name).unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        let mut peaks: Vec<u64> = (0..50)
+            .map(|_| {
+                let o = random_topological_order(&g, &mut rng);
+                g.peak_mem_no_remat(&o).unwrap()
+            })
+            .collect();
+        peaks.sort_unstable();
+        let (mn, md, mx) = (peaks[0], peaks[25], peaks[49]);
+        let spread = 100.0 * (mx as f64 - mn as f64) / mn as f64;
+        println!("  {name}: min {mn}, median {md}, max {mx}  (spread {spread:.1}%)");
+        let _ = writeln!(csv, "{name},{mn},{md},{mx},{spread:.2}");
+    }
+    write_csv("ablation_topo.csv", &csv);
+}
+
+/// Run everything (the `bench all` CLI path).
+pub fn run_all(time_limit: Duration, quick: bool) {
+    table1();
+    ablation_topo();
+    fig1(time_limit);
+    fig5(time_limit, quick);
+    fig6(time_limit, quick);
+    table2(time_limit, quick);
+    ablation_c(time_limit);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_at_fraction() {
+        let g = random_layered("t", 50, 115, 1);
+        let b9 = budget_at(&g, 0.9);
+        let b8 = budget_at(&g, 0.8);
+        assert!(b8 < b9);
+    }
+
+    #[test]
+    fn table1_runs() {
+        // smoke: no panics, csv written
+        table1();
+    }
+
+    #[test]
+    fn ablation_topo_runs() {
+        ablation_topo();
+    }
+}

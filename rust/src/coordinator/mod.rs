@@ -1,0 +1,224 @@
+//! L3 coordinator: the solve service a downstream user (or the CLI)
+//! calls.
+//!
+//! Wraps the solver portfolio behind a cache: schedules are keyed by
+//! (graph fingerprint, budget, C), so a compiler pipeline that
+//! re-lowers the same model hits the cache instead of re-solving — the
+//! "compile-time" cost the paper optimizes is paid once per
+//! (graph, budget). Also exposes the CHECKMATE baselines behind the
+//! same interface for the benchmark harness.
+
+use crate::checkmate::{self, CheckmateError};
+use crate::graph::{topological_order, Graph, NodeId};
+use crate::moccasin::{MoccasinSolver, RematSolution, SolveOutcome};
+use crate::util::Deadline;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Which solver backend to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Moccasin,
+    CheckmateMilp,
+    CheckmateLpRounding,
+}
+
+/// A solve request.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub budget: u64,
+    pub c: usize,
+    pub time_limit: Duration,
+    pub backend: Backend,
+    /// optional explicit input topological order
+    pub order: Option<Vec<NodeId>>,
+}
+
+impl Default for SolveRequest {
+    fn default() -> Self {
+        SolveRequest {
+            budget: u64::MAX,
+            c: 2,
+            time_limit: Duration::from_secs(60),
+            backend: Backend::Moccasin,
+            order: None,
+        }
+    }
+}
+
+/// A solve response: the best schedule plus anytime metadata.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    pub solution: Option<RematSolution>,
+    /// (elapsed, duration) anytime trace
+    pub trace: Vec<(Duration, u64)>,
+    pub proved_optimal: bool,
+    pub from_cache: bool,
+    pub error: Option<String>,
+}
+
+/// The coordinator: solver portfolio + solution cache.
+#[derive(Default)]
+pub struct Coordinator {
+    cache: HashMap<(u64, u64, usize, u8), SolveResponse>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Coordinator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Solve (or fetch from cache).
+    pub fn solve(&mut self, graph: &Graph, req: &SolveRequest) -> SolveResponse {
+        let key = (graph.fingerprint(), req.budget, req.c, req.backend as u8);
+        if let Some(hit) = self.cache.get(&key) {
+            self.hits += 1;
+            let mut r = hit.clone();
+            r.from_cache = true;
+            return r;
+        }
+        self.misses += 1;
+        let resp = self.solve_uncached(graph, req);
+        self.cache.insert(key, resp.clone());
+        resp
+    }
+
+    fn solve_uncached(&self, graph: &Graph, req: &SolveRequest) -> SolveResponse {
+        let order = req
+            .order
+            .clone()
+            .unwrap_or_else(|| topological_order(graph).expect("DAG required"));
+        match req.backend {
+            Backend::Moccasin => {
+                let solver = MoccasinSolver {
+                    c: req.c,
+                    time_limit: req.time_limit,
+                    ..Default::default()
+                };
+                let out: SolveOutcome = solver.solve(graph, req.budget, Some(order));
+                SolveResponse {
+                    trace: out.trace.iter().map(|p| (p.elapsed, p.duration)).collect(),
+                    proved_optimal: out.proved_optimal,
+                    solution: out.best,
+                    from_cache: false,
+                    error: None,
+                }
+            }
+            Backend::CheckmateMilp => {
+                let deadline = Deadline::after(req.time_limit);
+                let mut trace = Vec::new();
+                let r = checkmate::solve_milp(graph, &order, req.budget, deadline, |sol| {
+                    trace.push((deadline.elapsed(), sol.eval.duration));
+                });
+                match r {
+                    Ok(res) => SolveResponse {
+                        solution: Some(res.solution),
+                        trace,
+                        proved_optimal: res.proved_optimal,
+                        from_cache: false,
+                        error: None,
+                    },
+                    Err(e) => SolveResponse {
+                        solution: None,
+                        trace,
+                        proved_optimal: matches!(e, CheckmateError::NoSolution),
+                        from_cache: false,
+                        error: Some(e.to_string()),
+                    },
+                }
+            }
+            Backend::CheckmateLpRounding => {
+                let t0 = std::time::Instant::now();
+                // iteration count scaled to the time limit (PDHG is the
+                // dominant cost)
+                let iters = (req.time_limit.as_millis() as usize * 2).clamp(2_000, 200_000);
+                match checkmate::solve_lp_rounding(graph, &order, req.budget, iters) {
+                    Ok(res) => SolveResponse {
+                        trace: vec![(t0.elapsed(), res.solution.eval.duration)],
+                        solution: Some(res.solution),
+                        proved_optimal: false,
+                        from_cache: false,
+                        error: None,
+                    },
+                    Err(e) => SolveResponse {
+                        solution: None,
+                        trace: Vec::new(),
+                        proved_optimal: false,
+                        from_cache: false,
+                        error: Some(e.to_string()),
+                    },
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Graph {
+        Graph::from_edges(
+            "c",
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+            vec![1; 5],
+            vec![5, 4, 4, 4, 1],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn cache_hit_on_second_solve() {
+        let g = chain();
+        let mut c = Coordinator::new();
+        let req = SolveRequest { budget: 10, time_limit: Duration::from_secs(5), ..Default::default() };
+        let a = c.solve(&g, &req);
+        assert!(!a.from_cache);
+        let b = c.solve(&g, &req);
+        assert!(b.from_cache);
+        assert_eq!(c.hits, 1);
+        assert_eq!(
+            a.solution.unwrap().eval.duration,
+            b.solution.unwrap().eval.duration
+        );
+    }
+
+    #[test]
+    fn different_budgets_are_different_entries() {
+        let g = chain();
+        let mut c = Coordinator::new();
+        let mut req = SolveRequest { budget: 10, time_limit: Duration::from_secs(5), ..Default::default() };
+        let _ = c.solve(&g, &req);
+        req.budget = 13;
+        let r = c.solve(&g, &req);
+        assert!(!r.from_cache);
+        assert_eq!(r.solution.unwrap().eval.remat_count, 0);
+    }
+
+    #[test]
+    fn backends_agree_on_tiny_graph() {
+        let g = chain();
+        let mut c = Coordinator::new();
+        let m = c.solve(
+            &g,
+            &SolveRequest { budget: 10, time_limit: Duration::from_secs(10), ..Default::default() },
+        );
+        let k = c.solve(
+            &g,
+            &SolveRequest {
+                budget: 10,
+                time_limit: Duration::from_secs(30),
+                backend: Backend::CheckmateMilp,
+                ..Default::default()
+            },
+        );
+        // paper §1.2: "demonstrate equivalence of solutions"
+        assert_eq!(
+            m.solution.unwrap().eval.duration,
+            k.solution.unwrap().eval.duration
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! Trailed finite domains.
+//!
+//! A domain is an ordered value universe plus `[lo, hi]` index bounds.
+//! The universe is either a contiguous integer range (stored as just a
+//! base — no materialization, so end-of-retention variables can range
+//! over all `n(n+1)/2` events for free) or an explicit strictly
+//! increasing value array (the staged start domains `{id(j,k) : j ≥ k}`).
+//! All solver-time updates are bound tightenings, so the trail only
+//! needs `(var, lo, hi)` triples — O(1) undo, no allocation during
+//! search. (Interior removals never happen: search branches `x = min` /
+//! `x ≥ min + 1`, and all propagators filter bounds.)
+
+use std::sync::Arc;
+
+/// Variable handle (dense index into the model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VarId(pub u32);
+
+#[derive(Debug, Clone)]
+enum Repr {
+    /// universe = { base, base+1, ... }
+    Range { base: i64 },
+    /// universe = explicit sorted values
+    Explicit(Arc<Vec<i64>>),
+}
+
+/// A finite integer domain.
+#[derive(Debug, Clone)]
+pub struct Domain {
+    repr: Repr,
+    /// inclusive index bounds into the universe
+    pub(crate) lo: u32,
+    pub(crate) hi: u32,
+}
+
+impl Domain {
+    /// Domain over explicit sorted distinct values.
+    pub fn new(values: Arc<Vec<i64>>) -> Self {
+        assert!(!values.is_empty());
+        let hi = values.len() as u32 - 1;
+        Domain { repr: Repr::Explicit(values), lo: 0, hi }
+    }
+
+    /// Domain over the contiguous range `[lb, ub]`.
+    pub fn new_range(lb: i64, ub: i64) -> Self {
+        assert!(lb <= ub && (ub - lb) < u32::MAX as i64);
+        Domain { repr: Repr::Range { base: lb }, lo: 0, hi: (ub - lb) as u32 }
+    }
+
+    #[inline]
+    fn value_at(&self, idx: u32) -> i64 {
+        match &self.repr {
+            Repr::Range { base } => base + idx as i64,
+            Repr::Explicit(v) => v[idx as usize],
+        }
+    }
+
+    #[inline]
+    pub fn min(&self) -> i64 {
+        self.value_at(self.lo)
+    }
+
+    #[inline]
+    pub fn max(&self) -> i64 {
+        self.value_at(self.hi)
+    }
+
+    #[inline]
+    pub fn is_fixed(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        (self.hi - self.lo + 1) as usize
+    }
+
+    pub fn contains(&self, v: i64) -> bool {
+        if v < self.min() || v > self.max() {
+            return false;
+        }
+        match &self.repr {
+            Repr::Range { .. } => true,
+            Repr::Explicit(vals) => {
+                vals[self.lo as usize..=self.hi as usize].binary_search(&v).is_ok()
+            }
+        }
+    }
+
+    /// Tighten to `>= v`. Returns whether the domain changed; `Err` on
+    /// wipe-out.
+    pub fn remove_below(&mut self, v: i64) -> Result<bool, ()> {
+        if v <= self.min() {
+            return Ok(false);
+        }
+        if v > self.max() {
+            return Err(());
+        }
+        match &self.repr {
+            Repr::Range { base } => {
+                self.lo = (v - base) as u32;
+            }
+            Repr::Explicit(vals) => {
+                let s = &vals[self.lo as usize..=self.hi as usize];
+                let off = s.partition_point(|&x| x < v);
+                self.lo += off as u32;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Tighten to `<= v`. Returns whether the domain changed; `Err` on
+    /// wipe-out.
+    pub fn remove_above(&mut self, v: i64) -> Result<bool, ()> {
+        if v >= self.max() {
+            return Ok(false);
+        }
+        if v < self.min() {
+            return Err(());
+        }
+        match &self.repr {
+            Repr::Range { base } => {
+                self.hi = (v - base) as u32;
+            }
+            Repr::Explicit(vals) => {
+                let s = &vals[self.lo as usize..=self.hi as usize];
+                let off = s.partition_point(|&x| x <= v);
+                self.hi = self.lo + off as u32 - 1;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Assign (must be contained).
+    pub fn assign(&mut self, v: i64) {
+        let ok1 = self.remove_below(v).expect("assign outside domain");
+        let ok2 = self.remove_above(v).expect("assign outside domain");
+        let _ = (ok1, ok2);
+        debug_assert!(self.is_fixed() && self.min() == v);
+    }
+
+    /// The fixed value (panics if unfixed).
+    pub fn value(&self) -> i64 {
+        debug_assert!(self.is_fixed());
+        self.min()
+    }
+
+    /// Snapshot of the index bounds for trailing.
+    #[inline]
+    pub fn bounds(&self) -> (u32, u32) {
+        (self.lo, self.hi)
+    }
+
+    /// Restore trailed index bounds.
+    #[inline]
+    pub fn restore(&mut self, b: (u32, u32)) {
+        self.lo = b.0;
+        self.hi = b.1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dom(vals: &[i64]) -> Domain {
+        Domain::new(Arc::new(vals.to_vec()))
+    }
+
+    #[test]
+    fn basic_bounds() {
+        let d = dom(&[2, 5, 9, 12]);
+        assert_eq!(d.min(), 2);
+        assert_eq!(d.max(), 12);
+        assert_eq!(d.size(), 4);
+        assert!(!d.is_fixed());
+        assert!(d.contains(9));
+        assert!(!d.contains(3));
+    }
+
+    #[test]
+    fn range_domain_no_materialization() {
+        let mut d = Domain::new_range(10, 1_000_000);
+        assert_eq!(d.min(), 10);
+        assert_eq!(d.max(), 1_000_000);
+        assert!(d.contains(500_000));
+        assert_eq!(d.remove_below(99), Ok(true));
+        assert_eq!(d.min(), 99);
+        assert_eq!(d.remove_above(200), Ok(true));
+        assert_eq!(d.max(), 200);
+        assert_eq!(d.size(), 102);
+        assert_eq!(d.remove_below(300), Err(()));
+    }
+
+    #[test]
+    fn remove_below_snaps_to_next_value() {
+        let mut d = dom(&[2, 5, 9, 12]);
+        assert_eq!(d.remove_below(3), Ok(true));
+        assert_eq!(d.min(), 5);
+        assert_eq!(d.remove_below(5), Ok(false));
+        assert_eq!(d.remove_below(13), Err(()));
+    }
+
+    #[test]
+    fn remove_above_snaps_to_prev_value() {
+        let mut d = dom(&[2, 5, 9, 12]);
+        assert_eq!(d.remove_above(11), Ok(true));
+        assert_eq!(d.max(), 9);
+        assert_eq!(d.remove_above(1), Err(()));
+    }
+
+    #[test]
+    fn assign_and_restore() {
+        let mut d = dom(&[2, 5, 9, 12]);
+        let snap = d.bounds();
+        d.assign(9);
+        assert!(d.is_fixed());
+        assert_eq!(d.value(), 9);
+        d.restore(snap);
+        assert_eq!((d.min(), d.max()), (2, 12));
+    }
+
+    #[test]
+    #[should_panic]
+    fn assign_outside_panics() {
+        let mut d = dom(&[2, 5]);
+        d.assign(3);
+    }
+}

@@ -1,0 +1,173 @@
+//! A from-scratch constraint-programming engine.
+//!
+//! The paper solves its retention-interval model with OR-Tools CP-SAT;
+//! Gurobi/OR-Tools are unavailable here, so this module provides the CP
+//! substrate the reproduction runs on (see DESIGN.md "Substitutions").
+//! It is a classic propagate-and-branch solver:
+//!
+//! * **Variables** hold finite integer domains represented as a shared
+//!   sorted value array plus trailed `[lo, hi]` index bounds — bounds
+//!   consistency only, which keeps trailing O(1) per change and is the
+//!   right trade-off for scheduling models (Booleans are 2-value
+//!   domains).
+//! * **Propagators** (constraints) are stored in an enum (static
+//!   dispatch): `LinearLe` (Σ cᵢ·xᵢ ≤ rhs, general integer coefficients),
+//!   `LeOffset` / conditional `LeOffset` (x + c ≤ y, optionally guarded
+//!   by a Boolean — interval validity), `CumulativeTimetable` (renewable
+//!   resource / the paper's memory constraint (4)), `Cover` (the
+//!   reservoir-style precedence constraint (5): an active start must be
+//!   covered by an active producer interval), and `AllDifferent`
+//!   (constraint (6), used only by the unstaged model).
+//! * **Search** is DFS with chronological backtracking, first-unfixed
+//!   variable selection over a caller-supplied branch order,
+//!   min-value-first branching (`x = min` / `x ≥ min+1`), and
+//!   branch-and-bound on a linear objective with an in-place-tightened
+//!   incumbent bound.
+//!
+//! The engine is deliberately small but complete: every solution it emits
+//! is checked against all constraints (`Model::check`), and the MOCCASIN
+//! layer re-validates each extracted sequence against the Appendix-A.3
+//! evaluator, so no solver bug can silently corrupt reported numbers.
+
+mod domain;
+mod propagators;
+mod search;
+
+pub use domain::{Domain, VarId};
+pub use propagators::{CumItem, Propagator};
+pub use search::{SearchResult, SearchStats, Solver, Status};
+
+use std::sync::Arc;
+
+/// A CP model: variables + constraints. Build once, solve with
+/// [`Solver`].
+pub struct Model {
+    pub(crate) domains: Vec<Domain>,
+    pub(crate) props: Vec<Propagator>,
+    /// var -> propagator indices watching it
+    pub(crate) watches: Vec<Vec<u32>>,
+}
+
+impl Default for Model {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Model {
+    pub fn new() -> Self {
+        Model { domains: Vec::new(), props: Vec::new(), watches: Vec::new() }
+    }
+
+    /// New variable over an explicit (strictly increasing) value set.
+    pub fn new_var_values(&mut self, values: Arc<Vec<i64>>) -> VarId {
+        assert!(!values.is_empty(), "empty domain");
+        debug_assert!(values.windows(2).all(|w| w[0] < w[1]), "values must be sorted/unique");
+        let id = VarId(self.domains.len() as u32);
+        self.domains.push(Domain::new(values));
+        self.watches.push(Vec::new());
+        id
+    }
+
+    /// New variable over the contiguous range `[lb, ub]`.
+    pub fn new_var(&mut self, lb: i64, ub: i64) -> VarId {
+        assert!(lb <= ub);
+        let id = VarId(self.domains.len() as u32);
+        self.domains.push(Domain::new_range(lb, ub));
+        self.watches.push(Vec::new());
+        id
+    }
+
+    /// New Boolean variable (domain {0, 1}).
+    pub fn new_bool(&mut self) -> VarId {
+        self.new_var(0, 1)
+    }
+
+    /// Number of variables.
+    pub fn num_vars(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Number of constraints.
+    pub fn num_constraints(&self) -> usize {
+        self.props.len()
+    }
+
+    /// Fix a variable at model-build time.
+    pub fn fix(&mut self, x: VarId, v: i64) {
+        let d = &mut self.domains[x.0 as usize];
+        assert!(d.contains(v), "fix({x:?}, {v}) outside domain");
+        d.assign(v);
+    }
+
+    fn push_prop(&mut self, p: Propagator) -> u32 {
+        let idx = self.props.len() as u32;
+        for v in p.watched_vars() {
+            self.watches[v.0 as usize].push(idx);
+        }
+        self.props.push(p);
+        idx
+    }
+
+    /// Σ cᵢ·xᵢ ≤ rhs.
+    pub fn linear_le(&mut self, terms: Vec<(i64, VarId)>, rhs: i64) {
+        self.push_prop(Propagator::LinearLe { terms, rhs });
+    }
+
+    /// Σ cᵢ·xᵢ ≥ rhs (encoded as the negated ≤).
+    pub fn linear_ge(&mut self, terms: Vec<(i64, VarId)>, rhs: i64) {
+        let neg = terms.into_iter().map(|(c, v)| (-c, v)).collect();
+        self.linear_le(neg, -rhs);
+    }
+
+    /// x + c ≤ y.
+    pub fn le_offset(&mut self, x: VarId, c: i64, y: VarId) {
+        self.push_prop(Propagator::LeOffset { b: None, x, c, y });
+    }
+
+    /// b = 1 → x + c ≤ y.
+    pub fn cond_le_offset(&mut self, b: VarId, x: VarId, c: i64, y: VarId) {
+        self.push_prop(Propagator::LeOffset { b: Some(b), x, c, y });
+    }
+
+    /// b1 = 1 → b2 = 1.
+    pub fn implies(&mut self, b1: VarId, b2: VarId) {
+        // b1 <= b2
+        self.linear_le(vec![(1, b1), (-1, b2)], 0);
+    }
+
+    /// Renewable-resource constraint: at every time point, the demands of
+    /// the active intervals covering it sum to ≤ `cap` (paper constraint
+    /// (4), CP-SAT's `AddCumulative`).
+    pub fn cumulative(&mut self, items: Vec<CumItem>, cap: i64) {
+        self.push_prop(Propagator::Cumulative { items, cap });
+    }
+
+    /// Reservoir-style precedence (paper constraint (5), CP-SAT's
+    /// `AddReservoirConstraintWithActive` specialisation): whenever
+    /// `active` = 1, some candidate `(a_j, s_j, e_j)` must satisfy
+    /// `s_j + 1 ≤ start ≤ e_j` with `a_j = 1`.
+    pub fn cover(
+        &mut self,
+        active: VarId,
+        start: VarId,
+        candidates: Vec<(VarId, VarId, VarId)>,
+    ) {
+        self.push_prop(Propagator::Cover { active, start, candidates });
+    }
+
+    /// All variables take pairwise distinct values (paper constraint (6);
+    /// only needed by the unstaged model).
+    pub fn all_different(&mut self, vars: Vec<VarId>) {
+        self.push_prop(Propagator::AllDifferent { vars });
+    }
+
+    /// Check a full assignment against every constraint (used to verify
+    /// emitted solutions; `None` = satisfied).
+    pub fn check(&self, assignment: &[i64]) -> Option<usize> {
+        self.props.iter().position(|p| !p.is_satisfied(assignment))
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,642 @@
+//! Constraint propagators (bounds-consistency filtering).
+//!
+//! Each propagator implements three things: the variables it watches,
+//! a `propagate` pass that tightens bounds / detects conflict, and a
+//! full-assignment `is_satisfied` check used to verify every emitted
+//! solution. Filtering strength is deliberately "timetable-grade" — the
+//! exactness of the solver comes from search; the final check makes
+//! soundness unconditional.
+
+use super::domain::{Domain, VarId};
+
+/// One optional interval contributing `demand` to a cumulative resource
+/// while active over `[start, end]` (inclusive, as in the paper: the
+/// memory block lives from the compute event through the last retention
+/// event).
+#[derive(Debug, Clone)]
+pub struct CumItem {
+    pub active: VarId,
+    pub start: VarId,
+    pub end: VarId,
+    pub demand: i64,
+}
+
+#[derive(Debug, Clone)]
+pub enum Propagator {
+    /// Σ cᵢ·xᵢ ≤ rhs.
+    LinearLe { terms: Vec<(i64, VarId)>, rhs: i64 },
+    /// (b = 1 →) x + c ≤ y.
+    LeOffset { b: Option<VarId>, x: VarId, c: i64, y: VarId },
+    /// Renewable resource: Σ_{i active, start_i ≤ t ≤ end_i} demand_i ≤ cap ∀t.
+    Cumulative { items: Vec<CumItem>, cap: i64 },
+    /// active = 1 → ∃ (a, s, e) ∈ candidates: a = 1 ∧ s + 1 ≤ start ≤ e.
+    Cover { active: VarId, start: VarId, candidates: Vec<(VarId, VarId, VarId)> },
+    /// Pairwise distinct values.
+    AllDifferent { vars: Vec<VarId> },
+}
+
+/// Conflict marker.
+pub struct Conflict;
+
+/// Mutable propagation context: domains + trail + changed-var log.
+pub struct Ctx<'a> {
+    pub domains: &'a mut [Domain],
+    /// (var, old_lo, old_hi) — undone in reverse order on backtrack.
+    pub trail: &'a mut Vec<(u32, u32, u32)>,
+    pub changed: &'a mut Vec<VarId>,
+}
+
+impl<'a> Ctx<'a> {
+    #[inline]
+    pub fn dom(&self, x: VarId) -> &Domain {
+        &self.domains[x.0 as usize]
+    }
+
+    #[inline]
+    pub fn min(&self, x: VarId) -> i64 {
+        self.dom(x).min()
+    }
+
+    #[inline]
+    pub fn max(&self, x: VarId) -> i64 {
+        self.dom(x).max()
+    }
+
+    #[inline]
+    pub fn is_fixed(&self, x: VarId) -> bool {
+        self.dom(x).is_fixed()
+    }
+
+    /// x ≥ v.
+    pub fn set_min(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
+        let d = &mut self.domains[x.0 as usize];
+        let (lo, hi) = d.bounds();
+        match d.remove_below(v) {
+            Ok(true) => {
+                self.trail.push((x.0, lo, hi));
+                self.changed.push(x);
+                Ok(())
+            }
+            Ok(false) => Ok(()),
+            Err(()) => {
+                d.restore((lo, hi));
+                Err(Conflict)
+            }
+        }
+    }
+
+    /// x ≤ v.
+    pub fn set_max(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
+        let d = &mut self.domains[x.0 as usize];
+        let (lo, hi) = d.bounds();
+        match d.remove_above(v) {
+            Ok(true) => {
+                self.trail.push((x.0, lo, hi));
+                self.changed.push(x);
+                Ok(())
+            }
+            Ok(false) => Ok(()),
+            Err(()) => {
+                d.restore((lo, hi));
+                Err(Conflict)
+            }
+        }
+    }
+
+    pub fn fix_var(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
+        self.set_min(x, v)?;
+        self.set_max(x, v)
+    }
+}
+
+impl Propagator {
+    /// Variables whose bound changes should re-run this propagator.
+    pub fn watched_vars(&self) -> Vec<VarId> {
+        match self {
+            Propagator::LinearLe { terms, .. } => terms.iter().map(|&(_, v)| v).collect(),
+            Propagator::LeOffset { b, x, y, .. } => {
+                let mut w = vec![*x, *y];
+                if let Some(b) = b {
+                    w.push(*b);
+                }
+                w
+            }
+            Propagator::Cumulative { items, .. } => items
+                .iter()
+                .flat_map(|i| [i.active, i.start, i.end])
+                .collect(),
+            Propagator::Cover { active, start, candidates } => {
+                let mut w = vec![*active, *start];
+                for &(a, s, e) in candidates {
+                    w.extend([a, s, e]);
+                }
+                w
+            }
+            Propagator::AllDifferent { vars } => vars.clone(),
+        }
+    }
+
+    /// Bounds filtering. `rhs_override` replaces the stored rhs for
+    /// `LinearLe` (used by branch-and-bound objective tightening).
+    pub fn propagate(&self, ctx: &mut Ctx) -> Result<(), Conflict> {
+        match self {
+            Propagator::LinearLe { terms, rhs } => prop_linear_le(terms, *rhs, ctx),
+            Propagator::LeOffset { b, x, c, y } => {
+                if let Some(b) = b {
+                    if ctx.max(*b) == 0 {
+                        return Ok(()); // guard false: constraint vacuous
+                    }
+                    if ctx.min(*b) == 0 {
+                        // guard undetermined: only check for entailment of
+                        // infeasibility → b must be 0
+                        if ctx.min(*x) + c > ctx.max(*y) {
+                            return ctx.set_max(*b, 0);
+                        }
+                        return Ok(());
+                    }
+                }
+                // enforce x + c <= y
+                ctx.set_min(*y, ctx.min(*x) + c)?;
+                ctx.set_max(*x, ctx.max(*y) - c)
+            }
+            Propagator::Cumulative { items, cap } => prop_cumulative(items, *cap, ctx),
+            Propagator::Cover { active, start, candidates } => {
+                prop_cover(*active, *start, candidates, ctx)
+            }
+            Propagator::AllDifferent { vars } => prop_all_different(vars, ctx),
+        }
+    }
+
+    /// Full-assignment satisfaction check.
+    pub fn is_satisfied(&self, a: &[i64]) -> bool {
+        let val = |v: VarId| a[v.0 as usize];
+        match self {
+            Propagator::LinearLe { terms, rhs } => {
+                terms.iter().map(|&(c, v)| c * val(v)).sum::<i64>() <= *rhs
+            }
+            Propagator::LeOffset { b, x, c, y } => {
+                b.map(|b| val(b) == 0).unwrap_or(false) || val(*x) + c <= val(*y)
+            }
+            Propagator::Cumulative { items, cap } => {
+                // load only changes at interval starts
+                for probe in items.iter().filter(|i| val(i.active) == 1) {
+                    let t = val(probe.start);
+                    let load: i64 = items
+                        .iter()
+                        .filter(|j| val(j.active) == 1)
+                        .filter(|j| val(j.start) <= t && t <= val(j.end))
+                        .map(|j| j.demand)
+                        .sum();
+                    if load > *cap {
+                        return false;
+                    }
+                }
+                true
+            }
+            Propagator::Cover { active, start, candidates } => {
+                if val(*active) == 0 {
+                    return true;
+                }
+                let t = val(*start);
+                candidates
+                    .iter()
+                    .any(|&(a_, s, e)| val(a_) == 1 && val(s) + 1 <= t && t <= val(e))
+            }
+            Propagator::AllDifferent { vars } => {
+                let mut vals: Vec<i64> = vars.iter().map(|&v| val(v)).collect();
+                vals.sort_unstable();
+                vals.windows(2).all(|w| w[0] != w[1])
+            }
+        }
+    }
+}
+
+fn prop_linear_le(terms: &[(i64, VarId)], rhs: i64, ctx: &mut Ctx) -> Result<(), Conflict> {
+    // min possible sum
+    let mut minsum: i64 = 0;
+    for &(c, v) in terms {
+        minsum += if c >= 0 { c * ctx.min(v) } else { c * ctx.max(v) };
+    }
+    let slack = rhs - minsum;
+    if slack < 0 {
+        return Err(Conflict);
+    }
+    for &(c, v) in terms {
+        if c > 0 {
+            let room = slack / c;
+            let ub = ctx.min(v) + room;
+            if ub < ctx.max(v) {
+                ctx.set_max(v, ub)?;
+            }
+        } else if c < 0 {
+            let room = slack / (-c);
+            let lb = ctx.max(v) - room;
+            if lb > ctx.min(v) {
+                ctx.set_min(v, lb)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Time-table cumulative filtering over mandatory parts.
+fn prop_cumulative(items: &[CumItem], cap: i64, ctx: &mut Ctx) -> Result<(), Conflict> {
+    // Mandatory part of an interval that is certainly active:
+    // [start.max, end.min] if nonempty.
+    // Build a compressed profile from (time, +d)/(time+1, -d) events.
+    let mut events: Vec<(i64, i64)> = Vec::new();
+    for it in items {
+        if ctx.min(it.active) != 1 {
+            continue; // not certainly active
+        }
+        let ms = ctx.max(it.start);
+        let me = ctx.min(it.end);
+        if ms <= me {
+            events.push((ms, it.demand));
+            events.push((me + 1, -it.demand));
+        }
+    }
+    if events.is_empty() {
+        return Ok(());
+    }
+    events.sort_unstable();
+    // profile as step function: breakpoints[i] = (time, load on [time, next))
+    let mut profile: Vec<(i64, i64)> = Vec::with_capacity(events.len());
+    let mut load = 0i64;
+    let mut i = 0;
+    while i < events.len() {
+        let t = events[i].0;
+        while i < events.len() && events[i].0 == t {
+            load += events[i].1;
+            i += 1;
+        }
+        profile.push((t, load));
+        if load > cap {
+            return Err(Conflict);
+        }
+    }
+    let load_at = |t: i64| -> i64 {
+        match profile.binary_search_by(|&(pt, _)| pt.cmp(&t)) {
+            Ok(k) => profile[k].1,
+            Err(0) => 0,
+            Err(k) => profile[k - 1].1,
+        }
+    };
+
+    // Filter each potentially-active interval against the profile
+    // (subtracting its own mandatory contribution).
+    for it in items {
+        if ctx.max(it.active) == 0 {
+            continue;
+        }
+        let d = it.demand;
+        if d == 0 {
+            continue;
+        }
+        // own mandatory contribution at time t (computed from bounds
+        // captured before each use, to keep the borrow checker happy)
+        let own = |ms: i64, me: i64, certainly_active: bool, t: i64| -> i64 {
+            if certainly_active && ms <= me && ms <= t && t <= me {
+                d
+            } else {
+                0
+            }
+        };
+        if ctx.min(it.active) == 1 {
+            // raise start lower bound while its point is overloaded
+            let mut guard = 0;
+            loop {
+                let s = ctx.min(it.start);
+                let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
+                if load_at(s) - own(ms, me, true, s) + d <= cap {
+                    break;
+                }
+                ctx.set_min(it.start, s + 1)?;
+                // keep interval consistent: end >= start
+                let s2 = ctx.min(it.start);
+                if ctx.min(it.end) < s2 {
+                    ctx.set_min(it.end, s2)?;
+                }
+                guard += 1;
+                if guard > 64 {
+                    break; // bounded effort; search completes the job
+                }
+            }
+            // lower end upper bound while its point is overloaded
+            let mut guard = 0;
+            loop {
+                let e = ctx.max(it.end);
+                let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
+                if load_at(e) - own(ms, me, true, e) + d <= cap {
+                    break;
+                }
+                ctx.set_max(it.end, e - 1)?;
+                let e2 = ctx.max(it.end);
+                if ctx.max(it.start) > e2 {
+                    ctx.set_max(it.start, e2)?;
+                }
+                guard += 1;
+                if guard > 64 {
+                    break;
+                }
+            }
+        } else if ctx.is_fixed(it.start) && ctx.is_fixed(it.end) {
+            // undetermined active with fixed placement: would it overload?
+            let s = ctx.min(it.start);
+            let e = ctx.min(it.end);
+            // check only at profile breakpoints within [s, e] plus s
+            let mut over = load_at(s) + d > cap;
+            if !over {
+                for &(t, l) in &profile {
+                    if t > e {
+                        break;
+                    }
+                    if t >= s && l + d > cap {
+                        over = true;
+                        break;
+                    }
+                }
+            }
+            if over {
+                ctx.set_max(it.active, 0)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Reservoir-style precedence cover.
+fn prop_cover(
+    active: VarId,
+    start: VarId,
+    candidates: &[(VarId, VarId, VarId)],
+    ctx: &mut Ctx,
+) -> Result<(), Conflict> {
+    if ctx.max(active) == 0 {
+        return Ok(());
+    }
+    let t_min = ctx.min(start);
+    let t_max = ctx.max(start);
+    // candidate j can possibly cover some t in [t_min, t_max] iff
+    // s_j.min + 1 <= t_max  and  e_j.max >= t_min  and a_j can be 1.
+    let mut possible: Vec<usize> = Vec::with_capacity(candidates.len());
+    for (j, &(a, s, e)) in candidates.iter().enumerate() {
+        if ctx.max(a) == 0 {
+            continue;
+        }
+        if ctx.min(s) + 1 <= t_max && ctx.max(e) >= t_min {
+            possible.push(j);
+        }
+    }
+    if possible.is_empty() {
+        if ctx.min(active) == 1 {
+            return Err(Conflict);
+        }
+        return ctx.set_max(active, 0);
+    }
+    if ctx.min(active) != 1 {
+        return Ok(()); // target not (yet) active: nothing to enforce
+    }
+    // Bounds on the covered start: it must fit inside the union of
+    // candidate windows.
+    let lo = possible.iter().map(|&j| ctx.min(candidates[j].1) + 1).min().unwrap();
+    let hi = possible.iter().map(|&j| ctx.max(candidates[j].2)).max().unwrap();
+    ctx.set_min(start, lo)?;
+    ctx.set_max(start, hi)?;
+    if possible.len() == 1 {
+        let (a, s, e) = candidates[possible[0]];
+        ctx.set_min(a, 1)?;
+        // s + 1 <= start <= e
+        ctx.set_max(s, ctx.max(start) - 1)?;
+        ctx.set_min(e, ctx.min(start))?;
+        ctx.set_min(start, ctx.min(s) + 1)?;
+        ctx.set_max(start, ctx.max(e))?;
+    }
+    Ok(())
+}
+
+fn prop_all_different(vars: &[VarId], ctx: &mut Ctx) -> Result<(), Conflict> {
+    // Fixed-value propagation with bound shaving (sufficient for the
+    // unstaged model's small instances; the staged model doesn't use it).
+    for (i, &x) in vars.iter().enumerate() {
+        if !ctx.is_fixed(x) {
+            continue;
+        }
+        let v = ctx.min(x);
+        for (j, &y) in vars.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            if ctx.is_fixed(y) {
+                if ctx.min(y) == v {
+                    return Err(Conflict);
+                }
+            } else {
+                if ctx.min(y) == v {
+                    ctx.set_min(y, v + 1)?;
+                }
+                if ctx.max(y) == v {
+                    ctx.set_max(y, v - 1)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn mk(doms: &[(i64, i64)]) -> Vec<Domain> {
+        doms.iter()
+            .map(|&(lo, hi)| Domain::new(Arc::new((lo..=hi).collect())))
+            .collect()
+    }
+
+    fn run(p: &Propagator, domains: &mut Vec<Domain>) -> Result<(), Conflict> {
+        let mut trail = Vec::new();
+        let mut changed = Vec::new();
+        let mut ctx = Ctx { domains, trail: &mut trail, changed: &mut changed };
+        p.propagate(&mut ctx)
+    }
+
+    #[test]
+    fn linear_le_filters_upper_bounds() {
+        // 2x + 3y <= 10, x,y in [0,5] → x <= 5, y <= 3
+        let mut d = mk(&[(0, 5), (0, 5)]);
+        let p = Propagator::LinearLe {
+            terms: vec![(2, VarId(0)), (3, VarId(1))],
+            rhs: 10,
+        };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[0].max(), 5);
+        assert_eq!(d[1].max(), 3);
+    }
+
+    #[test]
+    fn linear_le_conflict() {
+        let mut d = mk(&[(4, 5)]);
+        let p = Propagator::LinearLe { terms: vec![(1, VarId(0))], rhs: 3 };
+        assert!(run(&p, &mut d).is_err());
+    }
+
+    #[test]
+    fn linear_le_negative_coeff_raises_lb() {
+        // -x <= -3  →  x >= 3
+        let mut d = mk(&[(0, 5)]);
+        let p = Propagator::LinearLe { terms: vec![(-1, VarId(0))], rhs: -3 };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[0].min(), 3);
+    }
+
+    #[test]
+    fn le_offset_both_directions() {
+        // x + 2 <= y, x in [0,9], y in [1, 6] → x <= 4, y >= 2
+        let mut d = mk(&[(0, 9), (1, 6)]);
+        let p = Propagator::LeOffset { b: None, x: VarId(0), c: 2, y: VarId(1) };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[0].max(), 4);
+        assert_eq!(d[1].min(), 2);
+    }
+
+    #[test]
+    fn cond_le_offset_forces_guard_false() {
+        // b → x + 5 <= y with x>=4, y<=6 impossible → b = 0
+        let mut d = mk(&[(0, 1), (4, 9), (0, 6)]);
+        let p = Propagator::LeOffset { b: Some(VarId(0)), x: VarId(1), c: 5, y: VarId(2) };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[0].max(), 0);
+    }
+
+    #[test]
+    fn cumulative_mandatory_conflict() {
+        // two fixed active intervals [2,4] and [3,5], demands 2+2 > cap 3
+        let mut d = mk(&[(1, 1), (2, 2), (4, 4), (1, 1), (3, 3), (5, 5)]);
+        let p = Propagator::Cumulative {
+            items: vec![
+                CumItem { active: VarId(0), start: VarId(1), end: VarId(2), demand: 2 },
+                CumItem { active: VarId(3), start: VarId(4), end: VarId(5), demand: 2 },
+            ],
+            cap: 3,
+        };
+        assert!(run(&p, &mut d).is_err());
+    }
+
+    #[test]
+    fn cumulative_pushes_start_past_busy_region() {
+        // fixed interval [0,3] demand 2, cap 3; second interval demand 2
+        // with start in [0,6], end fixed 8 → start must be >= 4
+        let mut d = mk(&[(1, 1), (0, 0), (3, 3), (1, 1), (0, 6), (8, 8)]);
+        let p = Propagator::Cumulative {
+            items: vec![
+                CumItem { active: VarId(0), start: VarId(1), end: VarId(2), demand: 2 },
+                CumItem { active: VarId(3), start: VarId(4), end: VarId(5), demand: 2 },
+            ],
+            cap: 3,
+        };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[4].min(), 4);
+    }
+
+    #[test]
+    fn cumulative_disables_overloading_optional() {
+        // busy [0,5] at demand 3 (cap 3); optional fixed at [2,4] demand 1
+        // → active forced 0
+        let mut d = mk(&[(1, 1), (0, 0), (5, 5), (0, 1), (2, 2), (4, 4)]);
+        let p = Propagator::Cumulative {
+            items: vec![
+                CumItem { active: VarId(0), start: VarId(1), end: VarId(2), demand: 3 },
+                CumItem { active: VarId(3), start: VarId(4), end: VarId(5), demand: 1 },
+            ],
+            cap: 3,
+        };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[3].max(), 0);
+    }
+
+    #[test]
+    fn cover_conflict_when_no_candidate() {
+        // target active, start=5; candidate interval ends at 3 → conflict
+        let mut d = mk(&[(1, 1), (5, 5), (1, 1), (0, 0), (3, 3)]);
+        let p = Propagator::Cover {
+            active: VarId(0),
+            start: VarId(1),
+            candidates: vec![(VarId(2), VarId(3), VarId(4))],
+        };
+        assert!(run(&p, &mut d).is_err());
+    }
+
+    #[test]
+    fn cover_single_candidate_forces_activation_and_extends_end() {
+        // target start=5, candidate a in {0,1}, s=2, e in [2,9]
+        // → a=1, e >= 5
+        let mut d = mk(&[(1, 1), (5, 5), (0, 1), (2, 2), (2, 9)]);
+        let p = Propagator::Cover {
+            active: VarId(0),
+            start: VarId(1),
+            candidates: vec![(VarId(2), VarId(3), VarId(4))],
+        };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[2].min(), 1);
+        assert_eq!(d[4].min(), 5);
+    }
+
+    #[test]
+    fn cover_inactive_target_is_vacuous() {
+        let mut d = mk(&[(0, 0), (5, 5), (0, 1), (2, 2), (2, 3)]);
+        let p = Propagator::Cover {
+            active: VarId(0),
+            start: VarId(1),
+            candidates: vec![(VarId(2), VarId(3), VarId(4))],
+        };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[2].min(), 0); // untouched
+    }
+
+    #[test]
+    fn all_different_shaves_bounds() {
+        let mut d = mk(&[(3, 3), (3, 5), (0, 3)]);
+        let p = Propagator::AllDifferent { vars: vec![VarId(0), VarId(1), VarId(2)] };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[1].min(), 4);
+        assert_eq!(d[2].max(), 2);
+    }
+
+    #[test]
+    fn all_different_conflict() {
+        let mut d = mk(&[(3, 3), (3, 3)]);
+        let p = Propagator::AllDifferent { vars: vec![VarId(0), VarId(1)] };
+        assert!(run(&p, &mut d).is_err());
+    }
+
+    #[test]
+    fn satisfaction_checks() {
+        let lin = Propagator::LinearLe { terms: vec![(2, VarId(0)), (1, VarId(1))], rhs: 5 };
+        assert!(lin.is_satisfied(&[2, 1]));
+        assert!(!lin.is_satisfied(&[2, 2]));
+        let cum = Propagator::Cumulative {
+            items: vec![
+                CumItem { active: VarId(0), start: VarId(1), end: VarId(2), demand: 2 },
+                CumItem { active: VarId(3), start: VarId(4), end: VarId(5), demand: 2 },
+            ],
+            cap: 3,
+        };
+        // overlapping actives exceed cap
+        assert!(!cum.is_satisfied(&[1, 0, 4, 1, 2, 6]));
+        // disjoint ok
+        assert!(cum.is_satisfied(&[1, 0, 1, 1, 2, 6]));
+        // inactive ignored
+        assert!(cum.is_satisfied(&[1, 0, 4, 0, 2, 6]));
+        let cov = Propagator::Cover {
+            active: VarId(0),
+            start: VarId(1),
+            candidates: vec![(VarId(2), VarId(3), VarId(4))],
+        };
+        assert!(cov.is_satisfied(&[1, 5, 1, 2, 7]));
+        assert!(!cov.is_satisfied(&[1, 5, 1, 5, 7])); // s+1 <= t violated
+        assert!(!cov.is_satisfied(&[1, 5, 0, 2, 7])); // candidate inactive
+        assert!(cov.is_satisfied(&[0, 5, 0, 2, 7])); // target inactive
+    }
+}

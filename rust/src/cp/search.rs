@@ -1,0 +1,499 @@
+//! DFS branch-and-bound search over a [`Model`](super::Model).
+//!
+//! Chronological backtracking with a `(var, old_lo, old_hi)` trail;
+//! first-unfixed variable selection over a caller-supplied branch order;
+//! min-value branching (`x = min` on the left, `x ≥ min+1` on the right).
+//! Minimization via an incumbent bound propagated as an implicit
+//! `LinearLe` whose rhs tightens in place after every improving solution.
+//! Every emitted solution is verified against all constraints before it
+//! is reported — filtering bugs can cost time but never correctness.
+
+use super::domain::{Domain, VarId};
+use super::propagators::{Conflict, Ctx, Propagator};
+use super::Model;
+use crate::util::Deadline;
+
+/// Terminal status of a search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Search space exhausted with at least one solution: the incumbent
+    /// is optimal.
+    Optimal,
+    /// Limit hit with at least one solution.
+    Feasible,
+    /// Search space exhausted with no solution.
+    Infeasible,
+    /// Limit hit with no solution.
+    Unknown,
+}
+
+/// Search statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SearchStats {
+    pub nodes: u64,
+    pub conflicts: u64,
+    pub solutions: u64,
+    pub propagations: u64,
+}
+
+/// Result of a search: status, best assignment + objective, stats.
+pub struct SearchResult {
+    pub status: Status,
+    pub best: Option<(Vec<i64>, i64)>,
+    pub stats: SearchStats,
+}
+
+impl SearchResult {
+    pub fn found(&self) -> bool {
+        self.best.is_some()
+    }
+}
+
+/// Solver configuration.
+pub struct Solver {
+    pub deadline: Deadline,
+    pub node_limit: u64,
+    /// Stop as soon as the first solution is found (Phase-1 style).
+    pub first_solution: bool,
+    /// Optional branch guards, parallel to `branch_order`: if
+    /// `guards[i]` is fixed to 0, branch var `i` is skipped (used for
+    /// start/end vars of inactive optional intervals).
+    pub guards: Option<Vec<Option<VarId>>>,
+}
+
+impl Default for Solver {
+    fn default() -> Self {
+        Solver {
+            deadline: Deadline::unlimited(),
+            node_limit: u64::MAX,
+            first_solution: false,
+            guards: None,
+        }
+    }
+}
+
+struct Frame {
+    trail_len: usize,
+    var: VarId,
+    /// value tried on the left branch
+    value: i64,
+    /// whether the right branch (x ≥ value+1) has been taken
+    right_done: bool,
+}
+
+impl Solver {
+    /// Minimize `objective` (a linear expression, empty = satisfaction)
+    /// over `model`, branching on `branch_order` (vars absent from the
+    /// order must be fixed by propagation — all model vars is always a
+    /// safe choice). `on_solution` fires for every *improving* solution.
+    pub fn solve(
+        &self,
+        model: &Model,
+        objective: &[(i64, VarId)],
+        branch_order: &[VarId],
+        mut on_solution: impl FnMut(&[i64], i64),
+    ) -> SearchResult {
+        let mut domains: Vec<Domain> = model.domains.clone();
+        let mut trail: Vec<(u32, u32, u32)> = Vec::new();
+        let mut stats = SearchStats::default();
+        let mut best: Option<(Vec<i64>, i64)> = None;
+        // incumbent bound as rhs of the implicit objective constraint
+        let mut obj_bound: i64 = i64::MAX / 4;
+
+        // propagation queue state
+        let nprops = model.props.len();
+        let mut queue: Vec<u32> = Vec::with_capacity(nprops);
+        let mut in_queue = vec![false; nprops + 1]; // +1 = objective pseudo-prop
+        let obj_prop_id = nprops as u32;
+
+        let objective_prop = if objective.is_empty() {
+            None
+        } else {
+            Some(objective.to_vec())
+        };
+
+        // returns Err(Conflict) on failure
+        #[allow(clippy::too_many_arguments)]
+        fn propagate_fixpoint(
+            model: &Model,
+            domains: &mut Vec<Domain>,
+            trail: &mut Vec<(u32, u32, u32)>,
+            queue: &mut Vec<u32>,
+            in_queue: &mut [bool],
+            objective_prop: &Option<Vec<(i64, VarId)>>,
+            obj_bound: i64,
+            obj_prop_id: u32,
+            stats: &mut SearchStats,
+        ) -> Result<(), Conflict> {
+            let mut changed: Vec<VarId> = Vec::new();
+            while let Some(pid) = queue.pop() {
+                in_queue[pid as usize] = false;
+                stats.propagations += 1;
+                changed.clear();
+                let res = {
+                    let mut ctx = Ctx { domains, trail, changed: &mut changed };
+                    if pid == obj_prop_id {
+                        // objective bound: Σ c x ≤ obj_bound
+                        let terms = objective_prop.as_ref().unwrap();
+                        let tmp = Propagator::LinearLe { terms: terms.clone(), rhs: obj_bound };
+                        tmp.propagate(&mut ctx)
+                    } else {
+                        model.props[pid as usize].propagate(&mut ctx)
+                    }
+                };
+                if res.is_err() {
+                    if std::env::var("MOCCASIN_DEBUG_PROP").is_ok() {
+                        let kind = if pid == obj_prop_id {
+                            "objective".to_string()
+                        } else {
+                            match &model.props[pid as usize] {
+                                Propagator::LinearLe { rhs, terms } => {
+                                    format!("LinearLe(rhs={rhs},terms={})", terms.len())
+                                }
+                                Propagator::LeOffset { .. } => "LeOffset".into(),
+                                Propagator::Cumulative { .. } => "Cumulative".into(),
+                                Propagator::Cover { active, start, .. } => {
+                                    format!("Cover(active={active:?},start={start:?})")
+                                }
+                                Propagator::AllDifferent { .. } => "AllDifferent".into(),
+                            }
+                        };
+                        eprintln!("root conflict in {kind}");
+                    }
+                    queue.clear();
+                    in_queue.iter_mut().for_each(|b| *b = false);
+                    return Err(Conflict);
+                }
+                for &v in changed.iter() {
+                    for &w in &model.watches[v.0 as usize] {
+                        if !in_queue[w as usize] {
+                            in_queue[w as usize] = true;
+                            queue.push(w);
+                        }
+                    }
+                    if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
+                        in_queue[obj_prop_id as usize] = true;
+                        queue.push(obj_prop_id);
+                    }
+                }
+            }
+            Ok(())
+        }
+
+        let enqueue_all = |queue: &mut Vec<u32>, in_queue: &mut [bool]| {
+            queue.clear();
+            for p in 0..nprops as u32 {
+                queue.push(p);
+                in_queue[p as usize] = true;
+            }
+            if objective_prop.is_some() {
+                queue.push(obj_prop_id);
+                in_queue[obj_prop_id as usize] = true;
+            }
+        };
+
+        // root propagation
+        enqueue_all(&mut queue, &mut in_queue);
+        if propagate_fixpoint(
+            model,
+            &mut domains,
+            &mut trail,
+            &mut queue,
+            &mut in_queue,
+            &objective_prop,
+            obj_bound,
+            obj_prop_id,
+            &mut stats,
+        )
+        .is_err()
+        {
+            return SearchResult { status: Status::Infeasible, best: None, stats };
+        }
+
+        let mut frames: Vec<Frame> = Vec::new();
+        let mut limit_hit = false;
+
+        'search: loop {
+            // limits
+            if stats.nodes >= self.node_limit
+                || (stats.nodes % 128 == 0 && self.deadline.exceeded())
+            {
+                limit_hit = true;
+                break 'search;
+            }
+
+            // pick first unfixed branch var whose guard is not fixed 0
+            let pick = branch_order
+                .iter()
+                .enumerate()
+                .find(|&(i, v)| {
+                    if domains[v.0 as usize].is_fixed() {
+                        return false;
+                    }
+                    if let Some(gs) = &self.guards {
+                        if let Some(Some(g)) = gs.get(i) {
+                            let gd = &domains[g.0 as usize];
+                            if gd.is_fixed() && gd.min() == 0 {
+                                return false;
+                            }
+                        }
+                    }
+                    true
+                })
+                .map(|(_, &v)| v);
+
+            match pick {
+                None => {
+                    // all branch vars fixed → candidate solution (any
+                    // remaining model vars must be fixed by propagation;
+                    // if not, take their minimum — sound because we
+                    // verify below).
+                    let assignment: Vec<i64> =
+                        domains.iter().map(|d| d.min()).collect();
+                    if model.check(&assignment).is_none() {
+                        let obj_val: i64 =
+                            objective.iter().map(|&(c, v)| c * assignment[v.0 as usize]).sum();
+                        if best.as_ref().map(|&(_, b)| obj_val < b).unwrap_or(true) {
+                            stats.solutions += 1;
+                            on_solution(&assignment, obj_val);
+                            best = Some((assignment, obj_val));
+                            obj_bound = obj_val - 1;
+                            if self.first_solution || objective.is_empty() {
+                                break 'search;
+                            }
+                        }
+                    } else {
+                        // propagation left an unverifiable relaxed point;
+                        // treat as conflict
+                        stats.conflicts += 1;
+                    }
+                    // backtrack to continue the search
+                    if !backtrack(
+                        model,
+                        &mut frames,
+                        &mut domains,
+                        &mut trail,
+                        &mut queue,
+                        &mut in_queue,
+                        &objective_prop,
+                        obj_bound,
+                        obj_prop_id,
+                        &mut stats,
+                    ) {
+                        break 'search;
+                    }
+                }
+                Some(x) => {
+                    stats.nodes += 1;
+                    let v = domains[x.0 as usize].min();
+                    frames.push(Frame {
+                        trail_len: trail.len(),
+                        var: x,
+                        value: v,
+                        right_done: false,
+                    });
+                    // left branch: x = v
+                    let ok = {
+                        let mut changed = Vec::new();
+                        let mut ctx =
+                            Ctx { domains: &mut domains, trail: &mut trail, changed: &mut changed };
+                        let r = ctx.fix_var(x, v).is_ok();
+                        if r {
+                            for &cv in changed.iter() {
+                                for &w in &model.watches[cv.0 as usize] {
+                                    if !in_queue[w as usize] {
+                                        in_queue[w as usize] = true;
+                                        queue.push(w);
+                                    }
+                                }
+                                if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
+                                    in_queue[obj_prop_id as usize] = true;
+                                    queue.push(obj_prop_id);
+                                }
+                            }
+                        }
+                        r
+                    } && propagate_fixpoint(
+                        model,
+                        &mut domains,
+                        &mut trail,
+                        &mut queue,
+                        &mut in_queue,
+                        &objective_prop,
+                        obj_bound,
+                        obj_prop_id,
+                        &mut stats,
+                    )
+                    .is_ok();
+                    if !ok {
+                        stats.conflicts += 1;
+                        if !backtrack(
+                            model,
+                            &mut frames,
+                            &mut domains,
+                            &mut trail,
+                            &mut queue,
+                            &mut in_queue,
+                            &objective_prop,
+                            obj_bound,
+                            obj_prop_id,
+                            &mut stats,
+                        ) {
+                            break 'search;
+                        }
+                    }
+                }
+            }
+        }
+
+        let status = match (&best, limit_hit) {
+            (Some(_), false) => Status::Optimal,
+            (Some(_), true) => Status::Feasible,
+            (None, false) => Status::Infeasible,
+            (None, true) => Status::Unknown,
+        };
+        // first_solution mode exits the loop without exhausting: report
+        // Feasible, not Optimal (unless infeasible/unknown).
+        let status = if self.first_solution && best.is_some() {
+            Status::Feasible
+        } else if !limit_hit && objective.is_empty() && best.is_some() {
+            Status::Feasible // satisfaction problem: "a" solution
+        } else {
+            status
+        };
+        SearchResult { status, best, stats }
+    }
+}
+
+/// Undo frames until a right branch can be taken; apply it and
+/// re-propagate. Returns false when the root is exhausted.
+#[allow(clippy::too_many_arguments)]
+fn backtrack(
+    model: &Model,
+    frames: &mut Vec<Frame>,
+    domains: &mut Vec<Domain>,
+    trail: &mut Vec<(u32, u32, u32)>,
+    queue: &mut Vec<u32>,
+    in_queue: &mut [bool],
+    objective_prop: &Option<Vec<(i64, VarId)>>,
+    obj_bound: i64,
+    obj_prop_id: u32,
+    stats: &mut SearchStats,
+) -> bool {
+    loop {
+        let Some(mut f) = frames.pop() else {
+            return false;
+        };
+        // undo to the frame's trail mark
+        while trail.len() > f.trail_len {
+            let (var, lo, hi) = trail.pop().unwrap();
+            domains[var as usize].restore((lo, hi));
+        }
+        if f.right_done {
+            continue; // both branches exhausted here; keep unwinding
+        }
+        // right branch: x >= value + 1
+        f.right_done = true;
+        let x = f.var;
+        let v = f.value;
+        frames.push(f);
+        let ok = {
+            let mut changed = Vec::new();
+            let mut ctx = Ctx { domains, trail, changed: &mut changed };
+            let r = ctx.set_min(x, v + 1).is_ok();
+            if r {
+                for &cv in changed.iter() {
+                    for &w in &model.watches[cv.0 as usize] {
+                        if !in_queue[w as usize] {
+                            in_queue[w as usize] = true;
+                            queue.push(w);
+                        }
+                    }
+                    if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
+                        in_queue[obj_prop_id as usize] = true;
+                        queue.push(obj_prop_id);
+                    }
+                }
+            }
+            r
+        };
+        // also re-propagate with the (possibly tightened) objective bound
+        let ok = ok
+            && propagate_fixpoint_outer(
+                model, domains, trail, queue, in_queue, objective_prop, obj_bound, obj_prop_id,
+                stats,
+            )
+            .is_ok();
+        if ok {
+            return true;
+        }
+        stats.conflicts += 1;
+        // right branch failed too: unwind further
+        let f = frames.pop().unwrap();
+        while trail.len() > f.trail_len {
+            let (var, lo, hi) = trail.pop().unwrap();
+            domains[var as usize].restore((lo, hi));
+        }
+    }
+}
+
+/// Fixpoint propagation (free function twin of the closure inside
+/// `solve`, used by `backtrack`).
+#[allow(clippy::too_many_arguments)]
+fn propagate_fixpoint_outer(
+    model: &Model,
+    domains: &mut Vec<Domain>,
+    trail: &mut Vec<(u32, u32, u32)>,
+    queue: &mut Vec<u32>,
+    in_queue: &mut [bool],
+    objective_prop: &Option<Vec<(i64, VarId)>>,
+    obj_bound: i64,
+    obj_prop_id: u32,
+    stats: &mut SearchStats,
+) -> Result<(), Conflict> {
+    // after a right branch, conservatively re-run everything (bound may
+    // have tightened since this subtree was entered)
+    queue.clear();
+    for p in 0..model.props.len() as u32 {
+        queue.push(p);
+        in_queue[p as usize] = true;
+    }
+    if objective_prop.is_some() {
+        queue.push(obj_prop_id);
+        in_queue[obj_prop_id as usize] = true;
+    }
+    let mut changed: Vec<VarId> = Vec::new();
+    while let Some(pid) = queue.pop() {
+        in_queue[pid as usize] = false;
+        stats.propagations += 1;
+        changed.clear();
+        let res = {
+            let mut ctx = Ctx { domains, trail, changed: &mut changed };
+            if pid == obj_prop_id {
+                let terms = objective_prop.as_ref().unwrap();
+                let tmp = Propagator::LinearLe { terms: terms.clone(), rhs: obj_bound };
+                tmp.propagate(&mut ctx)
+            } else {
+                model.props[pid as usize].propagate(&mut ctx)
+            }
+        };
+        if res.is_err() {
+            queue.clear();
+            in_queue.iter_mut().for_each(|b| *b = false);
+            return Err(Conflict);
+        }
+        for &v in changed.iter() {
+            for &w in &model.watches[v.0 as usize] {
+                if !in_queue[w as usize] {
+                    in_queue[w as usize] = true;
+                    queue.push(w);
+                }
+            }
+            if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
+                in_queue[obj_prop_id as usize] = true;
+                queue.push(obj_prop_id);
+            }
+        }
+    }
+    Ok(())
+}

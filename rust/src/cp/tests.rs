@@ -1,0 +1,197 @@
+//! Engine-level integration tests on problems with known answers.
+
+use super::*;
+use crate::util::Deadline;
+use std::time::Duration;
+
+fn all_vars(m: &Model) -> Vec<VarId> {
+    (0..m.num_vars() as u32).map(VarId).collect()
+}
+
+#[test]
+fn satisfaction_simple() {
+    // x + y <= 4, x >= 3 → first solution x=3, y in {0,1}
+    let mut m = Model::new();
+    let x = m.new_var(0, 9);
+    let y = m.new_var(0, 9);
+    m.linear_le(vec![(1, x), (1, y)], 4);
+    m.linear_ge(vec![(1, x)], 3);
+    let s = Solver { first_solution: true, ..Default::default() };
+    let r = s.solve(&m, &[], &all_vars(&m), |_, _| {});
+    assert!(r.found());
+    let (a, _) = r.best.unwrap();
+    assert!(a[0] >= 3 && a[0] + a[1] <= 4);
+}
+
+#[test]
+fn infeasible_detected() {
+    let mut m = Model::new();
+    let x = m.new_var(0, 3);
+    m.linear_ge(vec![(1, x)], 10);
+    let s = Solver::default();
+    let r = s.solve(&m, &[], &all_vars(&m), |_, _| {});
+    assert_eq!(r.status, Status::Infeasible);
+}
+
+#[test]
+fn optimize_knapsack_like() {
+    // maximize 5a + 4b + 3c with 2a + 3b + c <= 4 over Booleans
+    // = minimize -(...). Optimal: a=1, c=1 (value 8), b=0.
+    let mut m = Model::new();
+    let a = m.new_bool();
+    let b = m.new_bool();
+    let c = m.new_bool();
+    m.linear_le(vec![(2, a), (3, b), (1, c)], 4);
+    let s = Solver::default();
+    let r = s.solve(&m, &[(-5, a), (-4, b), (-3, c)], &all_vars(&m), |_, _| {});
+    assert_eq!(r.status, Status::Optimal);
+    let (sol, obj) = r.best.unwrap();
+    assert_eq!(obj, -8);
+    assert_eq!((sol[0], sol[1], sol[2]), (1, 0, 1));
+}
+
+#[test]
+fn objective_bound_prunes_and_callback_improves() {
+    // minimize x subject to x >= 2 after propagation through y
+    let mut m = Model::new();
+    let x = m.new_var(0, 50);
+    let y = m.new_var(10, 20);
+    // y - x <= 8  →  x >= y - 8 >= 2
+    m.linear_le(vec![(1, y), (-1, x)], 8);
+    let s = Solver::default();
+    let mut seen = Vec::new();
+    let r = s.solve(&m, &[(1, x)], &all_vars(&m), |_, o| seen.push(o));
+    assert_eq!(r.status, Status::Optimal);
+    assert_eq!(r.best.unwrap().1, 2);
+    // objective values must be strictly improving
+    assert!(seen.windows(2).all(|w| w[1] < w[0]));
+    assert_eq!(*seen.last().unwrap(), 2);
+}
+
+#[test]
+fn cumulative_scheduling_tiny() {
+    // 3 unit-demand intervals of length 2 on capacity 1, horizon [0,9]:
+    // must be pairwise disjoint.
+    let mut m = Model::new();
+    let mut items = Vec::new();
+    let mut vars = Vec::new();
+    for _ in 0..3 {
+        let a = m.new_bool();
+        m.fix(a, 1);
+        let s = m.new_var(0, 9);
+        let e = m.new_var(0, 9);
+        m.le_offset(s, 1, e); // length >= 2 (end inclusive)
+        m.le_offset(e, -9, s); // end - s <= ... keep simple: e <= s+9 always true
+        items.push(CumItem { active: a, start: s, end: e, demand: 1 });
+        vars.push((s, e));
+    }
+    m.cumulative(items.clone(), 1);
+    let s = Solver { first_solution: true, ..Default::default() };
+    let r = s.solve(&m, &[], &all_vars(&m), |_, _| {});
+    assert!(r.found());
+    let (sol, _) = r.best.unwrap();
+    // verify disjoint
+    for i in 0..3 {
+        for j in i + 1..3 {
+            let (si, ei) = (sol[vars[i].0 .0 as usize], sol[vars[i].1 .0 as usize]);
+            let (sj, ej) = (sol[vars[j].0 .0 as usize], sol[vars[j].1 .0 as usize]);
+            assert!(ei < sj || ej < si, "intervals overlap: [{si},{ei}] [{sj},{ej}]");
+        }
+    }
+}
+
+#[test]
+fn cover_requires_producer_interval() {
+    // consumer starts at t in [1,5]; producer interval (a,s,e) with s
+    // fixed 0, e in [0,5]; consumer active → e >= t.
+    let mut m = Model::new();
+    let ca = m.new_bool();
+    m.fix(ca, 1);
+    let ct = m.new_var(3, 5);
+    let pa = m.new_bool();
+    let ps = m.new_var(0, 0);
+    let pe = m.new_var(0, 5);
+    m.cover(ca, ct, vec![(pa, ps, pe)]);
+    let s = Solver { first_solution: true, ..Default::default() };
+    let r = s.solve(&m, &[], &all_vars(&m), |_, _| {});
+    assert!(r.found());
+    let (sol, _) = r.best.unwrap();
+    assert_eq!(sol[pa.0 as usize], 1);
+    assert!(sol[pe.0 as usize] >= sol[ct.0 as usize]);
+}
+
+#[test]
+fn all_different_permutation() {
+    let mut m = Model::new();
+    let vars: Vec<VarId> = (0..4).map(|_| m.new_var(0, 3)).collect();
+    m.all_different(vars.clone());
+    // force descending-ish via linear constraints: x0 >= 2, x1 >= 2
+    m.linear_ge(vec![(1, vars[0])], 2);
+    m.linear_ge(vec![(1, vars[1])], 2);
+    let s = Solver { first_solution: true, ..Default::default() };
+    let r = s.solve(&m, &all_vars(&m).iter().map(|&v| (0i64, v)).collect::<Vec<_>>()[..0].to_vec(), &all_vars(&m), |_, _| {});
+    assert!(r.found());
+    let (sol, _) = r.best.unwrap();
+    let mut vals: Vec<i64> = vars.iter().map(|v| sol[v.0 as usize]).collect();
+    assert!(vals[0] >= 2 && vals[1] >= 2);
+    vals.sort_unstable();
+    assert_eq!(vals, vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn node_limit_reports_unknown_or_feasible() {
+    // a problem big enough not to finish in 1 node
+    let mut m = Model::new();
+    let vars: Vec<VarId> = (0..20).map(|_| m.new_var(0, 9)).collect();
+    m.all_different(vars[..10].to_vec());
+    let s = Solver { node_limit: 1, ..Default::default() };
+    let r = s.solve(&m, &[(1, vars[0])], &all_vars(&m), |_, _| {});
+    assert!(matches!(r.status, Status::Unknown | Status::Feasible));
+}
+
+#[test]
+fn deadline_zero_stops_quickly() {
+    let mut m = Model::new();
+    let vars: Vec<VarId> = (0..30).map(|_| m.new_var(0, 29)).collect();
+    m.all_different(vars.clone());
+    let s = Solver {
+        deadline: Deadline::after(Duration::from_millis(0)),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let _ = s.solve(&m, &[(1, vars[0])], &all_vars(&m), |_, _| {});
+    assert!(t0.elapsed() < Duration::from_secs(2));
+}
+
+#[test]
+fn implies_propagates() {
+    let mut m = Model::new();
+    let b1 = m.new_bool();
+    let b2 = m.new_bool();
+    m.implies(b1, b2);
+    m.fix(b1, 1);
+    let s = Solver { first_solution: true, ..Default::default() };
+    let r = s.solve(&m, &[], &all_vars(&m), |_, _| {});
+    let (sol, _) = r.best.unwrap();
+    assert_eq!(sol[b2.0 as usize], 1);
+}
+
+#[test]
+fn check_rejects_violating_assignment() {
+    let mut m = Model::new();
+    let x = m.new_var(0, 5);
+    let y = m.new_var(0, 5);
+    m.le_offset(x, 1, y);
+    assert_eq!(m.check(&[2, 3]), None);
+    assert_eq!(m.check(&[3, 3]), Some(0));
+}
+
+#[test]
+fn variable_counts_reported() {
+    let mut m = Model::new();
+    let _ = m.new_var(0, 5);
+    let _ = m.new_bool();
+    m.linear_le(vec![], 0);
+    assert_eq!(m.num_vars(), 2);
+    assert_eq!(m.num_constraints(), 1);
+}

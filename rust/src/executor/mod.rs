@@ -1,0 +1,395 @@
+//! Memory-managed schedule executor: runs a rematerialization sequence
+//! over real XLA executables with a budget-enforcing tensor pool.
+//!
+//! This is the end-to-end proof that MOCCASIN's schedules work: the
+//! transformer-LM training graph (embed → K blocks → loss → backward
+//! chain) is built at *segment* granularity, each node backed by an AOT
+//! artifact (`python/compile/aot.py`); the executor
+//!
+//! 1. profiles one no-remat step to get real per-segment durations,
+//! 2. asks [`MoccasinSolver`] for a schedule under the activation-memory
+//!    budget,
+//! 3. executes the schedule for N training steps, re-running `block_fwd`
+//!    wherever the schedule rematerializes an activation, with a tensor
+//!    pool that asserts the Appendix-A.3 footprint never exceeds the
+//!    budget, and applies host-side SGD from the streamed gradients.
+//!
+//! Weights are pinned outside the pool (they are not schedulable state —
+//! the paper's problem is intermediate-tensor memory).
+
+use crate::graph::{Graph, NodeId};
+use crate::moccasin::{intervals_from_sequence, MoccasinSolver};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// What each graph node executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    Embed,
+    /// forward of block i (0-based)
+    Fwd(usize),
+    Loss,
+    /// backward of block i
+    Bwd(usize),
+}
+
+/// The segment-level training graph: `2K + 2` nodes.
+pub struct SegmentGraph {
+    pub graph: Graph,
+    pub kinds: Vec<SegKind>,
+}
+
+/// Build the training graph for `k` blocks with `act_bytes` per
+/// activation and per-node durations `w` (profiled or unit).
+pub fn training_graph(k: usize, act_bytes: u64, w: &[u64]) -> SegmentGraph {
+    let n = 2 * k + 2;
+    assert_eq!(w.len(), n);
+    let mut edges: Vec<(NodeId, NodeId)> = Vec::new();
+    let mut kinds = Vec::with_capacity(n);
+    kinds.push(SegKind::Embed); // node 0 → a0
+    for i in 0..k {
+        kinds.push(SegKind::Fwd(i)); // node 1+i: a_i → a_{i+1}
+        edges.push((i as NodeId, (i + 1) as NodeId));
+    }
+    kinds.push(SegKind::Loss); // node k+1: consumes a_k, produces d_k
+    edges.push((k as NodeId, (k + 1) as NodeId));
+    for j in 0..k {
+        let i = k - 1 - j; // block index for this backward node
+        let node = (k + 2 + j) as NodeId;
+        kinds.push(SegKind::Bwd(i));
+        // needs the incoming gradient (previous bwd / loss) …
+        edges.push((node - 1, node));
+        // … and the block's *input* activation a_i (output of node i)
+        edges.push((i as NodeId, node));
+    }
+    let mem = vec![act_bytes; n];
+    let graph = Graph::from_edges("train", n, &edges, w.to_vec(), mem).unwrap();
+    SegmentGraph { graph, kinds }
+}
+
+/// Transformer-LM parameters held host-side.
+pub struct Params {
+    pub embed: HostTensor,
+    /// per block: wqkv, wo, w1, w2
+    pub blocks: Vec<[HostTensor; 4]>,
+    pub unembed: HostTensor,
+}
+
+impl Params {
+    /// Deterministic random init matching python/compile/model.py scales.
+    pub fn init(vocab: usize, d: usize, dff: usize, k: usize, seed: u64) -> Params {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut randn = |shape: &[usize], scale: f32| -> HostTensor {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n)
+                .map(|_| {
+                    // Box-Muller
+                    let u1 = rng.gen_f64().max(1e-12);
+                    let u2 = rng.gen_f64();
+                    ((-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()) as f32 * scale
+                })
+                .collect();
+            HostTensor::F32 { shape: shape.to_vec(), data }
+        };
+        let s = 1.0 / (d as f32).sqrt();
+        Params {
+            embed: randn(&[vocab, d], 0.02),
+            blocks: (0..k)
+                .map(|_| {
+                    [
+                        randn(&[d, 3 * d], s),
+                        randn(&[d, d], s),
+                        randn(&[d, dff], s),
+                        randn(&[dff, d], 1.0 / (dff as f32).sqrt()),
+                    ]
+                })
+                .collect(),
+            unembed: randn(&[d, vocab], s),
+        }
+    }
+
+    fn sgd(p: &mut HostTensor, g: &HostTensor, lr: f32) {
+        let pv = p.as_f32_mut();
+        let gv = g.as_f32();
+        for (x, &d) in pv.iter_mut().zip(gv) {
+            *x -= lr * d;
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    /// peak pool bytes observed across all steps
+    pub peak_pool_bytes: u64,
+    pub budget_bytes: u64,
+    /// schedule stats
+    pub remat_count: usize,
+    pub tdi_percent: f64,
+    /// profiled per-node durations (µs)
+    pub durations_us: Vec<u64>,
+    pub step_wall_us: Vec<u64>,
+}
+
+/// Configuration for the end-to-end training driver.
+pub struct TrainConfig {
+    pub blocks: usize,
+    pub steps: usize,
+    pub lr: f32,
+    /// memory budget as a fraction of the no-remat activation peak
+    pub budget_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { blocks: 4, steps: 50, lr: 0.05, budget_frac: 0.6, seed: 0 }
+    }
+}
+
+/// One schedule-driven training step. Returns (loss, peak pool bytes).
+#[allow(clippy::too_many_arguments)]
+fn run_schedule(
+    rt: &mut Runtime,
+    sg: &SegmentGraph,
+    seq: &[NodeId],
+    params: &mut Params,
+    tokens: &HostTensor,
+    targets: &HostTensor,
+    lr: f32,
+    durations_us: Option<&mut Vec<u64>>,
+) -> Result<(f32, u64)> {
+    let k = params.blocks.len();
+    // minimal-retention release positions for pool management
+    let intervals = intervals_from_sequence(&sg.graph, seq);
+    let mut pool: Vec<Option<HostTensor>> = vec![None; sg.graph.n()];
+    let mut used: u64 = 0;
+    let mut peak: u64 = 0;
+    let mut loss_out = f32::NAN;
+    let mut timings = vec![0u64; sg.graph.n()];
+
+    // grads accumulated for SGD at step end
+    let mut block_grads: Vec<Option<[HostTensor; 4]>> = (0..k).map(|_| None).collect();
+    let mut unembed_grad: Option<HostTensor> = None;
+
+    for (pos, &node) in seq.iter().enumerate() {
+        let kind = sg.kinds[node as usize];
+        let t0 = Instant::now();
+        let out = match kind {
+            SegKind::Embed => {
+                let exe = rt.load("embed_fwd")?;
+                exe.run(&[tokens, &params.embed])?.remove(0)
+            }
+            SegKind::Fwd(i) => {
+                let x = pool[i].as_ref().context("input activation not resident")?;
+                let [wqkv, wo, w1, w2] = &params.blocks[i];
+                let exe = rt.load("block_fwd")?;
+                exe.run(&[x, wqkv, wo, w1, w2])?.remove(0)
+            }
+            SegKind::Loss => {
+                let a = pool[k].as_ref().context("final activation not resident")?;
+                let exe = rt.load("loss_grad")?;
+                let mut outs = exe.run(&[a, &params.unembed, targets])?;
+                // (loss, da, dunembed)
+                let dun = outs.remove(2);
+                let da = outs.remove(1);
+                let loss = outs.remove(0);
+                loss_out = loss.as_f32()[0];
+                unembed_grad = Some(dun);
+                da
+            }
+            SegKind::Bwd(i) => {
+                let x = pool[i].as_ref().context("activation for bwd not resident")?;
+                // incoming gradient = output of the previous backward node
+                let grad_node = if i == k - 1 { k + 1 } else { k + 2 + (k - 2 - i) };
+                let dy = pool[grad_node].as_ref().context("grad not resident")?;
+                let [wqkv, wo, w1, w2] = &params.blocks[i];
+                let exe = rt.load("block_bwd")?;
+                let mut outs = exe.run(&[x, wqkv, wo, w1, w2, dy])?;
+                // (dx, dwqkv, dwo, dw1, dw2)
+                let dw2 = outs.remove(4);
+                let dw1 = outs.remove(3);
+                let dwo = outs.remove(2);
+                let dwqkv = outs.remove(1);
+                block_grads[i] = Some([dwqkv, dwo, dw1, dw2]);
+                outs.remove(0)
+            }
+        };
+        timings[node as usize] = timings[node as usize].max(t0.elapsed().as_micros() as u64);
+
+        // allocate output in the pool (charged at compute, A.3 eq. 17)
+        used += out.byte_size();
+        peak = peak.max(used);
+        if let Some(old) = pool[node as usize].replace(out) {
+            // a remat replaces the stale copy — if it was still resident
+            // it would have been released at its minimal-retention point
+            used -= old.byte_size();
+        }
+        // release every instance whose retention ends at this position
+        for iv in intervals.iter() {
+            if iv.end == pos && iv.start <= pos {
+                // only drop if no later instance of the same node relies
+                // on the pool slot (the slot holds the latest instance)
+                let latest = intervals
+                    .iter()
+                    .filter(|j| j.node == iv.node && j.start <= pos)
+                    .map(|j| j.start)
+                    .max()
+                    .unwrap();
+                if iv.start == latest {
+                    if let Some(t) = pool[iv.node as usize].take() {
+                        used -= t.byte_size();
+                    }
+                }
+            }
+        }
+    }
+
+    // SGD
+    for (i, g) in block_grads.into_iter().enumerate() {
+        if let Some([gq, go, g1, g2]) = g {
+            Params::sgd(&mut params.blocks[i][0], &gq, lr);
+            Params::sgd(&mut params.blocks[i][1], &go, lr);
+            Params::sgd(&mut params.blocks[i][2], &g1, lr);
+            Params::sgd(&mut params.blocks[i][3], &g2, lr);
+        }
+    }
+    if let Some(g) = unembed_grad {
+        Params::sgd(&mut params.unembed, &g, lr);
+    }
+    if let Some(d) = durations_us {
+        *d = timings;
+    }
+    Ok((loss_out, peak))
+}
+
+/// End-to-end driver: profile → schedule (MOCCASIN) → train under the
+/// budget. `dims` must match the artifacts' manifest.
+pub fn train_with_remat(
+    artifact_dir: &str,
+    vocab: usize,
+    d_model: usize,
+    d_ff: usize,
+    seq_len: usize,
+    batch: usize,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let mut rt = Runtime::new(artifact_dir)?;
+    let k = cfg.blocks;
+    let mut params = Params::init(vocab, d_model, d_ff, k, cfg.seed);
+    let act_bytes = (4 * batch * seq_len * d_model) as u64;
+
+    // synthetic next-token task: targets = (tokens + 1) % vocab
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xDA7A);
+    let tok_data: Vec<i32> =
+        (0..batch * seq_len).map(|_| rng.gen_range(vocab) as i32).collect();
+    let tgt_data: Vec<i32> = tok_data.iter().map(|&t| (t + 1) % vocab as i32).collect();
+    let tokens = HostTensor::I32 { shape: vec![batch, seq_len], data: tok_data };
+    let targets = HostTensor::I32 { shape: vec![batch, seq_len], data: tgt_data };
+
+    // ---- profile step: no-remat topological order, measure durations
+    let unit = vec![1u64; 2 * k + 2];
+    let sg0 = training_graph(k, act_bytes, &unit);
+    let order: Vec<NodeId> = (0..sg0.graph.n() as NodeId).collect();
+    let mut durations_us = vec![1u64; sg0.graph.n()];
+    let (first_loss, no_remat_peak) = run_schedule(
+        &mut rt,
+        &sg0,
+        &order,
+        &mut params,
+        &tokens,
+        &targets,
+        cfg.lr,
+        Some(&mut durations_us),
+    )?;
+
+    // ---- schedule under the budget with profiled durations
+    let sg = training_graph(k, act_bytes, &durations_us.iter().map(|&d| d.max(1)).collect::<Vec<_>>());
+    let budget = ((no_remat_peak as f64) * cfg.budget_frac) as u64;
+    let budget = budget.max(sg.graph.working_set_floor());
+    let solver = MoccasinSolver {
+        time_limit: std::time::Duration::from_secs(5),
+        ..Default::default()
+    };
+    let outcome = solver.solve(&sg.graph, budget, None);
+    let sol = outcome.best.context("no feasible schedule at this budget")?;
+
+    // ---- train under the schedule
+    let mut losses = vec![first_loss];
+    let mut peak_pool = 0u64;
+    let mut step_wall_us = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        let t0 = Instant::now();
+        let (loss, peak) = run_schedule(
+            &mut rt, &sg, &sol.seq, &mut params, &tokens, &targets, cfg.lr, None,
+        )?;
+        step_wall_us.push(t0.elapsed().as_micros() as u64);
+        losses.push(loss);
+        peak_pool = peak_pool.max(peak);
+        anyhow::ensure!(
+            peak <= budget,
+            "pool peak {peak} exceeded budget {budget} — scheduler/executor disagree"
+        );
+    }
+
+    Ok(TrainReport {
+        losses,
+        peak_pool_bytes: peak_pool,
+        budget_bytes: budget,
+        remat_count: sol.eval.remat_count,
+        tdi_percent: sol.eval.tdi_percent,
+        durations_us,
+        step_wall_us,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{eval_sequence, topological_order};
+
+    #[test]
+    fn training_graph_shape() {
+        let w = vec![1u64; 10];
+        let sg = training_graph(4, 100, &w);
+        assert_eq!(sg.graph.n(), 10);
+        // U-shape: fwd chain + loss + bwd chain + K activation cross edges
+        assert_eq!(sg.graph.m(), 4 + 1 + 4 + 4);
+        assert!(topological_order(&sg.graph).is_some());
+        assert_eq!(sg.kinds[0], SegKind::Embed);
+        assert_eq!(sg.kinds[5], SegKind::Loss);
+        assert_eq!(sg.kinds[9], SegKind::Bwd(0));
+    }
+
+    #[test]
+    fn training_graph_no_remat_peak_is_all_activations() {
+        let w = vec![1u64; 10];
+        let sg = training_graph(4, 100, &w);
+        let order: Vec<u32> = (0..10).collect();
+        let ev = eval_sequence(&sg.graph, &order).unwrap();
+        // all K+1 activations + current grad live at the first backward
+        assert!(ev.peak_mem >= 500, "peak {}", ev.peak_mem);
+    }
+
+    #[test]
+    fn remat_reduces_training_graph_peak() {
+        let w = vec![1u64; 10];
+        let sg = training_graph(4, 100, &w);
+        let order: Vec<u32> = (0..10).collect();
+        let full = eval_sequence(&sg.graph, &order).unwrap().peak_mem;
+        let budget = (full as f64 * 0.7) as u64;
+        let out = MoccasinSolver::default().solve(&sg.graph, budget, None);
+        let best = out.best.expect("gradient checkpointing schedule exists");
+        assert!(best.eval.peak_mem <= budget);
+        assert!(best.eval.remat_count >= 1, "should recompute some forward");
+    }
+
+    #[test]
+    fn params_init_deterministic() {
+        let a = Params::init(64, 32, 64, 2, 7);
+        let b = Params::init(64, 32, 64, 2, 7);
+        assert_eq!(a.embed.as_f32()[..8], b.embed.as_f32()[..8]);
+    }
+}

@@ -1,0 +1,178 @@
+//! CHECKMATE-style training graphs.
+//!
+//! The CHECKMATE evaluation graphs (Jain et al. 2020) are single-batch
+//! *training* graphs of image networks: a forward chain of layers, a loss
+//! node, and a mirrored backward chain, with cross-edges carrying saved
+//! forward activations into the gradient computations. The paper (§1.1)
+//! calls this the "U-net-like" structure: long edges crossing from the
+//! forward to the backward path are exactly what makes rematerialization
+//! profitable.
+//!
+//! We reconstruct this family synthetically (the original graphs were
+//! traced from Keras models; see DESIGN.md "Substitutions"): `cm_style`
+//! builds a k-layer forward chain + loss + backward chain with
+//! activation cross-edges, then adds deterministic skip/branch edges
+//! until the requested edge count is met exactly. `cm1`/`cm2` match the
+//! paper's reported sizes: CM1 = FCN-VGG at (73, 149), CM2 = ResNet50 at
+//! (353, 751).
+
+use crate::graph::{Graph, NodeId};
+use crate::util::Rng;
+
+/// Build a training graph with exactly `n` nodes and `m` edges.
+///
+/// Layout (node ids are a topological order):
+/// `f_0 .. f_{k-1}` (forward), `L = k` (loss), `b_{k-1} .. b_0`
+/// (backward, stored as ids `k+1 .. 2k`), with `n = 2k + 1`.
+/// `n` must be odd and ≥ 5.
+pub fn cm_style(name: &str, n: usize, m: usize, seed: u64, mem_scale: u64) -> Graph {
+    assert!(n >= 5 && n % 2 == 1, "cm_style needs odd n >= 5 (got {n})");
+    let k = (n - 1) / 2;
+    let loss = k as NodeId;
+    let fwd = |i: usize| i as NodeId; // i in 0..k
+    let bwd = |i: usize| (2 * k - i) as NodeId; // grad of layer i; ids k+1..=2k
+
+    let mut edge_set = std::collections::HashSet::<(NodeId, NodeId)>::new();
+    let mut edges: Vec<(NodeId, NodeId)> = Vec::new();
+    let add = |edges: &mut Vec<(NodeId, NodeId)>,
+                   edge_set: &mut std::collections::HashSet<(NodeId, NodeId)>,
+                   u: NodeId,
+                   v: NodeId|
+     -> bool {
+        debug_assert!(u < v, "edges must go forward in id order ({u} -> {v})");
+        if edge_set.insert((u, v)) {
+            edges.push((u, v));
+            true
+        } else {
+            false
+        }
+    };
+
+    // Forward chain f_0 -> f_1 -> ... -> f_{k-1} -> L.
+    for i in 1..k {
+        add(&mut edges, &mut edge_set, fwd(i - 1), fwd(i));
+    }
+    add(&mut edges, &mut edge_set, fwd(k - 1), loss);
+    // Backward chain L -> b_{k-1} -> ... -> b_0.
+    add(&mut edges, &mut edge_set, loss, bwd(k - 1));
+    for i in (0..k - 1).rev() {
+        add(&mut edges, &mut edge_set, bwd(i + 1), bwd(i));
+    }
+    // Gradient cross-edges: b_i needs the activation input of layer i,
+    // i.e. the output of f_{i-1} (and the op's own output f_i for the
+    // local Jacobian — added below as fill if the budget allows).
+    for i in 1..k {
+        add(&mut edges, &mut edge_set, fwd(i - 1), bwd(i));
+    }
+    assert!(
+        edges.len() <= m,
+        "m={m} below base training-graph structure ({} edges) for n={n}",
+        edges.len()
+    );
+
+    // Fill to exactly m with deterministic extras, in priority order:
+    // (1) f_i -> b_i own-activation edges, (2) forward skip connections
+    // f_i -> f_{i+g} with the mirrored backward cross-edge, (3) random
+    // forward-in-id-order edges.
+    let mut rng = Rng::seed_from_u64(seed ^ 0x434d5f). // "CM_"
+        clone();
+    'fill: {
+        for i in 1..k {
+            if edges.len() >= m {
+                break 'fill;
+            }
+            add(&mut edges, &mut edge_set, fwd(i), bwd(i));
+        }
+        let mut gap = 2usize;
+        while gap < k && edges.len() < m {
+            let mut i = 0;
+            while i + gap < k && edges.len() < m {
+                add(&mut edges, &mut edge_set, fwd(i), fwd(i + gap));
+                if edges.len() < m && i > 0 {
+                    add(&mut edges, &mut edge_set, fwd(i), bwd(i + gap));
+                }
+                i += gap + 1;
+            }
+            gap += 1;
+        }
+        let mut guard = 0;
+        while edges.len() < m {
+            guard += 1;
+            assert!(guard < 100 * m + 10_000, "cm_style fill failed (n={n}, m={m})");
+            let u = rng.gen_range(n - 1) as NodeId;
+            let v = (u as usize + 1 + rng.gen_range(n - 1 - u as usize)) as NodeId;
+            add(&mut edges, &mut edge_set, u, v);
+        }
+    }
+
+    // Weights. Activation sizes shrink with depth (conv pyramids);
+    // gradient outputs mirror their layer's input size. Durations are
+    // roughly proportional to sizes (compute-heavy early layers), with
+    // backward ops ~2x forward cost.
+    let mut duration = vec![0u64; n];
+    let mut mem = vec![0u64; n];
+    let mut rng2 = Rng::seed_from_u64(seed ^ 0x77);
+    for i in 0..k {
+        let depth_frac = i as f64 / k as f64;
+        let size = (mem_scale as f64 * (1.0 - 0.75 * depth_frac)
+            * (0.6 + 0.8 * rng2.gen_f64())) as u64
+            + 1;
+        mem[fwd(i) as usize] = size;
+        duration[fwd(i) as usize] = size / 8 + rng2.gen_range_incl(1, 10);
+        mem[bwd(i) as usize] = size;
+        duration[bwd(i) as usize] = size / 4 + rng2.gen_range_incl(1, 10);
+    }
+    mem[loss as usize] = 1;
+    duration[loss as usize] = 1;
+
+    Graph::from_edges(name, n, &edges, duration, mem).expect("cm_style builds a DAG")
+}
+
+/// CM1: the paper's "FCN with VGG layers" instance, (n, m) = (73, 149).
+pub fn cm1() -> Graph {
+    cm_style("CM1", 73, 149, 101, 4096)
+}
+
+/// CM2: the paper's ResNet50 instance, (n, m) = (353, 751).
+pub fn cm2() -> Graph {
+    cm_style("CM2", 353, 751, 102, 2048)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{eval_sequence, topological_order};
+
+    #[test]
+    fn exact_counts_and_dag() {
+        for (n, m) in [(73, 149), (353, 751), (21, 45)] {
+            let g = cm_style("t", n, m, 5, 1024);
+            assert_eq!(g.n(), n);
+            assert_eq!(g.m(), m);
+            assert!(topological_order(&g).is_some());
+        }
+    }
+
+    #[test]
+    fn id_order_is_topological() {
+        let g = cm1();
+        let ids: Vec<u32> = (0..g.n() as u32).collect();
+        assert!(eval_sequence(&g, &ids).is_ok());
+    }
+
+    #[test]
+    fn has_fwd_bwd_cross_edges() {
+        let g = cm1();
+        let k = (g.n() - 1) / 2;
+        // some edge from forward part (id < k) into backward part (> k)
+        let crosses =
+            g.edges().iter().filter(|&&(u, v)| (u as usize) < k && (v as usize) > k).count();
+        assert!(crosses >= k / 2, "training graph needs activation cross-edges");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(cm1().edges(), cm1().edges());
+        assert_eq!(cm2().mem, cm2().mem);
+    }
+}

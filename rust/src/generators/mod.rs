@@ -1,0 +1,90 @@
+//! Evaluation-graph generators (paper §3.1).
+//!
+//! The paper evaluates on three graph families:
+//!
+//! 1. **Random layered graphs** (`random_layered`) — the synthetic
+//!    inference-like graphs of Gagrani et al. 2022, Appendix A: nodes are
+//!    assigned to layers, every node is connected from the previous layer
+//!    (connectivity), and additional forward edges — including long skip
+//!    connections — are sampled until the target edge count is reached.
+//!    These have the "complex interconnect topology" the paper identifies
+//!    as what makes rematerialization hard (and profitable).
+//! 2. **CHECKMATE-style training graphs** (`cm_style`) — single-batch
+//!    training graphs: a forward chain (with occasional branch blocks)
+//!    mirrored by a backward chain, with gradient cross-edges from
+//!    forward activations into the backward path ("U-net-like", §1.1).
+//! 3. **Real-world-like inference graphs** (`real_world_like`) — stand-in
+//!    for the paper's proprietary commercial graphs (RW1–RW4): block-
+//!    structured DAGs with branching, long skips and heterogeneous tensor
+//!    sizes, matched to the paper's reported (n, m). See DESIGN.md
+//!    "Substitutions".
+//!
+//! All generators are deterministic in the seed, and all return graphs
+//! whose (n, m) exactly match the request (the paper reports exact counts
+//! per graph, e.g. G2 = (250, 944)).
+
+mod cm_style;
+mod random_layered;
+mod real_world;
+
+pub use cm_style::{cm1, cm2, cm_style};
+pub use random_layered::random_layered;
+pub use real_world::{real_world_like, rw1, rw2, rw3, rw4};
+
+use crate::graph::Graph;
+
+/// The paper's named benchmark instances, reconstructed at the reported
+/// (n, m). `G1..G4` random layered; `RW1..RW4` real-world-like;
+/// `CM1/CM2` CHECKMATE-style.
+pub fn paper_graph(name: &str) -> Option<Graph> {
+    Some(match name {
+        "G1" => random_layered("G1", 100, 236, 1),
+        "G2" => random_layered("G2", 250, 944, 2),
+        "G3" => random_layered("G3", 500, 2461, 3),
+        "G4" => random_layered("G4", 1000, 5875, 4),
+        "RW1" => rw1(),
+        "RW2" => rw2(),
+        "RW3" => rw3(),
+        "RW4" => rw4(),
+        "CM1" => cm1(),
+        "CM2" => cm2(),
+        _ => return None,
+    })
+}
+
+/// All paper instance names in Table 2/3 order.
+pub const PAPER_GRAPHS: [&str; 10] =
+    ["G1", "G2", "G3", "G4", "RW1", "RW2", "RW3", "RW4", "CM1", "CM2"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topological_order;
+
+    #[test]
+    fn paper_instances_match_reported_counts() {
+        let expect = [
+            ("G1", 100, 236),
+            ("G2", 250, 944),
+            ("G3", 500, 2461),
+            ("G4", 1000, 5875),
+            ("RW1", 358, 947),
+            ("RW2", 442, 1247),
+            ("RW3", 574, 1304),
+            ("RW4", 698, 1436),
+            ("CM1", 73, 149),
+            ("CM2", 353, 751),
+        ];
+        for (name, n, m) in expect {
+            let g = paper_graph(name).unwrap();
+            assert_eq!(g.n(), n, "{name} node count");
+            assert_eq!(g.m(), m, "{name} edge count");
+            assert!(topological_order(&g).is_some(), "{name} must be a DAG");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(paper_graph("nope").is_none());
+    }
+}

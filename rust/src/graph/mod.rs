@@ -1,0 +1,225 @@
+//! Compute-graph DAG core.
+//!
+//! Nodes are compute operations with a duration `w_v` (cost of executing
+//! the op, in abstract time units) and an output size `m_v` (bytes the
+//! op's output tensor occupies in local memory). Directed edges `(u, v)`
+//! mean the output of `u` must be resident in local memory when `v`
+//! executes.
+//!
+//! This module is the substrate every solver builds on: construction and
+//! validation, topological orders (deterministic and randomized), and the
+//! evaluation of rematerialization sequences under the paper's
+//! Appendix-A.3 memory semantics (`eval`).
+
+mod eval;
+mod topo;
+
+pub use eval::{eval_sequence, Evaluator, SeqEval, SeqError};
+pub use topo::{is_topological_with_remat, random_topological_order, topological_order};
+
+/// Node index inside a [`Graph`] (dense `0..n`).
+pub type NodeId = u32;
+
+/// A directed acyclic compute graph.
+///
+/// Immutable after construction; all solvers treat it as shared input.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Human-readable graph name (used in reports and caches).
+    pub name: String,
+    /// `w_v`: execution duration of each node.
+    pub duration: Vec<u64>,
+    /// `m_v`: output-tensor size of each node.
+    pub mem: Vec<u64>,
+    /// Predecessors of each node (sorted).
+    pub preds: Vec<Vec<NodeId>>,
+    /// Successors of each node (sorted).
+    pub succs: Vec<Vec<NodeId>>,
+}
+
+impl Graph {
+    /// Build a graph from an edge list. Edges must describe a DAG; node
+    /// ids must be dense in `0..n`.
+    pub fn from_edges(
+        name: impl Into<String>,
+        n: usize,
+        edges: &[(NodeId, NodeId)],
+        duration: Vec<u64>,
+        mem: Vec<u64>,
+    ) -> Result<Self, String> {
+        assert_eq!(duration.len(), n, "duration.len() != n");
+        assert_eq!(mem.len(), n, "mem.len() != n");
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            if u as usize >= n || v as usize >= n {
+                return Err(format!("edge ({u},{v}) out of range for n={n}"));
+            }
+            if u == v {
+                return Err(format!("self-loop at node {u}"));
+            }
+            succs[u as usize].push(v);
+            preds[v as usize].push(u);
+        }
+        for l in preds.iter_mut().chain(succs.iter_mut()) {
+            l.sort_unstable();
+            l.dedup();
+        }
+        let g = Graph { name: name.into(), duration, mem, preds, succs };
+        if topo::topological_order(&g).is_none() {
+            return Err("graph contains a cycle".into());
+        }
+        Ok(g)
+    }
+
+    /// Number of nodes `n`.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.duration.len()
+    }
+
+    /// Number of edges `m`.
+    pub fn m(&self) -> usize {
+        self.succs.iter().map(|s| s.len()).sum()
+    }
+
+    /// Edge list `(u, v)` in `u`-major order.
+    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut out = Vec::with_capacity(self.m());
+        for (u, ss) in self.succs.iter().enumerate() {
+            for &v in ss {
+                out.push((u as NodeId, v));
+            }
+        }
+        out
+    }
+
+    /// Sum of all node durations: the duration of any sequence without
+    /// rematerialization (the TDI-% baseline).
+    pub fn total_duration(&self) -> u64 {
+        self.duration.iter().sum()
+    }
+
+    /// Sum of all output sizes (a trivial upper bound on peak memory).
+    pub fn total_mem(&self) -> u64 {
+        self.mem.iter().sum()
+    }
+
+    /// Nodes with no predecessors.
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.n() as NodeId).filter(|&v| self.preds[v as usize].is_empty()).collect()
+    }
+
+    /// Nodes with no successors.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.n() as NodeId).filter(|&v| self.succs[v as usize].is_empty()).collect()
+    }
+
+    /// Peak memory of executing `order` once (no rematerialization) under
+    /// the Appendix-A.3 semantics. `order` must be a valid topological
+    /// order covering every node exactly once.
+    pub fn peak_mem_no_remat(&self, order: &[NodeId]) -> Result<u64, SeqError> {
+        Ok(eval::eval_sequence(self, order)?.peak_mem)
+    }
+
+    /// A structural lower bound on the peak memory of *any* valid
+    /// sequence: every node must hold all its predecessors' outputs plus
+    /// its own while computing (Appendix A.3, eq. 17). No budget below
+    /// this is feasible, rematerialization or not.
+    pub fn working_set_floor(&self) -> u64 {
+        (0..self.n())
+            .map(|v| {
+                self.mem[v] + self.preds[v].iter().map(|&u| self.mem[u as usize]).sum::<u64>()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// A stable 64-bit fingerprint of the graph structure + weights, used
+    /// as the coordinator's solution-cache key.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a over a canonical serialization; no external deps.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        eat(self.n() as u64);
+        for v in 0..self.n() {
+            eat(self.duration[v]);
+            eat(self.mem[v]);
+            for &p in &self.preds[v] {
+                eat(p as u64 + 1);
+            }
+            eat(u64::MAX); // separator
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The 4-node example graph of Figure 2: 1→2→4, 1→3→4 (0-indexed:
+    /// 0→1→3, 0→2→3).
+    pub fn fig2() -> Graph {
+        Graph::from_edges(
+            "fig2",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            vec![1, 1, 1, 1],
+            vec![1, 1, 1, 1],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn build_and_counts() {
+        let g = fig2();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.total_duration(), 4);
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let r = Graph::from_edges("cyc", 2, &[(0, 1), (1, 0)], vec![1, 1], vec![1, 1]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_self_loop() {
+        let r = Graph::from_edges("self", 1, &[(0, 0)], vec![1], vec![1]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let r = Graph::from_edges("oob", 2, &[(0, 5)], vec![1, 1], vec![1, 1]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn dedups_parallel_edges() {
+        let g = Graph::from_edges("dup", 2, &[(0, 1), (0, 1)], vec![1, 1], vec![1, 1]).unwrap();
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn fingerprint_changes_with_weights() {
+        let a = fig2();
+        let mut b = fig2();
+        b.mem[2] = 7;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_stable() {
+        assert_eq!(fig2().fingerprint(), fig2().fingerprint());
+    }
+}

@@ -1,0 +1,130 @@
+//! Topological orders: deterministic (Kahn, smallest-id-first) and
+//! randomized (Kahn with uniformly random tie-breaking). The paper's
+//! staged formulation (§2.3) takes an *input topological order* as a
+//! parameter; the topo-order ablation (`bench ablation-topo`) measures
+//! peak-memory variability across random orders, mirroring the paper's
+//! observation in §1.1.
+
+use super::{Graph, NodeId};
+use crate::util::Rng;
+
+/// Deterministic topological order (Kahn's algorithm, smallest node id
+/// first). Returns `None` if the graph has a cycle.
+pub fn topological_order(g: &Graph) -> Option<Vec<NodeId>> {
+    let n = g.n();
+    let mut indeg: Vec<u32> = (0..n).map(|v| g.preds[v].len() as u32).collect();
+    // Min-heap behaviour via sorted ready list (n is small: <= a few k).
+    let mut ready: Vec<NodeId> =
+        (0..n as NodeId).filter(|&v| indeg[v as usize] == 0).collect();
+    ready.sort_unstable_by(|a, b| b.cmp(a)); // pop from the back = smallest
+    let mut order = Vec::with_capacity(n);
+    while let Some(v) = ready.pop() {
+        order.push(v);
+        for &s in &g.succs[v as usize] {
+            indeg[s as usize] -= 1;
+            if indeg[s as usize] == 0 {
+                // insert keeping descending order
+                let pos = ready.partition_point(|&x| x > s);
+                ready.insert(pos, s);
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+/// Random topological order (Kahn with random tie-breaking).
+pub fn random_topological_order(g: &Graph, rng: &mut Rng) -> Vec<NodeId> {
+    let n = g.n();
+    let mut indeg: Vec<u32> = (0..n).map(|v| g.preds[v].len() as u32).collect();
+    let mut ready: Vec<NodeId> =
+        (0..n as NodeId).filter(|&v| indeg[v as usize] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        let i = rng.gen_range(ready.len());
+        let v = ready.swap_remove(i);
+        order.push(v);
+        for &s in &g.succs[v as usize] {
+            indeg[s as usize] -= 1;
+            if indeg[s as usize] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), n, "graph must be acyclic");
+    order
+}
+
+/// Check that `seq` (with possible node repetitions) respects all data
+/// dependencies *as a rematerialization sequence*: every node appears at
+/// least once, and at each position every predecessor of the executed
+/// node has already been computed at least once earlier.
+///
+/// (Full memory-aware validity is checked by `eval_sequence`; under the
+/// Appendix-A.3 minimal-retention semantics, "computed earlier" is
+/// exactly the liveness requirement — the latest instance of a
+/// predecessor is retained up to its last consumer.)
+pub fn is_topological_with_remat(g: &Graph, seq: &[NodeId]) -> bool {
+    let n = g.n();
+    let mut seen = vec![false; n];
+    let mut count = 0usize;
+    for &v in seq {
+        if v as usize >= n {
+            return false;
+        }
+        if g.preds[v as usize].iter().any(|&p| !seen[p as usize]) {
+            return false;
+        }
+        if !seen[v as usize] {
+            seen[v as usize] = true;
+            count += 1;
+        }
+    }
+    count == n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        Graph::from_edges(
+            "d",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn deterministic_topo_is_valid_and_stable() {
+        let g = diamond();
+        let t = topological_order(&g).unwrap();
+        assert_eq!(t, vec![0, 1, 2, 3]);
+        assert!(is_topological_with_remat(&g, &t));
+    }
+
+    #[test]
+    fn random_topo_valid_many_seeds() {
+        let g = diamond();
+        for seed in 0..32 {
+            let mut rng = Rng::seed_from_u64(seed);
+            let t = random_topological_order(&g, &mut rng);
+            assert!(is_topological_with_remat(&g, &t), "seed {seed}: {t:?}");
+        }
+    }
+
+    #[test]
+    fn remat_sequence_valid() {
+        let g = diamond();
+        // recompute 0 before 2 — still respects deps
+        assert!(is_topological_with_remat(&g, &[0, 1, 0, 2, 3]));
+        // 3 before 2 is invalid
+        assert!(!is_topological_with_remat(&g, &[0, 1, 3, 2]));
+        // missing node 3
+        assert!(!is_topological_with_remat(&g, &[0, 1, 2]));
+        // out-of-range node
+        assert!(!is_topological_with_remat(&g, &[0, 9]));
+    }
+}

@@ -1,0 +1,36 @@
+//! MOCCASIN: Efficient Tensor Rematerialization for Neural Networks.
+//!
+//! Full-system reproduction of Bartan et al., ICML 2023. The library is a
+//! three-layer stack:
+//!
+//! * **graph** — compute-graph DAG core: topological orders, sequence
+//!   validity, and the paper's Appendix-A.3 peak-memory semantics.
+//! * **generators** — the paper's evaluation graph families (random
+//!   layered, CHECKMATE-style training graphs, real-world-like inference
+//!   graphs).
+//! * **cp** — a from-scratch constraint-programming engine (trailed
+//!   domains, cumulative / reservoir / linear propagators, DFS branch &
+//!   bound) used to solve the MOCCASIN retention-interval model.
+//! * **moccasin** — the paper's contribution: the retention-interval
+//!   formulation (§2), staged domain reduction (§2.3), two-phase solve
+//!   (§2.4), plus the anytime LNS loop used for large graphs.
+//! * **checkmate** / **milp** — the CHECKMATE MILP baseline (Jain et al.,
+//!   MLSys 2020) with an exact pseudo-Boolean branch & bound and the
+//!   LP-relaxation + two-stage-rounding approximation (PDHG LP solver).
+//! * **runtime** / **executor** — PJRT-based execution of AOT-compiled
+//!   XLA artifacts under a rematerialization schedule with a tracked
+//!   memory pool.
+//! * **coordinator** — the solve service + CLI a downstream user calls.
+//! * **bench** — harness regenerating every table and figure of the paper.
+
+pub mod generators;
+pub mod graph;
+pub mod util;
+pub mod cp;
+pub mod moccasin;
+pub mod checkmate;
+pub mod milp;
+pub mod executor;
+pub mod runtime;
+pub mod bench;
+pub mod coordinator;

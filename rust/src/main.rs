@@ -1,0 +1,129 @@
+//! MOCCASIN CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--time-limit S]
+//!   bench   <fig1|fig5|fig6|table1|table2|ablation-c|ablation-topo|all> [--time-limit S] [--quick]
+//!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`)
+//!
+//! Std-only argument parsing (the build is fully offline).
+
+use moccasin::bench;
+use moccasin::coordinator::{Backend, Coordinator, SolveRequest};
+use moccasin::executor::{train_with_remat, TrainConfig};
+use moccasin::generators::{paper_graph, random_layered};
+use moccasin::graph::{topological_order, Graph};
+use moccasin::util::fmt_u64;
+use std::time::Duration;
+
+fn flag_val(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn parse_graph(spec: &str) -> Option<Graph> {
+    if let Some(g) = paper_graph(spec) {
+        return Some(g);
+    }
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() == 4 && parts[0] == "rl" {
+        let (n, m, s) = (parts[1].parse().ok()?, parts[2].parse().ok()?, parts[3].parse().ok()?);
+        return Some(random_layered(spec, n, m, s));
+    }
+    None
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let time_limit = Duration::from_secs_f64(
+        flag_val(&args, "--time-limit").and_then(|s| s.parse().ok()).unwrap_or(30.0),
+    );
+    let quick = args.iter().any(|a| a == "--quick");
+
+    match args.first().map(|s| s.as_str()) {
+        Some("solve") => {
+            let spec = flag_val(&args, "--graph").unwrap_or_else(|| "G1".into());
+            let g = parse_graph(&spec).unwrap_or_else(|| {
+                eprintln!("unknown graph {spec} (use G1..G4, RW1..RW4, CM1, CM2, rl:n:m:seed)");
+                std::process::exit(2);
+            });
+            let frac: f64 =
+                flag_val(&args, "--budget-frac").and_then(|s| s.parse().ok()).unwrap_or(0.8);
+            let backend = match flag_val(&args, "--backend").as_deref() {
+                Some("checkmate") => Backend::CheckmateMilp,
+                Some("lp-rounding") => Backend::CheckmateLpRounding,
+                _ => Backend::Moccasin,
+            };
+            let order = topological_order(&g).unwrap();
+            let peak = g.peak_mem_no_remat(&order).unwrap();
+            let budget = (peak as f64 * frac) as u64;
+            println!(
+                "{spec}: n={} m={} no-remat peak={} budget={} ({frac:.0}%)",
+                g.n(), g.m(), fmt_u64(peak), fmt_u64(budget), frac = frac * 100.0
+            );
+            let mut coord = Coordinator::new();
+            let resp = coord.solve(
+                &g,
+                &SolveRequest { budget, time_limit, backend, ..Default::default() },
+            );
+            match resp.solution {
+                Some(sol) => println!(
+                    "best: duration={} (TDI {:.2}%), peak={}, remats={}, optimal={}",
+                    sol.eval.duration,
+                    sol.eval.tdi_percent,
+                    fmt_u64(sol.eval.peak_mem),
+                    sol.eval.remat_count,
+                    resp.proved_optimal
+                ),
+                None => println!("no solution within {time_limit:?} ({:?})", resp.error),
+            }
+        }
+        Some("bench") => match args.get(1).map(|s| s.as_str()) {
+            Some("fig1") => bench::fig1(time_limit),
+            Some("fig5") => bench::fig5(time_limit, quick),
+            Some("fig6") => bench::fig6(time_limit, quick),
+            Some("table1") => bench::table1(),
+            Some("table2") => bench::table2(time_limit, quick),
+            Some("ablation-c") => bench::ablation_c(time_limit),
+            Some("ablation-topo") => bench::ablation_topo(),
+            Some("all") | None => bench::run_all(time_limit, quick),
+            Some(other) => {
+                eprintln!("unknown bench target {other}");
+                std::process::exit(2);
+            }
+        },
+        Some("train") => {
+            let steps =
+                flag_val(&args, "--steps").and_then(|s| s.parse().ok()).unwrap_or(200);
+            let budget_frac =
+                flag_val(&args, "--budget-frac").and_then(|s| s.parse().ok()).unwrap_or(0.6);
+            let cfg = TrainConfig { steps, budget_frac, ..Default::default() };
+            match train_with_remat("artifacts", 256, 128, 512, 64, 8, &cfg) {
+                Ok(r) => {
+                    println!(
+                        "trained {steps} steps under budget {} (pool peak {}), {} remats, \
+                         loss {:.3} -> {:.3}",
+                        fmt_u64(r.budget_bytes),
+                        fmt_u64(r.peak_pool_bytes),
+                        r.remat_count,
+                        r.losses.first().unwrap(),
+                        r.losses.last().unwrap()
+                    );
+                }
+                Err(e) => {
+                    eprintln!("train failed: {e:#} (did you run `make artifacts`?)");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            eprintln!(
+                "usage: moccasin <solve|bench|train> [options]\n\
+                   solve --graph <G1..G4|RW1..RW4|CM1|CM2|rl:n:m:seed> [--budget-frac F] \
+                 [--backend moccasin|checkmate|lp-rounding] [--time-limit S]\n\
+                   bench <fig1|fig5|fig6|table1|table2|ablation-c|ablation-topo|all> \
+                 [--time-limit S] [--quick]\n\
+                   train [--steps N] [--budget-frac F]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

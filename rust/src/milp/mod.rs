@@ -1,0 +1,204 @@
+//! Sparse LP substrate for the CHECKMATE baseline.
+//!
+//! Gurobi is unavailable in this environment, so the LP relaxation used
+//! by CHECKMATE's two-stage rounding is solved with a matrix-free
+//! first-order method: **PDHG** (primal-dual hybrid gradient, the core
+//! of PDLP). It needs only sparse mat-vecs, handles the O(n² + nm)
+//! variable counts of the CHECKMATE relaxation without factorization,
+//! and produces solutions accurate enough for threshold rounding (the
+//! paper's point — that rounded solutions are often infeasible — is a
+//! property of rounding, not of the LP solver's last digits).
+//!
+//! The exact MILP itself is solved by pseudo-Boolean branch & bound on
+//! the in-tree CP engine (see `checkmate::solve_milp`).
+
+/// Compressed sparse row matrix.
+#[derive(Debug, Clone, Default)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from row-wise triplets.
+    pub fn from_rows(ncols: usize, rows: &[Vec<(u32, f64)>]) -> Csr {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for r in rows {
+            for &(c, v) in r {
+                debug_assert!((c as usize) < ncols);
+                indices.push(c);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows: rows.len(), ncols, indptr, indices, data }
+    }
+
+    /// y = A x
+    pub fn mul(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let mut acc = 0.0;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.data[k] * x[self.indices[k] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// y = Aᵀ x
+    pub fn mul_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        debug_assert_eq!(y.len(), self.ncols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..self.nrows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                y[self.indices[k] as usize] += self.data[k] * xr;
+            }
+        }
+    }
+
+    /// Spectral-norm estimate by power iteration (for PDHG step sizes).
+    pub fn norm_estimate(&self, iters: usize) -> f64 {
+        let mut v = vec![1.0 / (self.ncols as f64).sqrt(); self.ncols];
+        let mut av = vec![0.0; self.nrows];
+        let mut atav = vec![0.0; self.ncols];
+        let mut norm = 1.0f64;
+        for _ in 0..iters {
+            self.mul(&v, &mut av);
+            self.mul_t(&av, &mut atav);
+            norm = atav.iter().map(|x| x * x).sum::<f64>().sqrt().sqrt();
+            let s: f64 = atav.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if s <= 1e-30 {
+                return 1.0;
+            }
+            for i in 0..v.len() {
+                v[i] = atav[i] / s;
+            }
+        }
+        norm.max(1e-9)
+    }
+}
+
+/// Result of an LP solve.
+pub struct LpResult {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    /// max violation of `Ax ≤ b` at the returned point
+    pub max_violation: f64,
+    pub iterations: usize,
+}
+
+/// Solve `min cᵀx  s.t.  A x ≤ b, 0 ≤ x ≤ 1` with PDHG.
+pub fn pdhg_solve(c: &[f64], a: &Csr, b: &[f64], max_iters: usize, tol: f64) -> LpResult {
+    let n = c.len();
+    let m = a.nrows;
+    assert_eq!(a.ncols, n);
+    assert_eq!(b.len(), m);
+    let norm = a.norm_estimate(20);
+    let tau = 0.9 / norm;
+    let sigma = 0.9 / norm;
+
+    let mut x = vec![0.0f64; n];
+    let mut y = vec![0.0f64; m];
+    let mut aty = vec![0.0f64; n];
+    let mut ax = vec![0.0f64; m];
+    let mut x_prev = vec![0.0f64; n];
+    let mut x_bar = vec![0.0f64; n];
+
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // primal step
+        a.mul_t(&y, &mut aty);
+        x_prev.copy_from_slice(&x);
+        for i in 0..n {
+            x[i] = (x[i] - tau * (c[i] + aty[i])).clamp(0.0, 1.0);
+        }
+        // extrapolate
+        for i in 0..n {
+            x_bar[i] = 2.0 * x[i] - x_prev[i];
+        }
+        // dual step
+        a.mul(&x_bar, &mut ax);
+        for r in 0..m {
+            y[r] = (y[r] + sigma * (ax[r] - b[r])).max(0.0);
+        }
+        // periodic convergence check (primal feasibility + movement)
+        if it % 100 == 99 {
+            a.mul(&x, &mut ax);
+            let viol = (0..m).map(|r| (ax[r] - b[r]).max(0.0)).fold(0.0f64, f64::max);
+            let step: f64 =
+                (0..n).map(|i| (x[i] - x_prev[i]).abs()).fold(0.0f64, f64::max);
+            if viol < tol && step < tol * 0.1 {
+                break;
+            }
+        }
+    }
+    a.mul(&x, &mut ax);
+    let max_violation = (0..m).map(|r| (ax[r] - b[r]).max(0.0)).fold(0.0f64, f64::max);
+    let objective = (0..n).map(|i| c[i] * x[i]).sum();
+    LpResult { x, objective, max_violation, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_matvec() {
+        // [[1, 2], [0, 3]]
+        let a = Csr::from_rows(2, &[vec![(0, 1.0), (1, 2.0)], vec![(1, 3.0)]]);
+        let mut y = vec![0.0; 2];
+        a.mul(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 3.0]);
+        let mut yt = vec![0.0; 2];
+        a.mul_t(&[1.0, 1.0], &mut yt);
+        assert_eq!(yt, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn norm_estimate_positive() {
+        let a = Csr::from_rows(2, &[vec![(0, 3.0)], vec![(1, 4.0)]]);
+        let n = a.norm_estimate(30);
+        assert!(n > 1.0 && n < 10.0, "{n}");
+    }
+
+    #[test]
+    fn pdhg_tiny_lp() {
+        // min -x1 - x2  s.t. x1 + x2 <= 1, box [0,1]² → optimum -1 on the
+        // simplex face
+        let a = Csr::from_rows(2, &[vec![(0, 1.0), (1, 1.0)]]);
+        let r = pdhg_solve(&[-1.0, -1.0], &a, &[1.0], 20_000, 1e-6);
+        assert!((r.objective + 1.0).abs() < 1e-2, "obj {}", r.objective);
+        assert!(r.max_violation < 1e-3);
+    }
+
+    #[test]
+    fn pdhg_respects_bounds() {
+        // min -x s.t. (no constraints beyond box) → x = 1
+        let a = Csr::from_rows(1, &[vec![(0, 0.0)]]);
+        let r = pdhg_solve(&[-1.0], &a, &[0.0], 5_000, 1e-6);
+        assert!((r.x[0] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pdhg_binding_constraint() {
+        // min -2x1 - x2 s.t. x1 <= 0.3, x1 + x2 <= 1
+        let a = Csr::from_rows(2, &[vec![(0, 1.0)], vec![(0, 1.0), (1, 1.0)]]);
+        let r = pdhg_solve(&[-2.0, -1.0], &a, &[0.3, 1.0], 40_000, 1e-6);
+        assert!((r.x[0] - 0.3).abs() < 2e-2, "x1 {}", r.x[0]);
+        assert!((r.x[1] - 0.7).abs() < 3e-2, "x2 {}", r.x[1]);
+    }
+}

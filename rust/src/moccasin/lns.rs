@@ -1,0 +1,387 @@
+//! Phase-2 anytime optimization for large graphs: remat-removal polish
+//! plus large-neighbourhood search (LNS) that re-solves stage windows
+//! exactly with the CP engine.
+//!
+//! The paper reaches anytime behaviour through CP-SAT's LCG search over
+//! the full model; our engine has no clause learning, so on large graphs
+//! we get the same *anytime* characteristics by destroying/repairing
+//! windows of the staged model: all retention intervals whose start lies
+//! outside the chosen stage window are frozen to the incumbent, the
+//! window is re-solved to (window-)optimality, and improvements are
+//! accepted. The model being re-solved is exactly the paper's — same
+//! variables, cumulative and cover constraints — just with most of it
+//! pinned (see DESIGN.md "Substitutions").
+
+use super::model::{event_id, StagedModel};
+use super::solution::RematSolution;
+use crate::cp::Solver;
+use crate::graph::{Graph, NodeId};
+use crate::util::{Deadline, Rng};
+use std::time::Duration;
+
+/// Remove rematerializations whose removal keeps the sequence feasible.
+/// Strictly improving; returns the polished solution (possibly equal to
+/// the input).
+pub fn removal_polish(graph: &Graph, sol: &RematSolution, budget: u64) -> RematSolution {
+    let mut seq = sol.seq.clone();
+    let mut best = sol.clone();
+    let mut evaluator = crate::graph::Evaluator::new(graph);
+    loop {
+        let mut counts = vec![0u32; graph.n()];
+        for &v in &seq {
+            counts[v as usize] += 1;
+        }
+        // candidate positions, most expensive node first
+        let mut cands: Vec<usize> = (0..seq.len())
+            .filter(|&p| counts[seq[p] as usize] > 1)
+            .collect();
+        cands.sort_by_key(|&p| std::cmp::Reverse(graph.duration[seq[p] as usize]));
+        let mut improved = false;
+        for &p in &cands {
+            if counts[seq[p] as usize] <= 1 {
+                continue;
+            }
+            let mut t = seq.clone();
+            t.remove(p);
+            if let Ok(ev) = evaluator.eval(&t) {
+                if ev.peak_mem <= budget {
+                    counts[seq[p] as usize] -= 1;
+                    seq = t;
+                    best = RematSolution { seq: seq.clone(), eval: ev };
+                    improved = true;
+                    // positions shifted; restart the scan
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return best;
+        }
+    }
+}
+
+/// Assign a stage to every occurrence of the incumbent sequence:
+/// first occurrences get their own topological stage; rematerializations
+/// get the stage of the next not-yet-first-computed node (they are the
+/// "earlier events" of that stage, §2.3). Trailing useless remats are
+/// dropped. Returns per-node `(stage, is_first)` lists in sequence
+/// order.
+fn stages_of_incumbent(
+    graph: &Graph,
+    order: &[NodeId],
+    seq: &[NodeId],
+) -> Vec<Vec<usize>> {
+    let n = graph.n();
+    let mut topo_index = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        topo_index[v as usize] = i + 1;
+    }
+    let mut seen = vec![false; n];
+    let mut stage_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut next_stage = 1usize;
+    for &x in seq {
+        let xi = x as usize;
+        if !seen[xi] {
+            debug_assert_eq!(
+                topo_index[xi], next_stage,
+                "incumbent must follow the input topological order"
+            );
+            seen[xi] = true;
+            stage_of[xi].push(next_stage);
+            next_stage += 1;
+        } else if next_stage <= n {
+            // remat inside stage `next_stage`; a node occupies one slot
+            // per stage, so a duplicate (same node, same stage) would be
+            // invalid — merge it (it's redundant anyway).
+            if *stage_of[xi].last().unwrap() != next_stage {
+                stage_of[xi].push(next_stage);
+            }
+        }
+        // occurrences after the last stage are useless → dropped
+    }
+    stage_of
+}
+
+/// Canonicalize a sequence into staged-event order: assign every
+/// occurrence to its (stage, slot) event and rebuild the sequence in
+/// event order. The staged CP model charges memory in slot order, so an
+/// incumbent must be canonicalized before freezing it into a window
+/// model — otherwise a feasible sequence whose within-stage remat order
+/// differs from slot order can appear (marginally) infeasible to the
+/// cumulative propagator.
+pub fn canonicalize(
+    graph: &Graph,
+    order: &[NodeId],
+    seq: &[NodeId],
+) -> Option<RematSolution> {
+    let stage_of = stages_of_incumbent(graph, order, seq);
+    let n = graph.n();
+    let mut topo_index = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        topo_index[v as usize] = i + 1;
+    }
+    let mut events: Vec<(usize, usize, NodeId)> = Vec::new(); // (stage, slot, node)
+    for v in 0..n {
+        for &j in &stage_of[v] {
+            events.push((j, topo_index[v], v as NodeId));
+        }
+    }
+    events.sort_unstable();
+    let canon: Vec<NodeId> = events.into_iter().map(|(_, _, v)| v).collect();
+    RematSolution::from_seq(graph, canon).ok()
+}
+
+/// Build the staged model with everything outside `window` (a stage
+/// range `[j0, j1)`) frozen to the incumbent, solve the window, and
+/// return an improved solution if found.
+#[allow(clippy::too_many_arguments)]
+fn solve_window(
+    graph: &Graph,
+    order: &[NodeId],
+    budget: u64,
+    c: usize,
+    incumbent: &RematSolution,
+    j0: usize,
+    j1: usize,
+    deadline: Deadline,
+) -> Option<RematSolution> {
+    let n = graph.n();
+    let stage_of = stages_of_incumbent(graph, order, &incumbent.seq);
+    // per-node C: at least the incumbent's interval count
+    let c_v: Vec<usize> = (0..n).map(|v| c.max(stage_of[v].len())).collect();
+    // NOTE (EXPERIMENTS.md §Perf): near-tight budgets the staged event
+    // grid can be marginally more pessimistic than the position-space
+    // profile, making some frozen incumbents root-conflict (window then
+    // reports no improvement, which is safe). Relaxing the cap instead
+    // pollutes the B&B bound with eval-infeasible solutions — measured
+    // strictly worse. Kept exact.
+    let mut sm = StagedModel::build(graph, order, budget, &c_v);
+
+    // Freeze: copy 0 is structurally fixed. For copies >= 1:
+    // - if the incumbent uses this copy at a stage outside the window →
+    //   fix active = 1, start = that event;
+    // - if inside the window → leave free (destroyed);
+    // - if the copy is unused by the incumbent → leave free (repair may
+    //   add remats) but restrict to the window.
+    for v in 0..n {
+        let k = sm.topo_index[v];
+        for (ci, &idx) in sm.by_node[v].clone().iter().enumerate() {
+            if ci == 0 {
+                continue;
+            }
+            let iv = sm.intervals[idx];
+            match stage_of[v].get(ci) {
+                Some(&j) if j < j0 || j >= j1 => {
+                    sm.model.fix(iv.active, 1);
+                    sm.model.fix(iv.start, event_id(j, k));
+                }
+                Some(_) => { /* destroyed: free inside full domain */ }
+                None => {
+                    // unused copy: restrict to window stages (or disable)
+                    let lo = j0.max(k + ci);
+                    if lo >= j1 {
+                        sm.model.fix(iv.active, 0);
+                    } else {
+                        // keep full domain; branching prefers a=0 anyway
+                    }
+                }
+            }
+        }
+    }
+
+    let (bo, guards) = sm.branch_order();
+    let solver = Solver {
+        deadline,
+        node_limit: 50_000,
+        guards: Some(guards),
+        ..Default::default()
+    };
+    let mut best: Option<RematSolution> = None;
+    let r = solver.solve(&sm.model, &sm.objective, &bo, |a, _| {
+        let seq = sm.extract_sequence(a);
+        if let Ok(sol) = RematSolution::from_seq(graph, seq) {
+            if sol.feasible(budget)
+                && best
+                    .as_ref()
+                    .map(|b| sol.eval.duration < b.eval.duration)
+                    .unwrap_or(true)
+            {
+                best = Some(sol);
+            }
+        }
+    });
+    if std::env::var("MOCCASIN_DEBUG_WIN").is_ok() {
+        eprintln!(
+            "  window [{j0},{j1}): status={:?} nodes={} best={:?} incumbent={}",
+            r.status,
+            r.stats.nodes,
+            best.as_ref().map(|b| b.eval.duration),
+            incumbent.eval.duration
+        );
+    }
+    best.filter(|b| b.eval.duration < incumbent.eval.duration)
+}
+
+/// The anytime LNS loop: random stage windows, exact re-solve, accept
+/// improvements, until the deadline.
+#[allow(clippy::too_many_arguments)]
+pub fn lns_loop(
+    graph: &Graph,
+    order: &[NodeId],
+    budget: u64,
+    c: usize,
+    window: usize,
+    deadline: Deadline,
+    rng: &mut Rng,
+    mut incumbent: RematSolution,
+    mut on_improve: impl FnMut(&RematSolution),
+) {
+    let n = graph.n();
+    if n < 3 {
+        return;
+    }
+    let dbg = std::env::var("MOCCASIN_DEBUG").is_ok();
+    // the staged model charges memory in slot order: canonicalize the
+    // incumbent (and accept it if it improves or ties)
+    if let Some(c) = canonicalize(graph, order, &incumbent.seq) {
+        if c.feasible(budget) {
+            if c.eval.duration < incumbent.eval.duration {
+                on_improve(&c);
+            }
+            if c.eval.duration <= incumbent.eval.duration {
+                incumbent = c;
+            }
+        } else if dbg {
+            eprintln!(
+                "lns: canonical incumbent infeasible (peak {} > {budget}); windows may fail",
+                c.eval.peak_mem
+            );
+        }
+    }
+    let mut iters = 0usize;
+    let mut wins = 0usize;
+    let w = window.clamp(3, n);
+    let mut stall = 0usize;
+    while !deadline.exceeded() {
+        iters += 1;
+        // pick a window: uniformly random, occasionally centred on the
+        // peak-memory position of the incumbent
+        let j0 = if stall % 5 == 4 {
+            // centre on the stage of the peak position
+            let stage = incumbent
+                .seq
+                .iter()
+                .take(incumbent.eval.peak_pos + 1)
+                .map(|&v| v)
+                .collect::<std::collections::HashSet<_>>()
+                .len();
+            stage.saturating_sub(w / 2).max(2)
+        } else {
+            2 + rng.gen_range(n.saturating_sub(w).max(1))
+        };
+        let j1 = (j0 + w).min(n + 1);
+        let slice = Duration::from_millis(1500).min(deadline.remaining());
+        if slice.is_zero() {
+            break;
+        }
+        let sub_deadline = Deadline::after(slice);
+        match solve_window(graph, order, budget, c, &incumbent, j0, j1, sub_deadline) {
+            Some(better) => {
+                wins += 1;
+                incumbent = better;
+                on_improve(&incumbent);
+                stall = 0;
+            }
+            None => {
+                stall += 1;
+            }
+        }
+    }
+    if dbg {
+        eprintln!("lns: {iters} iterations, {wins} improvements, final duration {}", incumbent.eval.duration);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators::random_layered;
+    use crate::graph::topological_order;
+    use crate::moccasin::greedy::greedy_remat;
+
+    #[test]
+    fn removal_polish_strips_useless_remats() {
+        let g = Graph::from_edges(
+            "d",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap();
+        // sequence with a pointless recompute of 0
+        let sol = RematSolution::from_seq(&g, vec![0, 1, 2, 0, 3]).unwrap();
+        let p = removal_polish(&g, &sol, 10);
+        assert_eq!(p.eval.remat_count, 0);
+        assert_eq!(p.seq.len(), 4);
+    }
+
+    #[test]
+    fn removal_polish_respects_budget() {
+        // remat needed at budget 10 (see greedy tests)
+        let g = Graph::from_edges(
+            "c",
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+            vec![1, 1, 1, 1, 1],
+            vec![5, 4, 4, 4, 1],
+        )
+        .unwrap();
+        let order = topological_order(&g).unwrap();
+        let sol = greedy_remat(&g, &order, 10).unwrap();
+        let p = removal_polish(&g, &sol, 10);
+        assert!(p.feasible(10));
+        assert!(p.eval.remat_count >= 1, "cannot remove the load-bearing remat");
+    }
+
+    #[test]
+    fn stages_assignment_roundtrip() {
+        let g = Graph::from_edges(
+            "d",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap();
+        let order = topological_order(&g).unwrap(); // [0,1,2,3]
+        let st = stages_of_incumbent(&g, &order, &[0, 1, 2, 0, 3]);
+        assert_eq!(st[0], vec![1, 4]); // first at stage 1, remat in stage 4
+        assert_eq!(st[3], vec![4]);
+    }
+
+    #[test]
+    fn lns_improves_greedy_on_random_graph() {
+        let g = random_layered("t", 60, 150, 12);
+        let order = topological_order(&g).unwrap();
+        let peak = g.peak_mem_no_remat(&order).unwrap();
+        let budget = (peak as f64 * 0.9) as u64;
+        let greedy = greedy_remat(&g, &order, budget).unwrap();
+        let polished = removal_polish(&g, &greedy, budget);
+        let mut best = polished.clone();
+        let mut rng = Rng::seed_from_u64(1);
+        lns_loop(
+            &g,
+            &order,
+            budget,
+            2,
+            10,
+            Deadline::after(Duration::from_secs(4)),
+            &mut rng,
+            polished.clone(),
+            |s| best = s.clone(),
+        );
+        assert!(best.eval.duration <= polished.eval.duration);
+        assert!(best.feasible(budget));
+    }
+}

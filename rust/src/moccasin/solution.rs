@@ -1,0 +1,130 @@
+//! Solution representation and sequence ⇄ interval conversions.
+
+use crate::graph::{eval_sequence, Graph, NodeId, SeqEval};
+
+/// A rematerialization solution: the executable sequence plus its
+/// Appendix-A.3 evaluation. Every constructor re-evaluates the sequence,
+/// so `eval` can always be trusted.
+#[derive(Debug, Clone)]
+pub struct RematSolution {
+    pub seq: Vec<NodeId>,
+    pub eval: SeqEval,
+}
+
+impl RematSolution {
+    /// Build from a sequence, validating it against the graph.
+    pub fn from_seq(graph: &Graph, seq: Vec<NodeId>) -> Result<Self, crate::graph::SeqError> {
+        let eval = eval_sequence(graph, &seq)?;
+        Ok(RematSolution { seq, eval })
+    }
+
+    /// Is this solution within the memory budget?
+    pub fn feasible(&self, budget: u64) -> bool {
+        self.eval.peak_mem <= budget
+    }
+}
+
+/// A retention interval in *sequence position* coordinates: node `v` is
+/// computed at position `start` and its output retained through
+/// `end` (inclusive), per the minimal-retention semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetentionInterval {
+    pub node: NodeId,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Derive the (minimal) retention intervals of a sequence: instance at
+/// position `p` is retained until the last consumer occurrence that
+/// reads it. This is the inverse of interval-model extraction and is
+/// used to warm-start / window-freeze the CP model from an incumbent
+/// sequence.
+pub fn intervals_from_sequence(graph: &Graph, seq: &[NodeId]) -> Vec<RetentionInterval> {
+    let n = graph.n();
+    let mut last_occ = vec![usize::MAX; n];
+    let mut release: Vec<usize> = (0..seq.len()).collect();
+    for (q, &z) in seq.iter().enumerate() {
+        for &v in &graph.preds[z as usize] {
+            let p = last_occ[v as usize];
+            debug_assert_ne!(p, usize::MAX, "sequence must be valid");
+            if release[p] < q {
+                release[p] = q;
+            }
+        }
+        last_occ[z as usize] = q;
+    }
+    seq.iter()
+        .enumerate()
+        .map(|(p, &v)| RetentionInterval { node: v, start: p, end: release[p] })
+        .collect()
+}
+
+/// Count the number of intervals per node (to check against `C_v`).
+pub fn intervals_per_node(graph: &Graph, seq: &[NodeId]) -> Vec<usize> {
+    let mut counts = vec![0usize; graph.n()];
+    for &v in seq {
+        counts[v as usize] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn diamond() -> Graph {
+        Graph::from_edges(
+            "d",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_seq_validates() {
+        let g = diamond();
+        assert!(RematSolution::from_seq(&g, vec![0, 1, 2, 3]).is_ok());
+        assert!(RematSolution::from_seq(&g, vec![1, 0, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn feasibility_check() {
+        let g = diamond();
+        let s = RematSolution::from_seq(&g, vec![0, 1, 2, 3]).unwrap();
+        assert!(s.feasible(3));
+        assert!(!s.feasible(2));
+    }
+
+    #[test]
+    fn intervals_match_minimal_retention() {
+        let g = diamond();
+        let iv = intervals_from_sequence(&g, &[0, 1, 2, 3]);
+        // node 0 read by 1 (pos 1) and 2 (pos 2) → [0, 2]
+        assert_eq!(iv[0], RetentionInterval { node: 0, start: 0, end: 2 });
+        // node 1 read by 3 → [1, 3]
+        assert_eq!(iv[1], RetentionInterval { node: 1, start: 1, end: 3 });
+        // node 3 never read → [3, 3]
+        assert_eq!(iv[3], RetentionInterval { node: 3, start: 3, end: 3 });
+    }
+
+    #[test]
+    fn intervals_with_remat_split() {
+        let g = diamond();
+        let iv = intervals_from_sequence(&g, &[0, 1, 0, 2, 3]);
+        // first instance of 0 read by 1 only → [0,1]
+        assert_eq!(iv[0], RetentionInterval { node: 0, start: 0, end: 1 });
+        // second instance of 0 read by 2 at pos 3 → [2,3]
+        assert_eq!(iv[2], RetentionInterval { node: 0, start: 2, end: 3 });
+    }
+
+    #[test]
+    fn per_node_counts() {
+        let g = diamond();
+        let c = intervals_per_node(&g, &[0, 1, 0, 2, 3]);
+        assert_eq!(c, vec![2, 1, 1, 1]);
+    }
+}

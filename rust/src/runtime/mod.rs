@@ -1,0 +1,147 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): one
+//! [`Runtime`] per process holds the client; each artifact becomes a
+//! compiled [`Executable`]. Python never runs here — artifacts are
+//! produced once by `make artifacts` (python/compile/aot.py) and loaded
+//! as text (HLO text round-trips across the jax≥0.5 / xla_extension
+//! 0.5.1 proto-id mismatch; see DESIGN.md).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Host tensor (f32 or i32), the executor's currency.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => {
+                shape.iter().product()
+            }
+        }
+    }
+
+    /// Size in bytes (both supported dtypes are 4-byte).
+    pub fn byte_size(&self) -> u64 {
+        4 * self.num_elements() as u64
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            HostTensor::F32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => anyhow::bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+/// A compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose the tuple
+        let parts = result.decompose_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// The PJRT CPU runtime: client + compiled-artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new(), dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<dir>/<name>.hlo.txt` (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            self.cache
+                .insert(name.to_string(), Executable { exe, name: name.to_string() });
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_sizes() {
+        let t = HostTensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.num_elements(), 24);
+        assert_eq!(t.byte_size(), 96);
+        assert_eq!(t.as_f32().len(), 24);
+    }
+
+    // PJRT round-trip tests live in rust/tests/runtime_e2e.rs (they need
+    // built artifacts).
+}

@@ -1,0 +1,76 @@
+//! Small std-only utilities: a deterministic PRNG (the build is fully
+//! offline, so we carry no `rand` dependency), timing helpers, and the
+//! in-tree property-testing / bench harness support code.
+
+mod rng;
+
+pub use rng::Rng;
+
+use std::time::{Duration, Instant};
+
+/// A wall-clock deadline for anytime solvers.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    limit: Duration,
+}
+
+impl Deadline {
+    pub fn after(limit: Duration) -> Self {
+        Deadline { start: Instant::now(), limit }
+    }
+
+    pub fn unlimited() -> Self {
+        Deadline { start: Instant::now(), limit: Duration::from_secs(u64::MAX / 4) }
+    }
+
+    #[inline]
+    pub fn exceeded(&self) -> bool {
+        self.start.elapsed() >= self.limit
+    }
+
+    #[inline]
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn remaining(&self) -> Duration {
+        self.limit.saturating_sub(self.start.elapsed())
+    }
+}
+
+/// Format a byte/unit count with thousands separators (report output).
+pub fn fmt_u64(x: u64) -> String {
+    let s = x.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_u64_groups() {
+        assert_eq!(fmt_u64(0), "0");
+        assert_eq!(fmt_u64(999), "999");
+        assert_eq!(fmt_u64(1000), "1,000");
+        assert_eq!(fmt_u64(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn deadline_basic() {
+        let d = Deadline::after(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(d.exceeded());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        let u = Deadline::unlimited();
+        assert!(!u.exceeded());
+    }
+}

@@ -1,0 +1,45 @@
+//! Integration: PJRT runtime + executor against real artifacts.
+//! Skipped (pass trivially) when `artifacts/` has not been built.
+
+use moccasin::executor::{train_with_remat, TrainConfig};
+use moccasin::runtime::{HostTensor, Runtime};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn block_fwd_runs_and_is_finite() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let (b, s, d, dff) = (8usize, 64usize, 128usize, 512usize);
+    let x = HostTensor::zeros_f32(&[b, s, d]);
+    let mk = |sh: &[usize]| HostTensor::F32 {
+        shape: sh.to_vec(),
+        data: (0..sh.iter().product::<usize>()).map(|i| ((i % 17) as f32 - 8.0) * 1e-2).collect(),
+    };
+    let (wqkv, wo, w1, w2) = (mk(&[d, 3 * d]), mk(&[d, d]), mk(&[d, dff]), mk(&[dff, d]));
+    let exe = rt.load("block_fwd").unwrap();
+    let out = exe.run(&[&x, &wqkv, &wo, &w1, &w2]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].num_elements(), b * s * d);
+    assert!(out[0].as_f32().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn short_training_run_respects_budget_and_learns() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = TrainConfig { blocks: 4, steps: 30, lr: 0.05, budget_frac: 0.6, seed: 1 };
+    let r = train_with_remat("artifacts", 256, 128, 512, 64, 8, &cfg).unwrap();
+    assert!(r.peak_pool_bytes <= r.budget_bytes);
+    assert!(r.remat_count >= 1, "0.6x budget must force remat");
+    let first = r.losses[0];
+    let last = *r.losses.last().unwrap();
+    assert!(last < first, "loss should decrease: {first} -> {last}");
+}
