@@ -24,7 +24,10 @@ fn main() {
     for pct in [95, 90, 85, 80, 75, 70, 65, 60] {
         let budget = peak * pct / 100;
         if budget < floor {
-            println!("{pct:>7}% {:>12} below working-set floor — provably infeasible", fmt_u64(budget));
+            println!(
+                "{pct:>7}% {:>12} below working-set floor — provably infeasible",
+                fmt_u64(budget)
+            );
             continue;
         }
         let t0 = Instant::now();

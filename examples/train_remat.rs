@@ -3,12 +3,13 @@
 //! all three layers compose — L1 Pallas kernel inside the L2 JAX
 //! segments, AOT artifacts executed by the L3 Rust coordinator with a
 //! budget-enforcing tensor pool. Logs the loss curve and the
-//! memory/duration trade. Run `make artifacts` first.
+//! memory/duration trade. Run `make artifacts` first and build with
+//! `--features pjrt` (the offline default build stubs the runtime).
 
 use moccasin::executor::{train_with_remat, TrainConfig};
 use moccasin::util::fmt_u64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> moccasin::util::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps = args.iter().position(|a| a == "--steps")
         .and_then(|i| args.get(i + 1)).and_then(|s| s.parse().ok()).unwrap_or(200);
@@ -18,8 +19,11 @@ fn main() -> anyhow::Result<()> {
     // dims must match python/compile/model.py::DIMS
     let (vocab, d_model, d_ff, seq, batch, blocks) = (256, 128, 512, 64, 8, 4);
     let cfg = TrainConfig { blocks, steps, lr: 0.05, budget_frac, seed: 0 };
-    println!("training {blocks}-block transformer (d={d_model}, seq={seq}, batch={batch}) \
-              for {steps} steps at budget {budget_frac:.0}% of activation peak", budget_frac = budget_frac * 100.0);
+    println!(
+        "training {blocks}-block transformer (d={d_model}, seq={seq}, batch={batch}) \
+         for {steps} steps at budget {budget_frac:.0}% of activation peak",
+        budget_frac = budget_frac * 100.0
+    );
 
     let report = train_with_remat("artifacts", vocab, d_model, d_ff, seq, batch, &cfg)?;
 
@@ -34,10 +38,15 @@ fn main() -> anyhow::Result<()> {
             println!("  step {i:4}  loss {l:.4}");
         }
     }
-    let avg_wall: u64 = report.step_wall_us.iter().sum::<u64>() / report.step_wall_us.len().max(1) as u64;
+    let avg_wall: u64 =
+        report.step_wall_us.iter().sum::<u64>() / report.step_wall_us.len().max(1) as u64;
     println!("\navg step wall time: {} us", avg_wall);
     assert!(report.peak_pool_bytes <= report.budget_bytes, "budget violated");
     assert!(report.losses.last().unwrap() < &(report.losses[0] * 0.9), "loss did not drop");
-    println!("OK: loss dropped {:.3} -> {:.3} within budget", report.losses[0], report.losses.last().unwrap());
+    println!(
+        "OK: loss dropped {:.3} -> {:.3} within budget",
+        report.losses[0],
+        report.losses.last().unwrap()
+    );
     Ok(())
 }

@@ -283,9 +283,10 @@ fn sequence_from_r(layout: &Layout, r_val: impl Fn(usize, usize) -> bool) -> Vec
 
 /// Result of a CHECKMATE solve attempt.
 pub struct CheckmateResult {
+    /// Best validated schedule found.
     pub solution: RematSolution,
-    /// objective duration reported by the solver (should equal the
-    /// evaluated duration)
+    /// Whether the branch & bound exhausted the space (under any shared
+    /// incumbent pruning bound).
     pub proved_optimal: bool,
 }
 
@@ -329,7 +330,11 @@ pub fn solve_milp(
         bo.push(vars[col]);
     }
 
-    let solver = Solver { deadline, ..Default::default() };
+    // publish validated improvements to the shared portfolio incumbent
+    // (when one rides along on the deadline) so racing solvers prune;
+    // as a full model this B&B may in turn prune against the global best
+    let incumbent = deadline.incumbent().cloned();
+    let solver = Solver { deadline, bound: incumbent.clone(), ..Default::default() };
     let mut best: Option<RematSolution> = None;
     let r = solver.solve(&model, &objective, &bo, |a, _| {
         let seq = sequence_from_r(&layout, |t, k| a[vars[layout.r(t, k) as usize].0 as usize] == 1);
@@ -337,6 +342,9 @@ pub fn solve_milp(
             let better = sol.feasible(budget)
                 && best.as_ref().map(|b| sol.eval.duration < b.eval.duration).unwrap_or(true);
             if better {
+                if let Some(inc) = &incumbent {
+                    inc.record(sol.eval.duration);
+                }
                 on_solution(&sol);
                 best = Some(sol);
             }

@@ -2,33 +2,62 @@
 //! calls.
 //!
 //! Wraps the solver portfolio behind a cache: schedules are keyed by
-//! (graph fingerprint, budget, C), so a compiler pipeline that
+//! (graph fingerprint, budget, C, backend), so a compiler pipeline that
 //! re-lowers the same model hits the cache instead of re-solving — the
 //! "compile-time" cost the paper optimizes is paid once per
-//! (graph, budget). Also exposes the CHECKMATE baselines behind the
-//! same interface for the benchmark harness.
+//! (graph, budget). The CHECKMATE baselines are exposed behind the same
+//! interface for the benchmark harness.
+//!
+//! Two parallel entry points sit on top of the serial `solve`:
+//!
+//! * [`Backend::Portfolio`] — one request, many worker threads racing
+//!   diversified solvers that share an atomic incumbent bound and a
+//!   cancellation flag (see [`portfolio`]).
+//! * [`Coordinator::solve_many`] — many requests (e.g. a budget sweep)
+//!   scheduled across a worker pool with cache-aware deduplication:
+//!   requests whose key is already cached are answered inline,
+//!   duplicates inside the batch are solved once, and only unique
+//!   misses reach the pool.
+
+pub mod portfolio;
+
+pub use portfolio::{solve_portfolio, PortfolioConfig};
 
 use crate::checkmate::{self, CheckmateError};
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::moccasin::{MoccasinSolver, RematSolution, SolveOutcome};
 use crate::util::Deadline;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Which solver backend to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
+    /// The MOCCASIN retention-interval solver (serial: Phase-1 greedy,
+    /// exact B&B on small graphs, anytime LNS on large ones).
     Moccasin,
+    /// The CHECKMATE exact MILP baseline (pseudo-Boolean B&B).
     CheckmateMilp,
+    /// The CHECKMATE LP-relaxation + two-stage-rounding baseline.
     CheckmateLpRounding,
+    /// Parallel portfolio race: MOCCASIN members with diversified
+    /// orders/seeds plus the CHECKMATE MILP, sharing an atomic
+    /// incumbent; the first optimality proof cancels the rest.
+    Portfolio,
 }
 
 /// A solve request.
 #[derive(Debug, Clone)]
 pub struct SolveRequest {
+    /// Memory budget `M` (peak-footprint cap).
     pub budget: u64,
+    /// Max retention intervals per node (the paper's `C`).
     pub c: usize,
+    /// Wall-clock limit for the solve.
     pub time_limit: Duration,
+    /// Solver backend.
     pub backend: Backend,
     /// optional explicit input topological order
     pub order: Option<Vec<NodeId>>,
@@ -49,30 +78,59 @@ impl Default for SolveRequest {
 /// A solve response: the best schedule plus anytime metadata.
 #[derive(Debug, Clone)]
 pub struct SolveResponse {
+    /// Best schedule found (`None` if the budget was unreachable within
+    /// the limits).
     pub solution: Option<RematSolution>,
     /// (elapsed, duration) anytime trace
     pub trace: Vec<(Duration, u64)>,
+    /// Whether optimality (or infeasibility) was proved.
     pub proved_optimal: bool,
+    /// Whether this response was served from the schedule cache.
     pub from_cache: bool,
+    /// Why no solution was produced, when one wasn't.
     pub error: Option<String>,
 }
 
-/// The coordinator: solver portfolio + solution cache.
+/// Cache key: (graph fingerprint, budget, C, backend discriminant).
+type CacheKey = (u64, u64, usize, u8);
+
+/// The coordinator: solver portfolio + solution cache + worker pool
+/// configuration for batched solves.
 #[derive(Default)]
 pub struct Coordinator {
-    cache: HashMap<(u64, u64, usize, u8), SolveResponse>,
+    cache: HashMap<CacheKey, SolveResponse>,
+    /// Worker threads used by [`Coordinator::solve_many`] and by
+    /// [`Backend::Portfolio`] members. `0` = auto (available
+    /// parallelism).
+    pub threads: usize,
+    /// Cache hits served so far (including batch-deduplicated requests).
     pub hits: u64,
+    /// Cache misses (actual solves) so far.
     pub misses: u64,
 }
 
 impl Coordinator {
+    /// Fresh coordinator with an empty cache and automatic parallelism.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Worker count for batched solves (resolves the `0` = auto
+    /// default).
+    fn worker_count(&self) -> usize {
+        if self.threads != 0 {
+            return self.threads;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    fn cache_key(graph: &Graph, req: &SolveRequest) -> CacheKey {
+        (graph.fingerprint(), req.budget, req.c, req.backend as u8)
+    }
+
     /// Solve (or fetch from cache).
     pub fn solve(&mut self, graph: &Graph, req: &SolveRequest) -> SolveResponse {
-        let key = (graph.fingerprint(), req.budget, req.c, req.backend as u8);
+        let key = Self::cache_key(graph, req);
         if let Some(hit) = self.cache.get(&key) {
             self.hits += 1;
             let mut r = hit.clone();
@@ -83,6 +141,86 @@ impl Coordinator {
         let resp = self.solve_uncached(graph, req);
         self.cache.insert(key, resp.clone());
         resp
+    }
+
+    /// Solve a batch of requests across the worker pool with cache-aware
+    /// deduplication.
+    ///
+    /// Semantics per request, in order:
+    /// 1. key already in the cache → answered from cache (`from_cache`);
+    /// 2. key duplicated earlier in the batch → solved once, duplicate
+    ///    answered from the fresh cache entry (`from_cache`, counted as
+    ///    a hit);
+    /// 3. otherwise → solved on the pool (counted as a miss).
+    ///
+    /// Responses are returned in request order. Wall-clock for a sweep
+    /// of `k` unique requests approaches `ceil(k / threads)` serial
+    /// solves.
+    pub fn solve_many(&mut self, requests: &[(&Graph, SolveRequest)]) -> Vec<SolveResponse> {
+        let keys: Vec<CacheKey> =
+            requests.iter().map(|(g, r)| Self::cache_key(g, r)).collect();
+        let mut out: Vec<Option<SolveResponse>> = vec![None; requests.len()];
+
+        // cache pass + batch dedup: `jobs` holds request indices of
+        // unique misses
+        let mut jobs: Vec<usize> = Vec::new();
+        let mut seen: HashSet<CacheKey> = HashSet::new();
+        for (i, key) in keys.iter().enumerate() {
+            if let Some(hit) = self.cache.get(key) {
+                self.hits += 1;
+                let mut r = hit.clone();
+                r.from_cache = true;
+                out[i] = Some(r);
+            } else if !seen.insert(*key) {
+                self.hits += 1; // batch duplicate: filled after the solves
+            } else {
+                self.misses += 1;
+                jobs.push(i);
+            }
+        }
+
+        // run unique misses on the worker pool
+        let results: Vec<Option<SolveResponse>> = {
+            let slots: Vec<Mutex<Option<SolveResponse>>> =
+                jobs.iter().map(|_| Mutex::new(None)).collect();
+            let next = AtomicUsize::new(0);
+            let workers = self.worker_count().min(jobs.len().max(1));
+            let me: &Coordinator = self;
+            let jobs_ref = &jobs;
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    let slots = &slots;
+                    let next = &next;
+                    s.spawn(move || loop {
+                        let j = next.fetch_add(1, Ordering::Relaxed);
+                        if j >= jobs_ref.len() {
+                            break;
+                        }
+                        let i = jobs_ref[j];
+                        let (graph, req) = &requests[i];
+                        let resp = me.solve_uncached(graph, req);
+                        *slots[j].lock().unwrap() = Some(resp);
+                    });
+                }
+            });
+            slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        };
+
+        // publish results into the cache + the output slots
+        for (j, &i) in jobs.iter().enumerate() {
+            let resp = results[j].clone().expect("worker filled its slot");
+            self.cache.insert(keys[i], resp.clone());
+            out[i] = Some(resp);
+        }
+        // batch duplicates read the now-warm cache
+        for (i, slot) in out.iter_mut().enumerate() {
+            if slot.is_none() {
+                let mut r = self.cache[&keys[i]].clone();
+                r.from_cache = true;
+                *slot = Some(r);
+            }
+        }
+        out.into_iter().map(|o| o.expect("every request answered")).collect()
     }
 
     fn solve_uncached(&self, graph: &Graph, req: &SolveRequest) -> SolveResponse {
@@ -106,12 +244,28 @@ impl Coordinator {
                     error: None,
                 }
             }
+            Backend::Portfolio => {
+                let cfg = PortfolioConfig {
+                    threads: self.threads,
+                    time_limit: req.time_limit,
+                    c: req.c,
+                    seed: 0,
+                    include_checkmate: true,
+                };
+                solve_portfolio(graph, req.budget, Some(order), &cfg)
+            }
             Backend::CheckmateMilp => {
                 let deadline = Deadline::after(req.time_limit);
                 let mut trace = Vec::new();
-                let r = checkmate::solve_milp(graph, &order, req.budget, deadline, |sol| {
-                    trace.push((deadline.elapsed(), sol.eval.duration));
-                });
+                let r = checkmate::solve_milp(
+                    graph,
+                    &order,
+                    req.budget,
+                    deadline.clone(),
+                    |sol| {
+                        trace.push((deadline.elapsed(), sol.eval.duration));
+                    },
+                );
                 match r {
                     Ok(res) => SolveResponse {
                         solution: Some(res.solution),
@@ -174,7 +328,8 @@ mod tests {
     fn cache_hit_on_second_solve() {
         let g = chain();
         let mut c = Coordinator::new();
-        let req = SolveRequest { budget: 10, time_limit: Duration::from_secs(5), ..Default::default() };
+        let req =
+            SolveRequest { budget: 10, time_limit: Duration::from_secs(5), ..Default::default() };
         let a = c.solve(&g, &req);
         assert!(!a.from_cache);
         let b = c.solve(&g, &req);
@@ -190,7 +345,8 @@ mod tests {
     fn different_budgets_are_different_entries() {
         let g = chain();
         let mut c = Coordinator::new();
-        let mut req = SolveRequest { budget: 10, time_limit: Duration::from_secs(5), ..Default::default() };
+        let mut req =
+            SolveRequest { budget: 10, time_limit: Duration::from_secs(5), ..Default::default() };
         let _ = c.solve(&g, &req);
         req.budget = 13;
         let r = c.solve(&g, &req);
@@ -220,5 +376,38 @@ mod tests {
             m.solution.unwrap().eval.duration,
             k.solution.unwrap().eval.duration
         );
+    }
+
+    #[test]
+    fn solve_many_dedups_and_fills_cache() {
+        let g = chain();
+        let mut c = Coordinator::new();
+        let req = |budget: u64| SolveRequest {
+            budget,
+            time_limit: Duration::from_secs(5),
+            ..Default::default()
+        };
+        // 5 requests, 2 unique keys, one duplicated three times
+        let batch = vec![
+            (&g, req(10)),
+            (&g, req(13)),
+            (&g, req(10)),
+            (&g, req(10)),
+            (&g, req(13)),
+        ];
+        let responses = c.solve_many(&batch);
+        assert_eq!(responses.len(), 5);
+        assert_eq!(c.misses, 2, "only unique keys are solved");
+        assert_eq!(c.hits, 3, "batch duplicates count as hits");
+        assert!(!responses[0].from_cache);
+        assert!(responses[2].from_cache && responses[3].from_cache);
+        assert_eq!(
+            responses[0].solution.as_ref().unwrap().eval.duration,
+            responses[2].solution.as_ref().unwrap().eval.duration
+        );
+        // a second batch is now fully cached
+        let again = c.solve_many(&batch[..2]);
+        assert!(again.iter().all(|r| r.from_cache));
+        assert_eq!(c.misses, 2);
     }
 }

@@ -1,0 +1,298 @@
+//! Parallel portfolio solve: worker threads racing diversified solvers
+//! over one `(graph, budget)` request.
+//!
+//! The paper's headline claim is wall-clock (§3): MOCCASIN's O(n) model
+//! solves an order of magnitude faster than CHECKMATE's O(n²) MILP, and
+//! its anytime behaviour is what makes it usable on large graphs. The
+//! portfolio turns that anytime behaviour into a multi-core solve
+//! service: member 0 runs MOCCASIN on the canonical (Kahn) topological
+//! order, further members run MOCCASIN from *random* topological orders
+//! with different LNS seeds and window sizes (the paper itself
+//! randomizes the input order, §3.3), and — when the model fits — one
+//! member runs the CHECKMATE MILP baseline.
+//!
+//! All members share an [`Incumbent`]: every validated improving
+//! solution is published to the atomic best-duration bound, every
+//! branch-and-bound member prunes against the best solution found
+//! *anywhere* (see `cp::search`), and the first optimality proof
+//! cancels the rest of the race through the cancellation flag each
+//! member's [`Deadline`] carries.
+//!
+//! Because the staged model (§2.3) is *order-relative*, only the
+//! canonical-order member (and the order-respecting CHECKMATE member)
+//! may declare the race decided — a random-order member's optimality
+//! proof bounds its own order only, so such members contribute
+//! solutions and pruning bounds but never cancel the race.
+
+use super::SolveResponse;
+use crate::checkmate;
+use crate::graph::{random_topological_order, topological_order, Graph, NodeId};
+use crate::moccasin::{MoccasinSolver, RematSolution};
+use crate::util::{Deadline, Incumbent, Rng};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Configuration of a portfolio solve.
+#[derive(Debug, Clone)]
+pub struct PortfolioConfig {
+    /// Racing members (worker threads). `0` = auto: the machine's
+    /// available parallelism, capped at 4.
+    pub threads: usize,
+    /// Wall-clock limit shared by all members.
+    pub time_limit: Duration,
+    /// Max retention intervals per node (the paper's `C`).
+    pub c: usize,
+    /// Base RNG seed for member diversification (orders + LNS).
+    pub seed: u64,
+    /// Dedicate one member to the CHECKMATE MILP baseline (skipped
+    /// automatically on graphs whose O(n²) model would trip the build
+    /// guard anyway).
+    pub include_checkmate: bool,
+}
+
+impl Default for PortfolioConfig {
+    fn default() -> Self {
+        PortfolioConfig {
+            threads: 0,
+            time_limit: Duration::from_secs(60),
+            c: 2,
+            seed: 0,
+            include_checkmate: true,
+        }
+    }
+}
+
+impl PortfolioConfig {
+    /// Resolve `threads == 0` to the machine's parallelism (capped at 4
+    /// so a default solve does not monopolize a large host).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads != 0 {
+            return self.threads.max(1);
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(4).max(1)
+    }
+}
+
+/// State shared by all racing members.
+struct Shared {
+    incumbent: Arc<Incumbent>,
+    best: Mutex<Option<RematSolution>>,
+    /// merged anytime trace: (elapsed since race start, duration)
+    trace: Mutex<Vec<(Duration, u64)>>,
+    proved: AtomicBool,
+    started: Instant,
+}
+
+impl Shared {
+    /// Publish a member's validated solution into the shared best +
+    /// merged trace (strict improvements only).
+    fn publish(&self, sol: &RematSolution) {
+        let mut best = self.best.lock().unwrap();
+        let improved =
+            best.as_ref().map(|b| sol.eval.duration < b.eval.duration).unwrap_or(true);
+        if improved {
+            self.trace.lock().unwrap().push((self.started.elapsed(), sol.eval.duration));
+            *best = Some(sol.clone());
+        }
+    }
+
+    /// Record an optimality (or infeasibility) proof and cancel the
+    /// race — but only if the proof still covers the shared best.
+    ///
+    /// `proven` is the duration the exhausted member proved unbeatable
+    /// (`None` = it proved its model infeasible). The check runs under
+    /// the same lock `publish` takes, so a racing member cannot slip a
+    /// strictly better solution in between the proof check and the
+    /// `proved` flag — without this, the response could claim
+    /// optimality for a solution no proof covers.
+    fn decide(&self, proven: Option<u64>) {
+        let best = self.best.lock().unwrap();
+        let current = best.as_ref().map(|b| b.eval.duration);
+        let covered = match (proven, current) {
+            // optimality proof at exactly the shared best
+            (Some(d), Some(c)) => c == d,
+            // infeasibility proof, and nobody found anything either
+            (None, None) => true,
+            // proof is stale (someone else did better) or covers a
+            // different order's model only
+            _ => false,
+        };
+        if covered {
+            self.proved.store(true, Ordering::Release);
+            self.incumbent.cancel();
+        }
+    }
+}
+
+/// Race `cfg` members over one request and return the best solution
+/// found anywhere, with the merged anytime trace. `order`, when given,
+/// is the canonical input topological order used by member 0 (and the
+/// CHECKMATE member); `None` uses the deterministic Kahn order.
+pub fn solve_portfolio(
+    graph: &Graph,
+    budget: u64,
+    order: Option<Vec<NodeId>>,
+    cfg: &PortfolioConfig,
+) -> SolveResponse {
+    let threads = cfg.effective_threads();
+    let base_order =
+        order.unwrap_or_else(|| topological_order(graph).expect("DAG required"));
+    let shared = Shared {
+        incumbent: Arc::new(Incumbent::new()),
+        best: Mutex::new(None),
+        trace: Mutex::new(Vec::new()),
+        proved: AtomicBool::new(false),
+        started: Instant::now(),
+    };
+    let checkmate_member =
+        cfg.include_checkmate && threads >= 2 && checkmate_member_viable(graph);
+
+    std::thread::scope(|s| {
+        for m in 0..threads {
+            let shared = &shared;
+            let base_order = &base_order;
+            s.spawn(move || {
+                if checkmate_member && m == threads - 1 {
+                    run_checkmate_member(graph, budget, base_order, cfg, shared);
+                } else {
+                    run_moccasin_member(graph, budget, base_order, cfg, shared, m);
+                }
+            });
+        }
+    });
+
+    let Shared { best, trace, proved, .. } = shared;
+    let best = best.into_inner().unwrap();
+    let mut trace = trace.into_inner().unwrap();
+    trace.sort_unstable();
+    SolveResponse {
+        error: best
+            .is_none()
+            .then(|| "portfolio: no member found a solution".to_string()),
+        solution: best,
+        trace,
+        proved_optimal: proved.load(Ordering::Acquire),
+        from_cache: false,
+    }
+}
+
+/// Whether spending a thread on the O(n² + nm) CHECKMATE model is
+/// worthwhile (its build guard trips far earlier than MOCCASIN's).
+fn checkmate_member_viable(graph: &Graph) -> bool {
+    graph.n() <= 200
+}
+
+/// One MOCCASIN member: canonical order for member 0, random
+/// topological orders (the paper's §3.3 randomization) plus diversified
+/// LNS seeds/windows for the rest.
+fn run_moccasin_member(
+    graph: &Graph,
+    budget: u64,
+    base_order: &[NodeId],
+    cfg: &PortfolioConfig,
+    shared: &Shared,
+    member: usize,
+) {
+    let order: Vec<NodeId> = if member == 0 {
+        base_order.to_vec()
+    } else {
+        let mut rng = Rng::seed_from_u64(
+            cfg.seed ^ (member as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        random_topological_order(graph, &mut rng)
+    };
+    let solver = MoccasinSolver {
+        c: cfg.c,
+        time_limit: cfg.time_limit,
+        seed: cfg.seed.wrapping_add(member as u64),
+        window: 14 + 4 * (member % 3),
+        incumbent: Some(Arc::clone(&shared.incumbent)),
+        ..Default::default()
+    };
+    let out = solver.solve_with(graph, budget, Some(order), |sol| shared.publish(sol));
+    // Only the canonical-order member may declare the race decided (the
+    // staged model is order-relative; see module docs). Its proof is
+    // either optimality at its best duration or infeasibility.
+    if member == 0 && out.proved_optimal {
+        shared.decide(out.best.as_ref().map(|b| b.eval.duration));
+    }
+}
+
+/// The CHECKMATE MILP member: same canonical order, same shared
+/// incumbent (published through the deadline), cancelling the race when
+/// it proves its best — which then equals the shared best — optimal.
+fn run_checkmate_member(
+    graph: &Graph,
+    budget: u64,
+    order: &[NodeId],
+    cfg: &PortfolioConfig,
+    shared: &Shared,
+) {
+    let deadline =
+        Deadline::with_incumbent(cfg.time_limit, Arc::clone(&shared.incumbent));
+    let result =
+        checkmate::solve_milp(graph, order, budget, deadline, |sol| shared.publish(sol));
+    if let Ok(res) = result {
+        if res.proved_optimal {
+            shared.decide(Some(res.solution.eval.duration));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Chain + long skip with heavy source: optimum is one remat of
+    /// node 0 (duration 6) at budget 10, and the topological order is
+    /// forced, so every member works on the same order.
+    fn chain() -> Graph {
+        Graph::from_edges(
+            "c",
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+            vec![1; 5],
+            vec![5, 4, 4, 4, 1],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn portfolio_matches_known_optimum() {
+        let cfg = PortfolioConfig {
+            threads: 2,
+            time_limit: Duration::from_secs(20),
+            ..Default::default()
+        };
+        let resp = solve_portfolio(&chain(), 10, None, &cfg);
+        let sol = resp.solution.expect("feasible at budget 10");
+        assert_eq!(sol.eval.duration, 6);
+        assert!(sol.eval.peak_mem <= 10);
+        assert!(resp.proved_optimal, "exact member must prove the optimum");
+    }
+
+    #[test]
+    fn portfolio_reports_infeasibility() {
+        // budget below the working-set floor: provably infeasible
+        let g = Graph::from_edges("d", 2, &[(0, 1)], vec![1, 1], vec![5, 5]).unwrap();
+        let cfg = PortfolioConfig {
+            threads: 2,
+            time_limit: Duration::from_secs(10),
+            include_checkmate: false,
+            ..Default::default()
+        };
+        let resp = solve_portfolio(&g, 9, None, &cfg);
+        assert!(resp.solution.is_none());
+        assert!(resp.error.is_some());
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        let cfg = PortfolioConfig::default();
+        let t = cfg.effective_threads();
+        assert!((1..=4).contains(&t));
+        let fixed = PortfolioConfig { threads: 7, ..Default::default() };
+        assert_eq!(fixed.effective_threads(), 7);
+    }
+}

@@ -55,26 +55,31 @@ impl Domain {
         }
     }
 
+    /// Smallest value still in the domain.
     #[inline]
     pub fn min(&self) -> i64 {
         self.value_at(self.lo)
     }
 
+    /// Largest value still in the domain.
     #[inline]
     pub fn max(&self) -> i64 {
         self.value_at(self.hi)
     }
 
+    /// Whether the domain is a singleton.
     #[inline]
     pub fn is_fixed(&self) -> bool {
         self.lo == self.hi
     }
 
+    /// Number of values still in the domain.
     #[inline]
     pub fn size(&self) -> usize {
         (self.hi - self.lo + 1) as usize
     }
 
+    /// Whether `v` is still in the domain.
     pub fn contains(&self, v: i64) -> bool {
         if v < self.min() || v > self.max() {
             return false;

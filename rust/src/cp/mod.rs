@@ -55,6 +55,7 @@ impl Default for Model {
 }
 
 impl Model {
+    /// Empty model.
     pub fn new() -> Self {
         Model { domains: Vec::new(), props: Vec::new(), watches: Vec::new() }
     }

@@ -15,12 +15,18 @@ use super::domain::{Domain, VarId};
 /// event).
 #[derive(Debug, Clone)]
 pub struct CumItem {
+    /// Boolean: the interval exists.
     pub active: VarId,
+    /// First event covered by the interval.
     pub start: VarId,
+    /// Last event covered by the interval (inclusive).
     pub end: VarId,
+    /// Resource units consumed while active.
     pub demand: i64,
 }
 
+/// A constraint: watched variables + a bounds-filtering pass + a
+/// full-assignment satisfaction check (static dispatch via this enum).
 #[derive(Debug, Clone)]
 pub enum Propagator {
     /// Σ cᵢ·xᵢ ≤ rhs.
@@ -40,28 +46,34 @@ pub struct Conflict;
 
 /// Mutable propagation context: domains + trail + changed-var log.
 pub struct Ctx<'a> {
+    /// All variable domains, indexed by [`VarId`].
     pub domains: &'a mut [Domain],
     /// (var, old_lo, old_hi) — undone in reverse order on backtrack.
     pub trail: &'a mut Vec<(u32, u32, u32)>,
+    /// Variables whose bounds changed during the current pass.
     pub changed: &'a mut Vec<VarId>,
 }
 
 impl<'a> Ctx<'a> {
+    /// The domain of `x`.
     #[inline]
     pub fn dom(&self, x: VarId) -> &Domain {
         &self.domains[x.0 as usize]
     }
 
+    /// Lower bound of `x`.
     #[inline]
     pub fn min(&self, x: VarId) -> i64 {
         self.dom(x).min()
     }
 
+    /// Upper bound of `x`.
     #[inline]
     pub fn max(&self, x: VarId) -> i64 {
         self.dom(x).max()
     }
 
+    /// Whether `x` is fixed.
     #[inline]
     pub fn is_fixed(&self, x: VarId) -> bool {
         self.dom(x).is_fixed()
@@ -103,6 +115,7 @@ impl<'a> Ctx<'a> {
         }
     }
 
+    /// x = v.
     pub fn fix_var(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
         self.set_min(x, v)?;
         self.set_max(x, v)

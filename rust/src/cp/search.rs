@@ -11,7 +11,8 @@
 use super::domain::{Domain, VarId};
 use super::propagators::{Conflict, Ctx, Propagator};
 use super::Model;
-use crate::util::Deadline;
+use crate::util::{Deadline, Incumbent};
+use std::sync::Arc;
 
 /// Terminal status of a search.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,20 +31,28 @@ pub enum Status {
 /// Search statistics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SearchStats {
+    /// Branch decisions taken.
     pub nodes: u64,
+    /// Dead ends (failed propagations / unverifiable leaves).
     pub conflicts: u64,
+    /// Improving solutions emitted.
     pub solutions: u64,
+    /// Propagator invocations.
     pub propagations: u64,
 }
 
 /// Result of a search: status, best assignment + objective, stats.
 pub struct SearchResult {
+    /// Terminal status (optimal / feasible / infeasible / unknown).
     pub status: Status,
+    /// Best assignment found and its objective value, if any.
     pub best: Option<(Vec<i64>, i64)>,
+    /// Search statistics.
     pub stats: SearchStats,
 }
 
 impl SearchResult {
+    /// Whether at least one solution was found.
     pub fn found(&self) -> bool {
         self.best.is_some()
     }
@@ -51,7 +60,18 @@ impl SearchResult {
 
 /// Solver configuration.
 pub struct Solver {
+    /// Wall-clock limit; when it carries a shared [`Incumbent`], the
+    /// search observes portfolio cancellation on every limit poll.
     pub deadline: Deadline,
+    /// Optional shared pruning bound: the objective bound is seeded
+    /// from (and periodically tightened to) the best duration published
+    /// here by any cooperating solver. Kept separate from `deadline`'s
+    /// cancellation channel on purpose: full-model solves (exact,
+    /// CHECKMATE) want global pruning, while LNS window re-solves must
+    /// prune only against their *local* incumbent or a member behind
+    /// the global best could never make incremental progress.
+    pub bound: Option<Arc<Incumbent>>,
+    /// Hard cap on branch decisions.
     pub node_limit: u64,
     /// Stop as soon as the first solution is found (Phase-1 style).
     pub first_solution: bool,
@@ -65,6 +85,7 @@ impl Default for Solver {
     fn default() -> Self {
         Solver {
             deadline: Deadline::unlimited(),
+            bound: None,
             node_limit: u64::MAX,
             first_solution: false,
             guards: None,
@@ -97,8 +118,15 @@ impl Solver {
         let mut trail: Vec<(u32, u32, u32)> = Vec::new();
         let mut stats = SearchStats::default();
         let mut best: Option<(Vec<i64>, i64)> = None;
-        // incumbent bound as rhs of the implicit objective constraint
+        // incumbent bound as rhs of the implicit objective constraint;
+        // seeded from the shared pruning bound when one is attached
+        // (any solver may prune against the best solution found anywhere)
         let mut obj_bound: i64 = i64::MAX / 4;
+        if !objective.is_empty() {
+            if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
+                obj_bound = obj_bound.min(g as i64 - 1);
+            }
+        }
 
         // propagation queue state
         let nprops = model.props.len();
@@ -214,12 +242,20 @@ impl Solver {
         let mut limit_hit = false;
 
         'search: loop {
-            // limits
+            // limits (the deadline poll also observes portfolio
+            // cancellation)
             if stats.nodes >= self.node_limit
                 || (stats.nodes % 128 == 0 && self.deadline.exceeded())
             {
                 limit_hit = true;
                 break 'search;
+            }
+            // portfolio pruning: tighten the bound to the best duration
+            // published by any cooperating solver
+            if stats.nodes % 128 == 0 && !objective.is_empty() {
+                if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
+                    obj_bound = obj_bound.min(g as i64 - 1);
+                }
             }
 
             // pick first unfixed branch var whose guard is not fixed 0

@@ -129,7 +129,9 @@ fn all_different_permutation() {
     m.linear_ge(vec![(1, vars[0])], 2);
     m.linear_ge(vec![(1, vars[1])], 2);
     let s = Solver { first_solution: true, ..Default::default() };
-    let r = s.solve(&m, &all_vars(&m).iter().map(|&v| (0i64, v)).collect::<Vec<_>>()[..0].to_vec(), &all_vars(&m), |_, _| {});
+    let empty_obj =
+        all_vars(&m).iter().map(|&v| (0i64, v)).collect::<Vec<_>>()[..0].to_vec();
+    let r = s.solve(&m, &empty_obj, &all_vars(&m), |_, _| {});
     assert!(r.found());
     let (sol, _) = r.best.unwrap();
     let mut vals: Vec<i64> = vars.iter().map(|v| sol[v.0 as usize]).collect();

@@ -20,16 +20,17 @@
 use crate::graph::{Graph, NodeId};
 use crate::moccasin::{intervals_from_sequence, MoccasinSolver};
 use crate::runtime::{HostTensor, Runtime};
-use crate::util::Rng;
-use anyhow::{Context, Result};
+use crate::util::{Context, Error, Result, Rng};
 use std::time::Instant;
 
 /// What each graph node executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SegKind {
+    /// Token embedding (node 0, produces activation a0).
     Embed,
     /// forward of block i (0-based)
     Fwd(usize),
+    /// Loss + gradient head (consumes a_K, produces d_K).
     Loss,
     /// backward of block i
     Bwd(usize),
@@ -37,7 +38,9 @@ pub enum SegKind {
 
 /// The segment-level training graph: `2K + 2` nodes.
 pub struct SegmentGraph {
+    /// The compute DAG handed to the solver.
     pub graph: Graph,
+    /// What each node executes, indexed by node id.
     pub kinds: Vec<SegKind>,
 }
 
@@ -71,9 +74,11 @@ pub fn training_graph(k: usize, act_bytes: u64, w: &[u64]) -> SegmentGraph {
 
 /// Transformer-LM parameters held host-side.
 pub struct Params {
+    /// Token embedding table `[vocab, d]`.
     pub embed: HostTensor,
     /// per block: wqkv, wo, w1, w2
     pub blocks: Vec<[HostTensor; 4]>,
+    /// Output projection `[d, vocab]`.
     pub unembed: HostTensor,
 }
 
@@ -121,25 +126,33 @@ impl Params {
 
 /// Result of a training run.
 pub struct TrainReport {
+    /// Loss per step (first entry is the profiling step).
     pub losses: Vec<f32>,
     /// peak pool bytes observed across all steps
     pub peak_pool_bytes: u64,
+    /// Enforced activation-memory budget in bytes.
     pub budget_bytes: u64,
     /// schedule stats
     pub remat_count: usize,
+    /// Schedule duration increase over no-remat, in percent.
     pub tdi_percent: f64,
     /// profiled per-node durations (µs)
     pub durations_us: Vec<u64>,
+    /// Wall-clock per scheduled training step (µs).
     pub step_wall_us: Vec<u64>,
 }
 
 /// Configuration for the end-to-end training driver.
 pub struct TrainConfig {
+    /// Number of transformer blocks `K`.
     pub blocks: usize,
+    /// Training steps to run under the schedule.
     pub steps: usize,
+    /// SGD learning rate.
     pub lr: f32,
     /// memory budget as a fraction of the no-remat activation peak
     pub budget_frac: f64,
+    /// RNG seed (init + synthetic data).
     pub seed: u64,
 }
 
@@ -306,7 +319,8 @@ pub fn train_with_remat(
     )?;
 
     // ---- schedule under the budget with profiled durations
-    let sg = training_graph(k, act_bytes, &durations_us.iter().map(|&d| d.max(1)).collect::<Vec<_>>());
+    let profiled: Vec<u64> = durations_us.iter().map(|&d| d.max(1)).collect();
+    let sg = training_graph(k, act_bytes, &profiled);
     let budget = ((no_remat_peak as f64) * cfg.budget_frac) as u64;
     let budget = budget.max(sg.graph.working_set_floor());
     let solver = MoccasinSolver {
@@ -328,10 +342,11 @@ pub fn train_with_remat(
         step_wall_us.push(t0.elapsed().as_micros() as u64);
         losses.push(loss);
         peak_pool = peak_pool.max(peak);
-        anyhow::ensure!(
-            peak <= budget,
-            "pool peak {peak} exceeded budget {budget} — scheduler/executor disagree"
-        );
+        if peak > budget {
+            return Err(Error::msg(format!(
+                "pool peak {peak} exceeded budget {budget} — scheduler/executor disagree"
+            )));
+        }
     }
 
     Ok(TrainReport {

@@ -96,6 +96,7 @@ pub struct Evaluator<'g> {
 }
 
 impl<'g> Evaluator<'g> {
+    /// Evaluator for `g` with reusable scratch buffers.
     pub fn new(g: &'g Graph) -> Self {
         Evaluator {
             g,

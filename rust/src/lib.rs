@@ -20,8 +20,17 @@
 //! * **runtime** / **executor** — PJRT-based execution of AOT-compiled
 //!   XLA artifacts under a rematerialization schedule with a tracked
 //!   memory pool.
-//! * **coordinator** — the solve service + CLI a downstream user calls.
+//! * **coordinator** — the solve service + CLI a downstream user calls:
+//!   cached serial solves, the parallel portfolio race
+//!   ([`coordinator::Backend::Portfolio`]), and the batched
+//!   [`coordinator::Coordinator::solve_many`] used for parallel budget
+//!   sweeps.
 //! * **bench** — harness regenerating every table and figure of the paper.
+//!
+//! See `README.md` for the quickstart and the paper-to-module map, and
+//! `docs/BENCHMARKS.md` for the reproduction methodology.
+
+#![deny(missing_docs)]
 
 pub mod generators;
 pub mod graph;

@@ -1,9 +1,14 @@
 //! MOCCASIN CLI — the L3 entrypoint.
 //!
 //! Subcommands:
-//!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--time-limit S]
-//!   bench   <fig1|fig5|fig6|table1|table2|ablation-c|ablation-topo|all> [--time-limit S] [--quick]
-//!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`)
+//!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--portfolio]
+//!           [--threads N] [--time-limit S]
+//!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
+//!           [--time-limit S] [--compare-serial]
+//!   bench   <fig1|fig5|fig6|table1|table2|sweep|ablation-c|ablation-topo|all>
+//!           [--time-limit S] [--quick]
+//!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`
+//!           and a build with `--features pjrt`)
 //!
 //! Std-only argument parsing (the build is fully offline).
 
@@ -13,7 +18,7 @@ use moccasin::executor::{train_with_remat, TrainConfig};
 use moccasin::generators::{paper_graph, random_layered};
 use moccasin::graph::{topological_order, Graph};
 use moccasin::util::fmt_u64;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn flag_val(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
@@ -31,26 +36,38 @@ fn parse_graph(spec: &str) -> Option<Graph> {
     None
 }
 
+fn graph_or_exit(args: &[String]) -> (String, Graph) {
+    let spec = flag_val(args, "--graph").unwrap_or_else(|| "G1".into());
+    let g = parse_graph(&spec).unwrap_or_else(|| {
+        eprintln!("unknown graph {spec} (use G1..G4, RW1..RW4, CM1, CM2, rl:n:m:seed)");
+        std::process::exit(2);
+    });
+    (spec, g)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let time_limit = Duration::from_secs_f64(
         flag_val(&args, "--time-limit").and_then(|s| s.parse().ok()).unwrap_or(30.0),
     );
     let quick = args.iter().any(|a| a == "--quick");
+    let threads: usize =
+        flag_val(&args, "--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
 
     match args.first().map(|s| s.as_str()) {
         Some("solve") => {
-            let spec = flag_val(&args, "--graph").unwrap_or_else(|| "G1".into());
-            let g = parse_graph(&spec).unwrap_or_else(|| {
-                eprintln!("unknown graph {spec} (use G1..G4, RW1..RW4, CM1, CM2, rl:n:m:seed)");
-                std::process::exit(2);
-            });
+            let (spec, g) = graph_or_exit(&args);
             let frac: f64 =
                 flag_val(&args, "--budget-frac").and_then(|s| s.parse().ok()).unwrap_or(0.8);
-            let backend = match flag_val(&args, "--backend").as_deref() {
-                Some("checkmate") => Backend::CheckmateMilp,
-                Some("lp-rounding") => Backend::CheckmateLpRounding,
-                _ => Backend::Moccasin,
+            let backend = if args.iter().any(|a| a == "--portfolio") {
+                Backend::Portfolio
+            } else {
+                match flag_val(&args, "--backend").as_deref() {
+                    Some("checkmate") => Backend::CheckmateMilp,
+                    Some("lp-rounding") => Backend::CheckmateLpRounding,
+                    Some("portfolio") => Backend::Portfolio,
+                    _ => Backend::Moccasin,
+                }
             };
             let order = topological_order(&g).unwrap();
             let peak = g.peak_mem_no_remat(&order).unwrap();
@@ -60,6 +77,7 @@ fn main() {
                 g.n(), g.m(), fmt_u64(peak), fmt_u64(budget), frac = frac * 100.0
             );
             let mut coord = Coordinator::new();
+            coord.threads = threads;
             let resp = coord.solve(
                 &g,
                 &SolveRequest { budget, time_limit, backend, ..Default::default() },
@@ -76,12 +94,97 @@ fn main() {
                 None => println!("no solution within {time_limit:?} ({:?})", resp.error),
             }
         }
+        Some("sweep") => {
+            let (spec, g) = graph_or_exit(&args);
+            let fracs: Vec<f64> = flag_val(&args, "--fracs")
+                .map(|s| {
+                    s.split(',')
+                        .filter_map(|p| p.trim().parse::<f64>().ok())
+                        .map(|pct| pct / 100.0)
+                        .collect()
+                })
+                .unwrap_or_else(|| vec![0.95, 0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60]);
+            let order = topological_order(&g).unwrap();
+            let peak = g.peak_mem_no_remat(&order).unwrap();
+            let floor = g.working_set_floor();
+            println!(
+                "{spec}: n={} m={}, no-remat peak={}, working-set floor={}",
+                g.n(), g.m(), fmt_u64(peak), fmt_u64(floor)
+            );
+            let base = g.total_duration() as f64;
+            let requests: Vec<(&Graph, SolveRequest)> = fracs
+                .iter()
+                .map(|&f| {
+                    (
+                        &g,
+                        SolveRequest {
+                            budget: (peak as f64 * f) as u64,
+                            time_limit,
+                            ..Default::default()
+                        },
+                    )
+                })
+                .collect();
+            let mut coord = Coordinator::new();
+            coord.threads = threads;
+            let t0 = Instant::now();
+            let responses = coord.solve_many(&requests);
+            let wall = t0.elapsed();
+            println!(
+                "{:>8} {:>12} {:>8} {:>8} {:>8}",
+                "budget%", "budget", "TDI%", "remats", "optimal"
+            );
+            for (i, resp) in responses.iter().enumerate() {
+                let budget = requests[i].1.budget;
+                match &resp.solution {
+                    Some(sol) => {
+                        let tdi = 100.0 * (sol.eval.duration as f64 - base) / base;
+                        println!(
+                            "{:>7.0}% {:>12} {tdi:>8.2} {:>8} {:>8}",
+                            fracs[i] * 100.0,
+                            fmt_u64(budget),
+                            sol.eval.remat_count,
+                            resp.proved_optimal
+                        );
+                    }
+                    None => println!(
+                        "{:>7.0}% {:>12} {:>8} {:>8} {:>8}",
+                        fracs[i] * 100.0,
+                        fmt_u64(budget),
+                        "-",
+                        "-",
+                        "-"
+                    ),
+                }
+            }
+            println!(
+                "sweep: {} budgets in {:.2}s wall ({} solved, {} deduped/cached)",
+                fracs.len(),
+                wall.as_secs_f64(),
+                coord.misses,
+                coord.hits
+            );
+            if args.iter().any(|a| a == "--compare-serial") {
+                let mut serial = Coordinator::new();
+                let t1 = Instant::now();
+                for (graph, req) in &requests {
+                    let _ = serial.solve(graph, req);
+                }
+                let serial_wall = t1.elapsed();
+                println!(
+                    "serial: {:.2}s wall — parallel speedup {:.2}x",
+                    serial_wall.as_secs_f64(),
+                    serial_wall.as_secs_f64() / wall.as_secs_f64().max(1e-9)
+                );
+            }
+        }
         Some("bench") => match args.get(1).map(|s| s.as_str()) {
             Some("fig1") => bench::fig1(time_limit),
             Some("fig5") => bench::fig5(time_limit, quick),
             Some("fig6") => bench::fig6(time_limit, quick),
             Some("table1") => bench::table1(),
             Some("table2") => bench::table2(time_limit, quick),
+            Some("sweep") => bench::sweep_parallel(time_limit, quick),
             Some("ablation-c") => bench::ablation_c(time_limit),
             Some("ablation-topo") => bench::ablation_topo(),
             Some("all") | None => bench::run_all(time_limit, quick),
@@ -116,10 +219,13 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: moccasin <solve|bench|train> [options]\n\
+                "usage: moccasin <solve|sweep|bench|train> [options]\n\
                    solve --graph <G1..G4|RW1..RW4|CM1|CM2|rl:n:m:seed> [--budget-frac F] \
-                 [--backend moccasin|checkmate|lp-rounding] [--time-limit S]\n\
-                   bench <fig1|fig5|fig6|table1|table2|ablation-c|ablation-topo|all> \
+                 [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
+                 [--threads N] [--time-limit S]\n\
+                   sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
+                 [--compare-serial]\n\
+                   bench <fig1|fig5|fig6|table1|table2|sweep|ablation-c|ablation-topo|all> \
                  [--time-limit S] [--quick]\n\
                    train [--steps N] [--budget-frac F]"
             );

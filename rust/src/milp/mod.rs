@@ -15,10 +15,15 @@
 /// Compressed sparse row matrix.
 #[derive(Debug, Clone, Default)]
 pub struct Csr {
+    /// Number of rows.
     pub nrows: usize,
+    /// Number of columns.
     pub ncols: usize,
+    /// Row pointers (`nrows + 1` entries).
     pub indptr: Vec<usize>,
+    /// Column index of each stored entry.
     pub indices: Vec<u32>,
+    /// Value of each stored entry.
     pub data: Vec<f64>,
 }
 
@@ -93,10 +98,13 @@ impl Csr {
 
 /// Result of an LP solve.
 pub struct LpResult {
+    /// Primal point (clipped to the box `[0, 1]^n`).
     pub x: Vec<f64>,
+    /// Objective value `cᵀx` at the returned point.
     pub objective: f64,
     /// max violation of `Ax ≤ b` at the returned point
     pub max_violation: f64,
+    /// PDHG iterations performed.
     pub iterations: usize,
 }
 

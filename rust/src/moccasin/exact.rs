@@ -12,7 +12,12 @@ use crate::util::Deadline;
 
 /// Result of an exact solve.
 pub struct ExactResult {
+    /// Search space exhausted (under any incumbent pruning bound): no
+    /// solution strictly better than [`ExactResult::best_duration`] —
+    /// or than the shared incumbent's bound — exists.
     pub proved_optimal: bool,
+    /// Best validated duration the exact search itself found
+    /// (`u64::MAX` if everything was pruned or infeasible).
     pub best_duration: u64,
 }
 
@@ -34,7 +39,10 @@ pub fn solve_exact(
         StagedModel::build_unstaged(graph, order, budget, &c_v)
     };
     let (bo, guards) = sm.branch_order();
-    let solver = Solver { deadline, guards: Some(guards), ..Default::default() };
+    // full model: prune against the best duration found by any
+    // cooperating solver (riding along on the deadline)
+    let bound = deadline.incumbent().cloned();
+    let solver = Solver { deadline, bound, guards: Some(guards), ..Default::default() };
     let mut best_duration = u64::MAX;
     let r = solver.solve(&sm.model, &sm.objective, &bo, |a, _| {
         let seq = sm.extract_sequence(a);

@@ -50,7 +50,12 @@ fn overflow_of(profile: &[u64], budget: u64) -> u64 {
     profile.iter().map(|&m| m.saturating_sub(budget)).sum()
 }
 
-fn eval_state(graph: &Graph, evaluator: &mut Evaluator, seq: Vec<NodeId>, budget: u64) -> Option<State> {
+fn eval_state(
+    graph: &Graph,
+    evaluator: &mut Evaluator,
+    seq: Vec<NodeId>,
+    budget: u64,
+) -> Option<State> {
     let _ = graph;
     let (ev, profile) = evaluator.eval_profile(&seq).ok()?;
     let overflow = overflow_of(&profile, budget);
@@ -274,8 +279,12 @@ pub fn greedy_remat(graph: &Graph, order: &[NodeId], budget: u64) -> Option<Rema
                             eprintln!("    cross inst p={p} node={} rel={rel}", seq[p]);
                         }
                     }
-                    eprintln!("  hot={hot} self={} inputs={inputs} cross={cross} ncross={ncross} load={}",
-                        graph.mem[seq[hot] as usize], st.profile[hot]);
+                    eprintln!(
+                        "  hot={hot} self={} inputs={inputs} cross={cross} ncross={ncross} \
+                         load={}",
+                        graph.mem[seq[hot] as usize],
+                        st.profile[hot]
+                    );
                     for c in cands.iter().take(12) {
                         let ns = eval_state(graph, &mut evaluator, apply_cand(&st.seq, c), budget);
                         match ns {

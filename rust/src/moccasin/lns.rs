@@ -190,6 +190,10 @@ fn solve_window(
     }
 
     let (bo, guards) = sm.branch_order();
+    // NOTE: no shared pruning bound here (`bound: None` via Default) —
+    // window re-solves must accept *local* incremental improvements
+    // even when a racing portfolio member holds a better global best;
+    // the deadline still carries the incumbent for cancellation.
     let solver = Solver {
         deadline,
         node_limit: 50_000,
@@ -284,7 +288,9 @@ pub fn lns_loop(
         if slice.is_zero() {
             break;
         }
-        let sub_deadline = Deadline::after(slice);
+        // the sub-deadline inherits the shared incumbent, so window
+        // re-solves prune against (and are cancelled by) the portfolio
+        let sub_deadline = deadline.sub(slice);
         match solve_window(graph, order, budget, c, &incumbent, j0, j1, sub_deadline) {
             Some(better) => {
                 wins += 1;
@@ -298,7 +304,10 @@ pub fn lns_loop(
         }
     }
     if dbg {
-        eprintln!("lns: {iters} iterations, {wins} improvements, final duration {}", incumbent.eval.duration);
+        eprintln!(
+            "lns: {iters} iterations, {wins} improvements, final duration {}",
+            incumbent.eval.duration
+        );
     }
 }
 

@@ -39,15 +39,19 @@ pub use model::{IntervalVars, StagedModel};
 pub use solution::{intervals_from_sequence, RematSolution};
 
 use crate::graph::{topological_order, Graph, NodeId};
-use crate::util::{Deadline, Rng};
+use crate::util::{Deadline, Incumbent, Rng};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// One point of an anytime progress trace: (elapsed, best duration,
 /// best TDI %).
 #[derive(Debug, Clone, Copy)]
 pub struct ProgressPoint {
+    /// Wall-clock time since the solve started.
     pub elapsed: Duration,
+    /// Best total duration at that point.
     pub duration: u64,
+    /// Best total-duration-increase percentage at that point.
     pub tdi_percent: f64,
 }
 
@@ -84,6 +88,13 @@ pub struct MoccasinSolver {
     pub window: usize,
     /// RNG seed (LNS neighbourhood selection).
     pub seed: u64,
+    /// Shared portfolio incumbent: when set, every improving solution is
+    /// published to it, the exact/LNS branch & bound prunes against the
+    /// best duration found by *any* cooperating solver, and cooperative
+    /// cancellation stops this solve early. `None` (the default) gives a
+    /// private incumbent, which still lets the exact phase prune against
+    /// the Phase-1 warm start.
+    pub incumbent: Option<Arc<Incumbent>>,
 }
 
 impl Default for MoccasinSolver {
@@ -95,6 +106,7 @@ impl Default for MoccasinSolver {
             exact_threshold: 24,
             window: 14,
             seed: 0,
+            incumbent: None,
         }
     }
 }
@@ -104,24 +116,44 @@ impl MoccasinSolver {
     /// budget `budget`. `order` is the input topological order (§2.3);
     /// `None` uses the deterministic Kahn order.
     pub fn solve(&self, graph: &Graph, budget: u64, order: Option<Vec<NodeId>>) -> SolveOutcome {
-        let deadline = Deadline::after(self.time_limit);
+        self.solve_with(graph, budget, order, |_| {})
+    }
+
+    /// Like [`MoccasinSolver::solve`], additionally invoking
+    /// `on_improve` for every improving validated solution *as it is
+    /// found* — the hook the portfolio coordinator uses to publish
+    /// results across racing worker threads while the solve is still
+    /// running.
+    pub fn solve_with(
+        &self,
+        graph: &Graph,
+        budget: u64,
+        order: Option<Vec<NodeId>>,
+        mut on_improve: impl FnMut(&RematSolution),
+    ) -> SolveOutcome {
+        let incumbent =
+            self.incumbent.clone().unwrap_or_else(|| Arc::new(Incumbent::new()));
+        let deadline = Deadline::with_incumbent(self.time_limit, Arc::clone(&incumbent));
         let order =
             order.unwrap_or_else(|| topological_order(graph).expect("graph must be a DAG"));
         let mut trace: Vec<ProgressPoint> = Vec::new();
         let mut best: Option<RematSolution> = None;
         let mut proved_optimal = false;
 
-        let mut record =
-            |sol: &RematSolution, trace: &mut Vec<ProgressPoint>, best: &mut Option<RematSolution>| {
+        let mut record = |sol: &RematSolution,
+                          trace: &mut Vec<ProgressPoint>,
+                          best: &mut Option<RematSolution>| {
                 let improved =
                     best.as_ref().map(|b| sol.eval.duration < b.eval.duration).unwrap_or(true);
                 if improved {
+                    incumbent.record(sol.eval.duration);
                     trace.push(ProgressPoint {
                         elapsed: deadline.elapsed(),
                         duration: sol.eval.duration,
                         tdi_percent: sol.eval.tdi_percent,
                     });
                     *best = Some(sol.clone());
+                    on_improve(sol);
                 }
             };
 
@@ -159,7 +191,7 @@ impl MoccasinSolver {
                     &order,
                     budget,
                     self.c,
-                    deadline,
+                    deadline.clone(),
                     self.staged,
                     |sol| record(sol, &mut trace, &mut best),
                 );
@@ -175,19 +207,31 @@ impl MoccasinSolver {
         let polished = lns::removal_polish(graph, best.as_ref().unwrap(), budget);
         record(&polished, &mut trace, &mut best);
 
-        // 2b. Exact B&B for small instances (proves optimality)…
+        // 2b. Exact B&B for small instances (proves optimality). The
+        //     search prunes against the shared incumbent (which already
+        //     holds the Phase-1 bound), so exhausting the space with
+        //     nothing better found proves the incumbent optimal —
+        //     unless a racing portfolio member holds a strictly better
+        //     duration, in which case *our* best is not the optimum.
         if graph.n() <= self.exact_threshold {
             let ex = exact::solve_exact(
                 graph,
                 &order,
                 budget,
                 self.c,
-                deadline,
+                deadline.clone(),
                 self.staged,
                 |sol| record(sol, &mut trace, &mut best),
             );
+            let global = incumbent.best();
             proved_optimal = ex.proved_optimal
-                && best.as_ref().map(|b| b.eval.duration <= ex.best_duration).unwrap_or(false);
+                && best
+                    .as_ref()
+                    .map(|b| {
+                        b.eval.duration <= ex.best_duration
+                            && global.map_or(true, |g| b.eval.duration <= g)
+                    })
+                    .unwrap_or(false);
         }
 
         // 2c. …LNS anytime loop for the rest of the budgeted time.
@@ -199,7 +243,7 @@ impl MoccasinSolver {
                 budget,
                 self.c,
                 self.window,
-                deadline,
+                deadline.clone(),
                 &mut rng,
                 best.clone().unwrap(),
                 |sol| record(sol, &mut trace, &mut best),

@@ -34,18 +34,24 @@ use std::sync::Arc;
 /// CP variables of one retention interval.
 #[derive(Debug, Clone, Copy)]
 pub struct IntervalVars {
+    /// The node this interval belongs to.
     pub node: NodeId,
     /// copy index (0-based; copy 0 is the always-active first compute)
     pub copy: usize,
+    /// `a_v^i`: Boolean, interval is used.
     pub active: VarId,
+    /// `s_v^i`: start event (the (re)computation).
     pub start: VarId,
+    /// `e_v^i`: end event (last retention event, inclusive).
     pub end: VarId,
 }
 
 /// The built model plus the metadata needed to extract sequences and
 /// choose branch orders.
 pub struct StagedModel {
+    /// The CP model (variables + constraints).
     pub model: Model,
+    /// All interval variable bundles, in creation order.
     pub intervals: Vec<IntervalVars>,
     /// interval indices per node
     pub by_node: Vec<Vec<usize>>,
@@ -209,7 +215,8 @@ impl StagedModel {
                 let e = model.new_var(1, horizon);
                 objective.push((graph.duration[v] as i64, a));
                 by_node[v].push(intervals.len());
-                intervals.push(IntervalVars { node: v as NodeId, copy, active: a, start: s, end: e });
+                intervals
+                    .push(IntervalVars { node: v as NodeId, copy, active: a, start: s, end: e });
             }
         }
         for v in 0..n {

@@ -7,7 +7,9 @@ use crate::graph::{eval_sequence, Graph, NodeId, SeqEval};
 /// so `eval` can always be trusted.
 #[derive(Debug, Clone)]
 pub struct RematSolution {
+    /// The executable (re)computation sequence.
     pub seq: Vec<NodeId>,
+    /// Its Appendix-A.3 evaluation (always consistent with `seq`).
     pub eval: SeqEval,
 }
 
@@ -29,8 +31,12 @@ impl RematSolution {
 /// `end` (inclusive), per the minimal-retention semantics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RetentionInterval {
+    /// The node whose output this interval retains.
     pub node: NodeId,
+    /// Sequence position of the (re)computation.
     pub start: usize,
+    /// Last sequence position at which the output is retained
+    /// (inclusive).
     pub end: usize,
 }
 

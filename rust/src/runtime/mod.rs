@@ -1,28 +1,52 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin): one
+//! The real backend wraps the `xla` crate (PJRT C API, CPU plugin): one
 //! [`Runtime`] per process holds the client; each artifact becomes a
 //! compiled [`Executable`]. Python never runs here — artifacts are
 //! produced once by `make artifacts` (python/compile/aot.py) and loaded
 //! as text (HLO text round-trips across the jax≥0.5 / xla_extension
 //! 0.5.1 proto-id mismatch; see DESIGN.md).
+//!
+//! **Feature gating.** The `xla` crate cannot be fetched in the offline
+//! build, so the PJRT glue is behind the `pjrt` cargo feature (see the
+//! note at the top of `Cargo.toml` for how to vendor it). Without the
+//! feature this module compiles a stub whose [`Runtime::new`] returns
+//! an error; everything host-side ([`HostTensor`], the executor's
+//! scheduling logic, all solvers) builds and tests regardless.
 
-use anyhow::{Context, Result};
+use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
+#[cfg(feature = "pjrt")]
+use crate::util::Context;
 
 /// Host tensor (f32 or i32), the executor's currency.
 #[derive(Debug, Clone)]
 pub enum HostTensor {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// 32-bit float tensor (row-major).
+    F32 {
+        /// Dimension sizes.
+        shape: Vec<usize>,
+        /// Flat row-major data.
+        data: Vec<f32>,
+    },
+    /// 32-bit signed integer tensor (row-major).
+    I32 {
+        /// Dimension sizes.
+        shape: Vec<usize>,
+        /// Flat row-major data.
+        data: Vec<i32>,
+    },
 }
 
 impl HostTensor {
+    /// All-zero f32 tensor of the given shape.
     pub fn zeros_f32(shape: &[usize]) -> HostTensor {
         HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Number of scalar elements.
     pub fn num_elements(&self) -> usize {
         match self {
             HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => {
@@ -36,6 +60,7 @@ impl HostTensor {
         4 * self.num_elements() as u64
     }
 
+    /// Borrow the f32 data (panics on an i32 tensor).
     pub fn as_f32(&self) -> &[f32] {
         match self {
             HostTensor::F32 { data, .. } => data,
@@ -43,72 +68,107 @@ impl HostTensor {
         }
     }
 
+    /// Mutably borrow the f32 data (panics on an i32 tensor).
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match self {
             HostTensor::F32 { data, .. } => data,
             _ => panic!("expected f32 tensor"),
         }
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl HostTensor {
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
             HostTensor::F32 { shape, data } => {
                 let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data).reshape(&dims)?
+                xla::Literal::vec1(data).reshape(&dims).context("reshaping f32 literal")?
             }
             HostTensor::I32 { shape, data } => {
                 let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data).reshape(&dims)?
+                xla::Literal::vec1(data).reshape(&dims).context("reshaping i32 literal")?
             }
         })
     }
 
     fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape()?;
+        let shape = lit.array_shape().context("reading literal shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         match shape.ty() {
-            xla::ElementType::F32 => {
-                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
-            }
-            xla::ElementType::S32 => {
-                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
-            }
-            other => anyhow::bail!("unsupported element type {other:?}"),
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().context("reading f32 literal")?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().context("reading i32 literal")?,
+            }),
+            other => Err(Error::msg(format!("unsupported element type {other:?}"))),
         }
     }
 }
 
 /// A compiled artifact.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (file stem under the artifact directory).
     pub name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with host tensors; returns the flattened output tuple.
     pub fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
         // aot.py lowers with return_tuple=True: decompose the tuple
-        let parts = result.decompose_tuple()?;
+        let parts = result.decompose_tuple().context("decomposing output tuple")?;
         parts.iter().map(HostTensor::from_literal).collect()
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    ///
+    /// Stub: always fails (the `pjrt` feature is disabled, so no
+    /// [`Executable`] can exist — this is unreachable in practice).
+    pub fn run(&self, _inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        Err(Error::msg(format!(
+            "cannot run `{}`: built without the `pjrt` feature",
+            self.name
+        )))
+    }
+}
+
 /// The PJRT CPU runtime: client + compiled-artifact cache.
+///
+/// Without the `pjrt` feature, [`Runtime::new`] returns an error
+/// explaining how to enable the real backend.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     cache: HashMap<String, Executable>,
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifact_dir`.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime { client, cache: HashMap::new(), dir: artifact_dir.as_ref().to_path_buf() })
     }
 
+    /// Name of the PJRT platform backing this client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -130,6 +190,33 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub constructor: always fails with an explanation (the offline
+    /// default build carries no PJRT backend).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = artifact_dir.as_ref();
+        Err(Error::msg(
+            "PJRT runtime unavailable: this build has no `pjrt` feature. Vendor the \
+             `xla` crate and build with `--features pjrt` (see Cargo.toml) to execute \
+             real artifacts; solvers and benches work without it.",
+        ))
+    }
+
+    /// Name of the PJRT platform backing this client (stub).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Load + compile an artifact (stub: always fails).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        let _ = (&self.cache, &self.dir);
+        Err(Error::msg(format!(
+            "cannot load `{name}`: built without the `pjrt` feature"
+        )))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +227,13 @@ mod tests {
         assert_eq!(t.num_elements(), 24);
         assert_eq!(t.byte_size(), 96);
         assert_eq!(t.as_f32().len(), 24);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let e = Runtime::new("artifacts").err().expect("stub must fail");
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 
     // PJRT round-trip tests live in rust/tests/runtime_e2e.rs (they need

@@ -1,0 +1,82 @@
+//! Minimal error plumbing for the runtime/executor layers.
+//!
+//! The build is fully offline, so instead of `anyhow` we carry a tiny
+//! string-backed error with an `anyhow`-style [`Context`] extension
+//! trait. It deliberately mirrors the subset of the `anyhow` API the
+//! codebase uses (`context`, `with_context`, `Error::msg`), so the
+//! executor/runtime code reads the same as it would with the external
+//! crate.
+
+use std::fmt;
+
+/// A human-readable error with accumulated context.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any printable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow`-style context attachment for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message to the failure case.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Attach a lazily-built context message to the failure case.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing tensor").unwrap_err();
+        assert_eq!(e.to_string(), "missing tensor");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn result_context_chains() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| "outer".to_string()).unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

@@ -1,0 +1,106 @@
+//! Shared incumbent bound + cooperative cancellation for portfolio
+//! solves.
+//!
+//! Every solver in a portfolio race holds an `Arc<Incumbent>`: improving
+//! solutions are published with [`Incumbent::record`] (an atomic
+//! fetch-min), and every branch-and-bound loop reads [`Incumbent::best`]
+//! to tighten its objective bound against the best duration found
+//! *anywhere* — the cross-solver pruning that makes a portfolio more
+//! than N independent solves. When one member proves optimality (or
+//! infeasibility) it calls [`Incumbent::cancel`], which every
+//! [`Deadline`](super::Deadline) carrying the incumbent observes on its
+//! next `exceeded()` poll, so the rest of the portfolio stops within one
+//! node-batch.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Sentinel meaning "no solution recorded yet".
+const NONE: u64 = u64::MAX;
+
+/// Atomic best-duration bound + cancellation flag shared by all members
+/// of a portfolio solve (and, in serial solves, between the greedy
+/// warm-start and the exact/LNS phases).
+#[derive(Debug, Default)]
+pub struct Incumbent {
+    /// Best (smallest) validated solution duration seen so far;
+    /// `u64::MAX` = none.
+    best: AtomicU64,
+    /// Set once a member proves optimality/infeasibility; observed by
+    /// every deadline carrying this incumbent.
+    cancelled: AtomicBool,
+}
+
+impl Incumbent {
+    /// Fresh incumbent: no bound, not cancelled.
+    pub fn new() -> Self {
+        Incumbent { best: AtomicU64::new(NONE), cancelled: AtomicBool::new(false) }
+    }
+
+    /// The best duration recorded so far, if any.
+    pub fn best(&self) -> Option<u64> {
+        let b = self.best.load(Ordering::Acquire);
+        (b != NONE).then_some(b)
+    }
+
+    /// Publish a validated solution duration. Returns `true` if this
+    /// strictly improved the shared bound (i.e. the caller is the first
+    /// to reach a duration this small).
+    pub fn record(&self, duration: u64) -> bool {
+        debug_assert_ne!(duration, NONE, "duration sentinel collision");
+        self.best.fetch_min(duration, Ordering::AcqRel) > duration
+    }
+
+    /// Signal every cooperating solver to stop (first optimality proof
+    /// wins the race).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    /// Has some member requested cancellation?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn record_keeps_minimum() {
+        let inc = Incumbent::new();
+        assert_eq!(inc.best(), None);
+        assert!(inc.record(10));
+        assert!(!inc.record(12), "worse duration must not improve");
+        assert_eq!(inc.best(), Some(10));
+        assert!(inc.record(7));
+        assert_eq!(inc.best(), Some(7));
+        assert!(!inc.record(7), "equal duration is not an improvement");
+    }
+
+    #[test]
+    fn cancel_is_sticky_and_shared() {
+        let inc = Arc::new(Incumbent::new());
+        assert!(!inc.is_cancelled());
+        let other = Arc::clone(&inc);
+        other.cancel();
+        assert!(inc.is_cancelled());
+    }
+
+    #[test]
+    fn concurrent_record_converges_to_min() {
+        let inc = Arc::new(Incumbent::new());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let inc = Arc::clone(&inc);
+                s.spawn(move || {
+                    for d in (1 + t..100).rev() {
+                        inc.record(d);
+                    }
+                });
+            }
+        });
+        assert_eq!(inc.best(), Some(1));
+    }
+}

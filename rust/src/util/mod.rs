@@ -1,40 +1,95 @@
 //! Small std-only utilities: a deterministic PRNG (the build is fully
-//! offline, so we carry no `rand` dependency), timing helpers, and the
-//! in-tree property-testing / bench harness support code.
+//! offline, so we carry no `rand` dependency), deadline/cancellation
+//! plumbing for anytime solvers, the shared portfolio incumbent, and a
+//! minimal error type for the runtime layers.
 
+mod error;
+mod incumbent;
 mod rng;
 
+pub use error::{Context, Error, Result};
+pub use incumbent::Incumbent;
 pub use rng::Rng;
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A wall-clock deadline for anytime solvers.
-#[derive(Debug, Clone, Copy)]
+/// A wall-clock deadline for anytime solvers, optionally carrying a
+/// shared [`Incumbent`] whose cancellation flag is polled alongside the
+/// clock — the mechanism by which the first optimality proof in a
+/// portfolio race stops every other member.
+///
+/// `Deadline` is `Clone` (not `Copy`): clones share the same start
+/// instant and the same incumbent, so a cloned deadline expires at the
+/// same moment and observes the same cancellation.
+#[derive(Debug, Clone)]
 pub struct Deadline {
     start: Instant,
     limit: Duration,
+    incumbent: Option<Arc<Incumbent>>,
 }
 
 impl Deadline {
+    /// Deadline expiring `limit` from now, with no cancellation channel.
     pub fn after(limit: Duration) -> Self {
-        Deadline { start: Instant::now(), limit }
+        Deadline { start: Instant::now(), limit, incumbent: None }
     }
 
+    /// A deadline that (practically) never expires.
     pub fn unlimited() -> Self {
-        Deadline { start: Instant::now(), limit: Duration::from_secs(u64::MAX / 4) }
+        Deadline {
+            start: Instant::now(),
+            limit: Duration::from_secs(u64::MAX / 4),
+            incumbent: None,
+        }
     }
 
+    /// Deadline expiring `limit` from now that also observes (and lets
+    /// solvers prune against) the shared `incumbent`.
+    pub fn with_incumbent(limit: Duration, incumbent: Arc<Incumbent>) -> Self {
+        Deadline { start: Instant::now(), limit, incumbent: Some(incumbent) }
+    }
+
+    /// The shared incumbent this deadline observes, if any.
+    pub fn incumbent(&self) -> Option<&Arc<Incumbent>> {
+        self.incumbent.as_ref()
+    }
+
+    /// A sub-deadline: fresh clock over `limit` (capped at this
+    /// deadline's remaining time), inheriting the incumbent — used for
+    /// LNS window re-solves so cancellation propagates into them.
+    pub fn sub(&self, limit: Duration) -> Deadline {
+        Deadline {
+            start: Instant::now(),
+            limit: limit.min(self.remaining()),
+            incumbent: self.incumbent.clone(),
+        }
+    }
+
+    /// Has the shared incumbent (if any) been cancelled?
+    #[inline]
+    pub fn cancelled(&self) -> bool {
+        self.incumbent.as_ref().is_some_and(|i| i.is_cancelled())
+    }
+
+    /// True once the time limit has passed *or* the shared incumbent has
+    /// been cancelled.
     #[inline]
     pub fn exceeded(&self) -> bool {
-        self.start.elapsed() >= self.limit
+        self.cancelled() || self.start.elapsed() >= self.limit
     }
 
+    /// Wall-clock time since this deadline was created.
     #[inline]
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time left before expiry (zero if expired or cancelled).
     pub fn remaining(&self) -> Duration {
+        if self.cancelled() {
+            return Duration::ZERO;
+        }
         self.limit.saturating_sub(self.start.elapsed())
     }
 }
@@ -72,5 +127,26 @@ mod tests {
         assert_eq!(d.remaining(), Duration::ZERO);
         let u = Deadline::unlimited();
         assert!(!u.exceeded());
+    }
+
+    #[test]
+    fn deadline_observes_cancellation() {
+        let inc = Arc::new(Incumbent::new());
+        let d = Deadline::with_incumbent(Duration::from_secs(3600), Arc::clone(&inc));
+        assert!(!d.exceeded());
+        inc.cancel();
+        assert!(d.exceeded());
+        assert!(d.cancelled());
+        assert_eq!(d.remaining(), Duration::ZERO);
+    }
+
+    #[test]
+    fn sub_deadline_inherits_incumbent_and_caps_limit() {
+        let inc = Arc::new(Incumbent::new());
+        let d = Deadline::with_incumbent(Duration::from_millis(50), Arc::clone(&inc));
+        let s = d.sub(Duration::from_secs(10));
+        assert!(s.remaining() <= Duration::from_millis(50));
+        inc.cancel();
+        assert!(s.exceeded(), "cancellation must reach sub-deadlines");
     }
 }

@@ -27,6 +27,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let res = self.s[0]

@@ -1,0 +1,178 @@
+//! Integration tests for the parallel portfolio coordinator and the
+//! batched `solve_many` API.
+
+use moccasin::coordinator::{
+    solve_portfolio, Backend, Coordinator, PortfolioConfig, SolveRequest,
+};
+use moccasin::generators::random_layered;
+use moccasin::graph::{topological_order, Graph};
+use std::time::Duration;
+
+/// Chain + long skip with heavy source. The topological order is
+/// forced (it is a chain), so every portfolio member races on the same
+/// staged model and the exact optimum — one remat of node 0, duration
+/// 6 at budget 10 — is deterministic.
+fn chain() -> Graph {
+    Graph::from_edges(
+        "c",
+        5,
+        &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+        vec![1; 5],
+        vec![5, 4, 4, 4, 1],
+    )
+    .unwrap()
+}
+
+#[test]
+fn two_thread_portfolio_matches_serial_exact_optimum() {
+    let g = chain();
+
+    // serial exact solve through the coordinator
+    let mut coord = Coordinator::new();
+    let serial = coord.solve(
+        &g,
+        &SolveRequest { budget: 10, time_limit: Duration::from_secs(20), ..Default::default() },
+    );
+    let serial_sol = serial.solution.expect("serial solve feasible");
+    assert!(serial.proved_optimal, "5-node graph must be proved optimal");
+
+    // deterministic 2-thread race on the same request
+    let cfg = PortfolioConfig {
+        threads: 2,
+        time_limit: Duration::from_secs(20),
+        ..Default::default()
+    };
+    let race = solve_portfolio(&g, 10, None, &cfg);
+    let race_sol = race.solution.expect("portfolio feasible");
+
+    assert_eq!(
+        race_sol.eval.duration, serial_sol.eval.duration,
+        "portfolio must return the same optimum as the serial exact solve"
+    );
+    assert!(race_sol.eval.peak_mem <= 10);
+    assert!(race.proved_optimal, "the exact member's proof must surface");
+}
+
+#[test]
+fn portfolio_backend_through_coordinator_is_cached() {
+    let g = chain();
+    let mut coord = Coordinator::new();
+    coord.threads = 2;
+    let req = SolveRequest {
+        budget: 10,
+        time_limit: Duration::from_secs(20),
+        backend: Backend::Portfolio,
+        ..Default::default()
+    };
+    let a = coord.solve(&g, &req);
+    assert!(!a.from_cache);
+    assert_eq!(a.solution.as_ref().unwrap().eval.duration, 6);
+    let b = coord.solve(&g, &req);
+    assert!(b.from_cache, "portfolio responses are cached like serial ones");
+    assert_eq!(b.solution.unwrap().eval.duration, 6);
+}
+
+#[test]
+fn portfolio_feasible_on_medium_graph() {
+    // rl-class graph above the exact threshold: the race is LNS-driven;
+    // the result must be feasible and the merged trace monotone.
+    let g = random_layered("t", 60, 150, 3);
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    let budget = (peak as f64 * 0.85) as u64;
+    let cfg = PortfolioConfig {
+        threads: 2,
+        time_limit: Duration::from_secs(4),
+        include_checkmate: false,
+        ..Default::default()
+    };
+    let resp = solve_portfolio(&g, budget, None, &cfg);
+    let sol = resp.solution.expect("feasible at 85%");
+    assert!(sol.eval.peak_mem <= budget);
+    let durs: Vec<u64> = resp.trace.iter().map(|&(_, d)| d).collect();
+    assert!(
+        durs.windows(2).all(|w| w[1] < w[0]),
+        "merged trace must be strictly improving: {durs:?}"
+    );
+    assert_eq!(
+        durs.last().copied(),
+        Some(sol.eval.duration),
+        "trace must end at the returned solution"
+    );
+}
+
+#[test]
+fn solve_many_dedups_within_and_across_batches() {
+    let g = chain();
+    let g2 = random_layered("t2", 30, 70, 1);
+    let order = topological_order(&g2).unwrap();
+    let peak2 = g2.peak_mem_no_remat(&order).unwrap();
+    let mut coord = Coordinator::new();
+    let mk = |budget: u64| SolveRequest {
+        budget,
+        time_limit: Duration::from_secs(5),
+        ..Default::default()
+    };
+
+    // batch: 6 requests over two graphs, 3 unique keys
+    let batch = vec![
+        (&g, mk(10)),
+        (&g, mk(13)),
+        (&g, mk(10)),
+        (&g2, mk(peak2)),
+        (&g2, mk(peak2)),
+        (&g, mk(13)),
+    ];
+    let responses = coord.solve_many(&batch);
+    assert_eq!(responses.len(), 6);
+    assert_eq!(coord.misses, 3, "3 unique keys → 3 solves");
+    assert_eq!(coord.hits, 3, "3 duplicates answered from the batch dedup");
+    assert!(responses[2].from_cache && responses[4].from_cache && responses[5].from_cache);
+    // duplicates agree with their originals
+    assert_eq!(
+        responses[0].solution.as_ref().unwrap().eval.duration,
+        responses[2].solution.as_ref().unwrap().eval.duration
+    );
+    assert_eq!(
+        responses[1].solution.as_ref().unwrap().eval.duration,
+        responses[5].solution.as_ref().unwrap().eval.duration
+    );
+
+    // a second batch over the same keys is served entirely from cache
+    let again = coord.solve_many(&batch);
+    assert!(again.iter().all(|r| r.from_cache));
+    assert_eq!(coord.misses, 3, "no new solves");
+}
+
+#[test]
+fn solve_many_budget_sweep_matches_serial_results() {
+    // the sweep shape the CLI uses: one graph, several budgets — the
+    // parallel path must return exactly what serial solves return
+    // (durations are deterministic on a proved-optimal-size graph)
+    let g = chain();
+    let budgets = [10u64, 11, 12, 13];
+    let requests: Vec<(&Graph, SolveRequest)> = budgets
+        .iter()
+        .map(|&b| {
+            let req = SolveRequest {
+                budget: b,
+                time_limit: Duration::from_secs(10),
+                ..Default::default()
+            };
+            (&g, req)
+        })
+        .collect();
+    let mut par = Coordinator::new();
+    let parallel = par.solve_many(&requests);
+
+    let mut ser = Coordinator::new();
+    for (i, (graph, req)) in requests.iter().enumerate() {
+        let s = ser.solve(graph, req);
+        assert_eq!(
+            s.solution.map(|x| x.eval.duration),
+            parallel[i].solution.as_ref().map(|x| x.eval.duration),
+            "budget {} disagrees",
+            budgets[i]
+        );
+    }
+}

@@ -45,7 +45,8 @@ fn brute_force_peak(g: &Graph, seq: &[NodeId]) -> u64 {
 fn graphs() -> Vec<Graph> {
     let mut gs = Vec::new();
     for seed in 0..6 {
-        gs.push(random_layered(&format!("rl{seed}"), 40 + 10 * seed as usize, 100 + 20 * seed as usize, seed));
+        let (n, m) = (40 + 10 * seed as usize, 100 + 20 * seed as usize);
+        gs.push(random_layered(&format!("rl{seed}"), n, m, seed));
     }
     gs.push(cm_style("cm", 21, 45, 3, 256));
     gs.push(real_world_like("rw", 48, 120, 9));
