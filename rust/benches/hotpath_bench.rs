@@ -1,8 +1,11 @@
-//! Hot-path micro-benchmarks (custom harness): sequence evaluation and
-//! cumulative propagation throughput — the inner loops of Phase 1/LNS.
+//! Hot-path micro-benchmarks (custom harness): sequence evaluation,
+//! Phase-1 planning, and the CP kernel's branch-and-bound node
+//! throughput — the inner loops of Phase 1/LNS/exact solves.
 
+use moccasin::cp::Solver;
 use moccasin::generators::random_layered;
 use moccasin::graph::{topological_order, Evaluator};
+use moccasin::moccasin::StagedModel;
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
@@ -41,4 +44,23 @@ fn main() {
         let s = moccasin::moccasin::greedy::greedy_remat(&g, &order, (peak as f64 * 0.9) as u64);
         std::hint::black_box(s.map(|x| x.eval.duration));
     });
+
+    // CP kernel: B&B node throughput on a staged model, node-capped so
+    // the measurement is trajectory-independent across engine changes
+    // (filtering is equivalence-tested, so the visited tree is fixed)
+    let g = random_layered("rl60", 60, 150, 7);
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    let budget = (peak as f64 * 0.85) as u64;
+    let sm = StagedModel::build(&g, &order, budget, &vec![2; g.n()]);
+    let (bo, guards) = sm.branch_order();
+    let mut last_nodes = 0;
+    bench("cp_search 20k nodes n=60 @85%", 3, || {
+        let solver =
+            Solver { node_limit: 20_000, guards: Some(guards.clone()), ..Default::default() };
+        let r = solver.solve(&sm.model, &sm.objective, &bo, |_, _| {});
+        last_nodes = r.stats.nodes;
+        std::hint::black_box((r.stats.nodes, r.stats.propagations));
+    });
+    println!("  (cp_search visited {last_nodes} nodes per run)");
 }

@@ -1,11 +1,22 @@
 //! Solver benchmarks (custom harness): quick versions of the paper's
-//! experiment grid — one row per table/figure family. Full runs:
-//! `moccasin bench all --time-limit 60`.
+//! experiment grid — one row per table/figure family — plus the
+//! machine-readable kernel bench that writes `BENCH_solver.json`
+//! (nodes/sec, propagations/sec, wall time per Figure-5-style
+//! instance). Full runs: `moccasin bench all --time-limit 60`.
+//!
+//! `cargo bench --bench solver_bench -- --smoke` runs only the JSON
+//! kernel bench with a short limit — the CI perf-tracking step.
 
 use moccasin::bench;
 use std::time::Duration;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("== solver bench (smoke: kernel counters only) ==");
+        bench::bench_solver_json(Duration::from_secs(3), true);
+        return;
+    }
     let tl = Duration::from_secs(8);
     println!("== solver bench (quick; full grid via `moccasin bench all`) ==");
     bench::table1();
@@ -13,4 +24,5 @@ fn main() {
     bench::fig1(tl);
     bench::fig6(tl, true);
     bench::ablation_c(tl);
+    bench::bench_solver_json(tl, false);
 }

@@ -393,6 +393,68 @@ pub fn ablation_topo() {
     write_csv("ablation_topo.csv", &csv);
 }
 
+/// Machine-readable kernel benchmark: solve the Figure-5-style
+/// instances (random layered G1..G4 at a 90% budget) with the full
+/// MOCCASIN stack and emit `BENCH_solver.json` — one record per
+/// instance with wall time, nodes/sec, propagations/sec and the
+/// engine's event counters — so the kernel's perf trajectory can be
+/// tracked across commits (the CI smoke-bench step runs the quick
+/// variant on every push).
+pub fn bench_solver_json(time_limit: Duration, quick: bool) {
+    println!("== solver kernel bench (BENCH_solver.json) ==");
+    let names: &[&str] = if quick { &["G1", "G2"] } else { &["G1", "G2", "G3", "G4"] };
+    let mut records: Vec<String> = Vec::new();
+    for &name in names {
+        let g = paper_graph(name).unwrap();
+        let budget = budget_at(&g, 0.9);
+        let solver = MoccasinSolver { time_limit, ..Default::default() };
+        let t0 = Instant::now();
+        let out = solver.solve(&g, budget, None);
+        let wall = t0.elapsed().as_secs_f64();
+        let st = out.stats;
+        let nodes_per_sec = st.nodes as f64 / wall.max(1e-9);
+        let props_per_sec = st.propagations as f64 / wall.max(1e-9);
+        println!(
+            "  {name}: {:.2}s wall, {} nodes ({:.0}/s), {} propagations ({:.0}/s), \
+             {} events, {} wakeups skipped, {} cum resyncs",
+            wall,
+            st.nodes,
+            nodes_per_sec,
+            st.propagations,
+            props_per_sec,
+            st.events_posted,
+            st.wakeups_skipped,
+            st.cum_resyncs
+        );
+        records.push(format!(
+            "  {{\n    \"instance\": \"{name}\",\n    \"n\": {},\n    \"m\": {},\n    \
+             \"budget_frac\": 0.9,\n    \"wall_s\": {wall:.4},\n    \"nodes\": {},\n    \
+             \"propagations\": {},\n    \"events_posted\": {},\n    \
+             \"wakeups_skipped\": {},\n    \"cum_resyncs\": {},\n    \
+             \"cum_rebuilds\": {},\n    \"nodes_per_sec\": {nodes_per_sec:.1},\n    \
+             \"propagations_per_sec\": {props_per_sec:.1},\n    \
+             \"best_duration\": {},\n    \"proved_optimal\": {}\n  }}",
+            g.n(),
+            g.m(),
+            st.nodes,
+            st.propagations,
+            st.events_posted,
+            st.wakeups_skipped,
+            st.cum_resyncs,
+            st.cum_rebuilds,
+            out.best.as_ref().map(|b| b.eval.duration as i64).unwrap_or(-1),
+            out.proved_optimal
+        ));
+    }
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let path = std::path::Path::new("BENCH_solver.json");
+    if let Err(e) = std::fs::write(path, &json) {
+        eprintln!("warning: could not write {path:?}: {e}");
+    } else {
+        println!("  [json] {}", path.display());
+    }
+}
+
 /// Run everything (the `bench all` CLI path).
 pub fn run_all(time_limit: Duration, quick: bool) {
     table1();
@@ -403,6 +465,7 @@ pub fn run_all(time_limit: Duration, quick: bool) {
     table2(time_limit, quick);
     sweep_parallel(time_limit, true);
     ablation_c(time_limit);
+    bench_solver_json(time_limit, quick);
 }
 
 #[cfg(test)]

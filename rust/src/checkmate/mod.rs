@@ -38,8 +38,14 @@ pub enum CheckmateError {
     /// Model exceeds the build-size guard (the "out of memory" failure
     /// mode the paper reports for G3/G4).
     TooLarge { vars: usize, terms: usize },
-    /// No solution found within the limits.
-    NoSolution,
+    /// No solution found within the limits. Carries the CP kernel
+    /// statistics of the attempt so the work done (possibly an
+    /// exhaustive infeasibility proof) still reaches the aggregated
+    /// counters.
+    NoSolution {
+        /// Kernel statistics of the failed branch & bound.
+        stats: crate::cp::SearchStats,
+    },
 }
 
 impl std::fmt::Display for CheckmateError {
@@ -48,7 +54,7 @@ impl std::fmt::Display for CheckmateError {
             CheckmateError::TooLarge { vars, terms } => {
                 write!(f, "model too large: {vars} vars, {terms} constraint terms")
             }
-            CheckmateError::NoSolution => write!(f, "no solution within limits"),
+            CheckmateError::NoSolution { .. } => write!(f, "no solution within limits"),
         }
     }
 }
@@ -288,6 +294,9 @@ pub struct CheckmateResult {
     /// Whether the branch & bound exhausted the space (under any shared
     /// incumbent pruning bound).
     pub proved_optimal: bool,
+    /// CP kernel statistics (zero for the LP-rounding path, which never
+    /// enters the branch & bound).
+    pub stats: crate::cp::SearchStats,
 }
 
 /// Exact MILP via pseudo-Boolean branch & bound. `on_solution` receives
@@ -354,8 +363,9 @@ pub fn solve_milp(
         Some(solution) => Ok(CheckmateResult {
             solution,
             proved_optimal: r.status == crate::cp::Status::Optimal,
+            stats: r.stats,
         }),
-        None => Err(CheckmateError::NoSolution),
+        None => Err(CheckmateError::NoSolution { stats: r.stats }),
     }
 }
 
@@ -429,8 +439,13 @@ pub fn solve_lp_rounding(
         }
     }
     let seq = sequence_from_r(&layout, |t, k| r01[t][k]);
-    let solution = RematSolution::from_seq(graph, seq).map_err(|_| CheckmateError::NoSolution)?;
-    Ok(CheckmateResult { solution, proved_optimal: false })
+    let solution = RematSolution::from_seq(graph, seq)
+        .map_err(|_| CheckmateError::NoSolution { stats: crate::cp::SearchStats::default() })?;
+    Ok(CheckmateResult {
+        solution,
+        proved_optimal: false,
+        stats: crate::cp::SearchStats::default(),
+    })
 }
 
 /// Formulation sizes for Table 1 (Boolean vars, constraints) — built
@@ -487,7 +502,12 @@ mod tests {
         let g = chain_graph();
         let order = topological_order(&g).unwrap();
         let r = solve_milp(&g, &order, 9, Deadline::after(Duration::from_secs(10)), |_| {});
-        assert!(matches!(r, Err(CheckmateError::NoSolution)));
+        match r {
+            Err(CheckmateError::NoSolution { stats }) => {
+                assert!(stats.propagations > 0, "failed attempt must report kernel work");
+            }
+            other => panic!("expected NoSolution, got {:?}", other.map(|x| x.proved_optimal)),
+        }
     }
 
     #[test]

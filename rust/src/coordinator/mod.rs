@@ -24,6 +24,7 @@ pub mod portfolio;
 pub use portfolio::{solve_portfolio, PortfolioConfig};
 
 use crate::checkmate::{self, CheckmateError};
+use crate::cp::SearchStats;
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::moccasin::{MoccasinSolver, RematSolution, SolveOutcome};
 use crate::util::Deadline;
@@ -89,6 +90,10 @@ pub struct SolveResponse {
     pub from_cache: bool,
     /// Why no solution was produced, when one wasn't.
     pub error: Option<String>,
+    /// Aggregated CP kernel statistics (summed across portfolio
+    /// members for [`Backend::Portfolio`]; zero for pure-LP backends
+    /// and preserved from the original solve on cache hits).
+    pub stats: SearchStats,
 }
 
 /// Cache key: (graph fingerprint, budget, C, backend discriminant).
@@ -242,6 +247,7 @@ impl Coordinator {
                     solution: out.best,
                     from_cache: false,
                     error: None,
+                    stats: out.stats,
                 }
             }
             Backend::Portfolio => {
@@ -273,12 +279,17 @@ impl Coordinator {
                         proved_optimal: res.proved_optimal,
                         from_cache: false,
                         error: None,
+                        stats: res.stats,
                     },
                     Err(e) => SolveResponse {
                         solution: None,
                         trace,
-                        proved_optimal: matches!(e, CheckmateError::NoSolution),
+                        proved_optimal: matches!(e, CheckmateError::NoSolution { .. }),
                         from_cache: false,
+                        stats: match &e {
+                            CheckmateError::NoSolution { stats } => *stats,
+                            _ => SearchStats::default(),
+                        },
                         error: Some(e.to_string()),
                     },
                 }
@@ -295,6 +306,7 @@ impl Coordinator {
                         proved_optimal: false,
                         from_cache: false,
                         error: None,
+                        stats: SearchStats::default(),
                     },
                     Err(e) => SolveResponse {
                         solution: None,
@@ -302,6 +314,7 @@ impl Coordinator {
                         proved_optimal: false,
                         from_cache: false,
                         error: Some(e.to_string()),
+                        stats: SearchStats::default(),
                     },
                 }
             }

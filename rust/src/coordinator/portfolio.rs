@@ -26,6 +26,7 @@
 
 use super::SolveResponse;
 use crate::checkmate;
+use crate::cp::SearchStats;
 use crate::graph::{random_topological_order, topological_order, Graph, NodeId};
 use crate::moccasin::{MoccasinSolver, RematSolution};
 use crate::util::{Deadline, Incumbent, Rng};
@@ -80,6 +81,8 @@ struct Shared {
     best: Mutex<Option<RematSolution>>,
     /// merged anytime trace: (elapsed since race start, duration)
     trace: Mutex<Vec<(Duration, u64)>>,
+    /// CP kernel statistics summed across all members
+    stats: Mutex<SearchStats>,
     proved: AtomicBool,
     started: Instant,
 }
@@ -142,6 +145,7 @@ pub fn solve_portfolio(
         incumbent: Arc::new(Incumbent::new()),
         best: Mutex::new(None),
         trace: Mutex::new(Vec::new()),
+        stats: Mutex::new(SearchStats::default()),
         proved: AtomicBool::new(false),
         started: Instant::now(),
     };
@@ -162,7 +166,7 @@ pub fn solve_portfolio(
         }
     });
 
-    let Shared { best, trace, proved, .. } = shared;
+    let Shared { best, trace, stats, proved, .. } = shared;
     let best = best.into_inner().unwrap();
     let mut trace = trace.into_inner().unwrap();
     trace.sort_unstable();
@@ -174,6 +178,7 @@ pub fn solve_portfolio(
         trace,
         proved_optimal: proved.load(Ordering::Acquire),
         from_cache: false,
+        stats: stats.into_inner().unwrap(),
     }
 }
 
@@ -211,6 +216,7 @@ fn run_moccasin_member(
         ..Default::default()
     };
     let out = solver.solve_with(graph, budget, Some(order), |sol| shared.publish(sol));
+    shared.stats.lock().unwrap().merge(&out.stats);
     // Only the canonical-order member may declare the race decided (the
     // staged model is order-relative; see module docs). Its proof is
     // either optimality at its best duration or infeasibility.
@@ -233,10 +239,18 @@ fn run_checkmate_member(
         Deadline::with_incumbent(cfg.time_limit, Arc::clone(&shared.incumbent));
     let result =
         checkmate::solve_milp(graph, order, budget, deadline, |sol| shared.publish(sol));
-    if let Ok(res) = result {
-        if res.proved_optimal {
-            shared.decide(Some(res.solution.eval.duration));
+    match result {
+        Ok(res) => {
+            shared.stats.lock().unwrap().merge(&res.stats);
+            if res.proved_optimal {
+                shared.decide(Some(res.solution.eval.duration));
+            }
         }
+        // a failed attempt still did kernel work worth counting
+        Err(checkmate::CheckmateError::NoSolution { stats }) => {
+            shared.stats.lock().unwrap().merge(&stats);
+        }
+        Err(_) => {}
     }
 }
 

@@ -16,6 +16,37 @@ use std::sync::Arc;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct VarId(pub u32);
 
+/// Event-kind bitmasks for typed domain events (see [`DomainEvent`]).
+///
+/// A propagator registers, per watched variable, the mask of events that
+/// can actually enable new filtering for it; the propagation engine then
+/// wakes it only on those events. E.g. `LeOffset { x, y, .. }` reads
+/// `min(x)` and `max(y)` only, so it subscribes to `LB` on `x` and `UB`
+/// on `y` and sleeps through every other bound change.
+pub mod event {
+    /// Lower bound raised (`min` increased).
+    pub const LB: u8 = 1;
+    /// Upper bound lowered (`max` decreased).
+    pub const UB: u8 = 2;
+    /// The domain became a singleton with this change.
+    pub const FIX: u8 = 4;
+    /// Any event (conservative subscription).
+    pub const ANY: u8 = LB | UB | FIX;
+}
+
+/// A typed domain-change event: which variable changed and how.
+///
+/// Every solver-time tightening posts exactly one event carrying
+/// [`event::LB`] or [`event::UB`], or-ed with [`event::FIX`] when the
+/// change collapsed the domain to a singleton.
+#[derive(Debug, Clone, Copy)]
+pub struct DomainEvent {
+    /// The variable whose bounds changed.
+    pub var: VarId,
+    /// Bitmask of [`event`] kinds describing the change.
+    pub mask: u8,
+}
+
 #[derive(Debug, Clone)]
 enum Repr {
     /// universe = { base, base+1, ... }

@@ -1,0 +1,526 @@
+//! Persistent, event-driven propagation engine.
+//!
+//! One [`PropagationEngine`] instance lives for the whole search and
+//! owns everything the inner loop touches: the domains, the trail, the
+//! two-tier propagation queue, the typed-event scratch buffer, the
+//! persistent objective-bound propagator, and per-`Cumulative`
+//! incremental state. It replaces the three copies of queue/enqueue
+//! logic the search previously carried (root fixpoint, left-branch
+//! fixpoint, right-branch re-propagation) with a single implementation.
+//!
+//! Design (notify-style propagation, after the watch-list engines in
+//! SNIPPETS.md):
+//!
+//! * **Typed events.** Every bound tightening posts a [`DomainEvent`]
+//!   carrying [`event::LB`] / [`event::UB`] (plus [`event::FIX`] when
+//!   the domain collapses). Watch lists store an event mask per
+//!   (propagator, variable) — see [`Propagator::watch_masks`] — so
+//!   `LeOffset` and `Cover` wake only on the bound they actually read.
+//!   Skipped wakeups are counted in `SearchStats::wakeups_skipped`.
+//! * **Two-tier queue.** Cheap propagators (`LinearLe`, `LeOffset`,
+//!   `Cover`, `AllDifferent`, the objective) drain to fixpoint first;
+//!   `Cumulative` runs only once the cheap tier is empty, so it sees
+//!   settled bounds instead of being re-woken once per small change.
+//! * **Incremental `Cumulative`.** The timetable profile of compulsory
+//!   parts is kept as a diff map + flattened step profile, updated in
+//!   O(log) per changed interval from events and re-synchronised on
+//!   backtrack (counted in `SearchStats::cum_resyncs`) instead of being
+//!   rebuilt from all items on every invocation. Filtering re-examines
+//!   only items whose variables changed, unless the profile itself
+//!   moved.
+//! * **Minimal backtrack re-enqueue.** Undoing a frame restores a state
+//!   that was a propagation fixpoint, so only the propagators watching
+//!   undone variables plus the objective (whose bound may have
+//!   tightened since the subtree was entered) are re-enqueued.
+//!
+//! A `naive` mode reproduces the pre-engine reference semantics — wake
+//! every watcher on any event, one queue, `Cumulative` rebuilt from
+//! scratch, re-enqueue everything on backtrack — and exists solely so
+//! tests can assert the engines agree (`rust/tests/property_tests.rs`).
+//! Exactness never depends on filtering either way: every emitted
+//! solution is verified against all constraints before it is reported.
+
+use super::domain::{event, Domain, DomainEvent, VarId};
+use super::propagators::{
+    prop_linear_le, timetable_filter_item, Conflict, Ctx, CumItem, Propagator,
+};
+use super::search::SearchStats;
+use super::Model;
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Incremental state for one `Cumulative` propagator: the registered
+/// compulsory part per item plus the profile they induce.
+struct CumState {
+    /// The propagator's items (copied so resyncs never borrow the
+    /// model) and capacity.
+    items: Vec<CumItem>,
+    cap: i64,
+    /// Registered compulsory part `[ms, me]` per item (`None` = no
+    /// mandatory contribution). Invariant: `diff` always equals the sum
+    /// of the registered parts' demand contributions.
+    reg: Vec<Option<(i64, i64)>>,
+    /// Sparse profile derivative: time → net demand change at that time.
+    diff: BTreeMap<i64, i64>,
+    /// Flattened step profile `(time, load on [time, next))`, rebuilt
+    /// from `diff` lazily when it changed.
+    profile: Vec<(i64, i64)>,
+    /// Max load over the flattened profile (conflict check).
+    max_load: i64,
+    profile_dirty: bool,
+    /// Bumped whenever a registered part (hence the profile) changes.
+    version: u64,
+    /// `version` at the last completed filter pass; a mismatch forces a
+    /// full-item pass, a match allows filtering dirty items only.
+    last_filter_version: u64,
+    /// Items whose variables changed since the last completed pass.
+    dirty: Vec<u32>,
+    dirty_flag: Vec<bool>,
+}
+
+/// The persistent propagation engine (see module docs).
+pub(crate) struct PropagationEngine {
+    /// Trailed domains, indexed by [`VarId`].
+    pub domains: Vec<Domain>,
+    /// `(var, old_lo, old_hi)` — undone in reverse order on backtrack.
+    pub trail: Vec<(u32, u32, u32)>,
+    /// Search statistics (the search layer also counts nodes/conflicts
+    /// here so everything lives in one place).
+    pub stats: SearchStats,
+    /// Typed-event scratch buffer shared by every propagation pass.
+    events: Vec<DomainEvent>,
+    /// Cheap tier: everything but `Cumulative`; drained first.
+    queue_fast: Vec<u32>,
+    /// Expensive tier: `Cumulative` propagators.
+    queue_slow: Vec<u32>,
+    in_queue: Vec<bool>,
+    tier_slow: Vec<bool>,
+    /// prop id → index into `cum_states` for `Cumulative` propagators.
+    cum_of_prop: Vec<Option<u32>>,
+    cum_states: Vec<CumState>,
+    /// var → (cum state index, item index) pairs needing resync when
+    /// the variable's bounds change (forward or on undo).
+    cum_index: Vec<Vec<(u32, u32)>>,
+    /// Persistent objective-bound propagator: Σ obj_terms ≤ obj_rhs,
+    /// with `obj_rhs` tightened in place (never rebuilt per pass).
+    obj_terms: Vec<(i64, VarId)>,
+    obj_rhs: i64,
+    /// var → event mask that can tighten the objective's slack.
+    obj_mask: Vec<u8>,
+    obj_pid: u32,
+    has_obj: bool,
+    /// Reference mode: wake everything on any event, single queue,
+    /// from-scratch `Cumulative`, re-enqueue all on backtrack.
+    naive: bool,
+}
+
+/// Compulsory part of an item under `domains`: `[max(start), min(end)]`
+/// when the item is certainly active and the window is nonempty.
+fn compulsory_part(domains: &[Domain], it: &CumItem) -> Option<(i64, i64)> {
+    if domains[it.active.0 as usize].min() != 1 {
+        return None;
+    }
+    let ms = domains[it.start.0 as usize].max();
+    let me = domains[it.end.0 as usize].min();
+    if ms <= me {
+        Some((ms, me))
+    } else {
+        None
+    }
+}
+
+/// Add `d` to the diff map at `t`, dropping zero entries.
+fn add_diff(diff: &mut BTreeMap<i64, i64>, t: i64, d: i64) {
+    if d == 0 {
+        return;
+    }
+    use std::collections::btree_map::Entry;
+    match diff.entry(t) {
+        Entry::Vacant(e) => {
+            e.insert(d);
+        }
+        Entry::Occupied(mut e) => {
+            *e.get_mut() += d;
+            if *e.get() == 0 {
+                e.remove();
+            }
+        }
+    }
+}
+
+/// Run one `Cumulative` pass off the incremental state: flatten the
+/// profile if the diff map changed, conflict-check the max load, then
+/// filter either every item (profile moved) or only dirty ones.
+fn cumulative_filter(
+    cs: &mut CumState,
+    ctx: &mut Ctx,
+    stats: &mut SearchStats,
+) -> Result<(), Conflict> {
+    if cs.profile_dirty {
+        cs.profile.clear();
+        cs.max_load = 0;
+        let mut load = 0i64;
+        for (&t, &d) in cs.diff.iter() {
+            load += d;
+            cs.profile.push((t, load));
+            if load > cs.max_load {
+                cs.max_load = load;
+            }
+        }
+        cs.profile_dirty = false;
+        stats.cum_rebuilds += 1;
+    }
+    // Empty profile: no mandatory part anywhere — match the reference
+    // propagator's early return (it filters nothing in this case).
+    if !cs.profile.is_empty() {
+        if cs.max_load > cs.cap {
+            return Err(Conflict);
+        }
+        if cs.last_filter_version != cs.version {
+            for it in &cs.items {
+                timetable_filter_item(it, cs.cap, &cs.profile, ctx)?;
+            }
+        } else {
+            for &ii in &cs.dirty {
+                timetable_filter_item(&cs.items[ii as usize], cs.cap, &cs.profile, ctx)?;
+            }
+        }
+    }
+    // completed pass: mark clean (on conflict the dirty set survives,
+    // which is safe — re-filtering is always sound)
+    cs.last_filter_version = cs.version;
+    for &ii in &cs.dirty {
+        cs.dirty_flag[ii as usize] = false;
+    }
+    cs.dirty.clear();
+    Ok(())
+}
+
+impl PropagationEngine {
+    /// Build an engine over `model` minimizing `objective` (empty =
+    /// satisfaction). `naive` selects the reference re-enqueue-everything
+    /// semantics.
+    pub fn new(model: &Model, objective: &[(i64, VarId)], naive: bool) -> Self {
+        let nvars = model.domains.len();
+        let nprops = model.props.len();
+        let domains = model.domains.clone();
+        let has_obj = !objective.is_empty();
+        let mut obj_mask = vec![0u8; nvars];
+        for &(c, v) in objective {
+            if c > 0 {
+                obj_mask[v.0 as usize] |= event::LB;
+            } else if c < 0 {
+                obj_mask[v.0 as usize] |= event::UB;
+            }
+        }
+        let mut tier_slow = vec![false; nprops + 1];
+        let mut cum_of_prop: Vec<Option<u32>> = vec![None; nprops + 1];
+        let mut cum_states: Vec<CumState> = Vec::new();
+        let mut cum_index: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nvars];
+        for (pid, p) in model.props.iter().enumerate() {
+            let Propagator::Cumulative { items, cap } = p else {
+                continue;
+            };
+            tier_slow[pid] = true;
+            let ci = cum_states.len() as u32;
+            cum_of_prop[pid] = Some(ci);
+            let mut reg: Vec<Option<(i64, i64)>> = vec![None; items.len()];
+            let mut diff = BTreeMap::new();
+            for (ii, it) in items.iter().enumerate() {
+                for v in [it.active, it.start, it.end] {
+                    cum_index[v.0 as usize].push((ci, ii as u32));
+                }
+                let part = compulsory_part(&domains, it);
+                if let Some((a, b)) = part {
+                    add_diff(&mut diff, a, it.demand);
+                    add_diff(&mut diff, b + 1, -it.demand);
+                }
+                reg[ii] = part;
+            }
+            let n_items = items.len();
+            cum_states.push(CumState {
+                items: items.clone(),
+                cap: *cap,
+                reg,
+                diff,
+                profile: Vec::new(),
+                max_load: 0,
+                profile_dirty: true,
+                version: 0,
+                last_filter_version: u64::MAX,
+                dirty: Vec::new(),
+                dirty_flag: vec![false; n_items],
+            });
+        }
+        PropagationEngine {
+            domains,
+            trail: Vec::new(),
+            stats: SearchStats::default(),
+            events: Vec::new(),
+            queue_fast: Vec::with_capacity(nprops + 1),
+            queue_slow: Vec::new(),
+            in_queue: vec![false; nprops + 1],
+            tier_slow,
+            cum_of_prop,
+            cum_states,
+            cum_index,
+            obj_terms: objective.to_vec(),
+            obj_rhs: i64::MAX / 4,
+            obj_mask,
+            obj_pid: nprops as u32,
+            has_obj,
+            naive,
+        }
+    }
+
+    /// Tighten the objective bound in place; re-enqueues the objective
+    /// propagator when the bound strictly improved.
+    pub fn tighten_obj_bound(&mut self, rhs: i64) {
+        if self.has_obj && rhs < self.obj_rhs {
+            self.obj_rhs = rhs;
+            self.enqueue(self.obj_pid);
+        }
+    }
+
+    fn enqueue(&mut self, pid: u32) {
+        let pi = pid as usize;
+        if !self.in_queue[pi] {
+            self.in_queue[pi] = true;
+            if !self.naive && self.tier_slow[pi] {
+                self.queue_slow.push(pid);
+            } else {
+                self.queue_fast.push(pid);
+            }
+        }
+    }
+
+    /// Enqueue every propagator (root propagation; naive backtrack).
+    pub fn enqueue_all(&mut self) {
+        let n = self.in_queue.len() as u32;
+        for pid in 0..n {
+            if pid == self.obj_pid && !self.has_obj {
+                continue;
+            }
+            self.enqueue(pid);
+        }
+    }
+
+    fn clear_on_conflict(&mut self) {
+        self.queue_fast.clear();
+        self.queue_slow.clear();
+        self.in_queue.iter_mut().for_each(|b| *b = false);
+        // pending events of the failing pass are dropped; their trail
+        // entries are undone before the next propagation, and the undo
+        // path re-synchronises cumulative state from the restored
+        // domains, so the diff-map invariant is preserved
+        self.events.clear();
+    }
+
+    /// Re-synchronise the cumulative states of every item involving
+    /// `vi` with the current domains (forward events and undo share
+    /// this path — both just recompute the compulsory part).
+    fn resync_var(&mut self, vi: usize) {
+        for k in 0..self.cum_index[vi].len() {
+            let (ci, ii) = self.cum_index[vi][k];
+            let (ci, ii) = (ci as usize, ii as usize);
+            let part = compulsory_part(&self.domains, &self.cum_states[ci].items[ii]);
+            let cs = &mut self.cum_states[ci];
+            if cs.reg[ii] != part {
+                let d = cs.items[ii].demand;
+                if let Some((a, b)) = cs.reg[ii] {
+                    add_diff(&mut cs.diff, a, -d);
+                    add_diff(&mut cs.diff, b + 1, d);
+                }
+                if let Some((a, b)) = part {
+                    add_diff(&mut cs.diff, a, d);
+                    add_diff(&mut cs.diff, b + 1, -d);
+                }
+                cs.reg[ii] = part;
+                cs.profile_dirty = true;
+                cs.version += 1;
+                self.stats.cum_resyncs += 1;
+            }
+            if !cs.dirty_flag[ii] {
+                cs.dirty_flag[ii] = true;
+                cs.dirty.push(ii as u32);
+            }
+        }
+    }
+
+    /// Drain the typed-event buffer: wake matching watchers (all
+    /// watchers in naive mode), wake the objective when its slack can
+    /// tighten, and resync incremental cumulative state.
+    fn drain_events(&mut self, model: &Model) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut events = std::mem::take(&mut self.events);
+        for ev in events.drain(..) {
+            let vi = ev.var.0 as usize;
+            self.stats.events_posted += 1;
+            for wi in 0..model.watches[vi].len() {
+                let (w, wm) = model.watches[vi][wi];
+                if self.naive || (wm & ev.mask) != 0 {
+                    self.enqueue(w);
+                } else {
+                    self.stats.wakeups_skipped += 1;
+                }
+            }
+            if self.has_obj && (self.naive || (self.obj_mask[vi] & ev.mask) != 0) {
+                self.enqueue(self.obj_pid);
+            }
+            if !self.naive && !self.cum_index[vi].is_empty() {
+                self.resync_var(vi);
+            }
+        }
+        // hand the (drained) buffer back to reuse its allocation
+        self.events = events;
+    }
+
+    /// Run one propagator.
+    fn run_prop(&mut self, model: &Model, pid: u32) -> Result<(), Conflict> {
+        if pid == self.obj_pid {
+            let mut ctx = Ctx {
+                domains: &mut self.domains,
+                trail: &mut self.trail,
+                changed: &mut self.events,
+            };
+            return prop_linear_le(&self.obj_terms, self.obj_rhs, &mut ctx);
+        }
+        if !self.naive {
+            if let Some(ci) = self.cum_of_prop[pid as usize] {
+                let cs = &mut self.cum_states[ci as usize];
+                let mut ctx = Ctx {
+                    domains: &mut self.domains,
+                    trail: &mut self.trail,
+                    changed: &mut self.events,
+                };
+                return cumulative_filter(cs, &mut ctx, &mut self.stats);
+            }
+        }
+        let mut ctx = Ctx {
+            domains: &mut self.domains,
+            trail: &mut self.trail,
+            changed: &mut self.events,
+        };
+        model.props[pid as usize].propagate(&mut ctx)
+    }
+
+    /// Propagate to fixpoint: drain the cheap tier, then run one
+    /// expensive propagator, repeat. `Err` leaves cleared queues (the
+    /// caller backtracks).
+    pub fn fixpoint(&mut self, model: &Model) -> Result<(), Conflict> {
+        loop {
+            let pid = if let Some(p) = self.queue_fast.pop() {
+                p
+            } else if let Some(p) = self.queue_slow.pop() {
+                p
+            } else {
+                return Ok(());
+            };
+            self.in_queue[pid as usize] = false;
+            self.stats.propagations += 1;
+            if self.run_prop(model, pid).is_err() {
+                debug_conflict(model, pid, self.obj_pid);
+                self.clear_on_conflict();
+                return Err(Conflict);
+            }
+            self.drain_events(model);
+        }
+    }
+
+    /// Apply the left branch `x = v` and propagate to fixpoint.
+    pub fn decide_eq(&mut self, model: &Model, x: VarId, v: i64) -> Result<(), Conflict> {
+        let r = {
+            let mut ctx = Ctx {
+                domains: &mut self.domains,
+                trail: &mut self.trail,
+                changed: &mut self.events,
+            };
+            ctx.fix_var(x, v)
+        };
+        if r.is_err() {
+            self.clear_on_conflict();
+            return Err(Conflict);
+        }
+        self.drain_events(model);
+        self.fixpoint(model)
+    }
+
+    /// Apply the right branch `x ≥ v` and propagate to fixpoint.
+    pub fn decide_ge(&mut self, model: &Model, x: VarId, v: i64) -> Result<(), Conflict> {
+        let r = {
+            let mut ctx = Ctx {
+                domains: &mut self.domains,
+                trail: &mut self.trail,
+                changed: &mut self.events,
+            };
+            ctx.set_min(x, v)
+        };
+        if r.is_err() {
+            self.clear_on_conflict();
+            return Err(Conflict);
+        }
+        self.drain_events(model);
+        self.fixpoint(model)
+    }
+
+    /// Undo the trail down to `mark`: restore domains, re-synchronise
+    /// cumulative state, and re-enqueue only the propagators watching
+    /// undone variables plus the objective — instead of the whole
+    /// propagator set. The restored state was itself a propagation
+    /// fixpoint, so for idempotent propagators even the undone-var
+    /// watchers would be redundant; they are re-enqueued anyway as
+    /// cheap insurance for bounded-effort passes (`Cumulative` caps its
+    /// per-invocation shaving), while the objective genuinely needs the
+    /// wake because its rhs may have tightened since the subtree was
+    /// entered. In naive mode every propagator is re-enqueued instead.
+    pub fn undo_to(&mut self, model: &Model, mark: usize) {
+        while self.trail.len() > mark {
+            let (var, lo, hi) = self.trail.pop().unwrap();
+            self.domains[var as usize].restore((lo, hi));
+            if self.naive {
+                continue;
+            }
+            let vi = var as usize;
+            for wi in 0..model.watches[vi].len() {
+                let (w, _) = model.watches[vi][wi];
+                self.enqueue(w);
+            }
+            if !self.cum_index[vi].is_empty() {
+                self.resync_var(vi);
+            }
+        }
+        if self.naive {
+            self.enqueue_all();
+        } else if self.has_obj {
+            self.enqueue(self.obj_pid);
+        }
+    }
+}
+
+/// `MOCCASIN_DEBUG_PROP` conflict reporting; the env lookup happens
+/// once per process (cached in a `OnceLock`), not on every conflict.
+fn debug_conflict(model: &Model, pid: u32, obj_pid: u32) {
+    static DEBUG: OnceLock<bool> = OnceLock::new();
+    let on = *DEBUG.get_or_init(|| std::env::var("MOCCASIN_DEBUG_PROP").is_ok());
+    if !on {
+        return;
+    }
+    let kind = if pid == obj_pid {
+        "objective".to_string()
+    } else {
+        match &model.props[pid as usize] {
+            Propagator::LinearLe { rhs, terms } => {
+                format!("LinearLe(rhs={rhs},terms={})", terms.len())
+            }
+            Propagator::LeOffset { .. } => "LeOffset".into(),
+            Propagator::Cumulative { .. } => "Cumulative".into(),
+            Propagator::Cover { active, start, .. } => {
+                format!("Cover(active={active:?},start={start:?})")
+            }
+            Propagator::AllDifferent { .. } => "AllDifferent".into(),
+        }
+    };
+    eprintln!("conflict in {kind}");
+}

@@ -18,11 +18,22 @@
 //!   reservoir-style precedence constraint (5): an active start must be
 //!   covered by an active producer interval), and `AllDifferent`
 //!   (constraint (6), used only by the unstaged model).
+//! * **Propagation** runs on a persistent, event-driven engine
+//!   (`engine::PropagationEngine`): typed lower-bound / upper-bound / fixed domain
+//!   events with per-event watch lists (a propagator wakes only on the
+//!   bounds it actually reads), a two-tier priority queue that drains
+//!   cheap propagators to fixpoint before running `Cumulative`, and
+//!   incremental `Cumulative` state (a cached timetable profile of
+//!   compulsory parts, updated from events and re-synchronised on
+//!   backtrack) so the profile is never rebuilt from scratch inside the
+//!   search loop.
 //! * **Search** is DFS with chronological backtracking, first-unfixed
-//!   variable selection over a caller-supplied branch order,
-//!   min-value-first branching (`x = min` / `x ≥ min+1`), and
-//!   branch-and-bound on a linear objective with an in-place-tightened
-//!   incumbent bound.
+//!   variable selection via a trailed pointer over a caller-supplied
+//!   branch order, min-value-first branching (`x = min` / `x ≥ min+1`),
+//!   and branch-and-bound on a linear objective implemented as one
+//!   persistent propagator whose rhs tightens in place. Backtracking
+//!   re-enqueues only the propagators watching undone variables plus
+//!   the objective, instead of the whole propagator set.
 //!
 //! The engine is deliberately small but complete: every solution it emits
 //! is checked against all constraints (`Model::check`), and the MOCCASIN
@@ -30,10 +41,11 @@
 //! evaluator, so no solver bug can silently corrupt reported numbers.
 
 mod domain;
+mod engine;
 mod propagators;
 mod search;
 
-pub use domain::{Domain, VarId};
+pub use domain::{event, Domain, DomainEvent, VarId};
 pub use propagators::{CumItem, Propagator};
 pub use search::{SearchResult, SearchStats, Solver, Status};
 
@@ -44,8 +56,9 @@ use std::sync::Arc;
 pub struct Model {
     pub(crate) domains: Vec<Domain>,
     pub(crate) props: Vec<Propagator>,
-    /// var -> propagator indices watching it
-    pub(crate) watches: Vec<Vec<u32>>,
+    /// var -> (propagator index, event mask) pairs: which propagators
+    /// watch this variable and which [`event`] kinds wake them.
+    pub(crate) watches: Vec<Vec<(u32, u8)>>,
 }
 
 impl Default for Model {
@@ -103,8 +116,8 @@ impl Model {
 
     fn push_prop(&mut self, p: Propagator) -> u32 {
         let idx = self.props.len() as u32;
-        for v in p.watched_vars() {
-            self.watches[v.0 as usize].push(idx);
+        for (v, mask) in p.watch_masks() {
+            self.watches[v.0 as usize].push((idx, mask));
         }
         self.props.push(p);
         idx

@@ -7,7 +7,7 @@
 //! exactness of the solver comes from search; the final check makes
 //! soundness unconditional.
 
-use super::domain::{Domain, VarId};
+use super::domain::{event, Domain, DomainEvent, VarId};
 
 /// One optional interval contributing `demand` to a cumulative resource
 /// while active over `[start, end]` (inclusive, as in the paper: the
@@ -44,14 +44,15 @@ pub enum Propagator {
 /// Conflict marker.
 pub struct Conflict;
 
-/// Mutable propagation context: domains + trail + changed-var log.
+/// Mutable propagation context: domains + trail + typed event log.
 pub struct Ctx<'a> {
     /// All variable domains, indexed by [`VarId`].
     pub domains: &'a mut [Domain],
     /// (var, old_lo, old_hi) — undone in reverse order on backtrack.
     pub trail: &'a mut Vec<(u32, u32, u32)>,
-    /// Variables whose bounds changed during the current pass.
-    pub changed: &'a mut Vec<VarId>,
+    /// Typed domain events posted during the current pass (drained by
+    /// the propagation engine after the propagator returns).
+    pub changed: &'a mut Vec<DomainEvent>,
 }
 
 impl<'a> Ctx<'a> {
@@ -85,8 +86,9 @@ impl<'a> Ctx<'a> {
         let (lo, hi) = d.bounds();
         match d.remove_below(v) {
             Ok(true) => {
+                let mask = event::LB | if d.is_fixed() { event::FIX } else { 0 };
                 self.trail.push((x.0, lo, hi));
-                self.changed.push(x);
+                self.changed.push(DomainEvent { var: x, mask });
                 Ok(())
             }
             Ok(false) => Ok(()),
@@ -103,8 +105,9 @@ impl<'a> Ctx<'a> {
         let (lo, hi) = d.bounds();
         match d.remove_above(v) {
             Ok(true) => {
+                let mask = event::UB | if d.is_fixed() { event::FIX } else { 0 };
                 self.trail.push((x.0, lo, hi));
-                self.changed.push(x);
+                self.changed.push(DomainEvent { var: x, mask });
                 Ok(())
             }
             Ok(false) => Ok(()),
@@ -123,34 +126,59 @@ impl<'a> Ctx<'a> {
 }
 
 impl Propagator {
-    /// Variables whose bound changes should re-run this propagator.
-    pub fn watched_vars(&self) -> Vec<VarId> {
+    /// Watched variables with the event mask (see [`event`]) that can
+    /// enable new filtering for this propagator. The propagation engine
+    /// wakes the propagator only on matching events; non-matching
+    /// changes are counted as skipped wakeups.
+    ///
+    /// Masks mirror exactly what `propagate` *reads*:
+    /// * `LinearLe` reads `min` of positive-coefficient terms and `max`
+    ///   of negative ones (the slack computation) — `LB` / `UB`.
+    /// * `LeOffset` reads `min(x)`, `max(y)` and (when guarded)
+    ///   `min(b)` — the guard becoming false makes it vacuous, which
+    ///   never enables filtering.
+    /// * `Cumulative` reads both bounds of every interval variable.
+    /// * `Cover` reads both bounds of the covered start, `min(active)`,
+    ///   and per candidate `max(a)`, `min(s)`, `max(e)`.
+    /// * `AllDifferent` reads everything.
+    pub fn watch_masks(&self) -> Vec<(VarId, u8)> {
         match self {
-            Propagator::LinearLe { terms, .. } => terms.iter().map(|&(_, v)| v).collect(),
+            Propagator::LinearLe { terms, .. } => terms
+                .iter()
+                .filter(|&&(c, _)| c != 0)
+                .map(|&(c, v)| (v, if c > 0 { event::LB } else { event::UB }))
+                .collect(),
             Propagator::LeOffset { b, x, y, .. } => {
-                let mut w = vec![*x, *y];
+                let mut w = vec![(*x, event::LB), (*y, event::UB)];
                 if let Some(b) = b {
-                    w.push(*b);
+                    w.push((*b, event::LB));
                 }
                 w
             }
             Propagator::Cumulative { items, .. } => items
                 .iter()
-                .flat_map(|i| [i.active, i.start, i.end])
+                .flat_map(|i| {
+                    [
+                        (i.active, event::LB | event::UB),
+                        (i.start, event::LB | event::UB),
+                        (i.end, event::LB | event::UB),
+                    ]
+                })
                 .collect(),
             Propagator::Cover { active, start, candidates } => {
-                let mut w = vec![*active, *start];
+                let mut w = vec![(*active, event::LB), (*start, event::LB | event::UB)];
                 for &(a, s, e) in candidates {
-                    w.extend([a, s, e]);
+                    w.extend([(a, event::UB), (s, event::LB), (e, event::UB)]);
                 }
                 w
             }
-            Propagator::AllDifferent { vars } => vars.clone(),
+            Propagator::AllDifferent { vars } => {
+                vars.iter().map(|&v| (v, event::ANY)).collect()
+            }
         }
     }
 
-    /// Bounds filtering. `rhs_override` replaces the stored rhs for
-    /// `LinearLe` (used by branch-and-bound objective tightening).
+    /// Bounds filtering.
     pub fn propagate(&self, ctx: &mut Ctx) -> Result<(), Conflict> {
         match self {
             Propagator::LinearLe { terms, rhs } => prop_linear_le(terms, *rhs, ctx),
@@ -224,7 +252,13 @@ impl Propagator {
     }
 }
 
-fn prop_linear_le(terms: &[(i64, VarId)], rhs: i64, ctx: &mut Ctx) -> Result<(), Conflict> {
+/// Σ c·x ≤ rhs bounds filtering (`pub(crate)`: also backs the engine's
+/// persistent objective-bound propagator, whose rhs tightens in place).
+pub(crate) fn prop_linear_le(
+    terms: &[(i64, VarId)],
+    rhs: i64,
+    ctx: &mut Ctx,
+) -> Result<(), Conflict> {
     // min possible sum
     let mut minsum: i64 = 0;
     for &(c, v) in terms {
@@ -252,15 +286,118 @@ fn prop_linear_le(terms: &[(i64, VarId)], rhs: i64, ctx: &mut Ctx) -> Result<(),
     Ok(())
 }
 
+/// Load of a compressed step profile `(time, load on [time, next))`
+/// at time `t` (shared by the naive propagator and the engine's
+/// incremental cache).
+pub(crate) fn profile_load_at(profile: &[(i64, i64)], t: i64) -> i64 {
+    match profile.binary_search_by(|&(pt, _)| pt.cmp(&t)) {
+        Ok(k) => profile[k].1,
+        Err(0) => 0,
+        Err(k) => profile[k - 1].1,
+    }
+}
+
+/// Timetable filtering of one cumulative item against a compulsory-part
+/// profile, subtracting the item's own mandatory contribution. This is
+/// the single filtering implementation: the naive propagator calls it
+/// with a freshly built profile, the engine with its incrementally
+/// maintained one — so the two paths cannot drift apart.
+pub(crate) fn timetable_filter_item(
+    it: &CumItem,
+    cap: i64,
+    profile: &[(i64, i64)],
+    ctx: &mut Ctx,
+) -> Result<(), Conflict> {
+    if ctx.max(it.active) == 0 {
+        return Ok(());
+    }
+    let d = it.demand;
+    if d == 0 {
+        return Ok(());
+    }
+    // own mandatory contribution at time t (computed from bounds
+    // captured before each use, to keep the borrow checker happy)
+    let own = |ms: i64, me: i64, certainly_active: bool, t: i64| -> i64 {
+        if certainly_active && ms <= me && ms <= t && t <= me {
+            d
+        } else {
+            0
+        }
+    };
+    if ctx.min(it.active) == 1 {
+        // raise start lower bound while its point is overloaded
+        let mut guard = 0;
+        loop {
+            let s = ctx.min(it.start);
+            let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
+            if profile_load_at(profile, s) - own(ms, me, true, s) + d <= cap {
+                break;
+            }
+            ctx.set_min(it.start, s + 1)?;
+            // keep interval consistent: end >= start
+            let s2 = ctx.min(it.start);
+            if ctx.min(it.end) < s2 {
+                ctx.set_min(it.end, s2)?;
+            }
+            guard += 1;
+            if guard > 64 {
+                break; // bounded effort; search completes the job
+            }
+        }
+        // lower end upper bound while its point is overloaded
+        let mut guard = 0;
+        loop {
+            let e = ctx.max(it.end);
+            let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
+            if profile_load_at(profile, e) - own(ms, me, true, e) + d <= cap {
+                break;
+            }
+            ctx.set_max(it.end, e - 1)?;
+            let e2 = ctx.max(it.end);
+            if ctx.max(it.start) > e2 {
+                ctx.set_max(it.start, e2)?;
+            }
+            guard += 1;
+            if guard > 64 {
+                break;
+            }
+        }
+    } else if ctx.is_fixed(it.start) && ctx.is_fixed(it.end) {
+        // undetermined active with fixed placement: would it overload?
+        let s = ctx.min(it.start);
+        let e = ctx.min(it.end);
+        // check only at profile breakpoints within [s, e] plus s
+        let mut over = profile_load_at(profile, s) + d > cap;
+        if !over {
+            for &(t, l) in profile {
+                if t > e {
+                    break;
+                }
+                if t >= s && l + d > cap {
+                    over = true;
+                    break;
+                }
+            }
+        }
+        if over {
+            ctx.set_max(it.active, 0)?;
+        }
+    }
+    Ok(())
+}
+
 /// Time-table cumulative filtering over mandatory parts.
 fn prop_cumulative(items: &[CumItem], cap: i64, ctx: &mut Ctx) -> Result<(), Conflict> {
     // Mandatory part of an interval that is certainly active:
     // [start.max, end.min] if nonempty.
     // Build a compressed profile from (time, +d)/(time+1, -d) events.
+    // Zero-demand items are excluded entirely (they cannot change any
+    // load), keeping this profile breakpoint-identical to the engine's
+    // incremental diff map, which drops zero deltas.
     let mut events: Vec<(i64, i64)> = Vec::new();
     for it in items {
-        if ctx.min(it.active) != 1 {
-            continue; // not certainly active
+        if it.demand == 0 || ctx.min(it.active) != 1 {
+            continue; // no load contribution / not certainly active
         }
         let ms = ctx.max(it.start);
         let me = ctx.min(it.end);
@@ -288,92 +425,9 @@ fn prop_cumulative(items: &[CumItem], cap: i64, ctx: &mut Ctx) -> Result<(), Con
             return Err(Conflict);
         }
     }
-    let load_at = |t: i64| -> i64 {
-        match profile.binary_search_by(|&(pt, _)| pt.cmp(&t)) {
-            Ok(k) => profile[k].1,
-            Err(0) => 0,
-            Err(k) => profile[k - 1].1,
-        }
-    };
-
-    // Filter each potentially-active interval against the profile
-    // (subtracting its own mandatory contribution).
+    // Filter each potentially-active interval against the profile.
     for it in items {
-        if ctx.max(it.active) == 0 {
-            continue;
-        }
-        let d = it.demand;
-        if d == 0 {
-            continue;
-        }
-        // own mandatory contribution at time t (computed from bounds
-        // captured before each use, to keep the borrow checker happy)
-        let own = |ms: i64, me: i64, certainly_active: bool, t: i64| -> i64 {
-            if certainly_active && ms <= me && ms <= t && t <= me {
-                d
-            } else {
-                0
-            }
-        };
-        if ctx.min(it.active) == 1 {
-            // raise start lower bound while its point is overloaded
-            let mut guard = 0;
-            loop {
-                let s = ctx.min(it.start);
-                let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
-                if load_at(s) - own(ms, me, true, s) + d <= cap {
-                    break;
-                }
-                ctx.set_min(it.start, s + 1)?;
-                // keep interval consistent: end >= start
-                let s2 = ctx.min(it.start);
-                if ctx.min(it.end) < s2 {
-                    ctx.set_min(it.end, s2)?;
-                }
-                guard += 1;
-                if guard > 64 {
-                    break; // bounded effort; search completes the job
-                }
-            }
-            // lower end upper bound while its point is overloaded
-            let mut guard = 0;
-            loop {
-                let e = ctx.max(it.end);
-                let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
-                if load_at(e) - own(ms, me, true, e) + d <= cap {
-                    break;
-                }
-                ctx.set_max(it.end, e - 1)?;
-                let e2 = ctx.max(it.end);
-                if ctx.max(it.start) > e2 {
-                    ctx.set_max(it.start, e2)?;
-                }
-                guard += 1;
-                if guard > 64 {
-                    break;
-                }
-            }
-        } else if ctx.is_fixed(it.start) && ctx.is_fixed(it.end) {
-            // undetermined active with fixed placement: would it overload?
-            let s = ctx.min(it.start);
-            let e = ctx.min(it.end);
-            // check only at profile breakpoints within [s, e] plus s
-            let mut over = load_at(s) + d > cap;
-            if !over {
-                for &(t, l) in &profile {
-                    if t > e {
-                        break;
-                    }
-                    if t >= s && l + d > cap {
-                        over = true;
-                        break;
-                    }
-                }
-            }
-            if over {
-                ctx.set_max(it.active, 0)?;
-            }
-        }
+        timetable_filter_item(it, cap, &profile, ctx)?;
     }
     Ok(())
 }

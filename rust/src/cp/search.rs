@@ -1,15 +1,18 @@
 //! DFS branch-and-bound search over a [`Model`](super::Model).
 //!
-//! Chronological backtracking with a `(var, old_lo, old_hi)` trail;
-//! first-unfixed variable selection over a caller-supplied branch order;
-//! min-value branching (`x = min` on the left, `x ≥ min+1` on the right).
-//! Minimization via an incumbent bound propagated as an implicit
-//! `LinearLe` whose rhs tightens in place after every improving solution.
-//! Every emitted solution is verified against all constraints before it
-//! is reported — filtering bugs can cost time but never correctness.
+//! Chronological backtracking on top of the event-driven
+//! `PropagationEngine` (see `engine.rs`): the engine owns the domains,
+//! trail, two-tier queue and per-propagator incremental state; the
+//! search layer owns the frame stack, a trailed first-unfixed branch
+//! pointer over the caller-supplied branch order, min-value branching
+//! (`x = min` on the left, `x ≥ min+1` on the right), and minimization
+//! via the engine's persistent objective propagator whose rhs tightens
+//! in place after every improving solution. Every emitted solution is
+//! verified against all constraints before it is reported — filtering
+//! bugs can cost time but never correctness.
 
-use super::domain::{Domain, VarId};
-use super::propagators::{Conflict, Ctx, Propagator};
+use super::domain::VarId;
+use super::engine::PropagationEngine;
 use super::Model;
 use crate::util::{Deadline, Incumbent};
 use std::sync::Arc;
@@ -28,8 +31,9 @@ pub enum Status {
     Unknown,
 }
 
-/// Search statistics.
-#[derive(Debug, Clone, Copy, Default)]
+/// Search statistics, including the propagation engine's event/queue
+/// counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SearchStats {
     /// Branch decisions taken.
     pub nodes: u64,
@@ -39,6 +43,32 @@ pub struct SearchStats {
     pub solutions: u64,
     /// Propagator invocations.
     pub propagations: u64,
+    /// Typed domain events posted (bound changes).
+    pub events_posted: u64,
+    /// Wakeups suppressed because the event kind did not match the
+    /// propagator's watch mask (event filtering at work).
+    pub wakeups_skipped: u64,
+    /// Cumulative compulsory-part re-synchronisations (incremental
+    /// forward updates plus backtrack undo).
+    pub cum_resyncs: u64,
+    /// Cumulative profile flattenings (each replaces what used to be a
+    /// from-scratch rebuild per invocation).
+    pub cum_rebuilds: u64,
+}
+
+impl SearchStats {
+    /// Accumulate another run's counters into this one (used to
+    /// aggregate across LNS window re-solves and portfolio members).
+    pub fn merge(&mut self, o: &SearchStats) {
+        self.nodes += o.nodes;
+        self.conflicts += o.conflicts;
+        self.solutions += o.solutions;
+        self.propagations += o.propagations;
+        self.events_posted += o.events_posted;
+        self.wakeups_skipped += o.wakeups_skipped;
+        self.cum_resyncs += o.cum_resyncs;
+        self.cum_rebuilds += o.cum_rebuilds;
+    }
 }
 
 /// Result of a search: status, best assignment + objective, stats.
@@ -79,6 +109,12 @@ pub struct Solver {
     /// `guards[i]` is fixed to 0, branch var `i` is skipped (used for
     /// start/end vars of inactive optional intervals).
     pub guards: Option<Vec<Option<VarId>>>,
+    /// Use the naive reference propagation semantics (wake every
+    /// watcher on any event, single queue, from-scratch `Cumulative`,
+    /// re-enqueue everything on backtrack) instead of the event-driven
+    /// engine. Exists for equivalence testing; both modes explore the
+    /// same tree because bounds propagation is confluent.
+    pub naive: bool,
 }
 
 impl Default for Solver {
@@ -89,6 +125,7 @@ impl Default for Solver {
             node_limit: u64::MAX,
             first_solution: false,
             guards: None,
+            naive: false,
         }
     }
 }
@@ -100,6 +137,8 @@ struct Frame {
     value: i64,
     /// whether the right branch (x ≥ value+1) has been taken
     right_done: bool,
+    /// first-unfixed pointer to restore on backtrack
+    saved_ptr: usize,
 }
 
 impl Solver {
@@ -114,269 +153,111 @@ impl Solver {
         branch_order: &[VarId],
         mut on_solution: impl FnMut(&[i64], i64),
     ) -> SearchResult {
-        let mut domains: Vec<Domain> = model.domains.clone();
-        let mut trail: Vec<(u32, u32, u32)> = Vec::new();
-        let mut stats = SearchStats::default();
+        let mut eng = PropagationEngine::new(model, objective, self.naive);
         let mut best: Option<(Vec<i64>, i64)> = None;
-        // incumbent bound as rhs of the implicit objective constraint;
-        // seeded from the shared pruning bound when one is attached
-        // (any solver may prune against the best solution found anywhere)
-        let mut obj_bound: i64 = i64::MAX / 4;
+        // seed the objective bound from the shared pruning bound when
+        // one is attached (any solver may prune against the best
+        // solution found anywhere)
         if !objective.is_empty() {
             if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
-                obj_bound = obj_bound.min(g as i64 - 1);
+                eng.tighten_obj_bound(g as i64 - 1);
             }
         }
-
-        // propagation queue state
-        let nprops = model.props.len();
-        let mut queue: Vec<u32> = Vec::with_capacity(nprops);
-        let mut in_queue = vec![false; nprops + 1]; // +1 = objective pseudo-prop
-        let obj_prop_id = nprops as u32;
-
-        let objective_prop = if objective.is_empty() {
-            None
-        } else {
-            Some(objective.to_vec())
-        };
-
-        // returns Err(Conflict) on failure
-        #[allow(clippy::too_many_arguments)]
-        fn propagate_fixpoint(
-            model: &Model,
-            domains: &mut Vec<Domain>,
-            trail: &mut Vec<(u32, u32, u32)>,
-            queue: &mut Vec<u32>,
-            in_queue: &mut [bool],
-            objective_prop: &Option<Vec<(i64, VarId)>>,
-            obj_bound: i64,
-            obj_prop_id: u32,
-            stats: &mut SearchStats,
-        ) -> Result<(), Conflict> {
-            let mut changed: Vec<VarId> = Vec::new();
-            while let Some(pid) = queue.pop() {
-                in_queue[pid as usize] = false;
-                stats.propagations += 1;
-                changed.clear();
-                let res = {
-                    let mut ctx = Ctx { domains, trail, changed: &mut changed };
-                    if pid == obj_prop_id {
-                        // objective bound: Σ c x ≤ obj_bound
-                        let terms = objective_prop.as_ref().unwrap();
-                        let tmp = Propagator::LinearLe { terms: terms.clone(), rhs: obj_bound };
-                        tmp.propagate(&mut ctx)
-                    } else {
-                        model.props[pid as usize].propagate(&mut ctx)
-                    }
-                };
-                if res.is_err() {
-                    if std::env::var("MOCCASIN_DEBUG_PROP").is_ok() {
-                        let kind = if pid == obj_prop_id {
-                            "objective".to_string()
-                        } else {
-                            match &model.props[pid as usize] {
-                                Propagator::LinearLe { rhs, terms } => {
-                                    format!("LinearLe(rhs={rhs},terms={})", terms.len())
-                                }
-                                Propagator::LeOffset { .. } => "LeOffset".into(),
-                                Propagator::Cumulative { .. } => "Cumulative".into(),
-                                Propagator::Cover { active, start, .. } => {
-                                    format!("Cover(active={active:?},start={start:?})")
-                                }
-                                Propagator::AllDifferent { .. } => "AllDifferent".into(),
-                            }
-                        };
-                        eprintln!("root conflict in {kind}");
-                    }
-                    queue.clear();
-                    in_queue.iter_mut().for_each(|b| *b = false);
-                    return Err(Conflict);
-                }
-                for &v in changed.iter() {
-                    for &w in &model.watches[v.0 as usize] {
-                        if !in_queue[w as usize] {
-                            in_queue[w as usize] = true;
-                            queue.push(w);
-                        }
-                    }
-                    if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
-                        in_queue[obj_prop_id as usize] = true;
-                        queue.push(obj_prop_id);
-                    }
-                }
-            }
-            Ok(())
-        }
-
-        let enqueue_all = |queue: &mut Vec<u32>, in_queue: &mut [bool]| {
-            queue.clear();
-            for p in 0..nprops as u32 {
-                queue.push(p);
-                in_queue[p as usize] = true;
-            }
-            if objective_prop.is_some() {
-                queue.push(obj_prop_id);
-                in_queue[obj_prop_id as usize] = true;
-            }
-        };
 
         // root propagation
-        enqueue_all(&mut queue, &mut in_queue);
-        if propagate_fixpoint(
-            model,
-            &mut domains,
-            &mut trail,
-            &mut queue,
-            &mut in_queue,
-            &objective_prop,
-            obj_bound,
-            obj_prop_id,
-            &mut stats,
-        )
-        .is_err()
-        {
-            return SearchResult { status: Status::Infeasible, best: None, stats };
+        eng.enqueue_all();
+        if eng.fixpoint(model).is_err() {
+            return SearchResult { status: Status::Infeasible, best: None, stats: eng.stats };
         }
 
         let mut frames: Vec<Frame> = Vec::new();
+        // Trailed first-unfixed pointer into `branch_order`: entries
+        // before it are fixed or permanently guard-disabled on the
+        // current path (both conditions are monotone between
+        // backtracks), so selection never rescans them. Frames save the
+        // pointer; backtracking restores it.
+        let mut ptr: usize = 0;
         let mut limit_hit = false;
 
         'search: loop {
             // limits (the deadline poll also observes portfolio
             // cancellation)
-            if stats.nodes >= self.node_limit
-                || (stats.nodes % 128 == 0 && self.deadline.exceeded())
+            if eng.stats.nodes >= self.node_limit
+                || (eng.stats.nodes % 128 == 0 && self.deadline.exceeded())
             {
                 limit_hit = true;
                 break 'search;
             }
             // portfolio pruning: tighten the bound to the best duration
             // published by any cooperating solver
-            if stats.nodes % 128 == 0 && !objective.is_empty() {
+            if eng.stats.nodes % 128 == 0 && !objective.is_empty() {
                 if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
-                    obj_bound = obj_bound.min(g as i64 - 1);
+                    eng.tighten_obj_bound(g as i64 - 1);
                 }
             }
 
-            // pick first unfixed branch var whose guard is not fixed 0
-            let pick = branch_order
-                .iter()
-                .enumerate()
-                .find(|&(i, v)| {
-                    if domains[v.0 as usize].is_fixed() {
-                        return false;
-                    }
-                    if let Some(gs) = &self.guards {
-                        if let Some(Some(g)) = gs.get(i) {
-                            let gd = &domains[g.0 as usize];
-                            if gd.is_fixed() && gd.min() == 0 {
-                                return false;
-                            }
+            // advance the pointer past fixed / guard-disabled vars
+            while ptr < branch_order.len() {
+                let v = branch_order[ptr];
+                if eng.domains[v.0 as usize].is_fixed() {
+                    ptr += 1;
+                    continue;
+                }
+                if let Some(gs) = &self.guards {
+                    if let Some(Some(g)) = gs.get(ptr) {
+                        let gd = &eng.domains[g.0 as usize];
+                        if gd.is_fixed() && gd.min() == 0 {
+                            ptr += 1;
+                            continue;
                         }
-                    }
-                    true
-                })
-                .map(|(_, &v)| v);
-
-            match pick {
-                None => {
-                    // all branch vars fixed → candidate solution (any
-                    // remaining model vars must be fixed by propagation;
-                    // if not, take their minimum — sound because we
-                    // verify below).
-                    let assignment: Vec<i64> =
-                        domains.iter().map(|d| d.min()).collect();
-                    if model.check(&assignment).is_none() {
-                        let obj_val: i64 =
-                            objective.iter().map(|&(c, v)| c * assignment[v.0 as usize]).sum();
-                        if best.as_ref().map(|&(_, b)| obj_val < b).unwrap_or(true) {
-                            stats.solutions += 1;
-                            on_solution(&assignment, obj_val);
-                            best = Some((assignment, obj_val));
-                            obj_bound = obj_val - 1;
-                            if self.first_solution || objective.is_empty() {
-                                break 'search;
-                            }
-                        }
-                    } else {
-                        // propagation left an unverifiable relaxed point;
-                        // treat as conflict
-                        stats.conflicts += 1;
-                    }
-                    // backtrack to continue the search
-                    if !backtrack(
-                        model,
-                        &mut frames,
-                        &mut domains,
-                        &mut trail,
-                        &mut queue,
-                        &mut in_queue,
-                        &objective_prop,
-                        obj_bound,
-                        obj_prop_id,
-                        &mut stats,
-                    ) {
-                        break 'search;
                     }
                 }
-                Some(x) => {
-                    stats.nodes += 1;
-                    let v = domains[x.0 as usize].min();
-                    frames.push(Frame {
-                        trail_len: trail.len(),
-                        var: x,
-                        value: v,
-                        right_done: false,
-                    });
-                    // left branch: x = v
-                    let ok = {
-                        let mut changed = Vec::new();
-                        let mut ctx =
-                            Ctx { domains: &mut domains, trail: &mut trail, changed: &mut changed };
-                        let r = ctx.fix_var(x, v).is_ok();
-                        if r {
-                            for &cv in changed.iter() {
-                                for &w in &model.watches[cv.0 as usize] {
-                                    if !in_queue[w as usize] {
-                                        in_queue[w as usize] = true;
-                                        queue.push(w);
-                                    }
-                                }
-                                if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
-                                    in_queue[obj_prop_id as usize] = true;
-                                    queue.push(obj_prop_id);
-                                }
-                            }
-                        }
-                        r
-                    } && propagate_fixpoint(
-                        model,
-                        &mut domains,
-                        &mut trail,
-                        &mut queue,
-                        &mut in_queue,
-                        &objective_prop,
-                        obj_bound,
-                        obj_prop_id,
-                        &mut stats,
-                    )
-                    .is_ok();
-                    if !ok {
-                        stats.conflicts += 1;
-                        if !backtrack(
-                            model,
-                            &mut frames,
-                            &mut domains,
-                            &mut trail,
-                            &mut queue,
-                            &mut in_queue,
-                            &objective_prop,
-                            obj_bound,
-                            obj_prop_id,
-                            &mut stats,
-                        ) {
+                break;
+            }
+
+            if ptr >= branch_order.len() {
+                // all branch vars fixed → candidate solution (any
+                // remaining model vars must be fixed by propagation;
+                // if not, take their minimum — sound because we
+                // verify below).
+                let assignment: Vec<i64> = eng.domains.iter().map(|d| d.min()).collect();
+                if model.check(&assignment).is_none() {
+                    let obj_val: i64 =
+                        objective.iter().map(|&(c, v)| c * assignment[v.0 as usize]).sum();
+                    if best.as_ref().map(|&(_, b)| obj_val < b).unwrap_or(true) {
+                        eng.stats.solutions += 1;
+                        on_solution(&assignment, obj_val);
+                        best = Some((assignment, obj_val));
+                        eng.tighten_obj_bound(obj_val - 1);
+                        if self.first_solution || objective.is_empty() {
                             break 'search;
                         }
+                    }
+                } else {
+                    // propagation left an unverifiable relaxed point;
+                    // treat as conflict
+                    eng.stats.conflicts += 1;
+                }
+                // backtrack to continue the search
+                if !backtrack(model, &mut eng, &mut frames, &mut ptr) {
+                    break 'search;
+                }
+            } else {
+                let x = branch_order[ptr];
+                eng.stats.nodes += 1;
+                let v = eng.domains[x.0 as usize].min();
+                frames.push(Frame {
+                    trail_len: eng.trail.len(),
+                    var: x,
+                    value: v,
+                    right_done: false,
+                    saved_ptr: ptr,
+                });
+                // left branch: x = v
+                if eng.decide_eq(model, x, v).is_err() {
+                    eng.stats.conflicts += 1;
+                    if !backtrack(model, &mut eng, &mut frames, &mut ptr) {
+                        break 'search;
                     }
                 }
             }
@@ -397,34 +278,26 @@ impl Solver {
         } else {
             status
         };
-        SearchResult { status, best, stats }
+        SearchResult { status, best, stats: eng.stats }
     }
 }
 
 /// Undo frames until a right branch can be taken; apply it and
-/// re-propagate. Returns false when the root is exhausted.
-#[allow(clippy::too_many_arguments)]
+/// re-propagate (the engine re-enqueues only watchers of undone
+/// variables plus the objective). Returns false when the root is
+/// exhausted.
 fn backtrack(
     model: &Model,
+    eng: &mut PropagationEngine,
     frames: &mut Vec<Frame>,
-    domains: &mut Vec<Domain>,
-    trail: &mut Vec<(u32, u32, u32)>,
-    queue: &mut Vec<u32>,
-    in_queue: &mut [bool],
-    objective_prop: &Option<Vec<(i64, VarId)>>,
-    obj_bound: i64,
-    obj_prop_id: u32,
-    stats: &mut SearchStats,
+    ptr: &mut usize,
 ) -> bool {
     loop {
         let Some(mut f) = frames.pop() else {
             return false;
         };
-        // undo to the frame's trail mark
-        while trail.len() > f.trail_len {
-            let (var, lo, hi) = trail.pop().unwrap();
-            domains[var as usize].restore((lo, hi));
-        }
+        eng.undo_to(model, f.trail_len);
+        *ptr = f.saved_ptr;
         if f.right_done {
             continue; // both branches exhausted here; keep unwinding
         }
@@ -433,103 +306,13 @@ fn backtrack(
         let x = f.var;
         let v = f.value;
         frames.push(f);
-        let ok = {
-            let mut changed = Vec::new();
-            let mut ctx = Ctx { domains, trail, changed: &mut changed };
-            let r = ctx.set_min(x, v + 1).is_ok();
-            if r {
-                for &cv in changed.iter() {
-                    for &w in &model.watches[cv.0 as usize] {
-                        if !in_queue[w as usize] {
-                            in_queue[w as usize] = true;
-                            queue.push(w);
-                        }
-                    }
-                    if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
-                        in_queue[obj_prop_id as usize] = true;
-                        queue.push(obj_prop_id);
-                    }
-                }
-            }
-            r
-        };
-        // also re-propagate with the (possibly tightened) objective bound
-        let ok = ok
-            && propagate_fixpoint_outer(
-                model, domains, trail, queue, in_queue, objective_prop, obj_bound, obj_prop_id,
-                stats,
-            )
-            .is_ok();
-        if ok {
+        if eng.decide_ge(model, x, v + 1).is_ok() {
             return true;
         }
-        stats.conflicts += 1;
+        eng.stats.conflicts += 1;
         // right branch failed too: unwind further
         let f = frames.pop().unwrap();
-        while trail.len() > f.trail_len {
-            let (var, lo, hi) = trail.pop().unwrap();
-            domains[var as usize].restore((lo, hi));
-        }
+        eng.undo_to(model, f.trail_len);
+        *ptr = f.saved_ptr;
     }
-}
-
-/// Fixpoint propagation (free function twin of the closure inside
-/// `solve`, used by `backtrack`).
-#[allow(clippy::too_many_arguments)]
-fn propagate_fixpoint_outer(
-    model: &Model,
-    domains: &mut Vec<Domain>,
-    trail: &mut Vec<(u32, u32, u32)>,
-    queue: &mut Vec<u32>,
-    in_queue: &mut [bool],
-    objective_prop: &Option<Vec<(i64, VarId)>>,
-    obj_bound: i64,
-    obj_prop_id: u32,
-    stats: &mut SearchStats,
-) -> Result<(), Conflict> {
-    // after a right branch, conservatively re-run everything (bound may
-    // have tightened since this subtree was entered)
-    queue.clear();
-    for p in 0..model.props.len() as u32 {
-        queue.push(p);
-        in_queue[p as usize] = true;
-    }
-    if objective_prop.is_some() {
-        queue.push(obj_prop_id);
-        in_queue[obj_prop_id as usize] = true;
-    }
-    let mut changed: Vec<VarId> = Vec::new();
-    while let Some(pid) = queue.pop() {
-        in_queue[pid as usize] = false;
-        stats.propagations += 1;
-        changed.clear();
-        let res = {
-            let mut ctx = Ctx { domains, trail, changed: &mut changed };
-            if pid == obj_prop_id {
-                let terms = objective_prop.as_ref().unwrap();
-                let tmp = Propagator::LinearLe { terms: terms.clone(), rhs: obj_bound };
-                tmp.propagate(&mut ctx)
-            } else {
-                model.props[pid as usize].propagate(&mut ctx)
-            }
-        };
-        if res.is_err() {
-            queue.clear();
-            in_queue.iter_mut().for_each(|b| *b = false);
-            return Err(Conflict);
-        }
-        for &v in changed.iter() {
-            for &w in &model.watches[v.0 as usize] {
-                if !in_queue[w as usize] {
-                    in_queue[w as usize] = true;
-                    queue.push(w);
-                }
-            }
-            if objective_prop.is_some() && !in_queue[obj_prop_id as usize] {
-                in_queue[obj_prop_id as usize] = true;
-                queue.push(obj_prop_id);
-            }
-        }
-    }
-    Ok(())
 }

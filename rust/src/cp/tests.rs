@@ -197,3 +197,98 @@ fn variable_counts_reported() {
     assert_eq!(m.num_vars(), 2);
     assert_eq!(m.num_constraints(), 1);
 }
+
+/// A small cumulative + precedence minimization instance exercising
+/// every engine path: two-tier queue, incremental profile, backtrack
+/// resync, persistent objective.
+fn scheduling_model() -> (Model, Vec<(i64, VarId)>, Vec<VarId>) {
+    let mut m = Model::new();
+    let mut items = Vec::new();
+    let mut starts = Vec::new();
+    let mut ends = Vec::new();
+    for _ in 0..4 {
+        let a = m.new_bool();
+        m.fix(a, 1);
+        let s = m.new_var(0, 11);
+        let e = m.new_var(0, 11);
+        m.le_offset(s, 1, e); // length >= 2
+        items.push(CumItem { active: a, start: s, end: e, demand: 1 });
+        starts.push(s);
+        ends.push(e);
+    }
+    // loose precedences so Cover-free models still mix binary + heavy
+    // propagators
+    m.le_offset(starts[0], 0, starts[2]);
+    m.le_offset(starts[1], 0, starts[3]);
+    m.cumulative(items, 2);
+    // minimize the makespan proxy: sum of ends
+    let objective: Vec<(i64, VarId)> = ends.iter().map(|&e| (1, e)).collect();
+    let bo = all_vars(&m);
+    (m, objective, bo)
+}
+
+#[test]
+fn engine_matches_naive_on_cumulative_optimization() {
+    let (m, obj, bo) = scheduling_model();
+    let ev = Solver::default().solve(&m, &obj, &bo, |_, _| {});
+    let na = Solver { naive: true, ..Default::default() }.solve(&m, &obj, &bo, |_, _| {});
+    assert_eq!(ev.status, Status::Optimal);
+    assert_eq!(na.status, Status::Optimal);
+    assert_eq!(
+        ev.best.as_ref().unwrap().1,
+        na.best.as_ref().unwrap().1,
+        "engines disagree on the optimum"
+    );
+    // confluence: both engines explore the identical tree
+    assert_eq!(ev.stats.nodes, na.stats.nodes, "search trees diverged");
+}
+
+#[test]
+fn engine_reports_event_counters() {
+    let (m, obj, bo) = scheduling_model();
+    let r = Solver::default().solve(&m, &obj, &bo, |_, _| {});
+    assert_eq!(r.status, Status::Optimal);
+    assert!(r.stats.events_posted > 0, "no events recorded");
+    assert!(
+        r.stats.wakeups_skipped > 0,
+        "event filtering never suppressed a wakeup (masks too coarse?)"
+    );
+    assert!(r.stats.cum_rebuilds > 0, "cumulative profile never flattened");
+    // the naive reference must skip nothing
+    let na = Solver { naive: true, ..Default::default() }.solve(&m, &obj, &bo, |_, _| {});
+    assert_eq!(na.stats.wakeups_skipped, 0);
+}
+
+#[test]
+fn engine_matches_naive_on_knapsack() {
+    let mut m = Model::new();
+    let a = m.new_bool();
+    let b = m.new_bool();
+    let c = m.new_bool();
+    m.linear_le(vec![(2, a), (3, b), (1, c)], 4);
+    let obj = vec![(-5, a), (-4, b), (-3, c)];
+    let ev = Solver::default().solve(&m, &obj, &all_vars(&m), |_, _| {});
+    let na = Solver { naive: true, ..Default::default() }.solve(&m, &obj, &all_vars(&m), |_, _| {});
+    assert_eq!(ev.status, Status::Optimal);
+    assert_eq!(ev.best.unwrap().1, -8);
+    assert_eq!(na.best.unwrap().1, -8);
+}
+
+#[test]
+fn stats_merge_accumulates() {
+    let mut a = SearchStats { nodes: 3, propagations: 10, events_posted: 7, ..Default::default() };
+    let b = SearchStats {
+        nodes: 2,
+        conflicts: 1,
+        wakeups_skipped: 4,
+        cum_resyncs: 5,
+        ..Default::default()
+    };
+    a.merge(&b);
+    assert_eq!(a.nodes, 5);
+    assert_eq!(a.conflicts, 1);
+    assert_eq!(a.propagations, 10);
+    assert_eq!(a.events_posted, 7);
+    assert_eq!(a.wakeups_skipped, 4);
+    assert_eq!(a.cum_resyncs, 5);
+}

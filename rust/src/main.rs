@@ -2,10 +2,10 @@
 //!
 //! Subcommands:
 //!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--portfolio]
-//!           [--threads N] [--time-limit S]
+//!           [--threads N] [--time-limit S] [--verbose]
 //!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
 //!           [--time-limit S] [--compare-serial]
-//!   bench   <fig1|fig5|fig6|table1|table2|sweep|ablation-c|ablation-topo|all>
+//!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|ablation-topo|all>
 //!           [--time-limit S] [--quick]
 //!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`
 //!           and a build with `--features pjrt`)
@@ -92,6 +92,17 @@ fn main() {
                     resp.proved_optimal
                 ),
                 None => println!("no solution within {time_limit:?} ({:?})", resp.error),
+            }
+            if args.iter().any(|a| a == "--verbose") {
+                let st = resp.stats;
+                println!(
+                    "kernel: nodes={} conflicts={} solutions={} propagations={}",
+                    st.nodes, st.conflicts, st.solutions, st.propagations
+                );
+                println!(
+                    "engine: events={} wakeups-skipped={} cum-resyncs={} cum-rebuilds={}",
+                    st.events_posted, st.wakeups_skipped, st.cum_resyncs, st.cum_rebuilds
+                );
             }
         }
         Some("sweep") => {
@@ -185,6 +196,7 @@ fn main() {
             Some("table1") => bench::table1(),
             Some("table2") => bench::table2(time_limit, quick),
             Some("sweep") => bench::sweep_parallel(time_limit, quick),
+            Some("solver-json") => bench::bench_solver_json(time_limit, quick),
             Some("ablation-c") => bench::ablation_c(time_limit),
             Some("ablation-topo") => bench::ablation_topo(),
             Some("all") | None => bench::run_all(time_limit, quick),
@@ -222,11 +234,11 @@ fn main() {
                 "usage: moccasin <solve|sweep|bench|train> [options]\n\
                    solve --graph <G1..G4|RW1..RW4|CM1|CM2|rl:n:m:seed> [--budget-frac F] \
                  [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
-                 [--threads N] [--time-limit S]\n\
+                 [--threads N] [--time-limit S] [--verbose]\n\
                    sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
                  [--compare-serial]\n\
-                   bench <fig1|fig5|fig6|table1|table2|sweep|ablation-c|ablation-topo|all> \
-                 [--time-limit S] [--quick]\n\
+                   bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|\
+                 ablation-topo|all> [--time-limit S] [--quick]\n\
                    train [--steps N] [--budget-frac F]"
             );
             std::process::exit(2);

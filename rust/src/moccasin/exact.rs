@@ -6,7 +6,7 @@
 
 use super::model::StagedModel;
 use super::solution::RematSolution;
-use crate::cp::{Solver, Status};
+use crate::cp::{SearchStats, Solver, Status};
 use crate::graph::{Graph, NodeId};
 use crate::util::Deadline;
 
@@ -19,6 +19,9 @@ pub struct ExactResult {
     /// Best validated duration the exact search itself found
     /// (`u64::MAX` if everything was pruned or infeasible).
     pub best_duration: u64,
+    /// CP kernel statistics for the run (nodes, propagations, event
+    /// counters).
+    pub stats: SearchStats,
 }
 
 /// Run B&B on the full model. `on_solution` fires for each improving
@@ -56,6 +59,7 @@ pub fn solve_exact(
     ExactResult {
         proved_optimal: r.status == Status::Optimal || r.status == Status::Infeasible,
         best_duration,
+        stats: r.stats,
     }
 }
 

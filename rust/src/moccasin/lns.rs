@@ -14,7 +14,7 @@
 
 use super::model::{event_id, StagedModel};
 use super::solution::RematSolution;
-use crate::cp::Solver;
+use crate::cp::{SearchStats, Solver};
 use crate::graph::{Graph, NodeId};
 use crate::util::{Deadline, Rng};
 use std::time::Duration;
@@ -144,6 +144,7 @@ fn solve_window(
     j0: usize,
     j1: usize,
     deadline: Deadline,
+    stats: &mut SearchStats,
 ) -> Option<RematSolution> {
     let n = graph.n();
     let stage_of = stages_of_incumbent(graph, order, &incumbent.seq);
@@ -223,11 +224,13 @@ fn solve_window(
             incumbent.eval.duration
         );
     }
+    stats.merge(&r.stats);
     best.filter(|b| b.eval.duration < incumbent.eval.duration)
 }
 
 /// The anytime LNS loop: random stage windows, exact re-solve, accept
-/// improvements, until the deadline.
+/// improvements, until the deadline. CP kernel statistics of every
+/// window re-solve are accumulated into `stats`.
 #[allow(clippy::too_many_arguments)]
 pub fn lns_loop(
     graph: &Graph,
@@ -238,6 +241,7 @@ pub fn lns_loop(
     deadline: Deadline,
     rng: &mut Rng,
     mut incumbent: RematSolution,
+    stats: &mut SearchStats,
     mut on_improve: impl FnMut(&RematSolution),
 ) {
     let n = graph.n();
@@ -291,7 +295,7 @@ pub fn lns_loop(
         // the sub-deadline inherits the shared incumbent, so window
         // re-solves prune against (and are cancelled by) the portfolio
         let sub_deadline = deadline.sub(slice);
-        match solve_window(graph, order, budget, c, &incumbent, j0, j1, sub_deadline) {
+        match solve_window(graph, order, budget, c, &incumbent, j0, j1, sub_deadline, stats) {
             Some(better) => {
                 wins += 1;
                 incumbent = better;
@@ -379,6 +383,7 @@ mod tests {
         let polished = removal_polish(&g, &greedy, budget);
         let mut best = polished.clone();
         let mut rng = Rng::seed_from_u64(1);
+        let mut stats = SearchStats::default();
         lns_loop(
             &g,
             &order,
@@ -388,9 +393,11 @@ mod tests {
             Deadline::after(Duration::from_secs(4)),
             &mut rng,
             polished.clone(),
+            &mut stats,
             |s| best = s.clone(),
         );
         assert!(best.eval.duration <= polished.eval.duration);
         assert!(best.feasible(budget));
+        assert!(stats.propagations > 0, "window re-solves must report kernel stats");
     }
 }

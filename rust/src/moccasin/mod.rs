@@ -38,6 +38,7 @@ pub mod solution;
 pub use model::{IntervalVars, StagedModel};
 pub use solution::{intervals_from_sequence, RematSolution};
 
+use crate::cp::SearchStats;
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::util::{Deadline, Incumbent, Rng};
 use std::sync::Arc;
@@ -68,6 +69,9 @@ pub struct SolveOutcome {
     pub proved_optimal: bool,
     /// Time spent in Phase 1.
     pub phase1_time: Duration,
+    /// Aggregated CP kernel statistics across the exact solve and every
+    /// LNS window re-solve (nodes, propagations, event counters).
+    pub stats: SearchStats,
 }
 
 /// Configuration of the MOCCASIN solver (paper defaults: `C = 2`,
@@ -139,6 +143,7 @@ impl MoccasinSolver {
         let mut trace: Vec<ProgressPoint> = Vec::new();
         let mut best: Option<RematSolution> = None;
         let mut proved_optimal = false;
+        let mut stats = SearchStats::default();
 
         let mut record = |sol: &RematSolution,
                           trace: &mut Vec<ProgressPoint>,
@@ -196,8 +201,9 @@ impl MoccasinSolver {
                     |sol| record(sol, &mut trace, &mut best),
                 );
                 proved_optimal = ex.proved_optimal;
+                stats.merge(&ex.stats);
             }
-            return SolveOutcome { best, trace, proved_optimal, phase1_time };
+            return SolveOutcome { best, trace, proved_optimal, phase1_time, stats };
         };
         record(&p1, &mut trace, &mut best);
 
@@ -223,6 +229,7 @@ impl MoccasinSolver {
                 self.staged,
                 |sol| record(sol, &mut trace, &mut best),
             );
+            stats.merge(&ex.stats);
             let global = incumbent.best();
             proved_optimal = ex.proved_optimal
                 && best
@@ -246,11 +253,12 @@ impl MoccasinSolver {
                 deadline.clone(),
                 &mut rng,
                 best.clone().unwrap(),
+                &mut stats,
                 |sol| record(sol, &mut trace, &mut best),
             );
         }
 
-        SolveOutcome { best, trace, proved_optimal, phase1_time }
+        SolveOutcome { best, trace, proved_optimal, phase1_time, stats }
     }
 }
 

@@ -51,6 +51,10 @@ fn two_thread_portfolio_matches_serial_exact_optimum() {
     );
     assert!(race_sol.eval.peak_mem <= 10);
     assert!(race.proved_optimal, "the exact member's proof must surface");
+    // kernel statistics must aggregate across members (and the serial
+    // solve must report its own)
+    assert!(serial.stats.propagations > 0, "serial response missing kernel stats");
+    assert!(race.stats.propagations > 0, "portfolio response missing kernel stats");
 }
 
 #[test]
