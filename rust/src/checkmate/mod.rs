@@ -30,6 +30,7 @@ use crate::cp::{Model, Solver, VarId};
 use crate::graph::{Graph, NodeId};
 use crate::milp::{pdhg_solve, Csr};
 use crate::moccasin::RematSolution;
+use crate::presolve::{reduce_rows, Presolve};
 use crate::util::Deadline;
 
 /// Why a CHECKMATE attempt produced no result.
@@ -118,8 +119,7 @@ fn build(
     }
     let edges_pos: Vec<(usize, usize, u64)> = graph
         .edges()
-        .iter()
-        .map(|&(u, v)| (topo_index[u as usize], topo_index[v as usize], graph.mem[u as usize]))
+        .map(|(u, v)| (topo_index[u as usize], topo_index[v as usize], graph.mem[u as usize]))
         .collect();
 
     // var layout
@@ -301,16 +301,46 @@ pub struct CheckmateResult {
 
 /// Exact MILP via pseudo-Boolean branch & bound. `on_solution` receives
 /// every improving (validated) solution for anytime traces.
+///
+/// The constraint matrix passes through the logical presolve
+/// ([`reduce_rows`]) unless `pre` is disabled: the `R[t,t] = 1`
+/// diagonal rows become root fixings, substitution then erases or
+/// shrinks the dependency/free/memory rows they appear in, and further
+/// forced fixings cascade to a fixpoint. Everything there is exact for
+/// 0–1 programs, so optimality/infeasibility proofs survive; when the
+/// reduction itself proves infeasibility, no search runs at all.
 pub fn solve_milp(
     graph: &Graph,
     order: &[NodeId],
     budget: u64,
     deadline: Deadline,
+    pre: &Presolve,
     mut on_solution: impl FnMut(&RematSolution),
 ) -> Result<CheckmateResult, CheckmateError> {
-    let (layout, rows) = build(graph, order, budget, 400_000, 12_000_000)?;
+    let (layout, mut rows) = build(graph, order, budget, 400_000, 12_000_000)?;
+    let mut pre_stats = crate::presolve::PresolveStats::default();
+    let mut fixed: Vec<Option<i64>> = Vec::new();
+    if pre.enabled() {
+        pre_stats.props_before = rows.rows.len() as u64;
+        pre_stats.domain_before = 2 * rows.nvars as u64;
+        let red = reduce_rows(rows.nvars, &mut rows.rows);
+        pre_stats.props_after = red.rows_after;
+        pre_stats.vars_fixed = red.vars_fixed;
+        pre_stats.domain_after = 2 * rows.nvars as u64 - red.vars_fixed;
+        if red.infeasible {
+            let mut stats = crate::cp::SearchStats::default();
+            stats.presolve.add(&pre_stats);
+            return Err(CheckmateError::NoSolution { stats });
+        }
+        fixed = red.fixed;
+    }
     let mut model = Model::new();
     let vars: Vec<VarId> = (0..rows.nvars).map(|_| model.new_bool()).collect();
+    for (v, f) in fixed.iter().enumerate() {
+        if let Some(val) = f {
+            model.fix(vars[v], *val);
+        }
+    }
     for (row, rhs) in &rows.rows {
         model.linear_le(row.iter().map(|&(c, v)| (c, vars[v as usize])).collect(), *rhs);
     }
@@ -359,13 +389,15 @@ pub fn solve_milp(
             }
         }
     });
+    let mut stats = r.stats;
+    stats.presolve.add(&pre_stats);
     match best {
         Some(solution) => Ok(CheckmateResult {
             solution,
             proved_optimal: r.status == crate::cp::Status::Optimal,
-            stats: r.stats,
+            stats,
         }),
-        None => Err(CheckmateError::NoSolution { stats: r.stats }),
+        None => Err(CheckmateError::NoSolution { stats }),
     }
 }
 
@@ -479,8 +511,15 @@ mod tests {
     fn milp_loose_budget_no_remat() {
         let g = chain_graph();
         let order = topological_order(&g).unwrap();
-        let r = solve_milp(&g, &order, 100, Deadline::after(Duration::from_secs(20)), |_| {})
-            .unwrap();
+        let r = solve_milp(
+            &g,
+            &order,
+            100,
+            Deadline::after(Duration::from_secs(20)),
+            &Presolve::new(&g, Default::default()),
+            |_| {},
+        )
+        .unwrap();
         assert_eq!(r.solution.eval.duration, 5);
         assert!(r.proved_optimal);
     }
@@ -489,8 +528,15 @@ mod tests {
     fn milp_tight_budget_matches_moccasin_optimum() {
         let g = chain_graph();
         let order = topological_order(&g).unwrap();
-        let r = solve_milp(&g, &order, 10, Deadline::after(Duration::from_secs(30)), |_| {})
-            .unwrap();
+        let r = solve_milp(
+            &g,
+            &order,
+            10,
+            Deadline::after(Duration::from_secs(30)),
+            &Presolve::new(&g, Default::default()),
+            |_| {},
+        )
+        .unwrap();
         // optimum: one remat of node 0 → duration 6 (equivalence of
         // solutions, paper §1.2 "demonstrate equivalence")
         assert_eq!(r.solution.eval.duration, 6);
@@ -501,13 +547,57 @@ mod tests {
     fn milp_detects_infeasible() {
         let g = chain_graph();
         let order = topological_order(&g).unwrap();
-        let r = solve_milp(&g, &order, 9, Deadline::after(Duration::from_secs(10)), |_| {});
+        let r = solve_milp(
+            &g,
+            &order,
+            9,
+            Deadline::after(Duration::from_secs(10)),
+            &Presolve::new(&g, Default::default()),
+            |_| {},
+        );
         match r {
             Err(CheckmateError::NoSolution { stats }) => {
                 assert!(stats.propagations > 0, "failed attempt must report kernel work");
             }
             other => panic!("expected NoSolution, got {:?}", other.map(|x| x.proved_optimal)),
         }
+    }
+
+    #[test]
+    fn milp_presolve_reduces_rows_with_identical_optimum() {
+        let g = chain_graph();
+        let order = topological_order(&g).unwrap();
+        let on = solve_milp(
+            &g,
+            &order,
+            10,
+            Deadline::after(Duration::from_secs(30)),
+            &Presolve::new(&g, Default::default()),
+            |_| {},
+        )
+        .unwrap();
+        let off = solve_milp(
+            &g,
+            &order,
+            10,
+            Deadline::after(Duration::from_secs(30)),
+            &Presolve::off(),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(on.solution.eval.duration, off.solution.eval.duration);
+        assert!(on.proved_optimal && off.proved_optimal);
+        assert!(
+            on.stats.presolve.props_after < on.stats.presolve.props_before,
+            "row reduction must drop rows ({} -> {})",
+            on.stats.presolve.props_before,
+            on.stats.presolve.props_after
+        );
+        assert!(
+            on.stats.presolve.vars_fixed >= g.n() as u64,
+            "at least the R[t,t] diagonal must be fixed"
+        );
+        assert_eq!(off.stats.presolve.props_before, 0);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::checkmate::{self, CheckmateError};
 use crate::cp::SearchStats;
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::moccasin::{MoccasinSolver, RematSolution, SolveOutcome};
+use crate::presolve::{Presolve, PresolveConfig};
 use crate::util::Deadline;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -62,6 +63,10 @@ pub struct SolveRequest {
     pub backend: Backend,
     /// optional explicit input topological order
     pub order: Option<Vec<NodeId>>,
+    /// Root presolve configuration (default: the exactness-preserving
+    /// level). Part of the cache key — different reductions may yield
+    /// different anytime traces or (non-exact levels) different optima.
+    pub presolve: PresolveConfig,
 }
 
 impl Default for SolveRequest {
@@ -72,6 +77,7 @@ impl Default for SolveRequest {
             time_limit: Duration::from_secs(60),
             backend: Backend::Moccasin,
             order: None,
+            presolve: PresolveConfig::default(),
         }
     }
 }
@@ -96,8 +102,9 @@ pub struct SolveResponse {
     pub stats: SearchStats,
 }
 
-/// Cache key: (graph fingerprint, budget, C, backend discriminant).
-type CacheKey = (u64, u64, usize, u8);
+/// Cache key: (graph fingerprint, budget, C, backend discriminant,
+/// presolve level discriminant, interval-length cap).
+type CacheKey = (u64, u64, usize, u8, u8, i64);
 
 /// The coordinator: solver portfolio + solution cache + worker pool
 /// configuration for batched solves.
@@ -130,7 +137,16 @@ impl Coordinator {
     }
 
     fn cache_key(graph: &Graph, req: &SolveRequest) -> CacheKey {
-        (graph.fingerprint(), req.budget, req.c, req.backend as u8)
+        (
+            graph.fingerprint(),
+            req.budget,
+            req.c,
+            req.backend as u8,
+            req.presolve.level as u8,
+            // builders clamp negative caps to 0, so key them as 0 too —
+            // the -1 sentinel stays reserved for "no cap"
+            req.presolve.max_interval_len.map(|l| l.max(0)).unwrap_or(-1),
+        )
     }
 
     /// Solve (or fetch from cache).
@@ -238,6 +254,7 @@ impl Coordinator {
                 let solver = MoccasinSolver {
                     c: req.c,
                     time_limit: req.time_limit,
+                    presolve: req.presolve,
                     ..Default::default()
                 };
                 let out: SolveOutcome = solver.solve(graph, req.budget, Some(order));
@@ -257,6 +274,7 @@ impl Coordinator {
                     c: req.c,
                     seed: 0,
                     include_checkmate: true,
+                    presolve: req.presolve,
                 };
                 solve_portfolio(graph, req.budget, Some(order), &cfg)
             }
@@ -268,6 +286,9 @@ impl Coordinator {
                     &order,
                     req.budget,
                     deadline.clone(),
+                    // solve_milp's reduction is purely logical — skip
+                    // the reachability analysis on this path
+                    &Presolve::config_only(req.presolve),
                     |sol| {
                         trace.push((deadline.elapsed(), sol.eval.duration));
                     },

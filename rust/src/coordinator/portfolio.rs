@@ -29,6 +29,7 @@ use crate::checkmate;
 use crate::cp::SearchStats;
 use crate::graph::{random_topological_order, topological_order, Graph, NodeId};
 use crate::moccasin::{MoccasinSolver, RematSolution};
+use crate::presolve::{GraphAnalysis, Presolve, PresolveConfig, PresolveLevel};
 use crate::util::{Deadline, Incumbent, Rng};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -50,6 +51,11 @@ pub struct PortfolioConfig {
     /// automatically on graphs whose O(n²) model would trip the build
     /// guard anyway).
     pub include_checkmate: bool,
+    /// Root presolve configuration. The order-independent graph
+    /// analysis is computed *once* per request and shared across every
+    /// racing member (each member still derives its own order-dependent
+    /// staged caps, since members race on different topological orders).
+    pub presolve: PresolveConfig,
 }
 
 impl Default for PortfolioConfig {
@@ -60,6 +66,7 @@ impl Default for PortfolioConfig {
             c: 2,
             seed: 0,
             include_checkmate: true,
+            presolve: PresolveConfig::default(),
         }
     }
 }
@@ -151,16 +158,21 @@ pub fn solve_portfolio(
     };
     let checkmate_member =
         cfg.include_checkmate && threads >= 2 && checkmate_member_viable(graph);
+    // presolve once, share across members: the expensive reachability /
+    // transitive-reduction analysis is order-independent
+    let analysis: Option<Arc<GraphAnalysis>> = (cfg.presolve.level != PresolveLevel::Off)
+        .then(|| Arc::new(GraphAnalysis::analyze(graph)));
 
     std::thread::scope(|s| {
         for m in 0..threads {
             let shared = &shared;
             let base_order = &base_order;
+            let analysis = &analysis;
             s.spawn(move || {
                 if checkmate_member && m == threads - 1 {
-                    run_checkmate_member(graph, budget, base_order, cfg, shared);
+                    run_checkmate_member(graph, budget, base_order, cfg, analysis, shared);
                 } else {
-                    run_moccasin_member(graph, budget, base_order, cfg, shared, m);
+                    run_moccasin_member(graph, budget, base_order, cfg, analysis, shared, m);
                 }
             });
         }
@@ -196,6 +208,7 @@ fn run_moccasin_member(
     budget: u64,
     base_order: &[NodeId],
     cfg: &PortfolioConfig,
+    analysis: &Option<Arc<GraphAnalysis>>,
     shared: &Shared,
     member: usize,
 ) {
@@ -213,6 +226,8 @@ fn run_moccasin_member(
         seed: cfg.seed.wrapping_add(member as u64),
         window: 14 + 4 * (member % 3),
         incumbent: Some(Arc::clone(&shared.incumbent)),
+        presolve: cfg.presolve,
+        analysis: analysis.clone(),
         ..Default::default()
     };
     let out = solver.solve_with(graph, budget, Some(order), |sol| shared.publish(sol));
@@ -233,12 +248,17 @@ fn run_checkmate_member(
     budget: u64,
     order: &[NodeId],
     cfg: &PortfolioConfig,
+    analysis: &Option<Arc<GraphAnalysis>>,
     shared: &Shared,
 ) {
     let deadline =
         Deadline::with_incumbent(cfg.time_limit, Arc::clone(&shared.incumbent));
+    let pre = match analysis {
+        Some(a) => Presolve::with_shared(Arc::clone(a), cfg.presolve),
+        None => Presolve::off(),
+    };
     let result =
-        checkmate::solve_milp(graph, order, budget, deadline, |sol| shared.publish(sol));
+        checkmate::solve_milp(graph, order, budget, deadline, &pre, |sol| shared.publish(sol));
     match result {
         Ok(res) => {
             shared.stats.lock().unwrap().merge(&res.stats);

@@ -4,7 +4,12 @@
 //! The universe is either a contiguous integer range (stored as just a
 //! base — no materialization, so end-of-retention variables can range
 //! over all `n(n+1)/2` events for free) or an explicit strictly
-//! increasing value array (the staged start domains `{id(j,k) : j ≥ k}`).
+//! increasing value slice (the staged start domains `{id(j,k) : j ≥ k}`).
+//! Explicit universes are `(Arc<Vec<i64>>, offset)` windows, so the
+//! presolve layer can pack every start domain of a model into one flat
+//! arena and hand each variable a cache-friendly slice of it instead of
+//! a separately allocated `Vec` per variable (see
+//! `presolve`/`StagedModel::build_with`).
 //! All solver-time updates are bound tightenings, so the trail only
 //! needs `(var, lo, hi)` triples — O(1) undo, no allocation during
 //! search. (Interior removals never happen: search branches `x = min` /
@@ -51,8 +56,10 @@ pub struct DomainEvent {
 enum Repr {
     /// universe = { base, base+1, ... }
     Range { base: i64 },
-    /// universe = explicit sorted values
-    Explicit(Arc<Vec<i64>>),
+    /// universe = `vals[off .. off + len]`, a window of a (possibly
+    /// shared arena) sorted value array; `len` is implied by the
+    /// domain's initial `hi` bound
+    Explicit { vals: Arc<Vec<i64>>, off: u32 },
 }
 
 /// A finite integer domain.
@@ -69,7 +76,24 @@ impl Domain {
     pub fn new(values: Arc<Vec<i64>>) -> Self {
         assert!(!values.is_empty());
         let hi = values.len() as u32 - 1;
-        Domain { repr: Repr::Explicit(values), lo: 0, hi }
+        Domain { repr: Repr::Explicit { vals: values, off: 0 }, lo: 0, hi }
+    }
+
+    /// Domain over the sorted distinct values `arena[off .. off + len]`
+    /// — a window of a flat value arena shared (via `Arc`) by many
+    /// variables of one model, so building n variables costs one
+    /// allocation instead of n.
+    pub fn new_arena(arena: Arc<Vec<i64>>, off: usize, len: usize) -> Self {
+        assert!(len > 0 && off + len <= arena.len(), "arena window out of bounds");
+        debug_assert!(
+            arena[off..off + len].windows(2).all(|w| w[0] < w[1]),
+            "arena window must be sorted/unique"
+        );
+        Domain {
+            repr: Repr::Explicit { vals: arena, off: off as u32 },
+            lo: 0,
+            hi: len as u32 - 1,
+        }
     }
 
     /// Domain over the contiguous range `[lb, ub]`.
@@ -82,7 +106,7 @@ impl Domain {
     fn value_at(&self, idx: u32) -> i64 {
         match &self.repr {
             Repr::Range { base } => base + idx as i64,
-            Repr::Explicit(v) => v[idx as usize],
+            Repr::Explicit { vals, off } => vals[(off + idx) as usize],
         }
     }
 
@@ -117,8 +141,9 @@ impl Domain {
         }
         match &self.repr {
             Repr::Range { .. } => true,
-            Repr::Explicit(vals) => {
-                vals[self.lo as usize..=self.hi as usize].binary_search(&v).is_ok()
+            Repr::Explicit { vals, off } => {
+                let (lo, hi) = ((off + self.lo) as usize, (off + self.hi) as usize);
+                vals[lo..=hi].binary_search(&v).is_ok()
             }
         }
     }
@@ -136,10 +161,10 @@ impl Domain {
             Repr::Range { base } => {
                 self.lo = (v - base) as u32;
             }
-            Repr::Explicit(vals) => {
-                let s = &vals[self.lo as usize..=self.hi as usize];
-                let off = s.partition_point(|&x| x < v);
-                self.lo += off as u32;
+            Repr::Explicit { vals, off } => {
+                let s = &vals[(off + self.lo) as usize..=(off + self.hi) as usize];
+                let skip = s.partition_point(|&x| x < v);
+                self.lo += skip as u32;
             }
         }
         Ok(true)
@@ -158,10 +183,10 @@ impl Domain {
             Repr::Range { base } => {
                 self.hi = (v - base) as u32;
             }
-            Repr::Explicit(vals) => {
-                let s = &vals[self.lo as usize..=self.hi as usize];
-                let off = s.partition_point(|&x| x <= v);
-                self.hi = self.lo + off as u32 - 1;
+            Repr::Explicit { vals, off } => {
+                let s = &vals[(off + self.lo) as usize..=(off + self.hi) as usize];
+                let keep = s.partition_point(|&x| x <= v);
+                self.hi = self.lo + keep as u32 - 1;
             }
         }
         Ok(true)
@@ -261,5 +286,35 @@ mod tests {
     fn assign_outside_panics() {
         let mut d = dom(&[2, 5]);
         d.assign(3);
+    }
+
+    #[test]
+    fn arena_windows_are_independent() {
+        // two domains share one arena: [2,5,9 | 4,8,15,16]
+        let arena = Arc::new(vec![2, 5, 9, 4, 8, 15, 16]);
+        let mut a = Domain::new_arena(Arc::clone(&arena), 0, 3);
+        let mut b = Domain::new_arena(Arc::clone(&arena), 3, 4);
+        assert_eq!((a.min(), a.max(), a.size()), (2, 9, 3));
+        assert_eq!((b.min(), b.max(), b.size()), (4, 16, 4));
+        assert!(a.contains(5) && !a.contains(4));
+        assert!(b.contains(15) && !b.contains(5));
+        assert_eq!(a.remove_below(3), Ok(true));
+        assert_eq!(a.min(), 5);
+        assert_eq!(b.min(), 4, "windows must not interfere");
+        assert_eq!(b.remove_above(14), Ok(true));
+        assert_eq!(b.max(), 8);
+        let snap = b.bounds();
+        b.assign(8);
+        assert_eq!(b.value(), 8);
+        b.restore(snap);
+        assert_eq!((b.min(), b.max()), (4, 8));
+        assert_eq!(a.remove_below(10), Err(()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arena_window_out_of_bounds_panics() {
+        let arena = Arc::new(vec![1, 2, 3]);
+        let _ = Domain::new_arena(arena, 2, 2);
     }
 }

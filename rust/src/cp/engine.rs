@@ -516,8 +516,8 @@ fn debug_conflict(model: &Model, pid: u32, obj_pid: u32) {
             }
             Propagator::LeOffset { .. } => "LeOffset".into(),
             Propagator::Cumulative { .. } => "Cumulative".into(),
-            Propagator::Cover { active, start, .. } => {
-                format!("Cover(active={active:?},start={start:?})")
+            Propagator::Cover { targets, candidates } => {
+                format!("Cover({} targets, {} candidates)", targets.len(), candidates.len())
             }
             Propagator::AllDifferent { .. } => "AllDifferent".into(),
         }

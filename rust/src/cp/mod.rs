@@ -83,6 +83,16 @@ impl Model {
         id
     }
 
+    /// New variable over the sorted distinct values
+    /// `arena[off .. off + len]` — a window of a flat value arena shared
+    /// by many variables (see [`Domain::new_arena`]).
+    pub fn new_var_arena(&mut self, arena: &Arc<Vec<i64>>, off: usize, len: usize) -> VarId {
+        let id = VarId(self.domains.len() as u32);
+        self.domains.push(Domain::new_arena(Arc::clone(arena), off, len));
+        self.watches.push(Vec::new());
+        id
+    }
+
     /// New variable over the contiguous range `[lb, ub]`.
     pub fn new_var(&mut self, lb: i64, ub: i64) -> VarId {
         assert!(lb <= ub);
@@ -105,6 +115,13 @@ impl Model {
     /// Number of constraints.
     pub fn num_constraints(&self) -> usize {
         self.props.len()
+    }
+
+    /// Total size of all variable domains — the presolve layer's
+    /// `domain_shrink_pct` metric compares this between the raw and the
+    /// compacted model.
+    pub fn domain_size_sum(&self) -> u64 {
+        self.domains.iter().map(|d| d.size() as u64).sum()
     }
 
     /// Fix a variable at model-build time.
@@ -160,14 +177,28 @@ impl Model {
     /// Reservoir-style precedence (paper constraint (5), CP-SAT's
     /// `AddReservoirConstraintWithActive` specialisation): whenever
     /// `active` = 1, some candidate `(a_j, s_j, e_j)` must satisfy
-    /// `s_j + 1 ≤ start ≤ e_j` with `a_j = 1`.
+    /// `s_j + 1 ≤ start ≤ e_j` with `a_j = 1`. The candidate list is a
+    /// shared slice so covers of the same producer reuse one allocation.
     pub fn cover(
         &mut self,
         active: VarId,
         start: VarId,
-        candidates: Vec<(VarId, VarId, VarId)>,
+        candidates: Arc<[(VarId, VarId, VarId)]>,
     ) {
-        self.push_prop(Propagator::Cover { active, start, candidates });
+        self.cover_multi(Arc::from(vec![(active, start)]), candidates);
+    }
+
+    /// Multi-target cover: one propagator enforcing the
+    /// [`Model::cover`] condition for *every* `(active, start)` target
+    /// against one shared candidate list — the presolve compaction that
+    /// replaces the per-consumer-copy cover clones with a single
+    /// propagator per precedence edge.
+    pub fn cover_multi(
+        &mut self,
+        targets: Arc<[(VarId, VarId)]>,
+        candidates: Arc<[(VarId, VarId, VarId)]>,
+    ) {
+        self.push_prop(Propagator::Cover { targets, candidates });
     }
 
     /// All variables take pairwise distinct values (paper constraint (6);

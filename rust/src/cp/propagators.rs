@@ -8,6 +8,7 @@
 //! soundness unconditional.
 
 use super::domain::{event, Domain, DomainEvent, VarId};
+use std::sync::Arc;
 
 /// One optional interval contributing `demand` to a cumulative resource
 /// while active over `[start, end]` (inclusive, as in the paper: the
@@ -35,8 +36,14 @@ pub enum Propagator {
     LeOffset { b: Option<VarId>, x: VarId, c: i64, y: VarId },
     /// Renewable resource: Σ_{i active, start_i ≤ t ≤ end_i} demand_i ≤ cap ∀t.
     Cumulative { items: Vec<CumItem>, cap: i64 },
+    /// Per target `(active, start)`:
     /// active = 1 → ∃ (a, s, e) ∈ candidates: a = 1 ∧ s + 1 ≤ start ≤ e.
-    Cover { active: VarId, start: VarId, candidates: Vec<(VarId, VarId, VarId)> },
+    ///
+    /// Targets and candidates are shared slices (`Arc`): the model
+    /// builder emits one `Cover` per precedence edge covering *all*
+    /// consumer copies, and every cover of the same producer shares one
+    /// candidate array instead of cloning a `Vec` per copy.
+    Cover { targets: Arc<[(VarId, VarId)]>, candidates: Arc<[(VarId, VarId, VarId)]> },
     /// Pairwise distinct values.
     AllDifferent { vars: Vec<VarId> },
 }
@@ -165,9 +172,13 @@ impl Propagator {
                     ]
                 })
                 .collect(),
-            Propagator::Cover { active, start, candidates } => {
-                let mut w = vec![(*active, event::LB), (*start, event::LB | event::UB)];
-                for &(a, s, e) in candidates {
+            Propagator::Cover { targets, candidates } => {
+                let mut w = Vec::with_capacity(targets.len() * 2 + candidates.len() * 3);
+                for &(active, start) in targets.iter() {
+                    w.push((active, event::LB));
+                    w.push((start, event::LB | event::UB));
+                }
+                for &(a, s, e) in candidates.iter() {
                     w.extend([(a, event::UB), (s, event::LB), (e, event::UB)]);
                 }
                 w
@@ -201,8 +212,11 @@ impl Propagator {
                 ctx.set_max(*x, ctx.max(*y) - c)
             }
             Propagator::Cumulative { items, cap } => prop_cumulative(items, *cap, ctx),
-            Propagator::Cover { active, start, candidates } => {
-                prop_cover(*active, *start, candidates, ctx)
+            Propagator::Cover { targets, candidates } => {
+                for &(active, start) in targets.iter() {
+                    prop_cover(active, start, candidates, ctx)?;
+                }
+                Ok(())
             }
             Propagator::AllDifferent { vars } => prop_all_different(vars, ctx),
         }
@@ -234,14 +248,16 @@ impl Propagator {
                 }
                 true
             }
-            Propagator::Cover { active, start, candidates } => {
-                if val(*active) == 0 {
-                    return true;
-                }
-                let t = val(*start);
-                candidates
-                    .iter()
-                    .any(|&(a_, s, e)| val(a_) == 1 && val(s) + 1 <= t && t <= val(e))
+            Propagator::Cover { targets, candidates } => {
+                targets.iter().all(|&(active, start)| {
+                    if val(active) == 0 {
+                        return true;
+                    }
+                    let t = val(start);
+                    candidates
+                        .iter()
+                        .any(|&(a_, s, e)| val(a_) == 1 && val(s) + 1 <= t && t <= val(e))
+                })
             }
             Propagator::AllDifferent { vars } => {
                 let mut vals: Vec<i64> = vars.iter().map(|&v| val(v)).collect();
@@ -529,6 +545,14 @@ mod tests {
         p.propagate(&mut ctx)
     }
 
+    /// Single-target cover (the pre-compaction shape) for the tests.
+    fn cover1(active: VarId, start: VarId, candidates: Vec<(VarId, VarId, VarId)>) -> Propagator {
+        Propagator::Cover {
+            targets: Arc::from(vec![(active, start)]),
+            candidates: Arc::from(candidates),
+        }
+    }
+
     #[test]
     fn linear_le_filters_upper_bounds() {
         // 2x + 3y <= 10, x,y in [0,5] → x <= 5, y <= 3
@@ -627,11 +651,7 @@ mod tests {
     fn cover_conflict_when_no_candidate() {
         // target active, start=5; candidate interval ends at 3 → conflict
         let mut d = mk(&[(1, 1), (5, 5), (1, 1), (0, 0), (3, 3)]);
-        let p = Propagator::Cover {
-            active: VarId(0),
-            start: VarId(1),
-            candidates: vec![(VarId(2), VarId(3), VarId(4))],
-        };
+        let p = cover1(VarId(0), VarId(1), vec![(VarId(2), VarId(3), VarId(4))]);
         assert!(run(&p, &mut d).is_err());
     }
 
@@ -640,11 +660,7 @@ mod tests {
         // target start=5, candidate a in {0,1}, s=2, e in [2,9]
         // → a=1, e >= 5
         let mut d = mk(&[(1, 1), (5, 5), (0, 1), (2, 2), (2, 9)]);
-        let p = Propagator::Cover {
-            active: VarId(0),
-            start: VarId(1),
-            candidates: vec![(VarId(2), VarId(3), VarId(4))],
-        };
+        let p = cover1(VarId(0), VarId(1), vec![(VarId(2), VarId(3), VarId(4))]);
         run(&p, &mut d).map_err(|_| ()).unwrap();
         assert_eq!(d[2].min(), 1);
         assert_eq!(d[4].min(), 5);
@@ -653,11 +669,7 @@ mod tests {
     #[test]
     fn cover_inactive_target_is_vacuous() {
         let mut d = mk(&[(0, 0), (5, 5), (0, 1), (2, 2), (2, 3)]);
-        let p = Propagator::Cover {
-            active: VarId(0),
-            start: VarId(1),
-            candidates: vec![(VarId(2), VarId(3), VarId(4))],
-        };
+        let p = cover1(VarId(0), VarId(1), vec![(VarId(2), VarId(3), VarId(4))]);
         run(&p, &mut d).map_err(|_| ()).unwrap();
         assert_eq!(d[2].min(), 0); // untouched
     }
@@ -696,14 +708,27 @@ mod tests {
         assert!(cum.is_satisfied(&[1, 0, 1, 1, 2, 6]));
         // inactive ignored
         assert!(cum.is_satisfied(&[1, 0, 4, 0, 2, 6]));
-        let cov = Propagator::Cover {
-            active: VarId(0),
-            start: VarId(1),
-            candidates: vec![(VarId(2), VarId(3), VarId(4))],
-        };
+        let cov = cover1(VarId(0), VarId(1), vec![(VarId(2), VarId(3), VarId(4))]);
         assert!(cov.is_satisfied(&[1, 5, 1, 2, 7]));
         assert!(!cov.is_satisfied(&[1, 5, 1, 5, 7])); // s+1 <= t violated
         assert!(!cov.is_satisfied(&[1, 5, 0, 2, 7])); // candidate inactive
         assert!(cov.is_satisfied(&[0, 5, 0, 2, 7])); // target inactive
+    }
+
+    #[test]
+    fn multi_target_cover_filters_each_target() {
+        // two targets over one candidate (a fixed 1, s=2, e in [2,9]):
+        // both targets active with starts 5 and 7 → e >= 7
+        let mut d = mk(&[(1, 1), (5, 5), (1, 1), (7, 7), (1, 1), (2, 2), (2, 9)]);
+        let p = Propagator::Cover {
+            targets: Arc::from(vec![(VarId(0), VarId(1)), (VarId(2), VarId(3))]),
+            candidates: Arc::from(vec![(VarId(4), VarId(5), VarId(6))]),
+        };
+        run(&p, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[6].min(), 7);
+        // satisfaction: both targets must be covered
+        assert!(p.is_satisfied(&[1, 5, 1, 7, 1, 2, 9]));
+        assert!(!p.is_satisfied(&[1, 5, 1, 7, 1, 2, 6]), "second target uncovered");
+        assert!(p.is_satisfied(&[1, 5, 0, 7, 1, 2, 6]), "inactive target is vacuous");
     }
 }

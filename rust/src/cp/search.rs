@@ -54,6 +54,11 @@ pub struct SearchStats {
     /// Cumulative profile flattenings (each replaces what used to be a
     /// from-scratch rebuild per invocation).
     pub cum_rebuilds: u64,
+    /// Root-presolve counters folded in at model-build time (see
+    /// [`crate::presolve::PresolveStats`]), accumulated like every
+    /// other counter — an LNS run adds one contribution per window
+    /// re-solve.
+    pub presolve: crate::presolve::PresolveStats,
 }
 
 impl SearchStats {
@@ -68,6 +73,7 @@ impl SearchStats {
         self.wakeups_skipped += o.wakeups_skipped;
         self.cum_resyncs += o.cum_resyncs;
         self.cum_rebuilds += o.cum_rebuilds;
+        self.presolve.add(&o.presolve);
     }
 }
 

@@ -2,6 +2,7 @@
 
 use super::*;
 use crate::util::Deadline;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn all_vars(m: &Model) -> Vec<VarId> {
@@ -111,7 +112,7 @@ fn cover_requires_producer_interval() {
     let pa = m.new_bool();
     let ps = m.new_var(0, 0);
     let pe = m.new_var(0, 5);
-    m.cover(ca, ct, vec![(pa, ps, pe)]);
+    m.cover(ca, ct, Arc::from(vec![(pa, ps, pe)]));
     let s = Solver { first_solution: true, ..Default::default() };
     let r = s.solve(&m, &[], &all_vars(&m), |_, _| {});
     assert!(r.found());

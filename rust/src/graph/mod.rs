@@ -12,9 +12,11 @@
 //! Appendix-A.3 memory semantics (`eval`).
 
 mod eval;
+mod reach;
 mod topo;
 
 pub use eval::{eval_sequence, Evaluator, SeqEval, SeqError};
+pub use reach::{transitive_reduction, Reachability};
 pub use topo::{is_topological_with_remat, random_topological_order, topological_order};
 
 /// Node index inside a [`Graph`] (dense `0..n`).
@@ -83,15 +85,15 @@ impl Graph {
         self.succs.iter().map(|s| s.len()).sum()
     }
 
-    /// Edge list `(u, v)` in `u`-major order.
-    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
-        let mut out = Vec::with_capacity(self.m());
-        for (u, ss) in self.succs.iter().enumerate() {
-            for &v in ss {
-                out.push((u as NodeId, v));
-            }
-        }
-        out
+    /// Iterator over all edges `(u, v)` in `u`-major order. Allocation
+    /// free — callers that used to re-collect the edge list inside loops
+    /// now iterate the adjacency in place (collect explicitly if a
+    /// materialized list is really needed).
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        self.succs
+            .iter()
+            .enumerate()
+            .flat_map(|(u, ss)| ss.iter().map(move |&v| (u as NodeId, v)))
     }
 
     /// Sum of all node durations: the duration of any sequence without

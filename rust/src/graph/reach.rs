@@ -1,0 +1,184 @@
+//! Reachability and transitive reduction of the precedence DAG.
+//!
+//! The presolve layer needs two order-independent structural facts about
+//! a compute graph: which edges are *transitively redundant* (a path of
+//! other edges already implies the precedence), and how many
+//! ancestors/descendants each node has (liveness-derived bounds for the
+//! unstaged model). Both are computed from dense reachability bitsets in
+//! `O(m · n / 64)` time and `O(n² / 64)` memory — cheap up to a few
+//! thousand nodes, which covers every instance in the paper's grid.
+//!
+//! Note on semantics: a transitively redundant edge `(u, v)` is still a
+//! *real data dependency* under the Appendix-A.3 memory model — `v`
+//! reads `u`'s tensor, so `u` must be resident at `v`'s compute event
+//! even when another path `u → … → v` exists. Dropping its Cover
+//! constraint therefore *relaxes* the CP model (see
+//! `presolve::PresolveLevel::Aggressive`); the redundancy flags computed
+//! here are facts about the DAG, not a license to delete constraints.
+
+use super::{Graph, NodeId};
+
+/// Dense reachability bitsets: `bit(v, w)` = there is a directed path of
+/// length ≥ 1 from `v` to `w`.
+pub struct Reachability {
+    n: usize,
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl Reachability {
+    /// Descendant bitsets of `g`: `can_reach(v, w)` answers "is `w`
+    /// reachable from `v` via ≥ 1 edge".
+    pub fn descendants(g: &Graph) -> Reachability {
+        Self::build(g.n(), |v| &g.succs[v], &topo_order_indices(g))
+    }
+
+    /// Ancestor bitsets of `g`: `can_reach(v, w)` answers "is `w` an
+    /// ancestor of `v`" (reachability over reversed edges).
+    pub fn ancestors(g: &Graph) -> Reachability {
+        let mut rev = topo_order_indices(g);
+        rev.reverse();
+        Self::build(g.n(), |v| &g.preds[v], &rev)
+    }
+
+    /// Rows are assembled iterating `order` *in reverse*, so `order`
+    /// must place every node before all of its `adj`-neighbours
+    /// (topological for successors, reverse-topological for
+    /// predecessors) — then each neighbour's row is complete when it is
+    /// OR-ed into `v`'s.
+    fn build<'g>(
+        n: usize,
+        adj: impl Fn(usize) -> &'g Vec<NodeId>,
+        order: &[NodeId],
+    ) -> Reachability {
+        let words = n.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        // iterate so neighbours' rows are complete before v's row is
+        // assembled: reverse of `order`
+        for &v in order.iter().rev() {
+            let v = v as usize;
+            for &w in adj(v) {
+                let w = w as usize;
+                // set bit w, then OR in w's row
+                bits[v * words + w / 64] |= 1u64 << (w % 64);
+                for k in 0..words {
+                    let ww = bits[w * words + k];
+                    bits[v * words + k] |= ww;
+                }
+            }
+        }
+        Reachability { n, words, bits }
+    }
+
+    /// Is `to` reachable from `from` via a path of length ≥ 1?
+    #[inline]
+    pub fn can_reach(&self, from: NodeId, to: NodeId) -> bool {
+        let (f, t) = (from as usize, to as usize);
+        debug_assert!(f < self.n && t < self.n);
+        self.bits[f * self.words + t / 64] & (1u64 << (t % 64)) != 0
+    }
+
+    /// Number of nodes reachable from `v` (excluding `v` itself unless
+    /// the graph has a cycle, which [`Graph`] construction forbids).
+    pub fn count(&self, v: NodeId) -> u32 {
+        let v = v as usize;
+        self.bits[v * self.words..(v + 1) * self.words]
+            .iter()
+            .map(|w| w.count_ones())
+            .sum()
+    }
+}
+
+/// Deterministic topological order as node ids (panics on cycles, which
+/// `Graph` construction already rejects).
+fn topo_order_indices(g: &Graph) -> Vec<NodeId> {
+    super::topo::topological_order(g).expect("Graph invariant: acyclic")
+}
+
+/// Transitive redundancy flags, parallel to `g.succs`: the edge
+/// `(u, g.succs[u][i])` is redundant iff `redundant[u][i]` — some other
+/// path `u → w → … → v` already implies the precedence.
+///
+/// Uses the descendant bitsets: `(u, v)` is redundant iff some *other*
+/// successor `w` of `u` reaches `v`.
+pub fn transitive_reduction(g: &Graph) -> Vec<Vec<bool>> {
+    let reach = Reachability::descendants(g);
+    let mut redundant: Vec<Vec<bool>> = Vec::with_capacity(g.n());
+    for u in 0..g.n() {
+        let ss = &g.succs[u];
+        let flags = ss
+            .iter()
+            .map(|&v| ss.iter().any(|&w| w != v && reach.can_reach(w, v)))
+            .collect();
+        redundant.push(flags);
+    }
+    redundant
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Diamond plus a shortcut edge 0→3 (redundant: 0→1→3 exists).
+    fn diamond_shortcut() -> Graph {
+        Graph::from_edges(
+            "ds",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3), (0, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn reachability_descendants_and_ancestors() {
+        let g = diamond_shortcut();
+        let d = Reachability::descendants(&g);
+        assert!(d.can_reach(0, 3));
+        assert!(d.can_reach(0, 1));
+        assert!(!d.can_reach(1, 2));
+        assert!(!d.can_reach(3, 0));
+        assert_eq!(d.count(0), 3);
+        assert_eq!(d.count(3), 0);
+        let a = Reachability::ancestors(&g);
+        assert!(a.can_reach(3, 0));
+        assert!(!a.can_reach(0, 3));
+        assert_eq!(a.count(3), 3);
+        assert_eq!(a.count(0), 0);
+    }
+
+    #[test]
+    fn transitive_reduction_flags_shortcut_only() {
+        let g = diamond_shortcut();
+        let red = transitive_reduction(&g);
+        // succs[0] = [1, 2, 3] (sorted): only (0,3) is redundant
+        assert_eq!(red[0], vec![false, false, true]);
+        assert_eq!(red[1], vec![false]);
+        assert_eq!(red[2], vec![false]);
+        assert!(red[3].is_empty());
+    }
+
+    #[test]
+    fn chain_has_no_redundancy() {
+        let g = Graph::from_edges("c", 3, &[(0, 1), (1, 2)], vec![1; 3], vec![1; 3]).unwrap();
+        let red = transitive_reduction(&g);
+        assert!(red.iter().flatten().all(|&r| !r));
+    }
+
+    #[test]
+    fn long_shortcut_is_redundant() {
+        // 0→1→2→3 with 0→2 and 0→3: both shortcuts redundant
+        let g = Graph::from_edges(
+            "ls",
+            4,
+            &[(0, 1), (1, 2), (2, 3), (0, 2), (0, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap();
+        let red = transitive_reduction(&g);
+        // succs[0] = [1, 2, 3]
+        assert_eq!(red[0], vec![false, true, true]);
+    }
+}

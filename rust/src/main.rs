@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--portfolio]
-//!           [--threads N] [--time-limit S] [--verbose]
+//!           [--threads N] [--time-limit S] [--presolve off|exact|aggressive]
+//!           [--max-interval-len L] [--verbose]
 //!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
 //!           [--time-limit S] [--compare-serial]
 //!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|ablation-topo|all>
@@ -17,6 +18,7 @@ use moccasin::coordinator::{Backend, Coordinator, SolveRequest};
 use moccasin::executor::{train_with_remat, TrainConfig};
 use moccasin::generators::{paper_graph, random_layered};
 use moccasin::graph::{topological_order, Graph};
+use moccasin::presolve::{PresolveConfig, PresolveLevel};
 use moccasin::util::fmt_u64;
 use std::time::{Duration, Instant};
 
@@ -53,6 +55,27 @@ fn main() {
     let quick = args.iter().any(|a| a == "--quick");
     let threads: usize =
         flag_val(&args, "--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let presolve = PresolveConfig {
+        level: match flag_val(&args, "--presolve").as_deref() {
+            Some("off") => PresolveLevel::Off,
+            Some("aggressive") => PresolveLevel::Aggressive,
+            Some("exact") | None => PresolveLevel::Exact,
+            Some(other) => {
+                eprintln!("unknown presolve level {other} (use off|exact|aggressive)");
+                std::process::exit(2);
+            }
+        },
+        max_interval_len: match flag_val(&args, "--max-interval-len") {
+            None => None,
+            Some(s) => match s.parse::<i64>() {
+                Ok(l) if l >= 0 => Some(l),
+                _ => {
+                    eprintln!("invalid --max-interval-len {s} (use a nonnegative integer)");
+                    std::process::exit(2);
+                }
+            },
+        },
+    };
 
     match args.first().map(|s| s.as_str()) {
         Some("solve") => {
@@ -80,7 +103,7 @@ fn main() {
             coord.threads = threads;
             let resp = coord.solve(
                 &g,
-                &SolveRequest { budget, time_limit, backend, ..Default::default() },
+                &SolveRequest { budget, time_limit, backend, presolve, ..Default::default() },
             );
             match resp.solution {
                 Some(sol) => println!(
@@ -103,6 +126,26 @@ fn main() {
                     "engine: events={} wakeups-skipped={} cum-resyncs={} cum-rebuilds={}",
                     st.events_posted, st.wakeups_skipped, st.cum_resyncs, st.cum_rebuilds
                 );
+                let ps = st.presolve;
+                if ps.props_before > 0 {
+                    println!(
+                        "presolve: propagators {} -> {} ({:.1}% fewer), domains {} -> {} \
+                         ({:.1}% smaller), copies-deactivated={} vars-fixed={} \
+                         redundant-edges={} covers-dropped={}",
+                        ps.props_before,
+                        ps.props_after,
+                        ps.props_reduction_pct(),
+                        ps.domain_before,
+                        ps.domain_after,
+                        ps.domain_shrink_pct(),
+                        ps.copies_deactivated,
+                        ps.vars_fixed,
+                        ps.edges_redundant,
+                        ps.edges_removed
+                    );
+                } else {
+                    println!("presolve: off");
+                }
             }
         }
         Some("sweep") => {
@@ -131,6 +174,7 @@ fn main() {
                         SolveRequest {
                             budget: (peak as f64 * f) as u64,
                             time_limit,
+                            presolve,
                             ..Default::default()
                         },
                     )
@@ -234,7 +278,8 @@ fn main() {
                 "usage: moccasin <solve|sweep|bench|train> [options]\n\
                    solve --graph <G1..G4|RW1..RW4|CM1|CM2|rl:n:m:seed> [--budget-frac F] \
                  [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
-                 [--threads N] [--time-limit S] [--verbose]\n\
+                 [--threads N] [--time-limit S] [--presolve off|exact|aggressive] \
+                 [--max-interval-len L] [--verbose]\n\
                    sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
                  [--compare-serial]\n\
                    bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|\

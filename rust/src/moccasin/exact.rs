@@ -8,6 +8,7 @@ use super::model::StagedModel;
 use super::solution::RematSolution;
 use crate::cp::{SearchStats, Solver, Status};
 use crate::graph::{Graph, NodeId};
+use crate::presolve::Presolve;
 use crate::util::Deadline;
 
 /// Result of an exact solve.
@@ -24,8 +25,12 @@ pub struct ExactResult {
     pub stats: SearchStats,
 }
 
-/// Run B&B on the full model. `on_solution` fires for each improving
-/// extracted solution (already validated).
+/// Run B&B on the full model, built through the root presolve.
+/// `on_solution` fires for each improving extracted solution (already
+/// validated). With a non-exactness-preserving presolve (aggressive
+/// level or an interval-length cap), exhausting the search space does
+/// not prove anything about the original problem, so
+/// [`ExactResult::proved_optimal`] stays false.
 pub fn solve_exact(
     graph: &Graph,
     order: &[NodeId],
@@ -33,13 +38,14 @@ pub fn solve_exact(
     c: usize,
     deadline: Deadline,
     staged: bool,
+    pre: &Presolve,
     mut on_solution: impl FnMut(&RematSolution),
 ) -> ExactResult {
     let c_v = vec![c; graph.n()];
     let sm = if staged {
-        StagedModel::build(graph, order, budget, &c_v)
+        StagedModel::build_with(graph, order, budget, &c_v, pre, None)
     } else {
-        StagedModel::build_unstaged(graph, order, budget, &c_v)
+        StagedModel::build_unstaged_with(graph, order, budget, &c_v, pre)
     };
     let (bo, guards) = sm.branch_order();
     // full model: prune against the best duration found by any
@@ -56,10 +62,13 @@ pub fn solve_exact(
             }
         }
     });
+    let mut stats = r.stats;
+    stats.presolve.add(&sm.presolve);
     ExactResult {
-        proved_optimal: r.status == Status::Optimal || r.status == Status::Infeasible,
+        proved_optimal: (r.status == Status::Optimal || r.status == Status::Infeasible)
+            && pre.exactness_preserving(),
         best_duration,
-        stats: r.stats,
+        stats,
     }
 }
 
@@ -88,6 +97,7 @@ mod tests {
             2,
             Deadline::after(Duration::from_secs(10)),
             true,
+            &Presolve::new(&g, Default::default()),
             |s| best = Some(s.clone()),
         );
         assert!(r.proved_optimal);
@@ -107,6 +117,7 @@ mod tests {
             2,
             Deadline::after(Duration::from_secs(5)),
             true,
+            &Presolve::new(&g, Default::default()),
             |_| {},
         );
         assert!(r.proved_optimal); // proved infeasible

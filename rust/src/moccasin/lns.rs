@@ -16,6 +16,7 @@ use super::model::{event_id, StagedModel};
 use super::solution::RematSolution;
 use crate::cp::{SearchStats, Solver};
 use crate::graph::{Graph, NodeId};
+use crate::presolve::Presolve;
 use crate::util::{Deadline, Rng};
 use std::time::Duration;
 
@@ -26,8 +27,12 @@ pub fn removal_polish(graph: &Graph, sol: &RematSolution, budget: u64) -> RematS
     let mut seq = sol.seq.clone();
     let mut best = sol.clone();
     let mut evaluator = crate::graph::Evaluator::new(graph);
+    // one scratch sequence reused across every candidate removal —
+    // the repair loop used to clone `seq` per candidate
+    let mut scratch: Vec<NodeId> = Vec::with_capacity(seq.len());
+    let mut counts = vec![0u32; graph.n()];
     loop {
-        let mut counts = vec![0u32; graph.n()];
+        counts.iter_mut().for_each(|c| *c = 0);
         for &v in &seq {
             counts[v as usize] += 1;
         }
@@ -41,12 +46,13 @@ pub fn removal_polish(graph: &Graph, sol: &RematSolution, budget: u64) -> RematS
             if counts[seq[p] as usize] <= 1 {
                 continue;
             }
-            let mut t = seq.clone();
-            t.remove(p);
-            if let Ok(ev) = evaluator.eval(&t) {
+            scratch.clear();
+            scratch.extend_from_slice(&seq[..p]);
+            scratch.extend_from_slice(&seq[p + 1..]);
+            if let Ok(ev) = evaluator.eval(&scratch) {
                 if ev.peak_mem <= budget {
                     counts[seq[p] as usize] -= 1;
-                    seq = t;
+                    std::mem::swap(&mut seq, &mut scratch);
                     best = RematSolution { seq: seq.clone(), eval: ev };
                     improved = true;
                     // positions shifted; restart the scan
@@ -144,6 +150,7 @@ fn solve_window(
     j0: usize,
     j1: usize,
     deadline: Deadline,
+    pre: &Presolve,
     stats: &mut SearchStats,
 ) -> Option<RematSolution> {
     let n = graph.n();
@@ -156,7 +163,11 @@ fn solve_window(
     // reports no improvement, which is safe). Relaxing the cap instead
     // pollutes the B&B bound with eval-infeasible solutions — measured
     // strictly worse. Kept exact.
-    let mut sm = StagedModel::build(graph, order, budget, &c_v);
+    //
+    // The presolved build runs here too (this is the hot model-build
+    // path); `stage_of` rides along as `keep_stages` so dominance can
+    // never prune a copy the frozen incumbent occupies.
+    let mut sm = StagedModel::build_with(graph, order, budget, &c_v, pre, Some(&stage_of));
 
     // Freeze: copy 0 is structurally fixed. For copies >= 1:
     // - if the incumbent uses this copy at a stage outside the window →
@@ -166,11 +177,11 @@ fn solve_window(
     //   add remats) but restrict to the window.
     for v in 0..n {
         let k = sm.topo_index[v];
-        for (ci, &idx) in sm.by_node[v].clone().iter().enumerate() {
+        for ci in 0..sm.by_node[v].len() {
             if ci == 0 {
                 continue;
             }
-            let iv = sm.intervals[idx];
+            let iv = sm.intervals[sm.by_node[v][ci]];
             match stage_of[v].get(ci) {
                 Some(&j) if j < j0 || j >= j1 => {
                     sm.model.fix(iv.active, 1);
@@ -225,6 +236,7 @@ fn solve_window(
         );
     }
     stats.merge(&r.stats);
+    stats.presolve.add(&sm.presolve);
     best.filter(|b| b.eval.duration < incumbent.eval.duration)
 }
 
@@ -240,6 +252,7 @@ pub fn lns_loop(
     window: usize,
     deadline: Deadline,
     rng: &mut Rng,
+    pre: &Presolve,
     mut incumbent: RematSolution,
     stats: &mut SearchStats,
     mut on_improve: impl FnMut(&RematSolution),
@@ -280,7 +293,7 @@ pub fn lns_loop(
                 .seq
                 .iter()
                 .take(incumbent.eval.peak_pos + 1)
-                .map(|&v| v)
+                .copied()
                 .collect::<std::collections::HashSet<_>>()
                 .len();
             stage.saturating_sub(w / 2).max(2)
@@ -295,7 +308,8 @@ pub fn lns_loop(
         // the sub-deadline inherits the shared incumbent, so window
         // re-solves prune against (and are cancelled by) the portfolio
         let sub_deadline = deadline.sub(slice);
-        match solve_window(graph, order, budget, c, &incumbent, j0, j1, sub_deadline, stats) {
+        match solve_window(graph, order, budget, c, &incumbent, j0, j1, sub_deadline, pre, stats)
+        {
             Some(better) => {
                 wins += 1;
                 incumbent = better;
@@ -392,6 +406,7 @@ mod tests {
             10,
             Deadline::after(Duration::from_secs(4)),
             &mut rng,
+            &Presolve::new(&g, Default::default()),
             polished.clone(),
             &mut stats,
             |s| best = s.clone(),

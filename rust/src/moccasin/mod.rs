@@ -40,6 +40,7 @@ pub use solution::{intervals_from_sequence, RematSolution};
 
 use crate::cp::SearchStats;
 use crate::graph::{topological_order, Graph, NodeId};
+use crate::presolve::{GraphAnalysis, Presolve, PresolveConfig};
 use crate::util::{Deadline, Incumbent, Rng};
 use std::sync::Arc;
 use std::time::Duration;
@@ -99,6 +100,14 @@ pub struct MoccasinSolver {
     /// private incumbent, which still lets the exact phase prune against
     /// the Phase-1 warm start.
     pub incumbent: Option<Arc<Incumbent>>,
+    /// Root presolve configuration applied to every CP model built
+    /// during the solve (exact B&B and every LNS window re-solve).
+    /// Default: the exactness-preserving level.
+    pub presolve: PresolveConfig,
+    /// Optional pre-computed graph analysis: the portfolio computes it
+    /// once per request and shares it across racing members; `None`
+    /// analyzes lazily per solve.
+    pub analysis: Option<Arc<GraphAnalysis>>,
 }
 
 impl Default for MoccasinSolver {
@@ -111,6 +120,8 @@ impl Default for MoccasinSolver {
             window: 14,
             seed: 0,
             incumbent: None,
+            presolve: PresolveConfig::default(),
+            analysis: None,
         }
     }
 }
@@ -138,6 +149,14 @@ impl MoccasinSolver {
         let incumbent =
             self.incumbent.clone().unwrap_or_else(|| Arc::new(Incumbent::new()));
         let deadline = Deadline::with_incumbent(self.time_limit, Arc::clone(&incumbent));
+        // Root presolve context: the order-independent analysis is
+        // shared (portfolio) or computed once here; the order-dependent
+        // part runs inside each model build.
+        let pre = match (&self.analysis, self.presolve.level) {
+            (_, crate::presolve::PresolveLevel::Off) => Presolve::off(),
+            (Some(a), _) => Presolve::with_shared(Arc::clone(a), self.presolve),
+            (None, _) => Presolve::new(graph, self.presolve),
+        };
         let order =
             order.unwrap_or_else(|| topological_order(graph).expect("graph must be a DAG"));
         let mut trace: Vec<ProgressPoint> = Vec::new();
@@ -198,6 +217,7 @@ impl MoccasinSolver {
                     self.c,
                     deadline.clone(),
                     self.staged,
+                    &pre,
                     |sol| record(sol, &mut trace, &mut best),
                 );
                 proved_optimal = ex.proved_optimal;
@@ -227,6 +247,7 @@ impl MoccasinSolver {
                 self.c,
                 deadline.clone(),
                 self.staged,
+                &pre,
                 |sol| record(sol, &mut trace, &mut best),
             );
             stats.merge(&ex.stats);
@@ -252,6 +273,7 @@ impl MoccasinSolver {
                 self.window,
                 deadline.clone(),
                 &mut rng,
+                &pre,
                 best.clone().unwrap(),
                 &mut stats,
                 |sol| record(sol, &mut trace, &mut best),
@@ -292,6 +314,40 @@ mod tests {
         // optimal: exactly one remat (duration 6), proved by exact B&B
         assert_eq!(best.eval.duration, 6);
         assert!(out.proved_optimal);
+    }
+
+    #[test]
+    fn presolve_counters_reach_solver_stats() {
+        let g = tiny_graph();
+        let out = MoccasinSolver::default().solve(&g, 10, None);
+        let ps = out.stats.presolve;
+        assert!(ps.props_before > 0, "presolve must report raw counts");
+        assert!(
+            ps.props_after < ps.props_before,
+            "compaction must construct fewer propagators ({} -> {})",
+            ps.props_before,
+            ps.props_after
+        );
+        assert!(
+            ps.domain_after < ps.domain_before,
+            "tightening must shrink summed domain size ({} -> {})",
+            ps.domain_before,
+            ps.domain_after
+        );
+    }
+
+    #[test]
+    fn presolve_off_matches_default_optimum() {
+        let g = tiny_graph();
+        let on = MoccasinSolver::default().solve(&g, 10, None);
+        let off = MoccasinSolver { presolve: PresolveConfig::off(), ..Default::default() }
+            .solve(&g, 10, None);
+        assert_eq!(
+            on.best.as_ref().unwrap().eval.duration,
+            off.best.as_ref().unwrap().eval.duration
+        );
+        assert!(on.proved_optimal && off.proved_optimal);
+        assert_eq!(off.stats.presolve.props_before, 0, "disabled presolve reports nothing");
     }
 
     #[test]

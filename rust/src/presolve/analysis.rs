@@ -1,0 +1,219 @@
+//! Graph analysis backing the presolve reductions.
+//!
+//! Split in two because the costs differ:
+//!
+//! * [`GraphAnalysis`] — order-independent facts (transitive-reduction
+//!   flags, ancestor/descendant counts) from dense reachability
+//!   bitsets. `O(m · n / 64)` — computed once per graph and shared via
+//!   `Arc` across portfolio members and LNS window re-solves.
+//! * [`staged_caps`] — order-*dependent* liveness bounds over the
+//!   staged event grid (§2.3): one reverse sweep over the input
+//!   topological order, `O(n + m)` — recomputed per model build (LNS
+//!   windows vary the per-node copy counts).
+
+use crate::graph::{transitive_reduction, Graph, NodeId, Reachability};
+use crate::moccasin::model::event_id;
+
+/// Node-count guard for the dense reachability bitsets: above this the
+/// quadratic bitset analysis is skipped and only the O(n + m)
+/// reductions (structural elimination, cover compaction, staged caps)
+/// apply.
+pub const DENSE_ANALYSIS_LIMIT: usize = 4096;
+
+/// Order-independent structural analysis of a compute graph.
+#[derive(Debug, Default)]
+pub struct GraphAnalysis {
+    /// Redundancy flags parallel to `graph.succs` (empty when the graph
+    /// exceeded [`DENSE_ANALYSIS_LIMIT`]).
+    redundant: Vec<Vec<bool>>,
+    /// Number of transitively redundant edges.
+    pub edges_redundant: u64,
+    /// Per node: number of descendants (0 when analysis was skipped).
+    pub desc_count: Vec<u32>,
+    /// Per node: number of ancestors (0 when analysis was skipped).
+    pub anc_count: Vec<u32>,
+}
+
+impl GraphAnalysis {
+    /// Run the full analysis (or the cheap fallback above the size
+    /// guard).
+    pub fn analyze(g: &Graph) -> GraphAnalysis {
+        let n = g.n();
+        if n > DENSE_ANALYSIS_LIMIT {
+            return GraphAnalysis {
+                redundant: Vec::new(),
+                edges_redundant: 0,
+                desc_count: vec![0; n],
+                anc_count: vec![0; n],
+            };
+        }
+        let redundant = transitive_reduction(g);
+        let edges_redundant =
+            redundant.iter().flatten().filter(|&&r| r).count() as u64;
+        let desc = Reachability::descendants(g);
+        let anc = Reachability::ancestors(g);
+        GraphAnalysis {
+            redundant,
+            edges_redundant,
+            desc_count: (0..n).map(|v| desc.count(v as NodeId)).collect(),
+            anc_count: (0..n).map(|v| anc.count(v as NodeId)).collect(),
+        }
+    }
+
+    /// Is the edge `(u, v)` transitively redundant? (`false` when the
+    /// analysis was skipped or the edge does not exist.)
+    pub fn edge_redundant(&self, g: &Graph, u: NodeId, v: NodeId) -> bool {
+        let Some(flags) = self.redundant.get(u as usize) else {
+            return false;
+        };
+        match g.succs[u as usize].binary_search(&v) {
+            Ok(i) => flags[i],
+            Err(_) => false,
+        }
+    }
+}
+
+/// Order-dependent liveness bounds over the staged event grid.
+#[derive(Debug)]
+pub struct StagedCaps {
+    /// Per node `v`: the latest event at which any consumer copy can
+    /// still start — the exact upper bound on every retention-interval
+    /// end `e_v` (covers only require `e ≥` covered consumer starts).
+    /// `0` for sinks (no uses at all).
+    pub latest_use: Vec<i64>,
+    /// Per node `v` (topo index `k`): the largest stage `j` at which a
+    /// recompute copy of `v` can still cover some use
+    /// (`event_id(j, k) < latest_use[v]`). `k` when no recompute can
+    /// ever pay (dominance: such copies are not built).
+    pub max_stage: Vec<usize>,
+}
+
+/// One reverse sweep over the input order computing [`StagedCaps`].
+///
+/// Processing nodes in decreasing topological index, every consumer's
+/// own cap is already known, so the bound cascades: a consumer whose
+/// recompute copies were capped (or deactivated) tightens its
+/// producers' caps in turn. `c_v` is the per-node copy allowance the
+/// model will be built with (recompute copies exist only when
+/// `c_v[v] ≥ 2`).
+pub fn staged_caps(g: &Graph, order: &[NodeId], c_v: &[usize]) -> StagedCaps {
+    let n = g.n();
+    debug_assert_eq!(order.len(), n);
+    let mut latest_use = vec![0i64; n];
+    let mut max_stage = vec![0usize; n];
+    // latest possible start event of any active copy, per node
+    let mut latest_start = vec![0i64; n];
+    for idx in (1..=n).rev() {
+        let v = order[idx - 1] as usize;
+        let k = idx;
+        let lu = g.succs[v]
+            .iter()
+            .map(|&w| latest_start[w as usize])
+            .max()
+            .unwrap_or(0);
+        debug_assert!(
+            g.succs[v].is_empty() || lu > event_id(k, k),
+            "consumers sit at higher topological indices"
+        );
+        latest_use[v] = lu;
+        // largest stage j ∈ [k+1, n] with event_id(j, k) < lu (monotone
+        // in j → binary search); k when none qualifies
+        let mut j_cap = k;
+        if lu > 0 && k + 1 <= n && event_id(k + 1, k) < lu {
+            let (mut lo, mut hi) = (k + 1, n);
+            while lo < hi {
+                let mid = (lo + hi + 1) / 2;
+                if event_id(mid, k) < lu {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
+            }
+            j_cap = lo;
+        }
+        max_stage[v] = j_cap;
+        latest_start[v] = if c_v[v].max(1) >= 2 && j_cap > k {
+            event_id(j_cap, k)
+        } else {
+            event_id(k, k)
+        };
+    }
+    StagedCaps { latest_use, max_stage }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topological_order;
+
+    #[test]
+    fn analysis_counts_redundancy_and_reach() {
+        // 0→1→2→3 with shortcut 0→3
+        let g = Graph::from_edges(
+            "c",
+            4,
+            &[(0, 1), (1, 2), (2, 3), (0, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap();
+        let a = GraphAnalysis::analyze(&g);
+        assert_eq!(a.edges_redundant, 1);
+        assert!(a.edge_redundant(&g, 0, 3));
+        assert!(!a.edge_redundant(&g, 0, 1));
+        assert!(!a.edge_redundant(&g, 2, 3));
+        assert!(!a.edge_redundant(&g, 1, 0), "non-edges are never redundant");
+        assert_eq!(a.desc_count, vec![3, 2, 1, 0]);
+        assert_eq!(a.anc_count, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn caps_pin_sinks_and_cascade() {
+        // chain 0→1→2 (order [0,1,2]; k = 1,2,3; C = 2)
+        let g =
+            Graph::from_edges("ch", 3, &[(0, 1), (1, 2)], vec![1; 3], vec![1; 3]).unwrap();
+        let order = topological_order(&g).unwrap();
+        let caps = staged_caps(&g, &order, &[2, 2, 2]);
+        // node 2 (k=3) is a sink: no uses, no recompute stage
+        assert_eq!(caps.latest_use[2], 0);
+        assert_eq!(caps.max_stage[2], 3);
+        // node 1 (k=2): sole consumer is node 2, whose only start is
+        // event id(3,3) = 6 → latest_use = 6; recompute of node 1 can
+        // start at stage 3 (event id(3,2) = 5 < 6)
+        assert_eq!(caps.latest_use[1], 6);
+        assert_eq!(caps.max_stage[1], 3);
+        // node 0 (k=1): consumer node 1 can start as late as id(3,2)=5
+        // → latest_use = 5; recompute of 0 allowed at stages 2..3
+        // (id(2,1)=2, id(3,1)=4, both < 5)
+        assert_eq!(caps.latest_use[0], 5);
+        assert_eq!(caps.max_stage[0], 3);
+    }
+
+    #[test]
+    fn caps_with_single_copy_consumers() {
+        // same chain but C = 1 everywhere: consumers only start at
+        // their fixed first-compute event, so caps tighten hard
+        let g =
+            Graph::from_edges("ch", 3, &[(0, 1), (1, 2)], vec![1; 3], vec![1; 3]).unwrap();
+        let order = topological_order(&g).unwrap();
+        let caps = staged_caps(&g, &order, &[1, 1, 1]);
+        // node 1's only start is id(2,2) = 3 → latest_use[0] = 3;
+        // a recompute of 0 would need a stage j with id(j,1) < 3:
+        // id(2,1) = 2 qualifies → max_stage[0] = 2
+        assert_eq!(caps.latest_use[0], 3);
+        assert_eq!(caps.max_stage[0], 2);
+    }
+
+    #[test]
+    fn oversized_graph_falls_back_cheaply() {
+        // synthetic n over the guard via a long chain: analysis skipped
+        let n = DENSE_ANALYSIS_LIMIT + 1;
+        let edges: Vec<(NodeId, NodeId)> =
+            (0..n - 1).map(|i| (i as NodeId, (i + 1) as NodeId)).collect();
+        let g = Graph::from_edges("big", n, &edges, vec![1; n], vec![1; n]).unwrap();
+        let a = GraphAnalysis::analyze(&g);
+        assert_eq!(a.edges_redundant, 0);
+        assert!(!a.edge_redundant(&g, 0, 1));
+        assert_eq!(a.desc_count[0], 0, "counts zeroed above the guard");
+    }
+}

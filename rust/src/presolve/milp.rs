@@ -1,0 +1,189 @@
+//! Logical presolve for 0–1 linear constraint matrices (the CHECKMATE
+//! baseline): fixed-variable substitution, forced fixings from
+//! singleton and forcing rows, and vacuous-row elimination — iterated
+//! to a fixpoint. Everything here is *exact* for binary variables, so
+//! the reduced MILP has the same feasible set over the unfixed
+//! variables and the same optimum; CHECKMATE's optimality and
+//! infeasibility proofs remain valid.
+
+/// Result of [`reduce_rows`].
+#[derive(Debug, Default)]
+pub struct RowReduction {
+    /// Per-variable root fixing (`None` = still free).
+    pub fixed: Vec<Option<i64>>,
+    /// Rows before reduction.
+    pub rows_before: u64,
+    /// Rows remaining after reduction.
+    pub rows_after: u64,
+    /// Number of variables fixed.
+    pub vars_fixed: u64,
+    /// The reduction proved the system infeasible (conflicting forced
+    /// fixings or a row whose minimum activity exceeds its rhs).
+    pub infeasible: bool,
+}
+
+/// Reduce `rows` (each `Σ cᵢ·xᵢ ≤ rhs` over binary `xᵢ`) in place.
+///
+/// Per pass, for every row: substitute already-fixed variables into the
+/// rhs; drop the row if its maximum activity can no longer exceed the
+/// rhs (vacuous); flag infeasibility if its minimum activity already
+/// does; fix the variable of a binding singleton row; and when the
+/// minimum activity *equals* the rhs, fix every remaining variable at
+/// its minimizing value (forcing row). Passes repeat until no new
+/// variable gets fixed.
+pub fn reduce_rows(nvars: usize, rows: &mut Vec<(Vec<(i64, u32)>, i64)>) -> RowReduction {
+    let mut red = RowReduction {
+        fixed: vec![None; nvars],
+        rows_before: rows.len() as u64,
+        ..Default::default()
+    };
+    // set a fixing, detecting conflicts with earlier fixings
+    fn fix(fixed: &mut [Option<i64>], v: u32, val: i64, infeasible: &mut bool) -> bool {
+        match fixed[v as usize] {
+            Some(old) if old != val => {
+                *infeasible = true;
+                false
+            }
+            Some(_) => false,
+            None => {
+                fixed[v as usize] = Some(val);
+                true
+            }
+        }
+    }
+    loop {
+        let mut progressed = false;
+        let mut out: Vec<(Vec<(i64, u32)>, i64)> = Vec::with_capacity(rows.len());
+        for (row, mut rhs) in rows.drain(..) {
+            // substitute fixed variables; zero-coefficient terms are
+            // dropped outright (a forcing row must never "fix" a
+            // variable the row does not actually constrain)
+            let mut kept: Vec<(i64, u32)> = Vec::with_capacity(row.len());
+            for (c, v) in row {
+                if c == 0 {
+                    continue;
+                }
+                match red.fixed[v as usize] {
+                    Some(val) => rhs -= c * val,
+                    None => kept.push((c, v)),
+                }
+            }
+            let max_act: i64 = kept.iter().map(|&(c, _)| c.max(0)).sum();
+            let min_act: i64 = kept.iter().map(|&(c, _)| c.min(0)).sum();
+            if min_act > rhs {
+                red.infeasible = true;
+                break; // remaining drained rows are irrelevant now
+            }
+            if max_act <= rhs {
+                continue; // vacuous under the box [0,1]^n
+            }
+            if kept.len() == 1 {
+                // singleton c·x ≤ rhs that is not vacuous: it binds
+                let (c, v) = kept[0];
+                let val = if c > 0 { 0 } else { 1 };
+                progressed |= fix(&mut red.fixed, v, val, &mut red.infeasible);
+                continue;
+            }
+            if min_act == rhs {
+                // forcing row: every variable must sit at its minimizer
+                for &(c, v) in &kept {
+                    let val = if c > 0 { 0 } else { 1 };
+                    progressed |= fix(&mut red.fixed, v, val, &mut red.infeasible);
+                }
+                continue;
+            }
+            out.push((kept, rhs));
+        }
+        *rows = out;
+        if !progressed || red.infeasible {
+            break;
+        }
+    }
+    red.rows_after = rows.len() as u64;
+    red.vars_fixed = red.fixed.iter().flatten().count() as u64;
+    red
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixes_checkmate_style_diagonal_rows() {
+        // -x0 ≤ -1 (forces x0 = 1), then x1 - x0 ≤ 0 becomes x1 ≤ 1:
+        // vacuous
+        let mut rows = vec![
+            (vec![(-1, 0)], -1),
+            (vec![(1, 1), (-1, 0)], 0),
+        ];
+        let r = reduce_rows(2, &mut rows);
+        assert!(!r.infeasible);
+        assert_eq!(r.fixed[0], Some(1));
+        assert_eq!(r.fixed[1], None);
+        assert_eq!(r.vars_fixed, 1);
+        assert_eq!(r.rows_before, 2);
+        assert_eq!(r.rows_after, 0);
+        assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn cascaded_fixings_reach_fixpoint() {
+        // x0 = 1 forces x1 = 1 (x0 - x1 ≤ 0 with x0 = 1 → -x1 ≤ -1),
+        // which forces x2 = 0 (x1 + x2 ≤ 1)
+        let mut rows = vec![
+            (vec![(-1, 0)], -1),
+            (vec![(1, 0), (-1, 1)], 0),
+            (vec![(1, 1), (1, 2)], 1),
+        ];
+        let r = reduce_rows(3, &mut rows);
+        assert!(!r.infeasible);
+        assert_eq!(r.fixed, vec![Some(1), Some(1), Some(0)]);
+        assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn forcing_row_fixes_all_terms() {
+        // -x0 - x1 ≤ -2 → both must be 1
+        let mut rows = vec![(vec![(-1, 0), (-1, 1)], -2)];
+        let r = reduce_rows(2, &mut rows);
+        assert!(!r.infeasible);
+        assert_eq!(r.fixed, vec![Some(1), Some(1)]);
+    }
+
+    #[test]
+    fn detects_infeasibility() {
+        // x0 = 1 and x0 = 0 conflict
+        let mut rows = vec![(vec![(-1, 0)], -1), (vec![(1, 0)], 0)];
+        let r = reduce_rows(1, &mut rows);
+        assert!(r.infeasible);
+    }
+
+    #[test]
+    fn min_activity_conflict_is_infeasible() {
+        // -x0 ≤ -2 can never hold for binary x0
+        let mut rows = vec![(vec![(-1, 0)], -2)];
+        let r = reduce_rows(1, &mut rows);
+        assert!(r.infeasible);
+    }
+
+    #[test]
+    fn zero_coefficient_terms_are_never_forced() {
+        // 0·x0 - x1 ≤ -1 forces x1 = 1 but must not touch x0, and
+        // x0 ≤ 0 then fixes x0 = 0 without any conflict
+        let mut rows = vec![(vec![(0, 0), (-1, 1)], -1), (vec![(1, 0)], 0)];
+        let r = reduce_rows(2, &mut rows);
+        assert!(!r.infeasible, "feasible system (x0=0, x1=1) flagged infeasible");
+        assert_eq!(r.fixed, vec![Some(0), Some(1)]);
+    }
+
+    #[test]
+    fn keeps_genuinely_binding_rows() {
+        // x0 + x1 ≤ 1 is neither vacuous nor forcing: kept as-is
+        let mut rows = vec![(vec![(1, 0), (1, 1)], 1)];
+        let r = reduce_rows(2, &mut rows);
+        assert!(!r.infeasible);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(r.rows_after, 1);
+        assert_eq!(r.vars_fixed, 0);
+    }
+}

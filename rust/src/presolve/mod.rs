@@ -1,0 +1,282 @@
+//! Root presolve and model compaction: shrink the CP problem before the
+//! engine ever sees it.
+//!
+//! PR 2 made *propagation* fast; this layer makes the *problem* small.
+//! Every solve path — exact B&B, LNS window re-solves, portfolio
+//! members, the CHECKMATE MILP — runs the presolve at the root, before
+//! any propagator is constructed:
+//!
+//! * **Structural constraint elimination** (always exact). The staged
+//!   formulation fixes copy 0's start, so its interval-validity
+//!   constraint (2) is implied by the end variable's domain lower
+//!   bound, the copy-ordering implication `a¹ → a⁰` is vacuous
+//!   (`a⁰ ≡ 1`), and the pair of ordering constraints (3) collapses
+//!   into one strict constraint `aⁱ⁺¹ → eⁱ + 1 ≤ sⁱ⁺¹` (exact because
+//!   a minimal-end solution always separates consecutive copies; see
+//!   `StagedModel::build_with` for the argument).
+//! * **Cover compaction** (always exact). One multi-target [`Cover`]
+//!   propagator per precedence edge replaces the per-consumer-copy
+//!   clones, and candidate lists are shared slices — the propagator
+//!   count drops from `Σ_edges C_v` to `m`.
+//! * **Liveness-derived bounds tightening** (always exact). Reverse
+//!   reachability over the input order yields, per node, the latest
+//!   event at which any consumer copy can still start
+//!   ([`StagedCaps::latest_use`]); retention-interval ends are capped
+//!   there, recompute-copy start domains are capped at the last stage
+//!   that can still cover a use, and sink intervals are pinned to their
+//!   compute event. For the unstaged model, ancestor/descendant counts
+//!   give topological-depth lower bounds and reverse-reachability upper
+//!   bounds on starts.
+//! * **Dominance fixing** (always exact). Copies whose earliest
+//!   possible start lies at or beyond every possible use of the node can
+//!   never pay for themselves — they are never built (a solution using
+//!   such a copy maps to a strictly cheaper one without it, shifting
+//!   later copies down; see `StagedModel::build_with`).
+//! * **Transitive reduction** ([`PresolveLevel::Aggressive`] only).
+//!   Covers for transitively redundant edges are dropped. This is a
+//!   *relaxation* under the Appendix-A.3 memory semantics — a redundant
+//!   edge is still a real data dependency, so the cumulative may
+//!   undercount — and therefore never part of the default: emitted
+//!   solutions are still eval-validated, but optimality/infeasibility
+//!   proofs no longer transfer ([`Presolve::exactness_preserving`]).
+//! * **Retention-length cap** (`--max-interval-len`, opt-in). The
+//!   paper's §3 search-space reduction `e − s ≤ L`; near-optimal in the
+//!   paper's experiments but not exactness-preserving, so off by
+//!   default.
+//! * **MILP row reduction** ([`reduce_rows`], always exact). Fixed-
+//!   variable substitution, forced singleton/forcing-row fixings and
+//!   vacuous-row elimination on the CHECKMATE constraint matrix.
+//!
+//! The expensive, order-independent graph analysis (reachability
+//! bitsets, transitive reduction, ancestor/descendant counts) is
+//! computed once per graph and shared across racing portfolio members
+//! and every LNS window re-solve via `Arc<GraphAnalysis>`.
+//!
+//! [`Cover`]: crate::cp::Propagator
+
+mod analysis;
+mod milp;
+
+pub use analysis::{staged_caps, GraphAnalysis, StagedCaps};
+pub use milp::{reduce_rows, RowReduction};
+
+use crate::graph::Graph;
+use std::sync::Arc;
+
+/// How aggressively presolve may transform the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PresolveLevel {
+    /// No presolve: the raw paper formulation.
+    Off,
+    /// Exactness-preserving reductions only — identical status and
+    /// optimum to the raw model, guaranteed (the default).
+    #[default]
+    Exact,
+    /// Additionally drops Cover constraints for transitively redundant
+    /// precedence edges. A *relaxation*: solutions are still validated
+    /// against the Appendix-A.3 evaluator before being reported, but
+    /// optimality and infeasibility proofs no longer transfer to the
+    /// original problem.
+    Aggressive,
+}
+
+/// Presolve configuration carried by every solve request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PresolveConfig {
+    /// Reduction level (default: [`PresolveLevel::Exact`]).
+    pub level: PresolveLevel,
+    /// The paper's §3 retention-interval length cap `e − s ≤ L`
+    /// (`--max-interval-len`). `None` (default) leaves interval lengths
+    /// unbounded — the exactness-preserving choice.
+    pub max_interval_len: Option<i64>,
+}
+
+impl PresolveConfig {
+    /// Config with presolve disabled entirely.
+    pub fn off() -> PresolveConfig {
+        PresolveConfig { level: PresolveLevel::Off, max_interval_len: None }
+    }
+}
+
+/// A presolve context: configuration plus the (shareable) graph
+/// analysis. Build one per graph with [`Presolve::new`], or share the
+/// analysis across solvers with [`Presolve::with_shared`].
+#[derive(Debug, Clone)]
+pub struct Presolve {
+    /// The reduction configuration.
+    pub config: PresolveConfig,
+    /// Order-independent graph analysis; `None` when the level is
+    /// [`PresolveLevel::Off`] (never computed) or the graph exceeds the
+    /// dense-bitset guard.
+    pub analysis: Option<Arc<GraphAnalysis>>,
+}
+
+impl Presolve {
+    /// A disabled presolve (raw model).
+    pub fn off() -> Presolve {
+        Presolve { config: PresolveConfig::off(), analysis: None }
+    }
+
+    /// Analyze `graph` under `config` (no analysis when disabled).
+    pub fn new(graph: &Graph, config: PresolveConfig) -> Presolve {
+        let analysis = (config.level != PresolveLevel::Off)
+            .then(|| Arc::new(GraphAnalysis::analyze(graph)));
+        Presolve { config, analysis }
+    }
+
+    /// Reuse an analysis computed elsewhere (portfolio members, LNS
+    /// window re-solves).
+    pub fn with_shared(analysis: Arc<GraphAnalysis>, config: PresolveConfig) -> Presolve {
+        Presolve { config, analysis: Some(analysis) }
+    }
+
+    /// Config only, no graph analysis — for solve paths that never read
+    /// it (the CHECKMATE row reduction is purely logical), skipping the
+    /// quadratic reachability build.
+    pub fn config_only(config: PresolveConfig) -> Presolve {
+        Presolve { config, analysis: None }
+    }
+
+    /// Whether any presolve runs at all.
+    pub fn enabled(&self) -> bool {
+        self.config.level != PresolveLevel::Off
+    }
+
+    /// Whether redundant-edge Cover dropping is on.
+    pub fn aggressive(&self) -> bool {
+        self.config.level == PresolveLevel::Aggressive
+    }
+
+    /// Whether every applied reduction preserves the exact status and
+    /// optimum — when false, solvers must not report optimality or
+    /// infeasibility proofs for the original problem.
+    pub fn exactness_preserving(&self) -> bool {
+        self.config.level != PresolveLevel::Aggressive
+            && self.config.max_interval_len.is_none()
+    }
+}
+
+/// Counters describing what one presolved model build achieved,
+/// threaded through [`SearchStats`] into `BENCH_solver.json` and
+/// `solve --verbose`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PresolveStats {
+    /// Precedence edges detected as transitively redundant.
+    pub edges_redundant: u64,
+    /// Cover constraints dropped for redundant edges (aggressive only).
+    pub edges_removed: u64,
+    /// Interval copies proven useless and never built.
+    pub copies_deactivated: u64,
+    /// Variables fixed at the root beyond structural fixings.
+    pub vars_fixed: u64,
+    /// Propagators the raw formulation would have constructed.
+    pub props_before: u64,
+    /// Propagators actually constructed.
+    pub props_after: u64,
+    /// Summed domain size of the raw formulation.
+    pub domain_before: u64,
+    /// Summed domain size after tightening/compaction.
+    pub domain_after: u64,
+}
+
+impl PresolveStats {
+    /// Domain shrink in percent (0 when nothing was measured).
+    pub fn domain_shrink_pct(&self) -> f64 {
+        if self.domain_before == 0 {
+            return 0.0;
+        }
+        100.0 * (1.0 - self.domain_after as f64 / self.domain_before as f64)
+    }
+
+    /// Propagator reduction in percent (0 when nothing was measured).
+    pub fn props_reduction_pct(&self) -> f64 {
+        if self.props_before == 0 {
+            return 0.0;
+        }
+        100.0 * (1.0 - self.props_after as f64 / self.props_before as f64)
+    }
+
+    /// Accumulate another build's counters into this one (used by
+    /// `SearchStats::merge` and by the per-window folding in LNS).
+    pub fn add(&mut self, o: &PresolveStats) {
+        self.edges_redundant += o.edges_redundant;
+        self.edges_removed += o.edges_removed;
+        self.copies_deactivated += o.copies_deactivated;
+        self.vars_fixed += o.vars_fixed;
+        self.props_before += o.props_before;
+        self.props_after += o.props_after;
+        self.domain_before += o.domain_before;
+        self.domain_after += o.domain_after;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond_shortcut() -> Graph {
+        Graph::from_edges(
+            "ds",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3), (0, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn default_level_is_exact() {
+        let cfg = PresolveConfig::default();
+        assert_eq!(cfg.level, PresolveLevel::Exact);
+        assert_eq!(cfg.max_interval_len, None);
+        let pre = Presolve::new(&diamond_shortcut(), cfg);
+        assert!(pre.enabled());
+        assert!(!pre.aggressive());
+        assert!(pre.exactness_preserving());
+        assert!(pre.analysis.is_some());
+    }
+
+    #[test]
+    fn off_skips_analysis() {
+        let pre = Presolve::new(&diamond_shortcut(), PresolveConfig::off());
+        assert!(!pre.enabled());
+        assert!(pre.analysis.is_none());
+        assert!(pre.exactness_preserving());
+    }
+
+    #[test]
+    fn non_exact_modes_lose_proofs() {
+        let g = diamond_shortcut();
+        let agg = Presolve::new(
+            &g,
+            PresolveConfig { level: PresolveLevel::Aggressive, max_interval_len: None },
+        );
+        assert!(!agg.exactness_preserving());
+        let capped = Presolve::new(
+            &g,
+            PresolveConfig { level: PresolveLevel::Exact, max_interval_len: Some(5) },
+        );
+        assert!(!capped.exactness_preserving());
+    }
+
+    #[test]
+    fn stats_percentages() {
+        let st = PresolveStats {
+            props_before: 100,
+            props_after: 60,
+            domain_before: 1000,
+            domain_after: 250,
+            ..Default::default()
+        };
+        assert!((st.props_reduction_pct() - 40.0).abs() < 1e-9);
+        assert!((st.domain_shrink_pct() - 75.0).abs() < 1e-9);
+        assert_eq!(PresolveStats::default().domain_shrink_pct(), 0.0);
+        let mut acc = PresolveStats::default();
+        acc.add(&st);
+        acc.add(&st);
+        assert_eq!(acc.props_before, 200);
+        assert_eq!(acc.domain_after, 500);
+        assert!((acc.domain_shrink_pct() - 75.0).abs() < 1e-9);
+    }
+}
