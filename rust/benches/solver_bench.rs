@@ -1,20 +1,36 @@
 //! Solver benchmarks (custom harness): quick versions of the paper's
 //! experiment grid — one row per table/figure family — plus the
 //! machine-readable kernel bench that writes `BENCH_solver.json`
-//! (nodes/sec, propagations/sec, wall time per Figure-5-style
-//! instance). Full runs: `moccasin bench all --time-limit 60`.
+//! (nodes/sec, propagations/sec, wall time and search-strategy
+//! counters per Figure-5-style instance). Full runs:
+//! `moccasin bench all --time-limit 60`.
 //!
 //! `cargo bench --bench solver_bench -- --smoke` runs only the JSON
-//! kernel bench with a short limit — the CI perf-tracking step.
+//! kernel bench with a short limit — the CI perf-tracking step. Pass
+//! `--search chronological|learned` to A/B the two search strategies
+//! (CI runs the smoke once per strategy and uploads both JSONs).
 
 use moccasin::bench;
+use moccasin::cp::SearchStrategy;
 use std::time::Duration;
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let search = args
+        .iter()
+        .position(|a| a == "--search")
+        .and_then(|i| args.get(i + 1))
+        .map(|name| {
+            SearchStrategy::parse(name).unwrap_or_else(|| {
+                eprintln!("unknown search strategy {name} (use chronological|learned)");
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or_default();
     if smoke {
         println!("== solver bench (smoke: kernel counters only) ==");
-        bench::bench_solver_json(Duration::from_secs(3), true);
+        bench::bench_solver_json(Duration::from_secs(3), true, search);
         return;
     }
     let tl = Duration::from_secs(8);
@@ -24,5 +40,5 @@ fn main() {
     bench::fig1(tl);
     bench::fig6(tl, true);
     bench::ablation_c(tl);
-    bench::bench_solver_json(tl, false);
+    bench::bench_solver_json(tl, false, search);
 }

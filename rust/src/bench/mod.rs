@@ -7,6 +7,7 @@
 //! feasibility breaks — is the reproduction target.
 
 use crate::coordinator::{Backend, Coordinator, SolveRequest};
+use crate::cp::SearchStrategy;
 use crate::generators::{paper_graph, random_layered, rw2};
 use crate::graph::{random_topological_order, topological_order, Graph};
 use crate::moccasin::{MoccasinSolver, StagedModel};
@@ -416,21 +417,24 @@ fn presolve_effect(g: &Graph, budget: u64) -> PresolveStats {
 
 /// Machine-readable kernel benchmark: solve the Figure-5-style
 /// instances (random layered G1..G4 at a 90% budget) with the full
-/// MOCCASIN stack and emit `BENCH_solver.json` — one record per
-/// instance with wall time, nodes/sec, propagations/sec, the engine's
-/// event counters and the presolve counter block (raw vs compacted
-/// formulation sizes) — so the kernel's perf trajectory can be tracked
-/// across commits (the CI smoke-bench step runs the quick variant on
-/// every push).
-pub fn bench_solver_json(time_limit: Duration, quick: bool) {
-    println!("== solver kernel bench (BENCH_solver.json) ==");
+/// MOCCASIN stack under the given search strategy and emit
+/// `BENCH_solver.json` — one record per instance with wall time,
+/// nodes/sec, propagations/sec, the engine's event counters, the
+/// search-strategy counter block (restarts, no-goods learned/pruned,
+/// database reductions) and the presolve counter block (raw vs
+/// compacted formulation sizes) — so the kernel's perf trajectory can
+/// be tracked across commits and the two strategies A/B-compared (the
+/// CI smoke-bench step runs the quick variant once per strategy on
+/// every push and uploads both files).
+pub fn bench_solver_json(time_limit: Duration, quick: bool, search: SearchStrategy) {
+    println!("== solver kernel bench (BENCH_solver.json, search={}) ==", search.name());
     let names: &[&str] = if quick { &["G1", "G2"] } else { &["G1", "G2", "G3", "G4"] };
     let mut records: Vec<String> = Vec::new();
     for &name in names {
         let g = paper_graph(name).unwrap();
         let budget = budget_at(&g, 0.9);
         let pe = presolve_effect(&g, budget);
-        let solver = MoccasinSolver { time_limit, ..Default::default() };
+        let solver = MoccasinSolver { time_limit, search, ..Default::default() };
         let t0 = Instant::now();
         let out = solver.solve(&g, budget, None);
         let wall = t0.elapsed().as_secs_f64();
@@ -448,6 +452,16 @@ pub fn bench_solver_json(time_limit: Duration, quick: bool) {
             st.events_posted,
             st.wakeups_skipped,
             st.cum_resyncs
+        );
+        println!(
+            "  {name} search[{}]: {} conflicts, {} restarts, {} nogoods learned, \
+             {} nogood prunings, {} db reductions",
+            search.name(),
+            st.conflicts,
+            st.restarts,
+            st.nogoods_learned,
+            st.nogoods_pruned,
+            st.db_reductions
         );
         println!(
             "  {name} presolve: propagators {} -> {} ({:.1}% fewer), domains {} -> {} \
@@ -470,6 +484,9 @@ pub fn bench_solver_json(time_limit: Duration, quick: bool) {
              \"cum_rebuilds\": {},\n    \"nodes_per_sec\": {nodes_per_sec:.1},\n    \
              \"propagations_per_sec\": {props_per_sec:.1},\n    \
              \"best_duration\": {},\n    \"proved_optimal\": {},\n    \
+             \"search\": {{\n      \"strategy\": \"{}\",\n      \"conflicts\": {},\n      \
+             \"restarts\": {},\n      \"nogoods_learned\": {},\n      \
+             \"nogoods_pruned\": {},\n      \"db_reductions\": {}\n    }},\n    \
              \"presolve\": {{\n      \"props_before\": {},\n      \"props_after\": {},\n      \
              \"props_reduction_pct\": {:.2},\n      \"domain_before\": {},\n      \
              \"domain_after\": {},\n      \"domain_shrink_pct\": {:.2},\n      \
@@ -485,6 +502,12 @@ pub fn bench_solver_json(time_limit: Duration, quick: bool) {
             st.cum_rebuilds,
             out.best.as_ref().map(|b| b.eval.duration as i64).unwrap_or(-1),
             out.proved_optimal,
+            search.name(),
+            st.conflicts,
+            st.restarts,
+            st.nogoods_learned,
+            st.nogoods_pruned,
+            st.db_reductions,
             pe.props_before,
             pe.props_after,
             pe.props_reduction_pct(),
@@ -506,8 +529,9 @@ pub fn bench_solver_json(time_limit: Duration, quick: bool) {
     }
 }
 
-/// Run everything (the `bench all` CLI path).
-pub fn run_all(time_limit: Duration, quick: bool) {
+/// Run everything (the `bench all` CLI path); `search` selects the
+/// kernel strategy for the solver-json record.
+pub fn run_all(time_limit: Duration, quick: bool, search: SearchStrategy) {
     table1();
     ablation_topo();
     fig1(time_limit);
@@ -516,7 +540,7 @@ pub fn run_all(time_limit: Duration, quick: bool) {
     table2(time_limit, quick);
     sweep_parallel(time_limit, true);
     ablation_c(time_limit);
-    bench_solver_json(time_limit, quick);
+    bench_solver_json(time_limit, quick, search);
 }
 
 #[cfg(test)]

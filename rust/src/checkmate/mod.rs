@@ -26,7 +26,7 @@
 //!   rounding heuristic (round `S`, complete `R` minimally); the result
 //!   may violate the memory budget, as the paper reports.
 
-use crate::cp::{Model, Solver, VarId};
+use crate::cp::{Model, SearchStrategy, Solver, VarId};
 use crate::graph::{Graph, NodeId};
 use crate::milp::{pdhg_solve, Csr};
 use crate::moccasin::RematSolution;
@@ -315,6 +315,7 @@ pub fn solve_milp(
     budget: u64,
     deadline: Deadline,
     pre: &Presolve,
+    search: SearchStrategy,
     mut on_solution: impl FnMut(&RematSolution),
 ) -> Result<CheckmateResult, CheckmateError> {
     let (layout, mut rows) = build(graph, order, budget, 400_000, 12_000_000)?;
@@ -373,7 +374,8 @@ pub fn solve_milp(
     // (when one rides along on the deadline) so racing solvers prune;
     // as a full model this B&B may in turn prune against the global best
     let incumbent = deadline.incumbent().cloned();
-    let solver = Solver { deadline, bound: incumbent.clone(), ..Default::default() };
+    let solver =
+        Solver { deadline, bound: incumbent.clone(), strategy: search, ..Default::default() };
     let mut best: Option<RematSolution> = None;
     let r = solver.solve(&model, &objective, &bo, |a, _| {
         let seq = sequence_from_r(&layout, |t, k| a[vars[layout.r(t, k) as usize].0 as usize] == 1);
@@ -517,6 +519,7 @@ mod tests {
             100,
             Deadline::after(Duration::from_secs(20)),
             &Presolve::new(&g, Default::default()),
+            SearchStrategy::default(),
             |_| {},
         )
         .unwrap();
@@ -534,6 +537,7 @@ mod tests {
             10,
             Deadline::after(Duration::from_secs(30)),
             &Presolve::new(&g, Default::default()),
+            SearchStrategy::default(),
             |_| {},
         )
         .unwrap();
@@ -553,6 +557,7 @@ mod tests {
             9,
             Deadline::after(Duration::from_secs(10)),
             &Presolve::new(&g, Default::default()),
+            SearchStrategy::default(),
             |_| {},
         );
         match r {
@@ -573,6 +578,7 @@ mod tests {
             10,
             Deadline::after(Duration::from_secs(30)),
             &Presolve::new(&g, Default::default()),
+            SearchStrategy::default(),
             |_| {},
         )
         .unwrap();
@@ -582,6 +588,7 @@ mod tests {
             10,
             Deadline::after(Duration::from_secs(30)),
             &Presolve::off(),
+            SearchStrategy::default(),
             |_| {},
         )
         .unwrap();

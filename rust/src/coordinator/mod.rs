@@ -24,7 +24,7 @@ pub mod portfolio;
 pub use portfolio::{solve_portfolio, PortfolioConfig};
 
 use crate::checkmate::{self, CheckmateError};
-use crate::cp::SearchStats;
+use crate::cp::{SearchStats, SearchStrategy};
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::moccasin::{MoccasinSolver, RematSolution, SolveOutcome};
 use crate::presolve::{Presolve, PresolveConfig};
@@ -67,6 +67,10 @@ pub struct SolveRequest {
     /// level). Part of the cache key — different reductions may yield
     /// different anytime traces or (non-exact levels) different optima.
     pub presolve: PresolveConfig,
+    /// CP kernel search strategy (chronological | learned). Part of the
+    /// cache key: both modes reach the same optimum, but traces, stats
+    /// and proofs-per-member differ, so responses are not interchangeable.
+    pub search: SearchStrategy,
 }
 
 impl Default for SolveRequest {
@@ -78,6 +82,7 @@ impl Default for SolveRequest {
             backend: Backend::Moccasin,
             order: None,
             presolve: PresolveConfig::default(),
+            search: SearchStrategy::default(),
         }
     }
 }
@@ -103,8 +108,9 @@ pub struct SolveResponse {
 }
 
 /// Cache key: (graph fingerprint, budget, C, backend discriminant,
-/// presolve level discriminant, interval-length cap).
-type CacheKey = (u64, u64, usize, u8, u8, i64);
+/// presolve level discriminant, interval-length cap, search-strategy
+/// discriminant).
+type CacheKey = (u64, u64, usize, u8, u8, i64, u8);
 
 /// The coordinator: solver portfolio + solution cache + worker pool
 /// configuration for batched solves.
@@ -146,6 +152,7 @@ impl Coordinator {
             // builders clamp negative caps to 0, so key them as 0 too —
             // the -1 sentinel stays reserved for "no cap"
             req.presolve.max_interval_len.map(|l| l.max(0)).unwrap_or(-1),
+            req.search.cache_key(),
         )
     }
 
@@ -255,6 +262,7 @@ impl Coordinator {
                     c: req.c,
                     time_limit: req.time_limit,
                     presolve: req.presolve,
+                    search: req.search,
                     ..Default::default()
                 };
                 let out: SolveOutcome = solver.solve(graph, req.budget, Some(order));
@@ -275,6 +283,7 @@ impl Coordinator {
                     seed: 0,
                     include_checkmate: true,
                     presolve: req.presolve,
+                    search: req.search,
                 };
                 solve_portfolio(graph, req.budget, Some(order), &cfg)
             }
@@ -289,6 +298,7 @@ impl Coordinator {
                     // solve_milp's reduction is purely logical — skip
                     // the reachability analysis on this path
                     &Presolve::config_only(req.presolve),
+                    req.search,
                     |sol| {
                         trace.push((deadline.elapsed(), sol.eval.duration));
                     },

@@ -7,9 +7,11 @@
 //! portfolio turns that anytime behaviour into a multi-core solve
 //! service: member 0 runs MOCCASIN on the canonical (Kahn) topological
 //! order, further members run MOCCASIN from *random* topological orders
-//! with different LNS seeds and window sizes (the paper itself
-//! randomizes the input order, §3.3), and — when the model fits — one
-//! member runs the CHECKMATE MILP baseline.
+//! with different LNS seeds, window sizes and **search strategies**
+//! (odd members use the conflict-driven learned kernel, member 0 stays
+//! chronological so proofs are reproduced by a learning-free search;
+//! the paper itself randomizes the input order, §3.3), and — when the
+//! model fits — one member runs the CHECKMATE MILP baseline.
 //!
 //! All members share an [`Incumbent`]: every validated improving
 //! solution is published to the atomic best-duration bound, every
@@ -26,7 +28,7 @@
 
 use super::SolveResponse;
 use crate::checkmate;
-use crate::cp::SearchStats;
+use crate::cp::{SearchStats, SearchStrategy};
 use crate::graph::{random_topological_order, topological_order, Graph, NodeId};
 use crate::moccasin::{MoccasinSolver, RematSolution};
 use crate::presolve::{GraphAnalysis, Presolve, PresolveConfig, PresolveLevel};
@@ -56,6 +58,12 @@ pub struct PortfolioConfig {
     /// racing member (each member still derives its own order-dependent
     /// staged caps, since members race on different topological orders).
     pub presolve: PresolveConfig,
+    /// Requested base search strategy. Members diversify over
+    /// *strategies*, not just orders and seeds: member 0 always runs
+    /// chronologically (so optimality proofs are reproduced by a
+    /// learning-free search), odd members run the learned strategy, and
+    /// the remaining members follow this setting.
+    pub search: SearchStrategy,
 }
 
 impl Default for PortfolioConfig {
@@ -67,6 +75,7 @@ impl Default for PortfolioConfig {
             seed: 0,
             include_checkmate: true,
             presolve: PresolveConfig::default(),
+            search: SearchStrategy::default(),
         }
     }
 }
@@ -200,6 +209,22 @@ fn checkmate_member_viable(graph: &Graph) -> bool {
     graph.n() <= 200
 }
 
+/// Search strategy for MOCCASIN member `m`: member 0 stays
+/// chronological so the race always carries a learning-free member
+/// whose optimality proofs are independently reproduced; odd members
+/// run the conflict-driven learned search; the rest follow the
+/// requested base strategy. Strategy diversification compounds with
+/// the order/seed/window diversification below.
+fn member_strategy(cfg: &PortfolioConfig, m: usize) -> SearchStrategy {
+    if m == 0 {
+        SearchStrategy::chronological()
+    } else if m % 2 == 1 {
+        SearchStrategy::learned()
+    } else {
+        cfg.search
+    }
+}
+
 /// One MOCCASIN member: canonical order for member 0, random
 /// topological orders (the paper's §3.3 randomization) plus diversified
 /// LNS seeds/windows for the rest.
@@ -228,6 +253,7 @@ fn run_moccasin_member(
         incumbent: Some(Arc::clone(&shared.incumbent)),
         presolve: cfg.presolve,
         analysis: analysis.clone(),
+        search: member_strategy(cfg, member),
         ..Default::default()
     };
     let out = solver.solve_with(graph, budget, Some(order), |sol| shared.publish(sol));
@@ -257,8 +283,9 @@ fn run_checkmate_member(
         Some(a) => Presolve::with_shared(Arc::clone(a), cfg.presolve),
         None => Presolve::off(),
     };
-    let result =
-        checkmate::solve_milp(graph, order, budget, deadline, &pre, |sol| shared.publish(sol));
+    let result = checkmate::solve_milp(graph, order, budget, deadline, &pre, cfg.search, |sol| {
+        shared.publish(sol)
+    });
     match result {
         Ok(res) => {
             shared.stats.lock().unwrap().merge(&res.stats);

@@ -52,6 +52,70 @@ pub struct DomainEvent {
     pub mask: u8,
 }
 
+/// A bound predicate (`x ≥ v` or `x ≤ v`) — the literal currency of
+/// explained propagation and no-good learning.
+///
+/// Every solver-time tightening establishes exactly one `Lit`; the
+/// explanation of a pruning or a failure is a conjunction of `Lit`s
+/// that implied it, and learned no-goods are conjunctions of `Lit`s
+/// whose simultaneous truth is forbidden (see `cp::learn`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lit {
+    /// The variable the predicate constrains.
+    pub var: VarId,
+    /// `true`: the predicate is `var ≥ val`; `false`: `var ≤ val`.
+    pub is_lb: bool,
+    /// The bound value.
+    pub val: i64,
+}
+
+impl Lit {
+    /// The predicate `x ≥ v`.
+    #[inline]
+    pub fn geq(var: VarId, val: i64) -> Self {
+        Lit { var, is_lb: true, val }
+    }
+
+    /// The predicate `x ≤ v`.
+    #[inline]
+    pub fn leq(var: VarId, val: i64) -> Self {
+        Lit { var, is_lb: false, val }
+    }
+
+    /// Logical negation over the integers: `¬(x ≥ v) = x ≤ v − 1` and
+    /// `¬(x ≤ v) = x ≥ v + 1`.
+    #[inline]
+    pub fn negation(self) -> Self {
+        if self.is_lb {
+            Lit::leq(self.var, self.val - 1)
+        } else {
+            Lit::geq(self.var, self.val + 1)
+        }
+    }
+
+    /// Whether the predicate currently holds under `d` (the domain of
+    /// [`Lit::var`]).
+    #[inline]
+    pub fn is_true(&self, d: &Domain) -> bool {
+        if self.is_lb {
+            d.min() >= self.val
+        } else {
+            d.max() <= self.val
+        }
+    }
+
+    /// Whether the predicate is currently falsified under `d` (its
+    /// negation holds).
+    #[inline]
+    pub fn is_false(&self, d: &Domain) -> bool {
+        if self.is_lb {
+            d.max() < self.val
+        } else {
+            d.min() > self.val
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 enum Repr {
     /// universe = { base, base+1, ... }

@@ -40,9 +40,11 @@
 //! Exactness never depends on filtering either way: every emitted
 //! solution is verified against all constraints before it is reported.
 
-use super::domain::{event, Domain, DomainEvent, VarId};
+use super::domain::{event, Domain, DomainEvent, Lit, VarId};
+use super::learn::NoGoodDb;
 use super::propagators::{
-    prop_linear_le, timetable_filter_item, Conflict, Ctx, CumItem, Propagator,
+    explain_profile_at, prop_linear_le, timetable_filter_item, Conflict, Ctx, CumItem,
+    ExplState, Propagator, TrailEntry, REASON_DECISION, REASON_PROP,
 };
 use super::search::SearchStats;
 use super::Model;
@@ -82,8 +84,19 @@ struct CumState {
 pub(crate) struct PropagationEngine {
     /// Trailed domains, indexed by [`VarId`].
     pub domains: Vec<Domain>,
-    /// `(var, old_lo, old_hi)` — undone in reverse order on backtrack.
-    pub trail: Vec<(u32, u32, u32)>,
+    /// Trailed bound changes — undone in reverse order on backtrack.
+    /// Each entry carries the literal it established plus (when
+    /// explanations are on) the provenance conflict analysis needs.
+    pub trail: Vec<TrailEntry>,
+    /// Explanation state: literal arena, scratch/conflict buffers,
+    /// per-variable latest-entry chain (see `propagators::ExplState`).
+    pub(crate) expl: ExplState,
+    /// Trail length immediately before each decision — `level_marks[i]`
+    /// opens decision level `i + 1` (learned search only).
+    pub(crate) level_marks: Vec<u32>,
+    /// Learned-no-good database: watched bound literals, activity, and
+    /// its own propagation queue drained with the cheap tier.
+    pub(crate) ng: NoGoodDb,
     /// Search statistics (the search layer also counts nodes/conflicts
     /// here so everything lives in one place).
     pub stats: SearchStats,
@@ -174,15 +187,28 @@ fn cumulative_filter(
     // propagator's early return (it filters nothing in this case).
     if !cs.profile.is_empty() {
         if cs.max_load > cs.cap {
-            return Err(Conflict);
+            if ctx.explaining() {
+                // explain the overload at a breakpoint carrying the max
+                // load (current-domain compulsory parts cover at least
+                // what the cached profile registered there)
+                let t = cs
+                    .profile
+                    .iter()
+                    .find(|&&(_, l)| l == cs.max_load)
+                    .map(|&(t, _)| t)
+                    .unwrap_or(cs.profile[0].0);
+                ctx.begin_expl();
+                explain_profile_at(&cs.items, t, usize::MAX, ctx);
+            }
+            return ctx.fail();
         }
         if cs.last_filter_version != cs.version {
-            for it in &cs.items {
-                timetable_filter_item(it, cs.cap, &cs.profile, ctx)?;
+            for ii in 0..cs.items.len() {
+                timetable_filter_item(&cs.items, ii, cs.cap, &cs.profile, ctx)?;
             }
         } else {
             for &ii in &cs.dirty {
-                timetable_filter_item(&cs.items[ii as usize], cs.cap, &cs.profile, ctx)?;
+                timetable_filter_item(&cs.items, ii as usize, cs.cap, &cs.profile, ctx)?;
             }
         }
     }
@@ -199,8 +225,10 @@ fn cumulative_filter(
 impl PropagationEngine {
     /// Build an engine over `model` minimizing `objective` (empty =
     /// satisfaction). `naive` selects the reference re-enqueue-everything
-    /// semantics.
-    pub fn new(model: &Model, objective: &[(i64, VarId)], naive: bool) -> Self {
+    /// semantics; `explain` turns on explanation recording (the learned
+    /// search's requirement — chronological search passes `false` and
+    /// pays nothing).
+    pub fn new(model: &Model, objective: &[(i64, VarId)], naive: bool, explain: bool) -> Self {
         let nvars = model.domains.len();
         let nprops = model.props.len();
         let domains = model.domains.clone();
@@ -255,6 +283,9 @@ impl PropagationEngine {
         PropagationEngine {
             domains,
             trail: Vec::new(),
+            expl: ExplState::new(nvars, explain),
+            level_marks: Vec::new(),
+            ng: NoGoodDb::new(nvars),
             stats: SearchStats::default(),
             events: Vec::new(),
             queue_fast: Vec::with_capacity(nprops + 1),
@@ -308,6 +339,7 @@ impl PropagationEngine {
     fn clear_on_conflict(&mut self) {
         self.queue_fast.clear();
         self.queue_slow.clear();
+        self.ng.clear_queue();
         self.in_queue.iter_mut().for_each(|b| *b = false);
         // pending events of the failing pass are dropped; their trail
         // entries are undone before the next propagation, and the undo
@@ -366,6 +398,9 @@ impl PropagationEngine {
                     self.stats.wakeups_skipped += 1;
                 }
             }
+            // learned no-goods: wake the ones watching a literal this
+            // event may have made true
+            self.ng.on_event(vi as u32, ev.mask);
             if self.has_obj && (self.naive || (self.obj_mask[vi] & ev.mask) != 0) {
                 self.enqueue(self.obj_pid);
             }
@@ -379,11 +414,13 @@ impl PropagationEngine {
 
     /// Run one propagator.
     fn run_prop(&mut self, model: &Model, pid: u32) -> Result<(), Conflict> {
+        self.expl.reason = REASON_PROP;
         if pid == self.obj_pid {
             let mut ctx = Ctx {
                 domains: &mut self.domains,
                 trail: &mut self.trail,
                 changed: &mut self.events,
+                expl: &mut self.expl,
             };
             return prop_linear_le(&self.obj_terms, self.obj_rhs, &mut ctx);
         }
@@ -394,6 +431,7 @@ impl PropagationEngine {
                     domains: &mut self.domains,
                     trail: &mut self.trail,
                     changed: &mut self.events,
+                    expl: &mut self.expl,
                 };
                 return cumulative_filter(cs, &mut ctx, &mut self.stats);
             }
@@ -402,15 +440,36 @@ impl PropagationEngine {
             domains: &mut self.domains,
             trail: &mut self.trail,
             changed: &mut self.events,
+            expl: &mut self.expl,
         };
         model.props[pid as usize].propagate(&mut ctx)
     }
 
-    /// Propagate to fixpoint: drain the cheap tier, then run one
-    /// expensive propagator, repeat. `Err` leaves cleared queues (the
-    /// caller backtracks).
+    /// Run one learned no-good (watched-literal propagation).
+    fn run_nogood(&mut self, gid: u32) -> Result<(), Conflict> {
+        let mut ctx = Ctx {
+            domains: &mut self.domains,
+            trail: &mut self.trail,
+            changed: &mut self.events,
+            expl: &mut self.expl,
+        };
+        self.ng.propagate(gid, &mut ctx, &mut self.stats)
+    }
+
+    /// Propagate to fixpoint: drain the cheap tier (model propagators
+    /// and learned no-goods), then run one expensive propagator,
+    /// repeat. `Err` leaves cleared queues (the caller backtracks).
     pub fn fixpoint(&mut self, model: &Model) -> Result<(), Conflict> {
         loop {
+            if let Some(gid) = self.ng.pop_queue() {
+                self.stats.propagations += 1;
+                if self.run_nogood(gid).is_err() {
+                    self.clear_on_conflict();
+                    return Err(Conflict);
+                }
+                self.drain_events(model);
+                continue;
+            }
             let pid = if let Some(p) = self.queue_fast.pop() {
                 p
             } else if let Some(p) = self.queue_slow.pop() {
@@ -432,10 +491,13 @@ impl PropagationEngine {
     /// Apply the left branch `x = v` and propagate to fixpoint.
     pub fn decide_eq(&mut self, model: &Model, x: VarId, v: i64) -> Result<(), Conflict> {
         let r = {
+            self.expl.reason = REASON_DECISION;
+            self.expl.scratch.clear();
             let mut ctx = Ctx {
                 domains: &mut self.domains,
                 trail: &mut self.trail,
                 changed: &mut self.events,
+                expl: &mut self.expl,
             };
             ctx.fix_var(x, v)
         };
@@ -450,12 +512,94 @@ impl PropagationEngine {
     /// Apply the right branch `x ≥ v` and propagate to fixpoint.
     pub fn decide_ge(&mut self, model: &Model, x: VarId, v: i64) -> Result<(), Conflict> {
         let r = {
+            self.expl.reason = REASON_DECISION;
+            self.expl.scratch.clear();
             let mut ctx = Ctx {
                 domains: &mut self.domains,
                 trail: &mut self.trail,
                 changed: &mut self.events,
+                expl: &mut self.expl,
             };
             ctx.set_min(x, v)
+        };
+        if r.is_err() {
+            self.clear_on_conflict();
+            return Err(Conflict);
+        }
+        self.drain_events(model);
+        self.fixpoint(model)
+    }
+
+    /// Current decision level (number of open decisions; learned search).
+    pub fn current_level(&self) -> usize {
+        self.level_marks.len()
+    }
+
+    /// The decision level that established trail entry `idx`.
+    pub fn level_of(&self, idx: u32) -> usize {
+        self.level_marks.partition_point(|&m| m <= idx)
+    }
+
+    /// Open a new decision level, apply the decision literal `l`, and
+    /// propagate to fixpoint (learned search's branching step — every
+    /// decision is a single bound literal, so its negation is one too).
+    pub fn decide_lit(&mut self, model: &Model, l: Lit) -> Result<(), Conflict> {
+        self.level_marks.push(self.trail.len() as u32);
+        let r = {
+            self.expl.reason = REASON_DECISION;
+            self.expl.scratch.clear();
+            let mut ctx = Ctx {
+                domains: &mut self.domains,
+                trail: &mut self.trail,
+                changed: &mut self.events,
+                expl: &mut self.expl,
+            };
+            if l.is_lb {
+                ctx.set_min(l.var, l.val)
+            } else {
+                ctx.set_max(l.var, l.val)
+            }
+        };
+        if r.is_err() {
+            self.clear_on_conflict();
+            return Err(Conflict);
+        }
+        self.drain_events(model);
+        self.fixpoint(model)
+    }
+
+    /// Undo down to decision level `level` (learned search's backjump),
+    /// keeping learned no-goods and activities.
+    pub fn backjump_to(&mut self, model: &Model, level: usize) {
+        debug_assert!(level <= self.level_marks.len());
+        if level >= self.level_marks.len() {
+            return;
+        }
+        let mark = self.level_marks[level] as usize;
+        self.undo_to(model, mark);
+        self.level_marks.truncate(level);
+    }
+
+    /// Apply `l` as a root-level fact (the assertion of a size-1
+    /// learned no-good) and propagate. `Err` means the root is
+    /// infeasible under the current objective bound — the search space
+    /// is exhausted.
+    pub fn assert_root(&mut self, model: &Model, l: Lit) -> Result<(), Conflict> {
+        debug_assert!(self.level_marks.is_empty());
+        let r = {
+            self.expl.reason = REASON_PROP;
+            self.expl.scratch.clear();
+            let mut ctx = Ctx {
+                domains: &mut self.domains,
+                trail: &mut self.trail,
+                changed: &mut self.events,
+                expl: &mut self.expl,
+            };
+            if l.is_lb {
+                ctx.set_min(l.var, l.val)
+            } else {
+                ctx.set_max(l.var, l.val)
+            }
         };
         if r.is_err() {
             self.clear_on_conflict();
@@ -477,12 +621,22 @@ impl PropagationEngine {
     /// entered. In naive mode every propagator is re-enqueued instead.
     pub fn undo_to(&mut self, model: &Model, mark: usize) {
         while self.trail.len() > mark {
-            let (var, lo, hi) = self.trail.pop().unwrap();
-            self.domains[var as usize].restore((lo, hi));
+            let e = self.trail.pop().unwrap();
+            self.domains[e.var as usize].restore((e.old_lo, e.old_hi));
+            if self.expl.enabled {
+                // keep the provenance meta, per-var entry chain and the
+                // explanation arena in lock-step with the trail
+                // (learned no-good watches need no update: undoing only
+                // makes watched literals less true, which preserves the
+                // invariant)
+                let m = self.expl.meta.pop().unwrap();
+                self.expl.last_entry[e.var as usize] = m.prev;
+                self.expl.arena.truncate(m.expl_start as usize);
+            }
             if self.naive {
                 continue;
             }
-            let vi = var as usize;
+            let vi = e.var as usize;
             for wi in 0..model.watches[vi].len() {
                 let (w, _) = model.watches[vi][wi];
                 self.enqueue(w);

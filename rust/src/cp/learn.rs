@@ -1,0 +1,779 @@
+//! Conflict analysis and no-good learning over bound literals.
+//!
+//! This is the conflict-driven half of the search kernel (after the
+//! lazy-clause-generation design of `plaans/aries` and CP-SAT, see
+//! PAPERS.md): every pruning recorded on the trail carries an
+//! **explanation** — a conjunction of bound predicates
+//! ([`Lit`]: `x ≥ v` / `x ≤ v`) that implied it — and every failure
+//! carries a conflict explanation. [`analyze`] resolves a conflict
+//! backwards over the current decision level to the **first unique
+//! implication point**, producing a bound-predicate **no-good**: a
+//! conjunction of literals that can never again all hold. The no-good
+//! is stored in the [`NoGoodDb`] and enforced by a watched-literal
+//! propagator integrated into the engine's cheap queue tier, so the
+//! search never re-explores a subtree any prefix of which it has
+//! already refuted — including across Luby restarts (each engine's
+//! database lives for its whole solve).
+//!
+//! Soundness invariants (each is load-bearing):
+//! * An explanation recorded for a trail entry only references
+//!   literals true *before* the entry was pushed, so resolution always
+//!   moves strictly backwards in time.
+//! * Literals entailed at decision level 0 (root facts, possibly under
+//!   the monotonically tightening objective bound) are dropped from
+//!   no-goods — they hold for the remainder of the run.
+//! * Decisions are single bound literals ([`crate::cp::SearchStrategy`]'s
+//!   learned mode branches `x ≤ v` / `x ≥ v`), so the 1UIP cut always
+//!   terminates with exactly one current-level literal whose negation
+//!   is again a bound literal.
+//! * Watched literals need no maintenance on backtrack: undoing only
+//!   relaxes bounds, which can never turn a watched non-true literal
+//!   true.
+
+use super::domain::{event, Lit, VarId};
+use super::engine::PropagationEngine;
+use super::propagators::{Conflict, Ctx, REASON_DECISION, REASON_PROP};
+use super::search::SearchStats;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------
+// Luby restart sequence
+// ---------------------------------------------------------------------
+
+/// The Luby sequence `1 1 2 1 1 2 4 1 1 2 1 1 2 4 8 …` (1-indexed):
+/// the conflict budget of restart `i` is `base · luby(i)`. The optimal
+/// universal restart schedule (Luby et al. 1993); learned no-goods and
+/// activities are kept across restarts, so restarting only re-orders
+/// exploration.
+pub(crate) fn luby(mut i: u64) -> u64 {
+    debug_assert!(i >= 1);
+    loop {
+        // find k with 2^k - 1 >= i
+        let mut k = 1u32;
+        while (1u64 << k) - 1 < i {
+            k += 1;
+        }
+        if (1u64 << k) - 1 == i {
+            return 1u64 << (k - 1);
+        }
+        i -= (1u64 << (k - 1)) - 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Variable activities (VSIDS) + branch-position heap
+// ---------------------------------------------------------------------
+
+/// VSIDS-style variable activities: bumped for every variable involved
+/// in a conflict (its explanation literals and resolved entries),
+/// decayed geometrically per conflict via a growing increment, rescaled
+/// before overflow.
+pub(crate) struct VarActivity {
+    act: Vec<f64>,
+    inc: f64,
+    /// Variables bumped since the last [`VarActivity::swap_bumped`] —
+    /// the search re-sifts their heap entries after each analysis.
+    bumped: Vec<u32>,
+}
+
+const ACT_DECAY: f64 = 0.95;
+const ACT_RESCALE: f64 = 1e100;
+
+impl VarActivity {
+    /// Zeroed activities for `nvars` variables.
+    pub fn new(nvars: usize) -> Self {
+        VarActivity { act: vec![0.0; nvars], inc: 1.0, bumped: Vec::new() }
+    }
+
+    /// Activity of `var`.
+    #[inline]
+    pub fn get(&self, var: u32) -> f64 {
+        self.act[var as usize]
+    }
+
+    /// Bump `var` by the current increment (conflict participation).
+    pub fn bump(&mut self, var: VarId) {
+        let v = var.0 as usize;
+        self.act[v] += self.inc;
+        self.bumped.push(var.0);
+        if self.act[v] > ACT_RESCALE {
+            for a in self.act.iter_mut() {
+                *a *= 1.0 / ACT_RESCALE;
+            }
+            self.inc *= 1.0 / ACT_RESCALE;
+        }
+    }
+
+    /// Geometric decay (applied once per conflict): growing the
+    /// increment instead of shrinking every activity.
+    pub fn decay(&mut self) {
+        self.inc *= 1.0 / ACT_DECAY;
+    }
+
+    /// Move the variables bumped since the last call into `out`
+    /// (capacities ping-pong between the two buffers, so steady-state
+    /// conflict handling never reallocates).
+    pub fn swap_bumped(&mut self, out: &mut Vec<u32>) {
+        out.clear();
+        std::mem::swap(&mut self.bumped, out);
+    }
+}
+
+/// Indexed max-heap over branch-order *positions*, keyed by the
+/// activity of the variable at each position (ties broken toward the
+/// earlier position, so zero-activity search degenerates exactly to
+/// the static branch order). Supports the increase-key (`resift`)
+/// needed after conflict bumps.
+pub(crate) struct BranchHeap {
+    heap: Vec<u32>,
+    /// position → index in `heap`, or [`BranchHeap::ABSENT`].
+    loc: Vec<u32>,
+}
+
+impl BranchHeap {
+    const ABSENT: u32 = u32::MAX;
+
+    /// Empty heap over `npos` branch positions.
+    pub fn new(npos: usize) -> Self {
+        BranchHeap { heap: Vec::with_capacity(npos), loc: vec![Self::ABSENT; npos] }
+    }
+
+    /// Whether no position is queued.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Strict priority order: higher activity first, then earlier
+    /// position.
+    #[inline]
+    fn before(a: u32, b: u32, act: &VarActivity, pos_var: &[u32]) -> bool {
+        let (ka, kb) = (act.get(pos_var[a as usize]), act.get(pos_var[b as usize]));
+        ka > kb || (ka == kb && a < b)
+    }
+
+    fn sift_up(&mut self, mut i: usize, act: &VarActivity, pos_var: &[u32]) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::before(self.heap[i], self.heap[parent], act, pos_var) {
+                self.heap.swap(i, parent);
+                self.loc[self.heap[i] as usize] = i as u32;
+                self.loc[self.heap[parent] as usize] = parent as u32;
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize, act: &VarActivity, pos_var: &[u32]) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.heap.len() && Self::before(self.heap[l], self.heap[best], act, pos_var)
+            {
+                best = l;
+            }
+            if r < self.heap.len() && Self::before(self.heap[r], self.heap[best], act, pos_var)
+            {
+                best = r;
+            }
+            if best == i {
+                break;
+            }
+            self.heap.swap(i, best);
+            self.loc[self.heap[i] as usize] = i as u32;
+            self.loc[self.heap[best] as usize] = best as u32;
+            i = best;
+        }
+    }
+
+    /// Queue position `p` (no-op if already queued).
+    pub fn insert(&mut self, p: u32, act: &VarActivity, pos_var: &[u32]) {
+        if self.loc[p as usize] != Self::ABSENT {
+            return;
+        }
+        let i = self.heap.len();
+        self.heap.push(p);
+        self.loc[p as usize] = i as u32;
+        self.sift_up(i, act, pos_var);
+    }
+
+    /// Pop the highest-priority position.
+    pub fn pop(&mut self, act: &VarActivity, pos_var: &[u32]) -> Option<u32> {
+        let top = *self.heap.first()?;
+        self.loc[top as usize] = Self::ABSENT;
+        let last = self.heap.pop().unwrap();
+        if !self.heap.is_empty() {
+            self.heap[0] = last;
+            self.loc[last as usize] = 0;
+            self.sift_down(0, act, pos_var);
+        }
+        Some(top)
+    }
+
+    /// Restore the heap invariant for `p` after its key increased.
+    pub fn resift(&mut self, p: u32, act: &VarActivity, pos_var: &[u32]) {
+        let i = self.loc[p as usize];
+        if i != Self::ABSENT {
+            self.sift_up(i as usize, act, pos_var);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Learned-no-good database with watched bound literals
+// ---------------------------------------------------------------------
+
+/// One learned no-good: a conjunction of bound literals that must
+/// never all hold again. Enforced clause-style — when all but one
+/// literal are true, the negation of the remaining literal is
+/// propagated.
+pub(crate) struct NoGood {
+    /// The forbidden conjunction (assertion literal first at creation).
+    pub lits: Vec<Lit>,
+    /// Indices (into `lits`) of the two watched literals.
+    pub watch: [u32; 2],
+    /// Activity for database reduction (bumped on conflict
+    /// participation, decayed geometrically).
+    pub activity: f64,
+}
+
+/// The learned-constraint database: no-goods, per-variable watch lists
+/// over their watched literals, a propagation queue drained with the
+/// engine's cheap tier, and activity bookkeeping for reduction.
+pub(crate) struct NoGoodDb {
+    /// All live no-goods (ids are indices; reduction re-numbers).
+    pub nogoods: Vec<NoGood>,
+    /// var → `(nogood id, watch slot, lit index)`; an entry is stale —
+    /// and lazily dropped — once the no-good's watch slot moved away
+    /// from that literal.
+    watches: Vec<Vec<(u32, u8, u32)>>,
+    queue: Vec<u32>,
+    in_queue: Vec<bool>,
+    act_inc: f64,
+}
+
+const NG_DECAY: f64 = 0.999;
+
+impl NoGoodDb {
+    /// Empty database over `nvars` variables.
+    pub fn new(nvars: usize) -> Self {
+        NoGoodDb {
+            nogoods: Vec::new(),
+            watches: vec![Vec::new(); nvars],
+            queue: Vec::new(),
+            in_queue: Vec::new(),
+            act_inc: 1.0,
+        }
+    }
+
+    /// Number of stored no-goods.
+    pub fn len(&self) -> usize {
+        self.nogoods.len()
+    }
+
+    /// Park watch 0 of `gid` on literal index `k`, moving watch 1 off
+    /// `k` if the two would collide (shared by the inert and the
+    /// asserting arms of [`NoGoodDb::propagate`]).
+    fn park_watch0(&mut self, gid: u32, k: u32) {
+        self.set_watch(gid, 0, k);
+        if self.nogoods[gid as usize].watch[1] == k {
+            let alt = if k == 0 { 1 } else { 0 };
+            self.set_watch(gid, 1, alt);
+        }
+    }
+
+    /// Point watch `slot` of `gid` at literal index `li`, registering
+    /// the new watch entry (the old entry goes stale and is dropped
+    /// lazily by [`NoGoodDb::on_event`]).
+    fn set_watch(&mut self, gid: u32, slot: usize, li: u32) {
+        let ng = &mut self.nogoods[gid as usize];
+        if ng.watch[slot] == li {
+            return;
+        }
+        ng.watch[slot] = li;
+        let var = ng.lits[li as usize].var.0 as usize;
+        self.watches[var].push((gid, slot as u8, li));
+    }
+
+    /// Store a new no-good (assertion literal first) and enqueue it for
+    /// propagation. Returns its id.
+    pub fn add(&mut self, lits: Vec<Lit>) -> u32 {
+        debug_assert!(lits.len() >= 2, "size-1 no-goods are asserted at the root");
+        let gid = self.nogoods.len() as u32;
+        self.nogoods.push(NoGood {
+            lits,
+            watch: [u32::MAX, u32::MAX],
+            activity: self.act_inc,
+        });
+        self.set_watch(gid, 0, 0);
+        self.set_watch(gid, 1, 1);
+        self.in_queue.push(true);
+        self.queue.push(gid);
+        gid
+    }
+
+    /// Wake no-goods watching a literal on `var` that `mask` may have
+    /// made true; lazily drops stale watch entries.
+    pub fn on_event(&mut self, var: u32, mask: u8) {
+        let list = &mut self.watches[var as usize];
+        if list.is_empty() {
+            return;
+        }
+        let nogoods = &self.nogoods;
+        let (queue, in_queue) = (&mut self.queue, &mut self.in_queue);
+        let mut i = 0;
+        while i < list.len() {
+            let (gid, slot, li) = list[i];
+            let ng = &nogoods[gid as usize];
+            if ng.watch[slot as usize] != li {
+                list.swap_remove(i);
+                continue;
+            }
+            let want = if ng.lits[li as usize].is_lb { event::LB } else { event::UB };
+            if mask & want != 0 && !in_queue[gid as usize] {
+                in_queue[gid as usize] = true;
+                queue.push(gid);
+            }
+            i += 1;
+        }
+    }
+
+    /// Pop the next queued no-good.
+    pub fn pop_queue(&mut self) -> Option<u32> {
+        let gid = self.queue.pop()?;
+        self.in_queue[gid as usize] = false;
+        Some(gid)
+    }
+
+    /// Drop all queued work (conflict path).
+    pub fn clear_queue(&mut self) {
+        for &g in &self.queue {
+            self.in_queue[g as usize] = false;
+        }
+        self.queue.clear();
+    }
+
+    /// Bump a no-good's activity (it participated in a conflict).
+    pub fn bump(&mut self, gid: u32) {
+        let a = &mut self.nogoods[gid as usize].activity;
+        *a += self.act_inc;
+        if *a > ACT_RESCALE {
+            for ng in self.nogoods.iter_mut() {
+                ng.activity *= 1.0 / ACT_RESCALE;
+            }
+            self.act_inc *= 1.0 / ACT_RESCALE;
+        }
+    }
+
+    /// Geometric activity decay (once per conflict).
+    pub fn decay(&mut self) {
+        self.act_inc *= 1.0 / NG_DECAY;
+    }
+
+    /// Propagate no-good `gid`: scan its literals under the current
+    /// domains; if one is false the no-good is inert on this branch, if
+    /// two are unfixed the watches move there, if exactly one is
+    /// unfixed its negation is asserted (explained by the other
+    /// literals), and if all are true the no-good is violated.
+    pub fn propagate(
+        &mut self,
+        gid: u32,
+        ctx: &mut Ctx,
+        stats: &mut SearchStats,
+    ) -> Result<(), Conflict> {
+        let g = gid as usize;
+        let mut unknown: [u32; 2] = [0; 2];
+        let mut n_unknown = 0usize;
+        let mut false_at: Option<u32> = None;
+        {
+            let ng = &self.nogoods[g];
+            for (k, l) in ng.lits.iter().enumerate() {
+                let d = &ctx.domains[l.var.0 as usize];
+                if l.is_false(d) {
+                    false_at = Some(k as u32);
+                    break;
+                }
+                if !l.is_true(d) {
+                    if n_unknown < 2 {
+                        unknown[n_unknown] = k as u32;
+                    }
+                    n_unknown += 1;
+                    if n_unknown == 2 {
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(k) = false_at {
+            // a falsified literal makes the conjunction unviolatable on
+            // this branch: park a watch on it (it stays non-true until
+            // undone, which preserves the watch invariant)
+            self.park_watch0(gid, k);
+            return Ok(());
+        }
+        match n_unknown {
+            0 => {
+                // every literal holds → the no-good is violated
+                if ctx.explaining() {
+                    ctx.begin_expl();
+                    for i in 0..self.nogoods[g].lits.len() {
+                        let l = self.nogoods[g].lits[i];
+                        ctx.expl_push(l);
+                    }
+                }
+                ctx.fail()
+            }
+            1 => {
+                // all but one hold → assert the negation of the rest
+                let k = unknown[0];
+                let lit = self.nogoods[g].lits[k as usize];
+                if ctx.explaining() {
+                    ctx.begin_expl();
+                    for i in 0..self.nogoods[g].lits.len() {
+                        if i != k as usize {
+                            let l = self.nogoods[g].lits[i];
+                            ctx.expl_push(l);
+                        }
+                    }
+                }
+                self.park_watch0(gid, k);
+                stats.nogoods_pruned += 1;
+                let neg = lit.negation();
+                ctx.expl.reason = gid;
+                let r = if neg.is_lb {
+                    ctx.set_min(neg.var, neg.val)
+                } else {
+                    ctx.set_max(neg.var, neg.val)
+                };
+                ctx.expl.reason = REASON_PROP;
+                r
+            }
+            _ => {
+                // two unfixed literals: watch them
+                self.set_watch(gid, 0, unknown[0]);
+                self.set_watch(gid, 1, unknown[1]);
+                Ok(())
+            }
+        }
+    }
+
+    /// Activity-based reduction: drop the lower-activity half of the
+    /// no-goods longer than 2 literals (binary no-goods are cheap and
+    /// strong). Must run with the trail at the root — no trail entry
+    /// may reference a no-good id afterwards — which the learned search
+    /// guarantees by reducing only at restarts.
+    pub fn reduce(&mut self) {
+        let mut long_acts: Vec<f64> = self
+            .nogoods
+            .iter()
+            .filter(|ng| ng.lits.len() > 2)
+            .map(|ng| ng.activity)
+            .collect();
+        if long_acts.is_empty() {
+            return;
+        }
+        long_acts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let threshold = long_acts[long_acts.len() / 2];
+        let old = std::mem::take(&mut self.nogoods);
+        for w in self.watches.iter_mut() {
+            w.clear();
+        }
+        self.queue.clear();
+        self.in_queue.clear();
+        for ng in old {
+            if ng.lits.len() <= 2 || ng.activity >= threshold {
+                let gid = self.nogoods.len() as u32;
+                self.nogoods.push(NoGood { watch: [u32::MAX, u32::MAX], ..ng });
+                // re-enqueue: the fresh watches point at arbitrary
+                // literals, and a kept no-good may even be unit (or
+                // violated) at the restart root under the tightened
+                // objective bound — one propagation pass re-parks every
+                // watch correctly instead of waiting for an unrelated
+                // event
+                self.in_queue.push(true);
+                self.queue.push(gid);
+                self.set_watch(gid, 0, 0);
+                self.set_watch(gid, 1, 1);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Conflict analysis (first unique implication point)
+// ---------------------------------------------------------------------
+
+/// Result of conflict analysis.
+pub(crate) enum Analyzed {
+    /// The conflict holds at decision level 0: the search space is
+    /// exhausted under the current objective bound.
+    Root,
+    /// A learned no-good. `lits[0]` is the assertion literal (the 1UIP,
+    /// made true at the conflicting level); after backjumping to
+    /// `level`, the no-good propagates its negation.
+    NoGood {
+        /// The forbidden conjunction, assertion literal first.
+        lits: Vec<Lit>,
+        /// Backjump level (highest level among the non-assertion
+        /// literals; 0 when the no-good is otherwise empty).
+        level: usize,
+    },
+}
+
+/// Earliest trail entry whose recorded bound entails `l`, or `None`
+/// when `l` already holds in the root domain. Precondition: `l` is
+/// currently true (explanation/conflict literals always are at
+/// analysis time). Walks the per-variable entry chain newest→oldest;
+/// the first entry whose *pre-change* bound no longer entails `l` is
+/// the one that established it.
+fn entailing_entry(eng: &PropagationEngine, l: Lit) -> Option<u32> {
+    let mut cur = eng.expl.last_entry[l.var.0 as usize];
+    while cur != super::propagators::NO_ENTRY {
+        let m = &eng.expl.meta[cur as usize];
+        if m.lit.is_lb == l.is_lb {
+            let prev_entails =
+                if l.is_lb { m.old_val >= l.val } else { m.old_val <= l.val };
+            if !prev_entails {
+                debug_assert!(
+                    if l.is_lb { m.lit.val >= l.val } else { m.lit.val <= l.val },
+                    "chain walk passed a non-entailing entry for a true literal"
+                );
+                return Some(cur);
+            }
+        }
+        cur = m.prev;
+    }
+    None
+}
+
+/// Lower-level literals of the no-good under construction, merged per
+/// (variable, kind): for a conjunction, two lower bounds merge to the
+/// larger, two upper bounds to the smaller.
+#[derive(Default)]
+struct OutLits {
+    lb: BTreeMap<u32, i64>,
+    ub: BTreeMap<u32, i64>,
+}
+
+impl OutLits {
+    fn merge(&mut self, l: Lit) {
+        if l.is_lb {
+            self.lb
+                .entry(l.var.0)
+                .and_modify(|v| *v = (*v).max(l.val))
+                .or_insert(l.val);
+        } else {
+            self.ub
+                .entry(l.var.0)
+                .and_modify(|v| *v = (*v).min(l.val))
+                .or_insert(l.val);
+        }
+    }
+}
+
+/// Route one literal of the working conjunction: drop it if root-level,
+/// mark its entailing trail entry if at the conflicting level, merge it
+/// into the lower-level set otherwise. Bumps the variable's activity
+/// (conflict participation).
+#[allow(clippy::too_many_arguments)]
+fn route_lit(
+    eng: &PropagationEngine,
+    l: Lit,
+    base: usize,
+    mark: &mut [bool],
+    count: &mut usize,
+    out: &mut OutLits,
+    act: &mut VarActivity,
+) {
+    let Some(idx) = entailing_entry(eng, l) else {
+        return; // true in the root domain: adds nothing
+    };
+    if eng.level_of(idx) == 0 {
+        return; // root fact (level-0 propagation): holds for the run
+    }
+    act.bump(l.var);
+    if (idx as usize) >= base {
+        if !mark[idx as usize - base] {
+            mark[idx as usize - base] = true;
+            *count += 1;
+        }
+    } else {
+        out.merge(l);
+    }
+}
+
+/// Resolve the current conflict (explanation in `conflict`) to the
+/// first unique implication point, producing a learned no-good and its
+/// backjump level, or [`Analyzed::Root`] when the conflict needs no
+/// decision. Bumps variable activities along the way; the ids of
+/// no-goods whose propagations were resolved through are appended to
+/// `ng_bumps` (the caller bumps them — `analyze` borrows the engine
+/// shared, so it cannot touch the engine-owned database itself).
+pub(crate) fn analyze(
+    eng: &PropagationEngine,
+    conflict: &[Lit],
+    act: &mut VarActivity,
+    ng_bumps: &mut Vec<u32>,
+    mark_buf: &mut Vec<bool>,
+) -> Analyzed {
+    let cur = eng.current_level();
+    if cur == 0 {
+        return Analyzed::Root;
+    }
+    let base = eng.level_marks[cur - 1] as usize;
+    let tlen = eng.trail.len();
+    // reuse the caller's mark buffer: analysis runs once per conflict,
+    // and this span allocation would otherwise dominate its cost
+    mark_buf.clear();
+    mark_buf.resize(tlen - base, false);
+    let mark = mark_buf;
+    let mut count = 0usize;
+    let mut out = OutLits::default();
+    for &l in conflict {
+        route_lit(eng, l, base, mark, &mut count, &mut out, act);
+    }
+
+    // Resolution: repeatedly replace the newest current-level literal
+    // by its explanation until one remains (the 1UIP). Decisions are
+    // single literals sitting at the level start, so they can only be
+    // reached last — i.e. as the UIP itself.
+    let mut assertion: Option<Lit> = None;
+    let mut kept: Vec<Lit> = Vec::new();
+    let mut scan = tlen;
+    while count > 0 {
+        let mut i = scan;
+        loop {
+            i -= 1;
+            if mark[i - base] {
+                break;
+            }
+        }
+        scan = i;
+        let m = &eng.expl.meta[i];
+        mark[i - base] = false;
+        count -= 1;
+        if count == 0 {
+            // exactly one current-level literal left: the UIP
+            if m.reason != REASON_PROP && m.reason != REASON_DECISION {
+                ng_bumps.push(m.reason);
+            }
+            assertion = Some(m.lit);
+            break;
+        }
+        if m.reason == REASON_DECISION {
+            // Structurally unreachable: the decision is the level's
+            // first entry, so every other current-level literal is
+            // resolved before the scan reaches it (making it the UIP
+            // above). Keeping the literal stays sound if it ever fires.
+            debug_assert!(false, "decision reached while other current-level literals pend");
+            kept.push(m.lit);
+            continue;
+        }
+        if m.reason != REASON_PROP {
+            ng_bumps.push(m.reason);
+        }
+        let (s, n) = (m.expl_start as usize, m.expl_len as usize);
+        for k in s..s + n {
+            let l = eng.expl.arena[k];
+            route_lit(eng, l, base, mark, &mut count, &mut out, act);
+        }
+    }
+
+    // Collect the lower-level literals with their levels.
+    let mut rest: Vec<(usize, Lit)> = Vec::with_capacity(out.lb.len() + out.ub.len());
+    for (&v, &val) in out.lb.iter() {
+        let l = Lit::geq(VarId(v), val);
+        let idx = entailing_entry(eng, l).expect("merged literal lost its entry");
+        rest.push((eng.level_of(idx), l));
+    }
+    for (&v, &val) in out.ub.iter() {
+        let l = Lit::leq(VarId(v), val);
+        let idx = entailing_entry(eng, l).expect("merged literal lost its entry");
+        rest.push((eng.level_of(idx), l));
+    }
+
+    let assertion = match assertion {
+        Some(a) => a,
+        None if !kept.is_empty() => kept.pop().unwrap(),
+        None => {
+            // No current-level literal at all (e.g. a conflict fired by
+            // an in-place objective tightening after a solution): the
+            // deepest lower-level literal becomes the assertion.
+            if rest.is_empty() {
+                return Analyzed::Root;
+            }
+            let deepest = rest
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &(lvl, _))| lvl)
+                .map(|(i, _)| i)
+                .unwrap();
+            rest.swap_remove(deepest).1
+        }
+    };
+
+    // Drop lower-level literals the assertion already entails (same
+    // variable and kind, weaker bound) and compute the backjump level.
+    rest.retain(|&(_, l)| {
+        !(l.var == assertion.var
+            && l.is_lb == assertion.is_lb
+            && if l.is_lb { assertion.val >= l.val } else { assertion.val <= l.val })
+    });
+    // Deterministic literal order (BTreeMap iteration is ordered, but
+    // make the level-major order explicit for stable no-goods).
+    rest.sort_by_key(|&(lvl, l)| (lvl, l.var.0, l.is_lb));
+    let level = if kept.is_empty() {
+        rest.iter().map(|&(lvl, _)| lvl).max().unwrap_or(0)
+    } else {
+        cur - 1 // degenerate multi-literal cut: chronological step
+    };
+    let mut lits = Vec::with_capacity(1 + kept.len() + rest.len());
+    lits.push(assertion);
+    lits.append(&mut kept);
+    lits.extend(rest.into_iter().map(|(_, l)| l));
+    Analyzed::NoGood { lits, level }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn luby_prefix_is_canonical() {
+        let want = [1u64, 1, 2, 1, 1, 2, 4, 1, 1, 2, 1, 1, 2, 4, 8];
+        let got: Vec<u64> = (1..=want.len() as u64).map(luby).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn branch_heap_orders_by_activity_then_position() {
+        let pos_var: Vec<u32> = vec![0, 1, 2, 3];
+        let mut act = VarActivity::new(4);
+        let mut h = BranchHeap::new(4);
+        for p in 0..4 {
+            h.insert(p, &act, &pos_var);
+        }
+        // equal activities → static order
+        assert_eq!(h.pop(&act, &pos_var), Some(0));
+        // bump var 2 → its position jumps the queue
+        act.bump(VarId(2));
+        h.resift(2, &act, &pos_var);
+        assert_eq!(h.pop(&act, &pos_var), Some(2));
+        assert_eq!(h.pop(&act, &pos_var), Some(1));
+        assert_eq!(h.pop(&act, &pos_var), Some(3));
+        assert!(h.is_empty());
+        // re-insertion is idempotent
+        h.insert(1, &act, &pos_var);
+        h.insert(1, &act, &pos_var);
+        assert_eq!(h.pop(&act, &pos_var), Some(1));
+        assert!(h.pop(&act, &pos_var).is_none());
+    }
+
+    #[test]
+    fn lit_negation_roundtrip() {
+        let l = Lit::geq(VarId(3), 5);
+        assert_eq!(l.negation(), Lit::leq(VarId(3), 4));
+        assert_eq!(l.negation().negation(), l);
+    }
+}

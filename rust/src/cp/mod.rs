@@ -27,13 +27,22 @@
 //!   compulsory parts, updated from events and re-synchronised on
 //!   backtrack) so the profile is never rebuilt from scratch inside the
 //!   search loop.
-//! * **Search** is DFS with chronological backtracking, first-unfixed
-//!   variable selection via a trailed pointer over a caller-supplied
-//!   branch order, min-value-first branching (`x = min` / `x ≥ min+1`),
-//!   and branch-and-bound on a linear objective implemented as one
-//!   persistent propagator whose rhs tightens in place. Backtracking
+//! * **Search** comes in two strategies (see [`SearchStrategy`]). The
+//!   *chronological* baseline is DFS with first-unfixed variable
+//!   selection via a trailed pointer over a caller-supplied branch
+//!   order, min-value-first branching (`x = min` / `x ≥ min+1`), and
+//!   branch-and-bound on a linear objective implemented as one
+//!   persistent propagator whose rhs tightens in place; backtracking
 //!   re-enqueues only the propagators watching undone variables plus
-//!   the objective, instead of the whole propagator set.
+//!   the objective. The *learned* strategy is conflict-driven
+//!   (`learn.rs`): every pruning and failure carries an explanation —
+//!   a conjunction of bound predicates ([`Lit`]) — which 1UIP conflict
+//!   analysis resolves into learned no-goods propagated by watched
+//!   literals, with VSIDS activity branching, solution-phase value
+//!   saving, and Luby restarts that keep learned state. Both
+//!   strategies are exact and report identical optima; learned search
+//!   reaches them in fewer branch decisions because no-goods prune
+//!   symmetric retention-interval orderings presolve cannot remove.
 //!
 //! The engine is deliberately small but complete: every solution it emits
 //! is checked against all constraints (`Model::check`), and the MOCCASIN
@@ -42,12 +51,13 @@
 
 mod domain;
 mod engine;
+mod learn;
 mod propagators;
 mod search;
 
-pub use domain::{event, Domain, DomainEvent, VarId};
+pub use domain::{event, Domain, DomainEvent, Lit, VarId};
 pub use propagators::{CumItem, Propagator};
-pub use search::{SearchResult, SearchStats, Solver, Status};
+pub use search::{SearchMode, SearchResult, SearchStats, SearchStrategy, Solver, Status};
 
 use std::sync::Arc;
 

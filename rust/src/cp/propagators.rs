@@ -7,8 +7,100 @@
 //! exactness of the solver comes from search; the final check makes
 //! soundness unconditional.
 
-use super::domain::{event, Domain, DomainEvent, VarId};
+use super::domain::{event, Domain, DomainEvent, Lit, VarId};
 use std::sync::Arc;
+
+/// One trailed bound change: exactly the restore data the undo path
+/// reads. Provenance for conflict analysis lives in a *parallel*
+/// [`TrailMeta`] vector inside [`ExplState`], filled only when
+/// explanations are enabled — the chronological / naive hot path keeps
+/// the lean 12-byte entry and pays nothing for the learned machinery.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TrailEntry {
+    /// The variable whose bounds changed.
+    pub var: u32,
+    /// Trailed low index bound to restore on undo.
+    pub old_lo: u32,
+    /// Trailed high index bound to restore on undo.
+    pub old_hi: u32,
+}
+
+/// Provenance of one trail entry (parallel to the trail; learned
+/// search only): what bound predicate the entry established and what
+/// implied it — everything 1UIP conflict analysis (`cp::learn`) reads.
+#[derive(Debug, Clone)]
+pub(crate) struct TrailMeta {
+    /// The bound predicate this entry established (post-snap value).
+    pub lit: Lit,
+    /// Value of the same bound *before* the change (previous min for an
+    /// LB entry, previous max for a UB entry) — lets analysis detect
+    /// root-entailed literals without replaying the trail.
+    pub old_val: i64,
+    /// Previous trail index writing the same variable ([`NO_ENTRY`] =
+    /// none).
+    pub prev: u32,
+    /// Explanation window start `[expl_start, expl_start + expl_len)`
+    /// into the engine's literal arena (empty for decisions / root
+    /// facts).
+    pub expl_start: u32,
+    /// Explanation window length.
+    pub expl_len: u32,
+    /// [`REASON_DECISION`], [`REASON_PROP`], or the id of the learned
+    /// no-good whose propagation set this bound (for activity bumping).
+    pub reason: u32,
+}
+
+/// `TrailEntry::prev` sentinel: no earlier entry writes this variable.
+pub(crate) const NO_ENTRY: u32 = u32::MAX;
+/// `TrailEntry::reason`: the entry is a search decision (unexplainable;
+/// conflict analysis keeps its literal in the no-good).
+pub(crate) const REASON_DECISION: u32 = u32::MAX;
+/// `TrailEntry::reason`: the entry was set by a model propagator (its
+/// explanation, if any, lives in the arena window).
+pub(crate) const REASON_PROP: u32 = u32::MAX - 1;
+
+/// Explanation state shared by the engine and every propagation pass:
+/// the literal arena (explanations of trail entries), the scratch
+/// buffer propagators fill before each tightening, the conflict
+/// explanation of the latest failure, and the per-variable latest
+/// trail entry index. All dormant when `enabled` is false
+/// (chronological / naive search skips every explanation cost).
+#[derive(Debug, Default)]
+pub(crate) struct ExplState {
+    /// Per-entry provenance, parallel to the trail (pushed/popped in
+    /// lock-step with it when `enabled`).
+    pub meta: Vec<TrailMeta>,
+    /// Flat arena of explanation literals; trail metas hold windows
+    /// into it, and it is truncated in lock-step with the trail.
+    pub arena: Vec<Lit>,
+    /// Scratch explanation for the *next* tightening; copied into the
+    /// arena by `Ctx::set_min` / `Ctx::set_max` on success.
+    pub scratch: Vec<Lit>,
+    /// Explanation of the most recent conflict (filled on failure).
+    pub conflict: Vec<Lit>,
+    /// var → latest trail entry index writing it ([`NO_ENTRY`] = none).
+    pub last_entry: Vec<u32>,
+    /// Reason tag stamped on entries pushed by the current pass.
+    pub reason: u32,
+    /// Whether explanations are recorded at all.
+    pub enabled: bool,
+}
+
+impl ExplState {
+    /// Fresh state for `nvars` variables; `enabled` selects whether any
+    /// explanation work happens.
+    pub fn new(nvars: usize, enabled: bool) -> Self {
+        ExplState {
+            meta: Vec::new(),
+            arena: Vec::new(),
+            scratch: Vec::new(),
+            conflict: Vec::new(),
+            last_entry: if enabled { vec![NO_ENTRY; nvars] } else { Vec::new() },
+            reason: REASON_PROP,
+            enabled,
+        }
+    }
+}
 
 /// One optional interval contributing `demand` to a cumulative resource
 /// while active over `[start, end]` (inclusive, as in the paper: the
@@ -51,15 +143,19 @@ pub enum Propagator {
 /// Conflict marker.
 pub struct Conflict;
 
-/// Mutable propagation context: domains + trail + typed event log.
+/// Mutable propagation context: domains + trail + typed event log +
+/// explanation state.
 pub struct Ctx<'a> {
     /// All variable domains, indexed by [`VarId`].
     pub domains: &'a mut [Domain],
-    /// (var, old_lo, old_hi) — undone in reverse order on backtrack.
-    pub trail: &'a mut Vec<(u32, u32, u32)>,
+    /// Trailed bound changes — undone in reverse order on backtrack.
+    pub(crate) trail: &'a mut Vec<TrailEntry>,
     /// Typed domain events posted during the current pass (drained by
     /// the propagation engine after the propagator returns).
     pub changed: &'a mut Vec<DomainEvent>,
+    /// Explanation state (arena/scratch/conflict buffers); dormant when
+    /// explanations are disabled.
+    pub(crate) expl: &'a mut ExplState,
 }
 
 impl<'a> Ctx<'a> {
@@ -67,6 +163,57 @@ impl<'a> Ctx<'a> {
     #[inline]
     pub fn dom(&self, x: VarId) -> &Domain {
         &self.domains[x.0 as usize]
+    }
+
+    /// Whether explanations are being recorded — propagators gate every
+    /// explanation-literal computation on this so the chronological /
+    /// naive paths pay nothing.
+    #[inline]
+    pub fn explaining(&self) -> bool {
+        self.expl.enabled
+    }
+
+    /// Start a fresh scratch explanation for the next tightening(s).
+    #[inline]
+    pub fn begin_expl(&mut self) {
+        self.expl.scratch.clear();
+    }
+
+    /// Append one literal to the scratch explanation.
+    #[inline]
+    pub fn expl_push(&mut self, l: Lit) {
+        self.expl.scratch.push(l);
+    }
+
+    /// Fail the current pass with the scratch buffer as the conflict
+    /// explanation (for failures detected without a bound wipe-out,
+    /// e.g. a negative slack or an uncoverable active target).
+    pub fn fail(&mut self) -> Result<(), Conflict> {
+        if self.expl.enabled {
+            std::mem::swap(&mut self.expl.conflict, &mut self.expl.scratch);
+        }
+        Err(Conflict)
+    }
+
+    /// Push the trail entry for a successful tightening of `x`; when
+    /// explaining, also copy the scratch explanation into the arena and
+    /// record the provenance meta.
+    fn push_entry(&mut self, x: VarId, old: (u32, u32), lit: Lit, old_val: i64) {
+        if self.expl.enabled {
+            let expl_start = self.expl.arena.len() as u32;
+            self.expl.arena.extend_from_slice(&self.expl.scratch);
+            let idx = self.trail.len() as u32;
+            let prev = std::mem::replace(&mut self.expl.last_entry[x.0 as usize], idx);
+            self.expl.meta.push(TrailMeta {
+                lit,
+                old_val,
+                prev,
+                expl_start,
+                expl_len: self.expl.scratch.len() as u32,
+                reason: self.expl.reason,
+            });
+        }
+        self.trail.push(TrailEntry { var: x.0, old_lo: old.0, old_hi: old.1 });
     }
 
     /// Lower bound of `x`.
@@ -90,17 +237,28 @@ impl<'a> Ctx<'a> {
     /// x ≥ v.
     pub fn set_min(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
         let d = &mut self.domains[x.0 as usize];
+        let old_min = d.min();
         let (lo, hi) = d.bounds();
         match d.remove_below(v) {
             Ok(true) => {
                 let mask = event::LB | if d.is_fixed() { event::FIX } else { 0 };
-                self.trail.push((x.0, lo, hi));
+                // post-snap value: explicit domains may skip holes; the
+                // extra strength over `v` is a root-domain fact, so the
+                // scratch explanation still covers the recorded literal
+                let lit = Lit::geq(x, d.min());
+                self.push_entry(x, (lo, hi), lit, old_min);
                 self.changed.push(DomainEvent { var: x, mask });
                 Ok(())
             }
             Ok(false) => Ok(()),
             Err(()) => {
                 d.restore((lo, hi));
+                if self.expl.enabled {
+                    // scratch ⟹ x ≥ v, which contradicts x ≤ max(x)
+                    let ub = Lit::leq(x, self.domains[x.0 as usize].max());
+                    std::mem::swap(&mut self.expl.conflict, &mut self.expl.scratch);
+                    self.expl.conflict.push(ub);
+                }
                 Err(Conflict)
             }
         }
@@ -109,17 +267,24 @@ impl<'a> Ctx<'a> {
     /// x ≤ v.
     pub fn set_max(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
         let d = &mut self.domains[x.0 as usize];
+        let old_max = d.max();
         let (lo, hi) = d.bounds();
         match d.remove_above(v) {
             Ok(true) => {
                 let mask = event::UB | if d.is_fixed() { event::FIX } else { 0 };
-                self.trail.push((x.0, lo, hi));
+                let lit = Lit::leq(x, d.max());
+                self.push_entry(x, (lo, hi), lit, old_max);
                 self.changed.push(DomainEvent { var: x, mask });
                 Ok(())
             }
             Ok(false) => Ok(()),
             Err(()) => {
                 d.restore((lo, hi));
+                if self.expl.enabled {
+                    let lb = Lit::geq(x, self.domains[x.0 as usize].min());
+                    std::mem::swap(&mut self.expl.conflict, &mut self.expl.scratch);
+                    self.expl.conflict.push(lb);
+                }
                 Err(Conflict)
             }
         }
@@ -202,13 +367,36 @@ impl Propagator {
                         // guard undetermined: only check for entailment of
                         // infeasibility → b must be 0
                         if ctx.min(*x) + c > ctx.max(*y) {
+                            if ctx.explaining() {
+                                ctx.begin_expl();
+                                let lx = Lit::geq(*x, ctx.min(*x));
+                                let ly = Lit::leq(*y, ctx.max(*y));
+                                ctx.expl_push(lx);
+                                ctx.expl_push(ly);
+                            }
                             return ctx.set_max(*b, 0);
                         }
                         return Ok(());
                     }
                 }
                 // enforce x + c <= y
+                if ctx.explaining() {
+                    ctx.begin_expl();
+                    let lx = Lit::geq(*x, ctx.min(*x));
+                    ctx.expl_push(lx);
+                    if let Some(b) = b {
+                        ctx.expl_push(Lit::geq(*b, 1));
+                    }
+                }
                 ctx.set_min(*y, ctx.min(*x) + c)?;
+                if ctx.explaining() {
+                    ctx.begin_expl();
+                    let ly = Lit::leq(*y, ctx.max(*y));
+                    ctx.expl_push(ly);
+                    if let Some(b) = b {
+                        ctx.expl_push(Lit::geq(*b, 1));
+                    }
+                }
                 ctx.set_max(*x, ctx.max(*y) - c)
             }
             Propagator::Cumulative { items, cap } => prop_cumulative(items, *cap, ctx),
@@ -275,6 +463,26 @@ pub(crate) fn prop_linear_le(
     rhs: i64,
     ctx: &mut Ctx,
 ) -> Result<(), Conflict> {
+    // Explanation of the slack computation: the bound each term
+    // contributes through. `skip` omits the pruned variable itself —
+    // `min(v) + ⌊slack/c⌋` equals the bound implied by the *other*
+    // terms alone, so the pruned variable's own bound is not part of
+    // the reason.
+    fn explain_slack(terms: &[(i64, VarId)], skip: Option<VarId>, ctx: &mut Ctx) {
+        ctx.begin_expl();
+        for &(c, v) in terms {
+            if Some(v) == skip {
+                continue;
+            }
+            if c > 0 {
+                let l = Lit::geq(v, ctx.min(v));
+                ctx.expl_push(l);
+            } else if c < 0 {
+                let l = Lit::leq(v, ctx.max(v));
+                ctx.expl_push(l);
+            }
+        }
+    }
     // min possible sum
     let mut minsum: i64 = 0;
     for &(c, v) in terms {
@@ -282,19 +490,28 @@ pub(crate) fn prop_linear_le(
     }
     let slack = rhs - minsum;
     if slack < 0 {
-        return Err(Conflict);
+        if ctx.explaining() {
+            explain_slack(terms, None, ctx);
+        }
+        return ctx.fail();
     }
     for &(c, v) in terms {
         if c > 0 {
             let room = slack / c;
             let ub = ctx.min(v) + room;
             if ub < ctx.max(v) {
+                if ctx.explaining() {
+                    explain_slack(terms, Some(v), ctx);
+                }
                 ctx.set_max(v, ub)?;
             }
         } else if c < 0 {
             let room = slack / (-c);
             let lb = ctx.max(v) - room;
             if lb > ctx.min(v) {
+                if ctx.explaining() {
+                    explain_slack(terms, Some(v), ctx);
+                }
                 ctx.set_min(v, lb)?;
             }
         }
@@ -313,17 +530,52 @@ pub(crate) fn profile_load_at(profile: &[(i64, i64)], t: i64) -> i64 {
     }
 }
 
-/// Timetable filtering of one cumulative item against a compulsory-part
-/// profile, subtracting the item's own mandatory contribution. This is
-/// the single filtering implementation: the naive propagator calls it
-/// with a freshly built profile, the engine with its incrementally
-/// maintained one — so the two paths cannot drift apart.
+/// Push the explanation of the compulsory-part load at time `t` into
+/// the scratch buffer (callers `begin_expl` first): for every item
+/// whose compulsory part under the *current* domains covers `t`, the
+/// literals making it so. Current-domain parts are supersets of the
+/// parts any (possibly slightly stale) profile was built from, so the
+/// pushed conjunction always implies at least the profile's load at
+/// `t` — sound for explaining overloads from either the naive or the
+/// incremental profile.
+pub(crate) fn explain_profile_at(
+    items: &[CumItem],
+    t: i64,
+    except: usize,
+    ctx: &mut Ctx,
+) {
+    for (j, it) in items.iter().enumerate() {
+        if j == except || it.demand == 0 {
+            continue;
+        }
+        if ctx.min(it.active) != 1 {
+            continue;
+        }
+        let ms = ctx.max(it.start);
+        let me = ctx.min(it.end);
+        if ms <= me && ms <= t && t <= me {
+            ctx.expl_push(Lit::geq(it.active, 1));
+            ctx.expl_push(Lit::leq(it.start, ms));
+            ctx.expl_push(Lit::geq(it.end, me));
+        }
+    }
+}
+
+/// Timetable filtering of one cumulative item (`items[ii]`) against a
+/// compulsory-part profile, subtracting the item's own mandatory
+/// contribution. This is the single filtering implementation: the naive
+/// propagator calls it with a freshly built profile, the engine with
+/// its incrementally maintained one — so the two paths cannot drift
+/// apart. The full item list rides along so prunings can be explained
+/// by the profile's contributing items.
 pub(crate) fn timetable_filter_item(
-    it: &CumItem,
+    items: &[CumItem],
+    ii: usize,
     cap: i64,
     profile: &[(i64, i64)],
     ctx: &mut Ctx,
 ) -> Result<(), Conflict> {
+    let it = &items[ii];
     if ctx.max(it.active) == 0 {
         return Ok(());
     }
@@ -349,10 +601,22 @@ pub(crate) fn timetable_filter_item(
             if profile_load_at(profile, s) - own(ms, me, true, s) + d <= cap {
                 break;
             }
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(it.active, 1));
+                ctx.expl_push(Lit::geq(it.start, s));
+                explain_profile_at(items, s, ii, ctx);
+            }
             ctx.set_min(it.start, s + 1)?;
-            // keep interval consistent: end >= start
+            // keep interval consistent: end >= start (constraint (2)
+            // pairs every active cumulative item with start ≤ end)
             let s2 = ctx.min(it.start);
             if ctx.min(it.end) < s2 {
+                if ctx.explaining() {
+                    ctx.begin_expl();
+                    ctx.expl_push(Lit::geq(it.active, 1));
+                    ctx.expl_push(Lit::geq(it.start, s2));
+                }
                 ctx.set_min(it.end, s2)?;
             }
             guard += 1;
@@ -368,9 +632,20 @@ pub(crate) fn timetable_filter_item(
             if profile_load_at(profile, e) - own(ms, me, true, e) + d <= cap {
                 break;
             }
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(it.active, 1));
+                ctx.expl_push(Lit::leq(it.end, e));
+                explain_profile_at(items, e, ii, ctx);
+            }
             ctx.set_max(it.end, e - 1)?;
             let e2 = ctx.max(it.end);
             if ctx.max(it.start) > e2 {
+                if ctx.explaining() {
+                    ctx.begin_expl();
+                    ctx.expl_push(Lit::geq(it.active, 1));
+                    ctx.expl_push(Lit::leq(it.end, e2));
+                }
                 ctx.set_max(it.start, e2)?;
             }
             guard += 1;
@@ -383,19 +658,27 @@ pub(crate) fn timetable_filter_item(
         let s = ctx.min(it.start);
         let e = ctx.min(it.end);
         // check only at profile breakpoints within [s, e] plus s
-        let mut over = profile_load_at(profile, s) + d > cap;
-        if !over {
+        let mut over = (profile_load_at(profile, s) + d > cap).then_some(s);
+        if over.is_none() {
             for &(t, l) in profile {
                 if t > e {
                     break;
                 }
                 if t >= s && l + d > cap {
-                    over = true;
+                    over = Some(t);
                     break;
                 }
             }
         }
-        if over {
+        if let Some(t) = over {
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(it.start, s));
+                ctx.expl_push(Lit::leq(it.start, s));
+                ctx.expl_push(Lit::geq(it.end, e));
+                ctx.expl_push(Lit::leq(it.end, e));
+                explain_profile_at(items, t, ii, ctx);
+            }
             ctx.set_max(it.active, 0)?;
         }
     }
@@ -438,14 +721,44 @@ fn prop_cumulative(items: &[CumItem], cap: i64, ctx: &mut Ctx) -> Result<(), Con
         }
         profile.push((t, load));
         if load > cap {
-            return Err(Conflict);
+            if ctx.explaining() {
+                ctx.begin_expl();
+                explain_profile_at(items, t, usize::MAX, ctx);
+            }
+            return ctx.fail();
         }
     }
     // Filter each potentially-active interval against the profile.
-    for it in items {
-        timetable_filter_item(it, cap, &profile, ctx)?;
+    for ii in 0..items.len() {
+        timetable_filter_item(items, ii, cap, &profile, ctx)?;
     }
     Ok(())
+}
+
+/// Push why candidate `j` cannot cover any value of `start`'s current
+/// domain: its activation is off, its window starts too late, or it
+/// ends too early (each case referencing the target-side bound that
+/// closes the window). Used to explain every `Cover` inference.
+fn push_cover_exclusion(
+    start: VarId,
+    candidates: &[(VarId, VarId, VarId)],
+    j: usize,
+    ctx: &mut Ctx,
+) {
+    let (a, s, e) = candidates[j];
+    if ctx.max(a) == 0 {
+        ctx.expl_push(Lit::leq(a, 0));
+    } else if ctx.min(s) + 1 > ctx.max(start) {
+        let ls = Lit::geq(s, ctx.min(s));
+        let lt = Lit::leq(start, ctx.max(start));
+        ctx.expl_push(ls);
+        ctx.expl_push(lt);
+    } else {
+        let le = Lit::leq(e, ctx.max(e));
+        let lt = Lit::geq(start, ctx.min(start));
+        ctx.expl_push(le);
+        ctx.expl_push(lt);
+    }
 }
 
 /// Reservoir-style precedence cover.
@@ -472,8 +785,17 @@ fn prop_cover(
         }
     }
     if possible.is_empty() {
+        if ctx.explaining() {
+            ctx.begin_expl();
+            for j in 0..candidates.len() {
+                push_cover_exclusion(start, candidates, j, ctx);
+            }
+            if ctx.min(active) == 1 {
+                ctx.expl_push(Lit::geq(active, 1));
+            }
+        }
         if ctx.min(active) == 1 {
-            return Err(Conflict);
+            return ctx.fail();
         }
         return ctx.set_max(active, 0);
     }
@@ -481,18 +803,82 @@ fn prop_cover(
         return Ok(()); // target not (yet) active: nothing to enforce
     }
     // Bounds on the covered start: it must fit inside the union of
-    // candidate windows.
+    // candidate windows. Explanation: the target is active, every
+    // candidate outside `possible` is excluded, and each possible
+    // candidate's own window bound caps what it could cover.
     let lo = possible.iter().map(|&j| ctx.min(candidates[j].1) + 1).min().unwrap();
     let hi = possible.iter().map(|&j| ctx.max(candidates[j].2)).max().unwrap();
-    ctx.set_min(start, lo)?;
-    ctx.set_max(start, hi)?;
+    let explain_window = |is_lo: bool, ctx: &mut Ctx| {
+        ctx.begin_expl();
+        ctx.expl_push(Lit::geq(active, 1));
+        let mut p = 0;
+        for j in 0..candidates.len() {
+            if p < possible.len() && possible[p] == j {
+                p += 1;
+                let (_, s, e) = candidates[j];
+                let l = if is_lo {
+                    Lit::geq(s, ctx.min(s))
+                } else {
+                    Lit::leq(e, ctx.max(e))
+                };
+                ctx.expl_push(l);
+            } else {
+                push_cover_exclusion(start, candidates, j, ctx);
+            }
+        }
+    };
+    if lo > ctx.min(start) {
+        if ctx.explaining() {
+            explain_window(true, ctx);
+        }
+        ctx.set_min(start, lo)?;
+    }
+    if hi < ctx.max(start) {
+        if ctx.explaining() {
+            explain_window(false, ctx);
+        }
+        ctx.set_max(start, hi)?;
+    }
     if possible.len() == 1 {
         let (a, s, e) = candidates[possible[0]];
+        // base reason: the target is active and every other candidate
+        // is excluded → only this candidate can cover the start
+        let explain_forced = |extra: Option<Lit>, ctx: &mut Ctx| {
+            ctx.begin_expl();
+            ctx.expl_push(Lit::geq(active, 1));
+            for j in 0..candidates.len() {
+                if j != possible[0] {
+                    push_cover_exclusion(start, candidates, j, ctx);
+                }
+            }
+            if let Some(l) = extra {
+                ctx.expl_push(l);
+            }
+        };
+        if ctx.explaining() {
+            explain_forced(None, ctx);
+        }
         ctx.set_min(a, 1)?;
         // s + 1 <= start <= e
+        if ctx.explaining() {
+            let l = Lit::leq(start, ctx.max(start));
+            explain_forced(Some(l), ctx);
+        }
         ctx.set_max(s, ctx.max(start) - 1)?;
+        if ctx.explaining() {
+            let l = Lit::geq(start, ctx.min(start));
+            explain_forced(Some(l), ctx);
+        }
         ctx.set_min(e, ctx.min(start))?;
+        if ctx.explaining() {
+            let l = Lit::geq(s, ctx.min(s));
+            explain_forced(Some(l), ctx);
+        }
         ctx.set_min(start, ctx.min(s) + 1)?;
+        if ctx.explaining() {
+            let l = Lit::leq(e, ctx.max(e));
+            explain_forced(Some(l), ctx);
+        }
         ctx.set_max(start, ctx.max(e))?;
     }
     Ok(())
@@ -501,6 +887,8 @@ fn prop_cover(
 fn prop_all_different(vars: &[VarId], ctx: &mut Ctx) -> Result<(), Conflict> {
     // Fixed-value propagation with bound shaving (sufficient for the
     // unstaged model's small instances; the staged model doesn't use it).
+    // Explanations: every inference follows from `x` being fixed at `v`
+    // plus the shaved bound of `y` touching `v`.
     for (i, &x) in vars.iter().enumerate() {
         if !ctx.is_fixed(x) {
             continue;
@@ -512,13 +900,32 @@ fn prop_all_different(vars: &[VarId], ctx: &mut Ctx) -> Result<(), Conflict> {
             }
             if ctx.is_fixed(y) {
                 if ctx.min(y) == v {
-                    return Err(Conflict);
+                    if ctx.explaining() {
+                        ctx.begin_expl();
+                        ctx.expl_push(Lit::geq(x, v));
+                        ctx.expl_push(Lit::leq(x, v));
+                        ctx.expl_push(Lit::geq(y, v));
+                        ctx.expl_push(Lit::leq(y, v));
+                    }
+                    return ctx.fail();
                 }
             } else {
                 if ctx.min(y) == v {
+                    if ctx.explaining() {
+                        ctx.begin_expl();
+                        ctx.expl_push(Lit::geq(x, v));
+                        ctx.expl_push(Lit::leq(x, v));
+                        ctx.expl_push(Lit::geq(y, v));
+                    }
                     ctx.set_min(y, v + 1)?;
                 }
                 if ctx.max(y) == v {
+                    if ctx.explaining() {
+                        ctx.begin_expl();
+                        ctx.expl_push(Lit::geq(x, v));
+                        ctx.expl_push(Lit::leq(x, v));
+                        ctx.expl_push(Lit::leq(y, v));
+                    }
                     ctx.set_max(y, v - 1)?;
                 }
             }
@@ -541,7 +948,9 @@ mod tests {
     fn run(p: &Propagator, domains: &mut Vec<Domain>) -> Result<(), Conflict> {
         let mut trail = Vec::new();
         let mut changed = Vec::new();
-        let mut ctx = Ctx { domains, trail: &mut trail, changed: &mut changed };
+        let mut expl = ExplState::new(domains.len(), false);
+        let mut ctx =
+            Ctx { domains, trail: &mut trail, changed: &mut changed, expl: &mut expl };
         p.propagate(&mut ctx)
     }
 

@@ -11,8 +11,9 @@
 //! verified against all constraints before it is reported — filtering
 //! bugs can cost time but never correctness.
 
-use super::domain::VarId;
+use super::domain::{Lit, VarId};
 use super::engine::PropagationEngine;
+use super::learn::{analyze, luby, Analyzed, BranchHeap, VarActivity};
 use super::Model;
 use crate::util::{Deadline, Incumbent};
 use std::sync::Arc;
@@ -54,6 +55,16 @@ pub struct SearchStats {
     /// Cumulative profile flattenings (each replaces what used to be a
     /// from-scratch rebuild per invocation).
     pub cum_rebuilds: u64,
+    /// Luby restarts taken by the learned search.
+    pub restarts: u64,
+    /// No-goods added to the learned-constraint database (conflict
+    /// analyses plus decision no-goods from exhausted leaves).
+    pub nogoods_learned: u64,
+    /// Bound tightenings asserted by the watched no-good propagator —
+    /// each one prunes a subtree chronological search would re-explore.
+    pub nogoods_pruned: u64,
+    /// Activity-based reductions of the no-good database.
+    pub db_reductions: u64,
     /// Root-presolve counters folded in at model-build time (see
     /// [`crate::presolve::PresolveStats`]), accumulated like every
     /// other counter — an LNS run adds one contribution per window
@@ -73,7 +84,87 @@ impl SearchStats {
         self.wakeups_skipped += o.wakeups_skipped;
         self.cum_resyncs += o.cum_resyncs;
         self.cum_rebuilds += o.cum_rebuilds;
+        self.restarts += o.restarts;
+        self.nogoods_learned += o.nogoods_learned;
+        self.nogoods_pruned += o.nogoods_pruned;
+        self.db_reductions += o.db_reductions;
         self.presolve.add(&o.presolve);
+    }
+}
+
+/// How the branch & bound explores the tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Chronological DFS over the static branch order with min-value
+    /// branching — every conflict is forgotten on backtrack. The proof
+    /// baseline (and PR-3-and-earlier behavior).
+    Chronological,
+    /// Conflict-driven search: explained propagation feeds 1UIP
+    /// conflict analysis, learned bound-predicate no-goods prune
+    /// repeated subtrees, branching follows conflict activity (VSIDS)
+    /// with solution-phase value saving, and Luby restarts keep learned
+    /// state (see `cp::learn`).
+    Learned,
+}
+
+/// Search-strategy configuration threaded from the CLI / coordinator
+/// down to the kernel: the exploration mode, the Luby restart unit, and
+/// the learned-no-good database cap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchStrategy {
+    /// Exploration mode.
+    pub mode: SearchMode,
+    /// Luby restart unit in conflicts (learned mode; `0` disables
+    /// restarts entirely).
+    pub restart_base: u64,
+    /// No-good database size triggering an activity-based reduction at
+    /// the next restart (`0` = never reduce).
+    pub nogood_cap: usize,
+}
+
+impl Default for SearchStrategy {
+    fn default() -> Self {
+        Self::chronological()
+    }
+}
+
+impl SearchStrategy {
+    /// The chronological baseline (no learning).
+    pub fn chronological() -> Self {
+        SearchStrategy { mode: SearchMode::Chronological, restart_base: 0, nogood_cap: 0 }
+    }
+
+    /// Conflict-driven search with the default Luby-128 restart policy
+    /// and a 10k no-good cap.
+    pub fn learned() -> Self {
+        SearchStrategy { mode: SearchMode::Learned, restart_base: 128, nogood_cap: 10_000 }
+    }
+
+    /// Parse a CLI strategy name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "chronological" => Some(Self::chronological()),
+            "learned" => Some(Self::learned()),
+            _ => None,
+        }
+    }
+
+    /// Stable display / cache-key name. Both modes provably reach the
+    /// same optimum, so coordinator cache keys only discriminate the
+    /// mode, not the restart/cap tuning.
+    pub fn name(&self) -> &'static str {
+        match self.mode {
+            SearchMode::Chronological => "chronological",
+            SearchMode::Learned => "learned",
+        }
+    }
+
+    /// Cache-key discriminant (see [`SearchStrategy::name`]).
+    pub fn cache_key(&self) -> u8 {
+        match self.mode {
+            SearchMode::Chronological => 0,
+            SearchMode::Learned => 1,
+        }
     }
 }
 
@@ -119,8 +210,15 @@ pub struct Solver {
     /// watcher on any event, single queue, from-scratch `Cumulative`,
     /// re-enqueue everything on backtrack) instead of the event-driven
     /// engine. Exists for equivalence testing; both modes explore the
-    /// same tree because bounds propagation is confluent.
+    /// same tree because bounds propagation is confluent. Forces the
+    /// chronological strategy.
     pub naive: bool,
+    /// Search strategy: chronological DFS (the default, and the mode
+    /// optimality proofs are cross-checked against in the portfolio) or
+    /// conflict-driven learned search. Both are exact — learning is
+    /// purely pruning — so they always report the same status and
+    /// optimum (asserted by `prop_learned_matches_chronological`).
+    pub strategy: SearchStrategy,
 }
 
 impl Default for Solver {
@@ -132,6 +230,7 @@ impl Default for Solver {
             first_solution: false,
             guards: None,
             naive: false,
+            strategy: SearchStrategy::default(),
         }
     }
 }
@@ -152,14 +251,33 @@ impl Solver {
     /// over `model`, branching on `branch_order` (vars absent from the
     /// order must be fixed by propagation — all model vars is always a
     /// safe choice). `on_solution` fires for every *improving* solution.
+    ///
+    /// Dispatches on [`Solver::strategy`]; `naive` mode always runs the
+    /// chronological reference (the naive engine exists to pin down the
+    /// propagation semantics, not the search order).
     pub fn solve(
+        &self,
+        model: &Model,
+        objective: &[(i64, VarId)],
+        branch_order: &[VarId],
+        on_solution: impl FnMut(&[i64], i64),
+    ) -> SearchResult {
+        if self.strategy.mode == SearchMode::Learned && !self.naive {
+            self.solve_learned(model, objective, branch_order, on_solution)
+        } else {
+            self.solve_chronological(model, objective, branch_order, on_solution)
+        }
+    }
+
+    /// Chronological DFS branch & bound (see module docs).
+    fn solve_chronological(
         &self,
         model: &Model,
         objective: &[(i64, VarId)],
         branch_order: &[VarId],
         mut on_solution: impl FnMut(&[i64], i64),
     ) -> SearchResult {
-        let mut eng = PropagationEngine::new(model, objective, self.naive);
+        let mut eng = PropagationEngine::new(model, objective, self.naive, false);
         let mut best: Option<(Vec<i64>, i64)> = None;
         // seed the objective bound from the shared pruning bound when
         // one is attached (any solver may prune against the best
@@ -184,19 +302,30 @@ impl Solver {
         // pointer; backtracking restores it.
         let mut ptr: usize = 0;
         let mut limit_hit = false;
+        // Loop-iteration counter driving the deadline/cancellation and
+        // shared-bound polls. Counting iterations — not nodes — matters:
+        // solution-leaf and backtrack iterations leave `nodes`
+        // unchanged, so a node-count cadence could spin through them
+        // without ever observing the deadline or a portfolio
+        // cancellation.
+        let mut iters: u64 = 0;
+        // Scratch assignment reused across candidate leaves (cloned
+        // only for an improving solution).
+        let mut leaf_buf: Vec<i64> = Vec::with_capacity(eng.domains.len());
 
         'search: loop {
+            iters += 1;
             // limits (the deadline poll also observes portfolio
             // cancellation)
             if eng.stats.nodes >= self.node_limit
-                || (eng.stats.nodes % 128 == 0 && self.deadline.exceeded())
+                || (iters % 128 == 0 && self.deadline.exceeded())
             {
                 limit_hit = true;
                 break 'search;
             }
             // portfolio pruning: tighten the bound to the best duration
             // published by any cooperating solver
-            if eng.stats.nodes % 128 == 0 && !objective.is_empty() {
+            if iters % 128 == 0 && !objective.is_empty() {
                 if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
                     eng.tighten_obj_bound(g as i64 - 1);
                 }
@@ -226,14 +355,15 @@ impl Solver {
                 // remaining model vars must be fixed by propagation;
                 // if not, take their minimum — sound because we
                 // verify below).
-                let assignment: Vec<i64> = eng.domains.iter().map(|d| d.min()).collect();
-                if model.check(&assignment).is_none() {
+                leaf_buf.clear();
+                leaf_buf.extend(eng.domains.iter().map(|d| d.min()));
+                if model.check(&leaf_buf).is_none() {
                     let obj_val: i64 =
-                        objective.iter().map(|&(c, v)| c * assignment[v.0 as usize]).sum();
+                        objective.iter().map(|&(c, v)| c * leaf_buf[v.0 as usize]).sum();
                     if best.as_ref().map(|&(_, b)| obj_val < b).unwrap_or(true) {
                         eng.stats.solutions += 1;
-                        on_solution(&assignment, obj_val);
-                        best = Some((assignment, obj_val));
+                        on_solution(&leaf_buf, obj_val);
+                        best = Some((leaf_buf.clone(), obj_val));
                         eng.tighten_obj_bound(obj_val - 1);
                         if self.first_solution || objective.is_empty() {
                             break 'search;
@@ -285,6 +415,323 @@ impl Solver {
             status
         };
         SearchResult { status, best, stats: eng.stats }
+    }
+
+    /// Conflict-driven search (see `cp::learn`): explained propagation
+    /// feeds 1UIP analysis; learned bound-predicate no-goods backjump
+    /// and prune; branching follows conflict activity with
+    /// solution-phase value saving; Luby restarts keep learned state.
+    ///
+    /// Decisions are single bound literals: with no saved phase the
+    /// decision `x ≤ min(x)` fixes the variable exactly like the
+    /// chronological left branch, and its learned negation `x ≥ min+1`
+    /// is the chronological right branch — so with learning off this
+    /// search degenerates to a remembered version of the same tree.
+    /// Exhausted leaves that produce no propagation conflict
+    /// (unverifiable or non-improving relaxed points) learn their
+    /// *decision no-good* instead, which is exactly the chronological
+    /// backtrack, remembered.
+    fn solve_learned(
+        &self,
+        model: &Model,
+        objective: &[(i64, VarId)],
+        branch_order: &[VarId],
+        mut on_solution: impl FnMut(&[i64], i64),
+    ) -> SearchResult {
+        let mut eng = PropagationEngine::new(model, objective, false, true);
+        let nvars = eng.domains.len();
+        let mut best: Option<(Vec<i64>, i64)> = None;
+        if !objective.is_empty() {
+            if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
+                eng.tighten_obj_bound(g as i64 - 1);
+            }
+        }
+        eng.enqueue_all();
+        if eng.fixpoint(model).is_err() {
+            return SearchResult { status: Status::Infeasible, best: None, stats: eng.stats };
+        }
+
+        // Brancher state: an indexed max-heap over branch positions
+        // keyed by variable activity, plus the var → positions map that
+        // re-queues a position whenever its variable (or guard) has a
+        // trail entry undone. Invariant: the heap always contains every
+        // unfixed, guard-enabled position — a popped position is either
+        // used (and re-inserted while unfixed), or dropped because it
+        // is fixed/disabled, in which case the trail entry that fixed
+        // or disabled it re-inserts it on undo.
+        let npos = branch_order.len();
+        let pos_var: Vec<u32> = branch_order.iter().map(|v| v.0).collect();
+        let mut var_positions: Vec<Vec<u32>> = vec![Vec::new(); nvars];
+        for (p, v) in branch_order.iter().enumerate() {
+            var_positions[v.0 as usize].push(p as u32);
+        }
+        if let Some(gs) = &self.guards {
+            for (p, g) in gs.iter().enumerate() {
+                if let Some(g) = g {
+                    var_positions[g.0 as usize].push(p as u32);
+                }
+            }
+        }
+        let mut act = VarActivity::new(nvars);
+        let mut heap = BranchHeap::new(npos);
+        for p in 0..npos as u32 {
+            heap.insert(p, &act, &pos_var);
+        }
+        // Solution-phase saving: branch toward the incumbent's value
+        // once one exists (i64::MIN = no saved phase).
+        let mut saved: Vec<i64> = vec![i64::MIN; nvars];
+
+        let mut leaf_buf: Vec<i64> = Vec::with_capacity(nvars);
+        let mut ng_bumps: Vec<u32> = Vec::new();
+        let mut bumped: Vec<u32> = Vec::new();
+        let mut mark_buf: Vec<bool> = Vec::new();
+        let mut limit_hit = false;
+        let mut iters: u64 = 0;
+        let mut restart_idx: u64 = 1;
+        let mut conflicts_since_restart: u64 = 0;
+
+        'search: loop {
+            iters += 1;
+            if eng.stats.nodes >= self.node_limit
+                || (iters % 128 == 0 && self.deadline.exceeded())
+            {
+                limit_hit = true;
+                break 'search;
+            }
+            if iters % 128 == 0 && !objective.is_empty() {
+                if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
+                    eng.tighten_obj_bound(g as i64 - 1);
+                }
+            }
+            // Luby restart: back to the root with no-goods and
+            // activities kept; the database is reduced here (and only
+            // here) so no trail entry can reference a renumbered id.
+            if self.strategy.restart_base > 0
+                && conflicts_since_restart
+                    >= self.strategy.restart_base * luby(restart_idx)
+            {
+                restart_idx += 1;
+                conflicts_since_restart = 0;
+                eng.stats.restarts += 1;
+                requeue_undone(&mut eng, model, 0, &mut heap, &act, &pos_var, &var_positions);
+                if self.strategy.nogood_cap > 0 && eng.ng.len() > self.strategy.nogood_cap {
+                    eng.ng.reduce();
+                    eng.stats.db_reductions += 1;
+                }
+                if eng.fixpoint(model).is_err() {
+                    break 'search; // tightened bound closed the root
+                }
+                continue 'search;
+            }
+
+            // variable selection: highest-activity unfixed position
+            let mut chosen: Option<(u32, VarId)> = None;
+            while let Some(p) = heap.pop(&act, &pos_var) {
+                let x = branch_order[p as usize];
+                if eng.domains[x.0 as usize].is_fixed() {
+                    continue;
+                }
+                if let Some(gs) = &self.guards {
+                    if let Some(Some(g)) = gs.get(p as usize) {
+                        let gd = &eng.domains[g.0 as usize];
+                        if gd.is_fixed() && gd.min() == 0 {
+                            continue;
+                        }
+                    }
+                }
+                chosen = Some((p, x));
+                break;
+            }
+
+            let conflict = if let Some((p, x)) = chosen {
+                // value selection: saved phase when available, else min
+                let d = &eng.domains[x.0 as usize];
+                let (mn, mx) = (d.min(), d.max());
+                let w = saved[x.0 as usize];
+                let lit = if w == i64::MIN || w <= mn {
+                    Lit::leq(x, mn) // fix at min (chronological left branch)
+                } else if w >= mx {
+                    Lit::geq(x, mx) // fix at max
+                } else {
+                    Lit::geq(x, w) // aim at the incumbent's value
+                };
+                eng.stats.nodes += 1;
+                let r = eng.decide_lit(model, lit);
+                if r.is_ok() && !eng.domains[x.0 as usize].is_fixed() {
+                    // half-decision (aimed at a phase): the variable
+                    // stays branchable
+                    heap.insert(p, &act, &pos_var);
+                }
+                r.is_err()
+            } else {
+                // leaf: every branch var fixed or guard-disabled →
+                // candidate solution (min-completion, verified below)
+                leaf_buf.clear();
+                leaf_buf.extend(eng.domains.iter().map(|d| d.min()));
+                let mut surfaced = false;
+                if model.check(&leaf_buf).is_none() {
+                    let obj_val: i64 =
+                        objective.iter().map(|&(c, v)| c * leaf_buf[v.0 as usize]).sum();
+                    if best.as_ref().map(|&(_, b)| obj_val < b).unwrap_or(true) {
+                        eng.stats.solutions += 1;
+                        on_solution(&leaf_buf, obj_val);
+                        saved.copy_from_slice(&leaf_buf);
+                        best = Some((leaf_buf.clone(), obj_val));
+                        if self.first_solution || objective.is_empty() {
+                            break 'search;
+                        }
+                        // the trail now violates the tightened bound;
+                        // propagating surfaces a conflict whose
+                        // analysis backjumps — often far, since the
+                        // explanation only involves objective terms
+                        eng.tighten_obj_bound(obj_val - 1);
+                        surfaced = eng.fixpoint(model).is_err();
+                    }
+                } else {
+                    // unverifiable relaxed point (chronological search
+                    // treats these as dead ends too)
+                    eng.stats.conflicts += 1;
+                }
+                if surfaced {
+                    true
+                } else {
+                    // no propagation conflict to analyze: learn the
+                    // decision no-good (the remembered chronological
+                    // backtrack) and continue
+                    let lvl = eng.current_level();
+                    if lvl == 0 {
+                        break 'search; // root leaf: space exhausted
+                    }
+                    let mut lits: Vec<Lit> = Vec::with_capacity(lvl);
+                    lits.push(eng.expl.meta[eng.level_marks[lvl - 1] as usize].lit);
+                    for i in 0..lvl - 1 {
+                        lits.push(eng.expl.meta[eng.level_marks[i] as usize].lit);
+                    }
+                    match apply_learned(
+                        model,
+                        &mut eng,
+                        lits,
+                        lvl - 1,
+                        &mut heap,
+                        &act,
+                        &pos_var,
+                        &var_positions,
+                    ) {
+                        Ok(()) => false,
+                        Err(_) => true,
+                    }
+                }
+            };
+
+            if conflict {
+                // analyze → learn → backjump → propagate; repeat while
+                // the propagation after the backjump keeps failing
+                loop {
+                    eng.stats.conflicts += 1;
+                    conflicts_since_restart += 1;
+                    act.decay();
+                    eng.ng.decay();
+                    let confl = std::mem::take(&mut eng.expl.conflict);
+                    ng_bumps.clear();
+                    let analyzed =
+                        analyze(&eng, &confl, &mut act, &mut ng_bumps, &mut mark_buf);
+                    eng.expl.conflict = confl; // hand the buffer back
+                    for &g in &ng_bumps {
+                        eng.ng.bump(g);
+                    }
+                    act.swap_bumped(&mut bumped);
+                    for &v in &bumped {
+                        for &p in &var_positions[v as usize] {
+                            heap.resift(p, &act, &pos_var);
+                        }
+                    }
+                    match analyzed {
+                        Analyzed::Root => break 'search,
+                        Analyzed::NoGood { lits, level } => {
+                            let r = apply_learned(
+                                model,
+                                &mut eng,
+                                lits,
+                                level,
+                                &mut heap,
+                                &act,
+                                &pos_var,
+                                &var_positions,
+                            );
+                            if r.is_ok() {
+                                break; // fixpoint reached: resume search
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let status = match (&best, limit_hit) {
+            (Some(_), false) => Status::Optimal,
+            (Some(_), true) => Status::Feasible,
+            (None, false) => Status::Infeasible,
+            (None, true) => Status::Unknown,
+        };
+        let status = if self.first_solution && best.is_some() {
+            Status::Feasible
+        } else if !limit_hit && objective.is_empty() && best.is_some() {
+            Status::Feasible // satisfaction problem: "a" solution
+        } else {
+            status
+        };
+        SearchResult { status, best, stats: eng.stats }
+    }
+}
+
+/// Re-queue the branch positions of every variable with a trail entry
+/// above the backjump target, then backjump. Inserting before the undo
+/// is fine — the heap only tracks *candidacy*; fixedness is re-checked
+/// at selection time.
+#[allow(clippy::too_many_arguments)]
+fn requeue_undone(
+    eng: &mut PropagationEngine,
+    model: &Model,
+    level: usize,
+    heap: &mut BranchHeap,
+    act: &VarActivity,
+    pos_var: &[u32],
+    var_positions: &[Vec<u32>],
+) {
+    if level >= eng.current_level() {
+        return;
+    }
+    let mark = eng.level_marks[level] as usize;
+    for e in &eng.trail[mark..] {
+        for &p in &var_positions[e.var as usize] {
+            heap.insert(p, act, pos_var);
+        }
+    }
+    eng.backjump_to(model, level);
+}
+
+/// Backjump to `level`, store the learned no-good (size-1 no-goods are
+/// asserted as root facts instead), and propagate to fixpoint. An `Err`
+/// means the propagation conflicted again — the caller analyzes the new
+/// conflict.
+#[allow(clippy::too_many_arguments)]
+fn apply_learned(
+    model: &Model,
+    eng: &mut PropagationEngine,
+    lits: Vec<Lit>,
+    level: usize,
+    heap: &mut BranchHeap,
+    act: &VarActivity,
+    pos_var: &[u32],
+    var_positions: &[Vec<u32>],
+) -> Result<(), super::propagators::Conflict> {
+    requeue_undone(eng, model, level, heap, act, pos_var, var_positions);
+    eng.stats.nogoods_learned += 1;
+    if lits.len() == 1 {
+        eng.assert_root(model, lits[0].negation())
+    } else {
+        eng.ng.add(lits);
+        eng.fixpoint(model)
     }
 }
 

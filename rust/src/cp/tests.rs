@@ -1,5 +1,6 @@
 //! Engine-level integration tests on problems with known answers.
 
+use super::engine::PropagationEngine;
 use super::*;
 use crate::util::Deadline;
 use std::sync::Arc;
@@ -276,6 +277,81 @@ fn engine_matches_naive_on_knapsack() {
 }
 
 #[test]
+fn learned_matches_chronological_on_scheduling() {
+    let (m, obj, bo) = scheduling_model();
+    let ch = Solver::default().solve(&m, &obj, &bo, |_, _| {});
+    let ln = Solver { strategy: SearchStrategy::learned(), ..Default::default() }
+        .solve(&m, &obj, &bo, |_, _| {});
+    assert_eq!(ch.status, Status::Optimal);
+    assert_eq!(ln.status, Status::Optimal);
+    assert_eq!(
+        ch.best.as_ref().unwrap().1,
+        ln.best.as_ref().unwrap().1,
+        "strategies disagree on the optimum"
+    );
+    assert!(ln.stats.nogoods_learned > 0, "learned search never learned");
+}
+
+#[test]
+fn learned_finds_knapsack_optimum() {
+    let mut m = Model::new();
+    let a = m.new_bool();
+    let b = m.new_bool();
+    let c = m.new_bool();
+    m.linear_le(vec![(2, a), (3, b), (1, c)], 4);
+    let obj = vec![(-5, a), (-4, b), (-3, c)];
+    let r = Solver { strategy: SearchStrategy::learned(), ..Default::default() }
+        .solve(&m, &obj, &all_vars(&m), |_, _| {});
+    assert_eq!(r.status, Status::Optimal);
+    assert_eq!(r.best.unwrap().1, -8);
+}
+
+#[test]
+fn learned_detects_infeasible() {
+    let mut m = Model::new();
+    let x = m.new_var(0, 3);
+    m.linear_ge(vec![(1, x)], 10);
+    let r = Solver { strategy: SearchStrategy::learned(), ..Default::default() }
+        .solve(&m, &[], &all_vars(&m), |_, _| {});
+    assert_eq!(r.status, Status::Infeasible);
+}
+
+/// The watched-literal invariant across backtracking: a learned no-good
+/// whose watches moved during one descent must still propagate on a
+/// later descent that reaches its literals in a different order —
+/// without any watch maintenance on undo (undoing only relaxes bounds,
+/// which never turns a watched non-true literal true).
+#[test]
+fn nogood_watches_survive_backtrack() {
+    let mut m = Model::new();
+    let x = m.new_var(0, 5);
+    let y = m.new_var(0, 5);
+    let z = m.new_var(0, 5);
+    let mut eng = PropagationEngine::new(&m, &[], false, true);
+    // forbid x ≥ 3 ∧ y ≥ 2 ∧ z ≥ 4
+    eng.ng.add(vec![Lit::geq(x, 3), Lit::geq(y, 2), Lit::geq(z, 4)]);
+    assert!(eng.fixpoint(&m).is_ok(), "nothing entailed yet");
+    // first descent: x then y → the no-good must assert z ≤ 3
+    assert!(eng.decide_lit(&m, Lit::geq(x, 3)).is_ok());
+    assert!(eng.decide_lit(&m, Lit::geq(y, 2)).is_ok());
+    assert_eq!(eng.domains[z.0 as usize].max(), 3, "no-good must prune z");
+    assert_eq!(eng.stats.nogoods_pruned, 1);
+    // backtrack to the root: bounds relax, watches stay put
+    eng.backjump_to(&m, 0);
+    assert_eq!(eng.domains[z.0 as usize].max(), 5);
+    assert_eq!(eng.domains[y.0 as usize].max(), 5);
+    // second descent in a different order: z then x → y ≤ 1
+    assert!(eng.decide_lit(&m, Lit::geq(z, 4)).is_ok());
+    assert!(eng.decide_lit(&m, Lit::geq(x, 3)).is_ok());
+    assert_eq!(
+        eng.domains[y.0 as usize].max(),
+        1,
+        "watches must keep firing after backtrack"
+    );
+    assert_eq!(eng.stats.nogoods_pruned, 2);
+}
+
+#[test]
 fn stats_merge_accumulates() {
     let mut a = SearchStats { nodes: 3, propagations: 10, events_posted: 7, ..Default::default() };
     let b = SearchStats {
@@ -283,6 +359,10 @@ fn stats_merge_accumulates() {
         conflicts: 1,
         wakeups_skipped: 4,
         cum_resyncs: 5,
+        restarts: 2,
+        nogoods_learned: 6,
+        nogoods_pruned: 9,
+        db_reductions: 1,
         ..Default::default()
     };
     a.merge(&b);
@@ -292,4 +372,8 @@ fn stats_merge_accumulates() {
     assert_eq!(a.events_posted, 7);
     assert_eq!(a.wakeups_skipped, 4);
     assert_eq!(a.cum_resyncs, 5);
+    assert_eq!(a.restarts, 2);
+    assert_eq!(a.nogoods_learned, 6);
+    assert_eq!(a.nogoods_pruned, 9);
+    assert_eq!(a.db_reductions, 1);
 }

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--portfolio]
 //!           [--threads N] [--time-limit S] [--presolve off|exact|aggressive]
-//!           [--max-interval-len L] [--verbose]
+//!           [--max-interval-len L] [--search chronological|learned] [--verbose]
 //!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
 //!           [--time-limit S] [--compare-serial]
 //!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|ablation-topo|all>
@@ -18,6 +18,7 @@ use moccasin::coordinator::{Backend, Coordinator, SolveRequest};
 use moccasin::executor::{train_with_remat, TrainConfig};
 use moccasin::generators::{paper_graph, random_layered};
 use moccasin::graph::{topological_order, Graph};
+use moccasin::cp::SearchStrategy;
 use moccasin::presolve::{PresolveConfig, PresolveLevel};
 use moccasin::util::fmt_u64;
 use std::time::{Duration, Instant};
@@ -77,6 +78,14 @@ fn main() {
         },
     };
 
+    let search = match flag_val(&args, "--search") {
+        None => SearchStrategy::default(),
+        Some(name) => SearchStrategy::parse(&name).unwrap_or_else(|| {
+            eprintln!("unknown search strategy {name} (use chronological|learned)");
+            std::process::exit(2);
+        }),
+    };
+
     match args.first().map(|s| s.as_str()) {
         Some("solve") => {
             let (spec, g) = graph_or_exit(&args);
@@ -103,7 +112,14 @@ fn main() {
             coord.threads = threads;
             let resp = coord.solve(
                 &g,
-                &SolveRequest { budget, time_limit, backend, presolve, ..Default::default() },
+                &SolveRequest {
+                    budget,
+                    time_limit,
+                    backend,
+                    presolve,
+                    search,
+                    ..Default::default()
+                },
             );
             match resp.solution {
                 Some(sol) => println!(
@@ -125,6 +141,15 @@ fn main() {
                 println!(
                     "engine: events={} wakeups-skipped={} cum-resyncs={} cum-rebuilds={}",
                     st.events_posted, st.wakeups_skipped, st.cum_resyncs, st.cum_rebuilds
+                );
+                println!(
+                    "search: strategy={} restarts={} nogoods-learned={} nogoods-pruned={} \
+                     db-reductions={}",
+                    search.name(),
+                    st.restarts,
+                    st.nogoods_learned,
+                    st.nogoods_pruned,
+                    st.db_reductions
                 );
                 let ps = st.presolve;
                 if ps.props_before > 0 {
@@ -175,6 +200,7 @@ fn main() {
                             budget: (peak as f64 * f) as u64,
                             time_limit,
                             presolve,
+                            search,
                             ..Default::default()
                         },
                     )
@@ -240,10 +266,10 @@ fn main() {
             Some("table1") => bench::table1(),
             Some("table2") => bench::table2(time_limit, quick),
             Some("sweep") => bench::sweep_parallel(time_limit, quick),
-            Some("solver-json") => bench::bench_solver_json(time_limit, quick),
+            Some("solver-json") => bench::bench_solver_json(time_limit, quick, search),
             Some("ablation-c") => bench::ablation_c(time_limit),
             Some("ablation-topo") => bench::ablation_topo(),
-            Some("all") | None => bench::run_all(time_limit, quick),
+            Some("all") | None => bench::run_all(time_limit, quick, search),
             Some(other) => {
                 eprintln!("unknown bench target {other}");
                 std::process::exit(2);
@@ -279,9 +305,9 @@ fn main() {
                    solve --graph <G1..G4|RW1..RW4|CM1|CM2|rl:n:m:seed> [--budget-frac F] \
                  [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
                  [--threads N] [--time-limit S] [--presolve off|exact|aggressive] \
-                 [--max-interval-len L] [--verbose]\n\
+                 [--max-interval-len L] [--search chronological|learned] [--verbose]\n\
                    sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
-                 [--compare-serial]\n\
+                 [--search chronological|learned] [--compare-serial]\n\
                    bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|\
                  ablation-topo|all> [--time-limit S] [--quick]\n\
                    train [--steps N] [--budget-frac F]"

@@ -6,7 +6,7 @@
 
 use super::model::StagedModel;
 use super::solution::RematSolution;
-use crate::cp::{SearchStats, Solver, Status};
+use crate::cp::{SearchStats, SearchStrategy, Solver, Status};
 use crate::graph::{Graph, NodeId};
 use crate::presolve::Presolve;
 use crate::util::Deadline;
@@ -31,6 +31,7 @@ pub struct ExactResult {
 /// level or an interval-length cap), exhausting the search space does
 /// not prove anything about the original problem, so
 /// [`ExactResult::proved_optimal`] stays false.
+#[allow(clippy::too_many_arguments)]
 pub fn solve_exact(
     graph: &Graph,
     order: &[NodeId],
@@ -39,6 +40,7 @@ pub fn solve_exact(
     deadline: Deadline,
     staged: bool,
     pre: &Presolve,
+    search: SearchStrategy,
     mut on_solution: impl FnMut(&RematSolution),
 ) -> ExactResult {
     let c_v = vec![c; graph.n()];
@@ -51,7 +53,13 @@ pub fn solve_exact(
     // full model: prune against the best duration found by any
     // cooperating solver (riding along on the deadline)
     let bound = deadline.incumbent().cloned();
-    let solver = Solver { deadline, bound, guards: Some(guards), ..Default::default() };
+    let solver = Solver {
+        deadline,
+        bound,
+        guards: Some(guards),
+        strategy: search,
+        ..Default::default()
+    };
     let mut best_duration = u64::MAX;
     let r = solver.solve(&sm.model, &sm.objective, &bo, |a, _| {
         let seq = sm.extract_sequence(a);
@@ -98,6 +106,7 @@ mod tests {
             Deadline::after(Duration::from_secs(10)),
             true,
             &Presolve::new(&g, Default::default()),
+            SearchStrategy::default(),
             |s| best = Some(s.clone()),
         );
         assert!(r.proved_optimal);
@@ -118,6 +127,7 @@ mod tests {
             Deadline::after(Duration::from_secs(5)),
             true,
             &Presolve::new(&g, Default::default()),
+            SearchStrategy::default(),
             |_| {},
         );
         assert!(r.proved_optimal); // proved infeasible

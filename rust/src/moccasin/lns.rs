@@ -14,7 +14,7 @@
 
 use super::model::{event_id, StagedModel};
 use super::solution::RematSolution;
-use crate::cp::{SearchStats, Solver};
+use crate::cp::{SearchStats, SearchStrategy, Solver};
 use crate::graph::{Graph, NodeId};
 use crate::presolve::Presolve;
 use crate::util::{Deadline, Rng};
@@ -151,6 +151,7 @@ fn solve_window(
     j1: usize,
     deadline: Deadline,
     pre: &Presolve,
+    search: SearchStrategy,
     stats: &mut SearchStats,
 ) -> Option<RematSolution> {
     let n = graph.n();
@@ -210,6 +211,7 @@ fn solve_window(
         deadline,
         node_limit: 50_000,
         guards: Some(guards),
+        strategy: search,
         ..Default::default()
     };
     let mut best: Option<RematSolution> = None;
@@ -253,6 +255,7 @@ pub fn lns_loop(
     deadline: Deadline,
     rng: &mut Rng,
     pre: &Presolve,
+    search: SearchStrategy,
     mut incumbent: RematSolution,
     stats: &mut SearchStats,
     mut on_improve: impl FnMut(&RematSolution),
@@ -308,8 +311,9 @@ pub fn lns_loop(
         // the sub-deadline inherits the shared incumbent, so window
         // re-solves prune against (and are cancelled by) the portfolio
         let sub_deadline = deadline.sub(slice);
-        match solve_window(graph, order, budget, c, &incumbent, j0, j1, sub_deadline, pre, stats)
-        {
+        match solve_window(
+            graph, order, budget, c, &incumbent, j0, j1, sub_deadline, pre, search, stats,
+        ) {
             Some(better) => {
                 wins += 1;
                 incumbent = better;
@@ -407,6 +411,7 @@ mod tests {
             Deadline::after(Duration::from_secs(4)),
             &mut rng,
             &Presolve::new(&g, Default::default()),
+            SearchStrategy::default(),
             polished.clone(),
             &mut stats,
             |s| best = s.clone(),

@@ -38,7 +38,7 @@ pub mod solution;
 pub use model::{IntervalVars, StagedModel};
 pub use solution::{intervals_from_sequence, RematSolution};
 
-use crate::cp::SearchStats;
+use crate::cp::{SearchStats, SearchStrategy};
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::presolve::{GraphAnalysis, Presolve, PresolveConfig};
 use crate::util::{Deadline, Incumbent, Rng};
@@ -108,6 +108,10 @@ pub struct MoccasinSolver {
     /// once per request and shares it across racing members; `None`
     /// analyzes lazily per solve.
     pub analysis: Option<Arc<GraphAnalysis>>,
+    /// CP kernel search strategy used by the exact B&B and every LNS
+    /// window re-solve (chronological DFS or conflict-driven learned
+    /// search — both exact; see [`SearchStrategy`]).
+    pub search: SearchStrategy,
 }
 
 impl Default for MoccasinSolver {
@@ -122,6 +126,7 @@ impl Default for MoccasinSolver {
             incumbent: None,
             presolve: PresolveConfig::default(),
             analysis: None,
+            search: SearchStrategy::default(),
         }
     }
 }
@@ -218,6 +223,7 @@ impl MoccasinSolver {
                     deadline.clone(),
                     self.staged,
                     &pre,
+                    self.search,
                     |sol| record(sol, &mut trace, &mut best),
                 );
                 proved_optimal = ex.proved_optimal;
@@ -248,6 +254,7 @@ impl MoccasinSolver {
                 deadline.clone(),
                 self.staged,
                 &pre,
+                self.search,
                 |sol| record(sol, &mut trace, &mut best),
             );
             stats.merge(&ex.stats);
@@ -274,6 +281,7 @@ impl MoccasinSolver {
                 deadline.clone(),
                 &mut rng,
                 &pre,
+                self.search,
                 best.clone().unwrap(),
                 &mut stats,
                 |sol| record(sol, &mut trace, &mut best),
