@@ -28,17 +28,25 @@ fn main() {
             })
         })
         .unwrap_or_default();
+    // bench targets report failures (e.g. an unknown graph name) as
+    // errors rather than aborting the process
+    let run = |r: moccasin::util::Result<()>| {
+        if let Err(e) = r {
+            eprintln!("bench failed: {e}");
+            std::process::exit(1);
+        }
+    };
     if smoke {
         println!("== solver bench (smoke: kernel counters only) ==");
-        bench::bench_solver_json(Duration::from_secs(3), true, search);
+        run(bench::bench_solver_json(Duration::from_secs(3), true, search));
         return;
     }
     let tl = Duration::from_secs(8);
     println!("== solver bench (quick; full grid via `moccasin bench all`) ==");
     bench::table1();
-    bench::ablation_topo();
-    bench::fig1(tl);
-    bench::fig6(tl, true);
-    bench::ablation_c(tl);
-    bench::bench_solver_json(tl, false, search);
+    run(bench::ablation_topo());
+    run(bench::fig1(tl));
+    run(bench::fig6(tl, true));
+    run(bench::ablation_c(tl));
+    run(bench::bench_solver_json(tl, false, search));
 }

@@ -7,14 +7,23 @@
 //! feasibility breaks — is the reproduction target.
 
 use crate::coordinator::{Backend, Coordinator, SolveRequest};
-use crate::cp::SearchStrategy;
-use crate::generators::{paper_graph, random_layered, rw2};
+use crate::cp::{ProfileMode, SearchStrategy, Solver};
+use crate::generators::{paper_graph, random_layered, rw2, LARGE_GRAPHS, PAPER_GRAPHS};
 use crate::graph::{random_topological_order, topological_order, Graph};
 use crate::moccasin::{MoccasinSolver, StagedModel};
 use crate::presolve::{Presolve, PresolveConfig, PresolveStats};
-use crate::util::Rng;
+use crate::util::{Context as _, Deadline, Rng};
 use std::fmt::Write as _;
 use std::time::{Duration, Instant};
+
+/// Look up a named paper/large-tier instance, reporting an unknown name
+/// as a `util::error` instead of a process abort (every bench target
+/// resolves graphs through this).
+pub(crate) fn graph(name: &str) -> crate::util::Result<Graph> {
+    paper_graph(name).with_context(|| {
+        format!("unknown graph {name:?} (known: {PAPER_GRAPHS:?} and {LARGE_GRAPHS:?})")
+    })
+}
 
 fn results_dir() -> std::path::PathBuf {
     let d = std::path::PathBuf::from("results");
@@ -39,7 +48,7 @@ fn budget_at(g: &Graph, frac: f64) -> u64 {
 
 /// Figure 1: solve-progress (TDI % vs time) on the RW2-class graph
 /// (n=442, m=1247) at an 80% budget, MOCCASIN vs CHECKMATE.
-pub fn fig1(time_limit: Duration) {
+pub fn fig1(time_limit: Duration) -> crate::util::Result<()> {
     println!("== Figure 1: solve progress, RW2 (442, 1247), M = 80% ==");
     let g = rw2();
     let budget = budget_at(&g, 0.8);
@@ -65,17 +74,19 @@ pub fn fig1(time_limit: Duration) {
         }
     }
     write_csv("fig1.csv", &csv);
+    Ok(())
 }
 
 /// Figure 5: progress curves for RL G1–G4 under several budgets. The
 /// whole (graph × budget × method) grid is dispatched as one batch
 /// through [`Coordinator::solve_many`], so rows solve in parallel
 /// across the worker pool.
-pub fn fig5(time_limit: Duration, quick: bool) {
+pub fn fig5(time_limit: Duration, quick: bool) -> crate::util::Result<()> {
     println!("== Figure 5: solve progress, random layered G1..G4 ==");
     let names: &[&str] = if quick { &["G1", "G2"] } else { &["G1", "G2", "G3", "G4"] };
     let fracs: &[f64] = if quick { &[0.9, 0.8] } else { &[0.95, 0.9, 0.85, 0.8] };
-    let graphs: Vec<Graph> = names.iter().map(|n| paper_graph(n).unwrap()).collect();
+    let graphs: Vec<Graph> =
+        names.iter().map(|n| graph(n)).collect::<crate::util::Result<_>>()?;
     let mut requests: Vec<(&Graph, SolveRequest)> = Vec::new();
     let mut meta: Vec<(usize, f64, &str)> = Vec::new();
     for (gi, g) in graphs.iter().enumerate() {
@@ -119,20 +130,21 @@ pub fn fig5(time_limit: Duration, quick: bool) {
         }
     }
     write_csv("fig5.csv", &csv);
+    Ok(())
 }
 
 /// Parallel budget sweep through [`Coordinator::solve_many`]: eight
 /// budgets per graph dispatched across the worker pool at once —
 /// the batched path the `sweep` CLI subcommand uses. Reports wall-clock
 /// against a serial estimate (per-request solve times summed).
-pub fn sweep_parallel(time_limit: Duration, quick: bool) {
+pub fn sweep_parallel(time_limit: Duration, quick: bool) -> crate::util::Result<()> {
     println!("== Parallel budget sweep (Coordinator::solve_many) ==");
     let names: &[&str] = if quick { &["G1"] } else { &["G1", "RW1", "CM2"] };
     let fracs = [0.95, 0.9, 0.85, 0.8, 0.75, 0.7, 0.65, 0.6];
     let mut csv =
         String::from("graph,budget_frac,tdi_percent,remats,proved_optimal,feasible\n");
     for &name in names {
-        let g = paper_graph(name).unwrap();
+        let g = graph(name)?;
         let base = g.total_duration() as f64;
         let requests: Vec<(&Graph, SolveRequest)> = fracs
             .iter()
@@ -193,10 +205,11 @@ pub fn sweep_parallel(time_limit: Duration, quick: bool) {
         );
     }
     write_csv("sweep.csv", &csv);
+    Ok(())
 }
 
 /// Figure 6: time-to-best-solution vs n (log-log), M = 90%.
-pub fn fig6(time_limit: Duration, quick: bool) {
+pub fn fig6(time_limit: Duration, quick: bool) -> crate::util::Result<()> {
     println!("== Figure 6: time to best solution vs n (M = 90%) ==");
     let sizes: &[(usize, usize)] = if quick {
         &[(25, 55), (50, 115), (100, 236), (175, 600)]
@@ -233,6 +246,7 @@ pub fn fig6(time_limit: Duration, quick: bool) {
         }
     }
     write_csv("fig6.csv", &csv);
+    Ok(())
 }
 
 /// Table 1: formulation complexity — actual variable/constraint counts
@@ -264,7 +278,7 @@ pub fn table1() {
 
 /// Table 2/3: TDI %, peak memory and time-to-best for the three methods
 /// on the paper's instances at 80% and 90% budgets.
-pub fn table2(time_limit: Duration, quick: bool) {
+pub fn table2(time_limit: Duration, quick: bool) -> crate::util::Result<()> {
     println!("== Table 2/3: all methods on all paper instances ==");
     let names: &[&str] = if quick {
         &["G1", "G2", "RW1", "CM1"]
@@ -281,7 +295,7 @@ pub fn table2(time_limit: Duration, quick: bool) {
     );
     let mut coord = Coordinator::new();
     for &name in names {
-        let g = paper_graph(name).unwrap();
+        let g = graph(name)?;
         let base = g.total_duration() as f64;
         for frac in [0.9, 0.8] {
             let budget = budget_at(&g, frac);
@@ -334,12 +348,13 @@ pub fn table2(time_limit: Duration, quick: bool) {
         }
     }
     write_csv("table2.csv", &csv);
+    Ok(())
 }
 
 /// C_v ablation (§3 / contribution 2): solution quality vs C.
-pub fn ablation_c(time_limit: Duration) {
+pub fn ablation_c(time_limit: Duration) -> crate::util::Result<()> {
     println!("== Ablation: max rematerializations per node C ==");
-    let g = paper_graph("G1").unwrap();
+    let g = graph("G1")?;
     let base = g.total_duration() as f64;
     let budget = budget_at(&g, 0.8);
     // Note: C binds the CP model (exact / window re-solves). The
@@ -370,15 +385,16 @@ pub fn ablation_c(time_limit: Duration) {
         }
     }
     write_csv("ablation_c.csv", &csv);
+    Ok(())
 }
 
 /// Input-topological-order ablation (§1.1): peak-memory variability
 /// across 50 random topological orders per graph.
-pub fn ablation_topo() {
+pub fn ablation_topo() -> crate::util::Result<()> {
     println!("== Ablation: peak memory across 50 random topological orders ==");
     let mut csv = String::from("graph,min_peak,median_peak,max_peak,spread_percent\n");
     for name in ["G1", "G2", "RW1", "CM1"] {
-        let g = paper_graph(name).unwrap();
+        let g = graph(name)?;
         let mut rng = Rng::seed_from_u64(7);
         let mut peaks: Vec<u64> = (0..50)
             .map(|_| {
@@ -393,6 +409,7 @@ pub fn ablation_topo() {
         let _ = writeln!(csv, "{name},{mn},{md},{mx},{spread:.2}");
     }
     write_csv("ablation_topo.csv", &csv);
+    Ok(())
 }
 
 /// Per-instance presolve effect, measured statically: build the raw and
@@ -426,12 +443,16 @@ fn presolve_effect(g: &Graph, budget: u64) -> PresolveStats {
 /// be tracked across commits and the two strategies A/B-compared (the
 /// CI smoke-bench step runs the quick variant once per strategy on
 /// every push and uploads both files).
-pub fn bench_solver_json(time_limit: Duration, quick: bool, search: SearchStrategy) {
+pub fn bench_solver_json(
+    time_limit: Duration,
+    quick: bool,
+    search: SearchStrategy,
+) -> crate::util::Result<()> {
     println!("== solver kernel bench (BENCH_solver.json, search={}) ==", search.name());
     let names: &[&str] = if quick { &["G1", "G2"] } else { &["G1", "G2", "G3", "G4"] };
     let mut records: Vec<String> = Vec::new();
     for &name in names {
-        let g = paper_graph(name).unwrap();
+        let g = graph(name)?;
         let budget = budget_at(&g, 0.9);
         let pe = presolve_effect(&g, budget);
         let solver = MoccasinSolver { time_limit, search, ..Default::default() };
@@ -527,20 +548,176 @@ pub fn bench_solver_json(time_limit: Duration, quick: bool, search: SearchStrate
     } else {
         println!("  [json] {}", path.display());
     }
+    Ok(())
+}
+
+/// Large-graph kernel bench (`bench large-json`): time-bounded,
+/// node-capped staged B&B on the `L1..L4` tier (n ∈ {1000, 2500, 5000,
+/// 10000} — the "especially for large-scale graphs" regime of the
+/// paper's headline claim), run once per cumulative timetable-profile
+/// mode, emitting `BENCH_large.json`.
+///
+/// Unlike `bench solver-json` (which drives the anytime stack), this
+/// bench runs a *fixed workload*: the presolved staged model is built
+/// once per instance and the same node-capped chronological B&B runs
+/// under each [`ProfileMode`], so `propagations_per_sec` is a clean
+/// segtree-vs-linear A/B (both modes walk the identical tree — the
+/// property suite proves query-value equivalence). The strategy is
+/// *always* chronological: under learned search the two profile modes
+/// need not walk the same tree (different overload witnesses can
+/// yield different no-goods), which would silently invalidate the
+/// ratio — so unlike the other bench targets, `--search` does not
+/// apply here. Each record carries nodes/sec, propagations/sec, the
+/// engine event counters, peak RSS (`VmHWM`, 0 where procfs is
+/// unavailable) and the profile mode. `quick` runs L1 only (the CI
+/// smoke configuration); `xl` adds L4 to the default L1–L3 grid.
+pub fn bench_large_json(
+    time_limit: Duration,
+    quick: bool,
+    xl: bool,
+) -> crate::util::Result<()> {
+    let search = SearchStrategy::chronological();
+    println!(
+        "== large-graph kernel bench (BENCH_large.json, search={}, {:?} per mode) ==",
+        search.name(),
+        time_limit,
+    );
+    let names: &[&str] = if quick {
+        &LARGE_GRAPHS[..1]
+    } else if xl {
+        &LARGE_GRAPHS[..]
+    } else {
+        &LARGE_GRAPHS[..3]
+    };
+    const NODE_CAP: u64 = 200_000;
+    let mut records: Vec<String> = Vec::new();
+    for &name in names {
+        let g = graph(name)?;
+        let order = topological_order(&g).context("large-tier instance must be a DAG")?;
+        let peak = g
+            .peak_mem_no_remat(&order)
+            .context("canonical order must evaluate")?;
+        let budget = (peak as f64 * 0.9) as u64; // the paper's 90% ratio
+        let pre = Presolve::new(&g, PresolveConfig::default());
+        let t_build = Instant::now();
+        let sm = StagedModel::build_with(&g, &order, budget, &vec![2; g.n()], &pre, None);
+        let build_s = t_build.elapsed().as_secs_f64();
+        let (bo, guards) = sm.branch_order();
+        println!(
+            "  {name}: n={} m={} budget={} — model built in {build_s:.2}s \
+             ({} vars, {} propagators)",
+            g.n(),
+            g.m(),
+            crate::util::fmt_u64(budget),
+            sm.model.num_vars(),
+            sm.model.num_constraints()
+        );
+        let mut props_per_sec_of = [0.0f64; 2];
+        let mut mode_runs: Vec<(ProfileMode, f64, crate::cp::SearchStats, Option<i64>, String)> =
+            Vec::new();
+        for (mi, mode) in [ProfileMode::SegTree, ProfileMode::Linear].into_iter().enumerate()
+        {
+            let solver = Solver {
+                deadline: Deadline::after(time_limit),
+                node_limit: NODE_CAP,
+                guards: Some(guards.clone()),
+                strategy: search.with_profile(mode),
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let r = solver.solve(&sm.model, &sm.objective, &bo, |_, _| {});
+            let wall = t0.elapsed().as_secs_f64();
+            let st = r.stats;
+            let nodes_per_sec = st.nodes as f64 / wall.max(1e-9);
+            let props_per_sec = st.propagations as f64 / wall.max(1e-9);
+            props_per_sec_of[mi] = props_per_sec;
+            println!(
+                "  {name} [{:7}]: {wall:6.2}s wall, {} nodes ({nodes_per_sec:.0}/s), \
+                 {} propagations ({props_per_sec:.0}/s), {} resyncs, {} rebuilds",
+                mode.name(),
+                st.nodes,
+                st.propagations,
+                st.cum_resyncs,
+                st.cum_rebuilds,
+            );
+            mode_runs.push((
+                mode,
+                wall,
+                st,
+                r.best.as_ref().map(|&(_, o)| o),
+                format!("{:?}", r.status),
+            ));
+        }
+        // VmHWM is a process-lifetime high-water mark (monotone), so it
+        // is sampled ONCE per instance after both mode runs and shared
+        // by both records: instances run in ascending size, which keeps
+        // per-instance scaling meaningful — it is deliberately NOT a
+        // per-mode memory A/B (both modes share the same model anyway)
+        let rss = crate::util::peak_rss_kb().unwrap_or(0);
+        for (mode, wall, st, best, status) in &mode_runs {
+            let nodes_per_sec = st.nodes as f64 / wall.max(1e-9);
+            let props_per_sec = st.propagations as f64 / wall.max(1e-9);
+            records.push(format!(
+                "  {{\n    \"instance\": \"{name}\",\n    \"n\": {},\n    \"m\": {},\n    \
+                 \"budget\": {budget},\n    \"budget_frac\": 0.9,\n    \
+                 \"profile\": \"{}\",\n    \"search\": \"{}\",\n    \
+                 \"build_s\": {build_s:.4},\n    \"wall_s\": {wall:.4},\n    \
+                 \"node_cap\": {NODE_CAP},\n    \"nodes\": {},\n    \
+                 \"propagations\": {},\n    \"conflicts\": {},\n    \
+                 \"events_posted\": {},\n    \"wakeups_skipped\": {},\n    \
+                 \"cum_resyncs\": {},\n    \"cum_rebuilds\": {},\n    \
+                 \"nodes_per_sec\": {nodes_per_sec:.1},\n    \
+                 \"propagations_per_sec\": {props_per_sec:.1},\n    \
+                 \"best_objective\": {},\n    \"status\": \"{status}\",\n    \
+                 \"peak_rss_kb\": {rss}\n  }}",
+                g.n(),
+                g.m(),
+                mode.name(),
+                search.name(),
+                st.nodes,
+                st.propagations,
+                st.conflicts,
+                st.events_posted,
+                st.wakeups_skipped,
+                st.cum_resyncs,
+                st.cum_rebuilds,
+                best.unwrap_or(-1),
+            ));
+        }
+        if props_per_sec_of[1] > 0.0 {
+            println!(
+                "  {name}: segtree/linear propagation throughput = {:.2}x \
+                 (instance peak RSS {} kB)",
+                props_per_sec_of[0] / props_per_sec_of[1],
+                crate::util::fmt_u64(rss)
+            );
+        }
+    }
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let path = std::path::Path::new("BENCH_large.json");
+    std::fs::write(path, &json).with_context(|| format!("could not write {path:?}"))?;
+    println!("  [json] {}", path.display());
+    Ok(())
 }
 
 /// Run everything (the `bench all` CLI path); `search` selects the
-/// kernel strategy for the solver-json record.
-pub fn run_all(time_limit: Duration, quick: bool, search: SearchStrategy) {
+/// kernel strategy for the solver-json record. The large tier is not
+/// part of `all` — it has its own time budget (`bench large-json`).
+pub fn run_all(
+    time_limit: Duration,
+    quick: bool,
+    search: SearchStrategy,
+) -> crate::util::Result<()> {
     table1();
-    ablation_topo();
-    fig1(time_limit);
-    fig5(time_limit, quick);
-    fig6(time_limit, quick);
-    table2(time_limit, quick);
-    sweep_parallel(time_limit, true);
-    ablation_c(time_limit);
-    bench_solver_json(time_limit, quick, search);
+    ablation_topo()?;
+    fig1(time_limit)?;
+    fig5(time_limit, quick)?;
+    fig6(time_limit, quick)?;
+    table2(time_limit, quick)?;
+    sweep_parallel(time_limit, true)?;
+    ablation_c(time_limit)?;
+    bench_solver_json(time_limit, quick, search)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -563,7 +740,14 @@ mod tests {
 
     #[test]
     fn ablation_topo_runs() {
-        ablation_topo();
+        ablation_topo().unwrap();
+    }
+
+    #[test]
+    fn unknown_graph_name_is_a_reported_error_not_a_panic() {
+        let e = graph("nope").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("nope") && msg.contains("L4"), "unhelpful error: {msg}");
     }
 
     #[test]

@@ -2,11 +2,11 @@
 //! calls.
 //!
 //! Wraps the solver portfolio behind a cache: schedules are keyed by
-//! (graph fingerprint, budget, C, backend), so a compiler pipeline that
-//! re-lowers the same model hits the cache instead of re-solving — the
-//! "compile-time" cost the paper optimizes is paid once per
-//! (graph, budget). The CHECKMATE baselines are exposed behind the same
-//! interface for the benchmark harness.
+//! (graph fingerprint, budget, C, backend, …, explicit-order hash), so
+//! a compiler pipeline that re-lowers the same model hits the cache
+//! instead of re-solving — the "compile-time" cost the paper optimizes
+//! is paid once per (graph, budget). The CHECKMATE baselines are
+//! exposed behind the same interface for the benchmark harness.
 //!
 //! Two parallel entry points sit on top of the serial `solve`:
 //!
@@ -71,6 +71,12 @@ pub struct SolveRequest {
     /// cache key: both modes reach the same optimum, but traces, stats
     /// and proofs-per-member differ, so responses are not interchangeable.
     pub search: SearchStrategy,
+    /// Test-only fault injection: makes the uncached solve panic, so
+    /// the batched path's panic containment (catch_unwind, poisoned
+    /// slot recovery) stays regression-tested even though order
+    /// validation removed every representable panicking input.
+    #[cfg(test)]
+    pub(crate) panic_for_test: bool,
 }
 
 impl Default for SolveRequest {
@@ -83,6 +89,8 @@ impl Default for SolveRequest {
             order: None,
             presolve: PresolveConfig::default(),
             search: SearchStrategy::default(),
+            #[cfg(test)]
+            panic_for_test: false,
         }
     }
 }
@@ -109,8 +117,11 @@ pub struct SolveResponse {
 
 /// Cache key: (graph fingerprint, budget, C, backend discriminant,
 /// presolve level discriminant, interval-length cap, search-strategy
-/// discriminant).
-type CacheKey = (u64, u64, usize, u8, u8, i64, u8);
+/// discriminant, explicit-order hash). The order hash matters: the
+/// staged model is order-relative, so responses for different explicit
+/// orders — including order-validation failures — are not
+/// interchangeable (0 = no explicit order).
+type CacheKey = (u64, u64, usize, u8, u8, i64, u8, u64);
 
 /// The coordinator: solver portfolio + solution cache + worker pool
 /// configuration for batched solves.
@@ -143,6 +154,18 @@ impl Coordinator {
     }
 
     fn cache_key(graph: &Graph, req: &SolveRequest) -> CacheKey {
+        let order_hash = req
+            .order
+            .as_ref()
+            .map(|o| {
+                use std::hash::{Hash, Hasher};
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                o.hash(&mut h);
+                // | 1 keeps every explicit order distinct from the
+                // "no explicit order" sentinel 0
+                h.finish() | 1
+            })
+            .unwrap_or(0);
         (
             graph.fingerprint(),
             req.budget,
@@ -153,6 +176,7 @@ impl Coordinator {
             // the -1 sentinel stays reserved for "no cap"
             req.presolve.max_interval_len.map(|l| l.max(0)).unwrap_or(-1),
             req.search.cache_key(),
+            order_hash,
         )
     }
 
@@ -190,8 +214,10 @@ impl Coordinator {
         let mut out: Vec<Option<SolveResponse>> = vec![None; requests.len()];
 
         // cache pass + batch dedup: `jobs` holds request indices of
-        // unique misses
+        // unique misses, `job_of_key` maps each missed key to its job
+        // slot so duplicates can inherit uncacheable failure responses
         let mut jobs: Vec<usize> = Vec::new();
+        let mut job_of_key: HashMap<CacheKey, usize> = HashMap::new();
         let mut seen: HashSet<CacheKey> = HashSet::new();
         for (i, key) in keys.iter().enumerate() {
             if let Some(hit) = self.cache.get(key) {
@@ -203,13 +229,28 @@ impl Coordinator {
                 self.hits += 1; // batch duplicate: filled after the solves
             } else {
                 self.misses += 1;
+                job_of_key.insert(*key, jobs.len());
                 jobs.push(i);
             }
         }
 
-        // run unique misses on the worker pool
-        let results: Vec<Option<SolveResponse>> = {
-            let slots: Vec<Mutex<Option<SolveResponse>>> =
+        // Run unique misses on the worker pool. Failure containment
+        // (regression-tested by `solve_many_survives_panicking_member`):
+        // a panicking solve used to poison its slot mutex and abort the
+        // *whole batch* when the scope re-raised the panic — now each
+        // solve runs under `catch_unwind`, a poisoned slot lock is
+        // recovered (the data is a plain `Option` write, so poisoning
+        // carries no invariant), and a slot a worker never filled is
+        // surfaced as that request's member failure instead of an
+        // `expect` abort.
+        // slot payload: (response, cacheable) — a response from a
+        // *completed* solve (including deterministic validation
+        // failures) is cacheable; one synthesized from a contained
+        // panic is not, since a surviving panic is by construction not
+        // input-deterministic (validation removed those) and a retry
+        // may well succeed
+        let results: Vec<Option<(SolveResponse, bool)>> = {
+            let slots: Vec<Mutex<Option<(SolveResponse, bool)>>> =
                 jobs.iter().map(|_| Mutex::new(None)).collect();
             let next = AtomicUsize::new(0);
             let workers = self.worker_count().min(jobs.len().max(1));
@@ -226,32 +267,91 @@ impl Coordinator {
                         }
                         let i = jobs_ref[j];
                         let (graph, req) = &requests[i];
-                        let resp = me.solve_uncached(graph, req);
-                        *slots[j].lock().unwrap() = Some(resp);
+                        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || me.solve_uncached(graph, req),
+                        ))
+                        .map(|r| (r, true))
+                        .unwrap_or_else(|p| {
+                            (member_failure_response(&panic_message(&p)), false)
+                        });
+                        match slots[j].lock() {
+                            Ok(mut g) => *g = Some(resp),
+                            Err(poisoned) => *poisoned.into_inner() = Some(resp),
+                        }
                     });
                 }
             });
-            slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+            slots
+                .into_iter()
+                .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+                .collect()
         };
 
-        // publish results into the cache + the output slots
+        // Publish results into the cache + the output slots. A solve
+        // that completed — successfully or with a deterministic error
+        // response — is cached; contained panics and unfilled slots
+        // are surfaced but never cached, so a retry of the same
+        // request actually re-solves.
         for (j, &i) in jobs.iter().enumerate() {
-            let resp = results[j].clone().expect("worker filled its slot");
-            self.cache.insert(keys[i], resp.clone());
-            out[i] = Some(resp);
-        }
-        // batch duplicates read the now-warm cache
-        for (i, slot) in out.iter_mut().enumerate() {
-            if slot.is_none() {
-                let mut r = self.cache[&keys[i]].clone();
-                r.from_cache = true;
-                *slot = Some(r);
+            match &results[j] {
+                Some((resp, cacheable)) => {
+                    if *cacheable {
+                        self.cache.insert(keys[i], resp.clone());
+                    }
+                    out[i] = Some(resp.clone());
+                }
+                None => {
+                    out[i] = Some(member_failure_response(
+                        "worker exited without filling its slot",
+                    ));
+                }
             }
         }
-        out.into_iter().map(|o| o.expect("every request answered")).collect()
+        // batch duplicates read the now-warm cache, or inherit their
+        // twin's uncacheable failure response verbatim (so both copies
+        // of a panicked request report the same diagnostic)
+        for (i, slot) in out.iter_mut().enumerate() {
+            if slot.is_none() {
+                *slot = Some(match self.cache.get(&keys[i]) {
+                    Some(hit) => {
+                        let mut r = hit.clone();
+                        r.from_cache = true;
+                        r
+                    }
+                    None => job_of_key
+                        .get(&keys[i])
+                        .and_then(|&j| results[j].as_ref())
+                        .map(|(resp, _)| resp.clone())
+                        .unwrap_or_else(|| {
+                            member_failure_response("batch twin's solve did not complete")
+                        }),
+                });
+            }
+        }
+        out.into_iter()
+            .map(|o| {
+                o.unwrap_or_else(|| member_failure_response("request left unanswered"))
+            })
+            .collect()
     }
 
+    /// Solve one request without consulting the cache. An explicit
+    /// order is validated up front (right length, in-range ids, a
+    /// permutation, topological): every backend indexes by order
+    /// positions and the staged model is order-relative, so a bad
+    /// order must become an error response — on the serial path there
+    /// is no `catch_unwind` to save the process (the batched path
+    /// keeps one anyway as defense in depth against other panics).
     fn solve_uncached(&self, graph: &Graph, req: &SolveRequest) -> SolveResponse {
+        if let Some(o) = &req.order {
+            if let Err(why) = validate_order(graph, o) {
+                return member_failure_response(&why);
+            }
+        }
+        #[cfg(test)]
+        if req.panic_for_test {
+            panic!("injected test panic (solver fault injection)");
+        }
         let order = req
             .order
             .clone()
@@ -353,6 +453,65 @@ impl Coordinator {
     }
 }
 
+/// Check that an explicit request order is a topological permutation
+/// of the graph's nodes (what every backend assumes): right length,
+/// in-range ids, no duplicates, and every predecessor scheduled before
+/// its consumer. Returns a description of the first violation.
+fn validate_order(graph: &Graph, order: &[NodeId]) -> Result<(), String> {
+    let n = graph.n();
+    if order.len() != n {
+        return Err(format!(
+            "invalid explicit order: {} entries for a {n}-node graph",
+            order.len()
+        ));
+    }
+    let mut seen = vec![false; n];
+    for &v in order {
+        let vi = v as usize;
+        if vi >= n {
+            return Err(format!("invalid explicit order: node id {v} out of range (n = {n})"));
+        }
+        if seen[vi] {
+            return Err(format!("invalid explicit order: node {v} appears twice"));
+        }
+        for &p in &graph.preds[vi] {
+            if !seen[p as usize] {
+                return Err(format!(
+                    "invalid explicit order: not topological (node {v} before its \
+                     predecessor {p})"
+                ));
+            }
+        }
+        seen[vi] = true;
+    }
+    Ok(())
+}
+
+/// The response reported for a request whose solve did not complete
+/// (panicked worker / unfilled slot): an error, never an abort.
+fn member_failure_response(why: &str) -> SolveResponse {
+    SolveResponse {
+        solution: None,
+        trace: Vec::new(),
+        proved_optimal: false,
+        from_cache: false,
+        error: Some(format!("solver member failed: {why}")),
+        stats: SearchStats::default(),
+    }
+}
+
+/// Best-effort panic payload message (panics carry `&str` or `String`
+/// in practice).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panicked (non-string payload)".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +579,80 @@ mod tests {
             m.solution.unwrap().eval.duration,
             k.solution.unwrap().eval.duration
         );
+    }
+
+    #[test]
+    fn solve_many_survives_panicking_member() {
+        // Regression: one panicking worker used to poison its slot
+        // mutex and abort the whole batch (scope re-raises the panic);
+        // now it must surface as that request's member failure while
+        // every other request in the batch is answered normally.
+        // Order validation (below) removed every representable
+        // panicking input, so the panic is injected via the test-only
+        // fault flag. (A panic backtrace on stderr is expected output
+        // of this test.)
+        let g = chain();
+        let mut c = Coordinator::new();
+        let good = SolveRequest {
+            budget: 10,
+            time_limit: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let bad = SolveRequest {
+            budget: 11, // distinct cache key from `good`
+            time_limit: Duration::from_secs(5),
+            panic_for_test: true,
+            ..Default::default()
+        };
+        let responses =
+            c.solve_many(&[(&g, good.clone()), (&g, bad), (&g, good)]);
+        assert_eq!(responses.len(), 3);
+        assert!(responses[0].solution.is_some(), "good request must still solve");
+        assert!(responses[2].solution.is_some(), "dup of good request answered");
+        assert!(responses[1].solution.is_none());
+        let err = responses[1].error.as_deref().unwrap_or("");
+        assert!(err.contains("member failed"), "unexpected error text: {err}");
+        assert!(err.contains("injected test panic"), "panic payload lost: {err}");
+    }
+
+    #[test]
+    fn invalid_orders_are_rejected_without_aborting() {
+        // Regression: the serial path has no catch_unwind, so every
+        // malformed explicit order — wrong length, out-of-range ids,
+        // duplicates, non-topological permutations (all of which used
+        // to abort the process inside a backend's model build) — must
+        // be rejected by validation as an error response.
+        let g = chain();
+        let mut c = Coordinator::new();
+        let base = SolveRequest {
+            budget: 10,
+            time_limit: Duration::from_secs(5),
+            backend: Backend::CheckmateMilp,
+            ..Default::default()
+        };
+        let cases: Vec<(u64, Vec<u32>, &str)> = vec![
+            (10, vec![99, 98, 97, 96, 95], "out of range"),
+            (11, vec![0, 1], "2 entries"),
+            (12, vec![0, 0, 1, 2, 3], "appears twice"),
+            (13, vec![4, 3, 2, 1, 0], "not topological"),
+        ];
+        for (budget, order, needle) in cases {
+            let req = SolveRequest { budget, order: Some(order), ..base.clone() };
+            let resp = c.solve(&g, &req);
+            assert!(resp.solution.is_none());
+            let err = resp.error.as_deref().unwrap_or("");
+            assert!(
+                err.contains("invalid explicit order") && err.contains(needle),
+                "unexpected error: {err}"
+            );
+        }
+        // a valid explicit order (the chain's only one) still solves,
+        // and its cache entry is distinct from the order-less request's
+        let ok = SolveRequest { order: Some(vec![0, 1, 2, 3, 4]), ..base.clone() };
+        assert!(c.solve(&g, &ok).solution.is_some());
+        let no_order = c.solve(&g, &base);
+        assert!(no_order.solution.is_some());
+        assert!(!no_order.from_cache, "explicit-order response must not be shared");
     }
 
     #[test]

@@ -103,15 +103,24 @@ struct Shared {
     started: Instant,
 }
 
+/// Lock a member-shared mutex, recovering from poisoning: the guarded
+/// data are plain values (an `Option`, a `Vec`, counters) written in
+/// single statements, so a panic while holding the lock leaves no
+/// broken invariant — and one crashed member must degrade to a member
+/// failure, never abort the race for everyone.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 impl Shared {
     /// Publish a member's validated solution into the shared best +
     /// merged trace (strict improvements only).
     fn publish(&self, sol: &RematSolution) {
-        let mut best = self.best.lock().unwrap();
+        let mut best = lock_recover(&self.best);
         let improved =
             best.as_ref().map(|b| sol.eval.duration < b.eval.duration).unwrap_or(true);
         if improved {
-            self.trace.lock().unwrap().push((self.started.elapsed(), sol.eval.duration));
+            lock_recover(&self.trace).push((self.started.elapsed(), sol.eval.duration));
             *best = Some(sol.clone());
         }
     }
@@ -126,7 +135,7 @@ impl Shared {
     /// `proved` flag — without this, the response could claim
     /// optimality for a solution no proof covers.
     fn decide(&self, proven: Option<u64>) {
-        let best = self.best.lock().unwrap();
+        let best = lock_recover(&self.best);
         let current = best.as_ref().map(|b| b.eval.duration);
         let covered = match (proven, current) {
             // optimality proof at exactly the shared best
@@ -178,18 +187,26 @@ pub fn solve_portfolio(
             let base_order = &base_order;
             let analysis = &analysis;
             s.spawn(move || {
-                if checkmate_member && m == threads - 1 {
-                    run_checkmate_member(graph, budget, base_order, cfg, analysis, shared);
-                } else {
-                    run_moccasin_member(graph, budget, base_order, cfg, analysis, shared, m);
+                // contain member panics: a crashed member contributes
+                // nothing, but must not poison the race for the rest
+                // (the scope would re-raise its panic otherwise)
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if checkmate_member && m == threads - 1 {
+                        run_checkmate_member(graph, budget, base_order, cfg, analysis, shared);
+                    } else {
+                        run_moccasin_member(graph, budget, base_order, cfg, analysis, shared, m);
+                    }
+                }));
+                if r.is_err() {
+                    eprintln!("portfolio: member {m} crashed (continuing without it)");
                 }
             });
         }
     });
 
     let Shared { best, trace, stats, proved, .. } = shared;
-    let best = best.into_inner().unwrap();
-    let mut trace = trace.into_inner().unwrap();
+    let best = best.into_inner().unwrap_or_else(|p| p.into_inner());
+    let mut trace = trace.into_inner().unwrap_or_else(|p| p.into_inner());
     trace.sort_unstable();
     SolveResponse {
         error: best
@@ -199,7 +216,7 @@ pub fn solve_portfolio(
         trace,
         proved_optimal: proved.load(Ordering::Acquire),
         from_cache: false,
-        stats: stats.into_inner().unwrap(),
+        stats: stats.into_inner().unwrap_or_else(|p| p.into_inner()),
     }
 }
 
@@ -216,10 +233,14 @@ fn checkmate_member_viable(graph: &Graph) -> bool {
 /// requested base strategy. Strategy diversification compounds with
 /// the order/seed/window diversification below.
 fn member_strategy(cfg: &PortfolioConfig, m: usize) -> SearchStrategy {
+    // members diversify over search *modes* only; the timetable-profile
+    // choice is an orthogonal A/B knob that must follow the request,
+    // or `--profile linear` could never force the linear path through
+    // a portfolio solve
     if m == 0 {
-        SearchStrategy::chronological()
+        SearchStrategy::chronological().with_profile(cfg.search.profile)
     } else if m % 2 == 1 {
-        SearchStrategy::learned()
+        SearchStrategy::learned().with_profile(cfg.search.profile)
     } else {
         cfg.search
     }
@@ -257,7 +278,7 @@ fn run_moccasin_member(
         ..Default::default()
     };
     let out = solver.solve_with(graph, budget, Some(order), |sol| shared.publish(sol));
-    shared.stats.lock().unwrap().merge(&out.stats);
+    lock_recover(&shared.stats).merge(&out.stats);
     // Only the canonical-order member may declare the race decided (the
     // staged model is order-relative; see module docs). Its proof is
     // either optimality at its best duration or infeasibility.
@@ -288,14 +309,14 @@ fn run_checkmate_member(
     });
     match result {
         Ok(res) => {
-            shared.stats.lock().unwrap().merge(&res.stats);
+            lock_recover(&shared.stats).merge(&res.stats);
             if res.proved_optimal {
                 shared.decide(Some(res.solution.eval.duration));
             }
         }
         // a failed attempt still did kernel work worth counting
         Err(checkmate::CheckmateError::NoSolution { stats }) => {
-            shared.stats.lock().unwrap().merge(&stats);
+            lock_recover(&shared.stats).merge(&stats);
         }
         Err(_) => {}
     }

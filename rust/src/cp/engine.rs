@@ -22,12 +22,22 @@
 //!   `Cumulative` runs only once the cheap tier is empty, so it sees
 //!   settled bounds instead of being re-woken once per small change.
 //! * **Incremental `Cumulative`.** The timetable profile of compulsory
-//!   parts is kept as a diff map + flattened step profile, updated in
-//!   O(log) per changed interval from events and re-synchronised on
-//!   backtrack (counted in `SearchStats::cum_resyncs`) instead of being
-//!   rebuilt from all items on every invocation. Filtering re-examines
-//!   only items whose variables changed, unless the profile itself
-//!   moved.
+//!   parts is maintained structurally ([`ProfileMode`]): by default a
+//!   sparse lazy **segment tree** (`cp::segtree`) giving O(log H) part
+//!   moves, point loads, overload checks and first-overload queries —
+//!   the large-graph scaling lever — with the PR-2 diff-map + flattened
+//!   step profile retained behind `--profile linear` as the A/B
+//!   baseline and fuzz oracle. Either way the profile is updated per
+//!   changed interval from events and re-synchronised on backtrack
+//!   (counted in `SearchStats::cum_resyncs`) instead of being rebuilt
+//!   from all items on every invocation, and filtering re-examines only
+//!   items whose variables changed, unless the profile itself moved.
+//! * **CSR hot paths.** The per-variable watcher lists, the
+//!   var → cumulative-item index and the learned search's
+//!   var → branch-position map are flattened into [`Csr`] arenas: the
+//!   event-drain and undo loops walk contiguous slices instead of
+//!   chasing one heap `Vec` per variable — the difference is measurable
+//!   once models reach the `L1`–`L4` tier (n ≥ 1000).
 //! * **Minimal backtrack re-enqueue.** Undoing a frame restores a state
 //!   that was a propagation fixpoint, so only the propagators watching
 //!   undone variables plus the objective (whose bound may have
@@ -44,12 +54,79 @@ use super::domain::{event, Domain, DomainEvent, Lit, VarId};
 use super::learn::NoGoodDb;
 use super::propagators::{
     explain_profile_at, prop_linear_le, timetable_filter_item, Conflict, Ctx, CumItem,
-    ExplState, Propagator, TrailEntry, REASON_DECISION, REASON_PROP,
+    ExplState, ProfileView, Propagator, TrailEntry, REASON_DECISION, REASON_PROP,
 };
 use super::search::SearchStats;
+use super::segtree::SegTreeProfile;
 use super::Model;
+use crate::util::Csr;
 use std::collections::BTreeMap;
 use std::sync::OnceLock;
+
+/// Which data structure the incremental `Cumulative` state maintains
+/// for its compulsory-part timetable profile. Both are exact and
+/// answer every filter query with identical values (asserted by
+/// `prop_segtree_profile_matches_linear`); they differ only in cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileMode {
+    /// Diff map + flattened `(time, load)` step vector: O(K) re-flatten
+    /// whenever any part moves (K = number of breakpoints, which grows
+    /// with the instance). The PR-2 structure, retained as the fuzz
+    /// oracle and the `--profile linear` A/B baseline.
+    Linear,
+    /// Sparse lazy range-add / max segment tree: O(log H) per part
+    /// move and per query, no re-flatten — the large-graph default.
+    SegTree,
+}
+
+impl ProfileMode {
+    /// Parse a CLI profile name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "linear" => Some(ProfileMode::Linear),
+            "segtree" => Some(ProfileMode::SegTree),
+            _ => None,
+        }
+    }
+
+    /// Stable display name (`bench large-json` records it per run).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProfileMode::Linear => "linear",
+            ProfileMode::SegTree => "segtree",
+        }
+    }
+}
+
+/// The profile representation behind one `Cumulative`'s incremental
+/// state (selected by [`ProfileMode`]).
+enum ProfileData {
+    /// Sparse derivative (time → net demand change) plus the step
+    /// profile flattened from it lazily, with its max load.
+    Linear {
+        diff: BTreeMap<i64, i64>,
+        profile: Vec<(i64, i64)>,
+        max_load: i64,
+        dirty: bool,
+    },
+    /// Sparse lazy segment tree (see `cp::segtree`).
+    Seg(SegTreeProfile),
+}
+
+impl ProfileData {
+    /// Add (`d > 0`) or remove (`d < 0`) one compulsory part
+    /// `[a, b]` × `|d|` from the profile.
+    fn apply(&mut self, a: i64, b: i64, d: i64) {
+        match self {
+            ProfileData::Linear { diff, dirty, .. } => {
+                add_diff(diff, a, d);
+                add_diff(diff, b + 1, -d);
+                *dirty = true;
+            }
+            ProfileData::Seg(t) => t.range_add(a, b + 1, d),
+        }
+    }
+}
 
 /// Incremental state for one `Cumulative` propagator: the registered
 /// compulsory part per item plus the profile they induce.
@@ -59,17 +136,16 @@ struct CumState {
     items: Vec<CumItem>,
     cap: i64,
     /// Registered compulsory part `[ms, me]` per item (`None` = no
-    /// mandatory contribution). Invariant: `diff` always equals the sum
-    /// of the registered parts' demand contributions.
+    /// mandatory contribution; never registered for zero-demand items,
+    /// which cannot change any load). Invariant: the profile data
+    /// always equals the sum of the registered parts' contributions.
     reg: Vec<Option<(i64, i64)>>,
-    /// Sparse profile derivative: time → net demand change at that time.
-    diff: BTreeMap<i64, i64>,
-    /// Flattened step profile `(time, load on [time, next))`, rebuilt
-    /// from `diff` lazily when it changed.
-    profile: Vec<(i64, i64)>,
-    /// Max load over the flattened profile (conflict check).
-    max_load: i64,
-    profile_dirty: bool,
+    /// Number of registered parts — `0` means the profile is
+    /// everywhere zero and the pass can skip filtering entirely,
+    /// matching the reference propagator's empty-profile early return.
+    nparts: usize,
+    /// The timetable profile ([`ProfileMode`] selects the structure).
+    data: ProfileData,
     /// Bumped whenever a registered part (hence the profile) changes.
     version: u64,
     /// `version` at the last completed filter pass; a mismatch forces a
@@ -108,12 +184,18 @@ pub(crate) struct PropagationEngine {
     queue_slow: Vec<u32>,
     in_queue: Vec<bool>,
     tier_slow: Vec<bool>,
+    /// var → (propagator id, event mask) watcher pairs, flattened into
+    /// a CSR arena: the event-drain and undo loops walk one contiguous
+    /// slice per variable instead of chasing a `Vec` per variable
+    /// (built once from [`Model::watches`] at engine construction).
+    watch: Csr<(u32, u8)>,
     /// prop id → index into `cum_states` for `Cumulative` propagators.
     cum_of_prop: Vec<Option<u32>>,
     cum_states: Vec<CumState>,
     /// var → (cum state index, item index) pairs needing resync when
-    /// the variable's bounds change (forward or on undo).
-    cum_index: Vec<Vec<(u32, u32)>>,
+    /// the variable's bounds change (forward or on undo) — CSR, same
+    /// rationale as `watch`.
+    cum_index: Csr<(u32, u32)>,
     /// Persistent objective-bound propagator: Σ obj_terms ≤ obj_rhs,
     /// with `obj_rhs` tightened in place (never rebuilt per pass).
     obj_terms: Vec<(i64, VarId)>,
@@ -161,54 +243,68 @@ fn add_diff(diff: &mut BTreeMap<i64, i64>, t: i64, d: i64) {
     }
 }
 
-/// Run one `Cumulative` pass off the incremental state: flatten the
-/// profile if the diff map changed, conflict-check the max load, then
+/// Run one `Cumulative` pass off the incremental state: bring the
+/// profile up to date (linear mode re-flattens its diff map; the
+/// segment tree is always current), conflict-check the max load, then
 /// filter either every item (profile moved) or only dirty ones.
 fn cumulative_filter(
     cs: &mut CumState,
     ctx: &mut Ctx,
     stats: &mut SearchStats,
 ) -> Result<(), Conflict> {
-    if cs.profile_dirty {
-        cs.profile.clear();
-        cs.max_load = 0;
-        let mut load = 0i64;
-        for (&t, &d) in cs.diff.iter() {
-            load += d;
-            cs.profile.push((t, load));
-            if load > cs.max_load {
-                cs.max_load = load;
+    if let ProfileData::Linear { diff, profile, max_load, dirty } = &mut cs.data {
+        if *dirty {
+            profile.clear();
+            *max_load = 0;
+            let mut load = 0i64;
+            for (&t, &d) in diff.iter() {
+                load += d;
+                profile.push((t, load));
+                if load > *max_load {
+                    *max_load = load;
+                }
             }
+            *dirty = false;
+            stats.cum_rebuilds += 1;
         }
-        cs.profile_dirty = false;
-        stats.cum_rebuilds += 1;
     }
     // Empty profile: no mandatory part anywhere — match the reference
     // propagator's early return (it filters nothing in this case).
-    if !cs.profile.is_empty() {
-        if cs.max_load > cs.cap {
+    if cs.nparts > 0 {
+        let max_load = match &cs.data {
+            ProfileData::Linear { max_load, .. } => *max_load,
+            ProfileData::Seg(t) => t.max(),
+        };
+        if max_load > cs.cap {
             if ctx.explaining() {
-                // explain the overload at a breakpoint carrying the max
-                // load (current-domain compulsory parts cover at least
-                // what the cached profile registered there)
-                let t = cs
-                    .profile
-                    .iter()
-                    .find(|&&(_, l)| l == cs.max_load)
-                    .map(|&(t, _)| t)
-                    .unwrap_or(cs.profile[0].0);
+                // explain the overload at the earliest point carrying
+                // the max load (current-domain compulsory parts cover
+                // at least what the cached profile registered there);
+                // both structures report the same witness breakpoint
+                let t = match &cs.data {
+                    ProfileData::Linear { profile, .. } => profile
+                        .iter()
+                        .find(|&&(_, l)| l == max_load)
+                        .map(|&(t, _)| t)
+                        .unwrap_or(profile[0].0),
+                    ProfileData::Seg(t) => t.peak_time(),
+                };
                 ctx.begin_expl();
                 explain_profile_at(&cs.items, t, usize::MAX, ctx);
             }
             return ctx.fail();
         }
+        let view = match &cs.data {
+            ProfileData::Linear { profile, .. } => ProfileView::Steps(&profile[..]),
+            ProfileData::Seg(t) => ProfileView::Tree(t),
+        };
         if cs.last_filter_version != cs.version {
             for ii in 0..cs.items.len() {
-                timetable_filter_item(&cs.items, ii, cs.cap, &cs.profile, ctx)?;
+                timetable_filter_item(&cs.items, ii, cs.cap, &view, ctx)?;
             }
         } else {
             for &ii in &cs.dirty {
-                timetable_filter_item(&cs.items, ii as usize, cs.cap, &cs.profile, ctx)?;
+                timetable_filter_item(&cs.items, ii as usize, cs.cap, &view, ctx)?;
             }
         }
     }
@@ -227,8 +323,15 @@ impl PropagationEngine {
     /// satisfaction). `naive` selects the reference re-enqueue-everything
     /// semantics; `explain` turns on explanation recording (the learned
     /// search's requirement — chronological search passes `false` and
-    /// pays nothing).
-    pub fn new(model: &Model, objective: &[(i64, VarId)], naive: bool, explain: bool) -> Self {
+    /// pays nothing); `profile` selects the incremental `Cumulative`
+    /// timetable structure (see [`ProfileMode`]).
+    pub fn new(
+        model: &Model,
+        objective: &[(i64, VarId)],
+        naive: bool,
+        explain: bool,
+        profile: ProfileMode,
+    ) -> Self {
         let nvars = model.domains.len();
         let nprops = model.props.len();
         let domains = model.domains.clone();
@@ -244,7 +347,7 @@ impl PropagationEngine {
         let mut tier_slow = vec![false; nprops + 1];
         let mut cum_of_prop: Vec<Option<u32>> = vec![None; nprops + 1];
         let mut cum_states: Vec<CumState> = Vec::new();
-        let mut cum_index: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nvars];
+        let mut cum_rows: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nvars];
         for (pid, p) in model.props.iter().enumerate() {
             let Propagator::Cumulative { items, cap } = p else {
                 continue;
@@ -252,16 +355,44 @@ impl PropagationEngine {
             tier_slow[pid] = true;
             let ci = cum_states.len() as u32;
             cum_of_prop[pid] = Some(ci);
+            // segment-tree coordinate range: every part boundary is a
+            // value of some start/end domain, so the initial domain
+            // extremes bound the axis for the whole solve
+            let (mut tlo, mut thi) = (i64::MAX, i64::MIN);
+            for it in items.iter() {
+                tlo = tlo.min(domains[it.start.0 as usize].min());
+                thi = thi.max(domains[it.end.0 as usize].max());
+            }
+            if tlo > thi {
+                (tlo, thi) = (0, 0); // no items: degenerate axis
+            }
+            let mut data = match profile {
+                ProfileMode::Linear => ProfileData::Linear {
+                    diff: BTreeMap::new(),
+                    profile: Vec::new(),
+                    max_load: 0,
+                    dirty: true,
+                },
+                ProfileMode::SegTree => ProfileData::Seg(SegTreeProfile::new(tlo, thi + 2)),
+            };
             let mut reg: Vec<Option<(i64, i64)>> = vec![None; items.len()];
-            let mut diff = BTreeMap::new();
+            let mut nparts = 0usize;
             for (ii, it) in items.iter().enumerate() {
+                if it.demand == 0 {
+                    // cannot change any load: never registered, never
+                    // resynced, never dirty-marked (filtering is a
+                    // no-op for zero demand) — so not indexed either,
+                    // sparing the drain/undo paths a wasted
+                    // compulsory-part recomputation per event
+                    continue;
+                }
                 for v in [it.active, it.start, it.end] {
-                    cum_index[v.0 as usize].push((ci, ii as u32));
+                    cum_rows[v.0 as usize].push((ci, ii as u32));
                 }
                 let part = compulsory_part(&domains, it);
                 if let Some((a, b)) = part {
-                    add_diff(&mut diff, a, it.demand);
-                    add_diff(&mut diff, b + 1, -it.demand);
+                    data.apply(a, b, it.demand);
+                    nparts += 1;
                 }
                 reg[ii] = part;
             }
@@ -270,16 +401,18 @@ impl PropagationEngine {
                 items: items.clone(),
                 cap: *cap,
                 reg,
-                diff,
-                profile: Vec::new(),
-                max_load: 0,
-                profile_dirty: true,
+                nparts,
+                data,
                 version: 0,
                 last_filter_version: u64::MAX,
                 dirty: Vec::new(),
                 dirty_flag: vec![false; n_items],
             });
         }
+        // flatten the model's per-var watcher rows into the CSR arena
+        // the hot drain/undo loops walk
+        let watch = Csr::from_rows(&model.watches);
+        let cum_index = Csr::from_rows(&cum_rows);
         PropagationEngine {
             domains,
             trail: Vec::new(),
@@ -292,6 +425,7 @@ impl PropagationEngine {
             queue_slow: Vec::new(),
             in_queue: vec![false; nprops + 1],
             tier_slow,
+            watch,
             cum_of_prop,
             cum_states,
             cum_index,
@@ -352,23 +486,23 @@ impl PropagationEngine {
     /// `vi` with the current domains (forward events and undo share
     /// this path — both just recompute the compulsory part).
     fn resync_var(&mut self, vi: usize) {
-        for k in 0..self.cum_index[vi].len() {
-            let (ci, ii) = self.cum_index[vi][k];
+        for k in self.cum_index.span(vi) {
+            let (ci, ii) = *self.cum_index.at(k);
             let (ci, ii) = (ci as usize, ii as usize);
             let part = compulsory_part(&self.domains, &self.cum_states[ci].items[ii]);
             let cs = &mut self.cum_states[ci];
+            let d = cs.items[ii].demand;
+            debug_assert!(d != 0, "zero-demand items are never indexed for resync");
             if cs.reg[ii] != part {
-                let d = cs.items[ii].demand;
                 if let Some((a, b)) = cs.reg[ii] {
-                    add_diff(&mut cs.diff, a, -d);
-                    add_diff(&mut cs.diff, b + 1, d);
+                    cs.data.apply(a, b, -d);
+                    cs.nparts -= 1;
                 }
                 if let Some((a, b)) = part {
-                    add_diff(&mut cs.diff, a, d);
-                    add_diff(&mut cs.diff, b + 1, -d);
+                    cs.data.apply(a, b, d);
+                    cs.nparts += 1;
                 }
                 cs.reg[ii] = part;
-                cs.profile_dirty = true;
                 cs.version += 1;
                 self.stats.cum_resyncs += 1;
             }
@@ -382,7 +516,7 @@ impl PropagationEngine {
     /// Drain the typed-event buffer: wake matching watchers (all
     /// watchers in naive mode), wake the objective when its slack can
     /// tighten, and resync incremental cumulative state.
-    fn drain_events(&mut self, model: &Model) {
+    fn drain_events(&mut self) {
         if self.events.is_empty() {
             return;
         }
@@ -390,8 +524,8 @@ impl PropagationEngine {
         for ev in events.drain(..) {
             let vi = ev.var.0 as usize;
             self.stats.events_posted += 1;
-            for wi in 0..model.watches[vi].len() {
-                let (w, wm) = model.watches[vi][wi];
+            for k in self.watch.span(vi) {
+                let (w, wm) = *self.watch.at(k);
                 if self.naive || (wm & ev.mask) != 0 {
                     self.enqueue(w);
                 } else {
@@ -404,7 +538,7 @@ impl PropagationEngine {
             if self.has_obj && (self.naive || (self.obj_mask[vi] & ev.mask) != 0) {
                 self.enqueue(self.obj_pid);
             }
-            if !self.naive && !self.cum_index[vi].is_empty() {
+            if !self.naive && !self.cum_index.row_is_empty(vi) {
                 self.resync_var(vi);
             }
         }
@@ -467,7 +601,7 @@ impl PropagationEngine {
                     self.clear_on_conflict();
                     return Err(Conflict);
                 }
-                self.drain_events(model);
+                self.drain_events();
                 continue;
             }
             let pid = if let Some(p) = self.queue_fast.pop() {
@@ -484,7 +618,7 @@ impl PropagationEngine {
                 self.clear_on_conflict();
                 return Err(Conflict);
             }
-            self.drain_events(model);
+            self.drain_events();
         }
     }
 
@@ -505,7 +639,7 @@ impl PropagationEngine {
             self.clear_on_conflict();
             return Err(Conflict);
         }
-        self.drain_events(model);
+        self.drain_events();
         self.fixpoint(model)
     }
 
@@ -526,7 +660,7 @@ impl PropagationEngine {
             self.clear_on_conflict();
             return Err(Conflict);
         }
-        self.drain_events(model);
+        self.drain_events();
         self.fixpoint(model)
     }
 
@@ -564,19 +698,19 @@ impl PropagationEngine {
             self.clear_on_conflict();
             return Err(Conflict);
         }
-        self.drain_events(model);
+        self.drain_events();
         self.fixpoint(model)
     }
 
     /// Undo down to decision level `level` (learned search's backjump),
     /// keeping learned no-goods and activities.
-    pub fn backjump_to(&mut self, model: &Model, level: usize) {
+    pub fn backjump_to(&mut self, level: usize) {
         debug_assert!(level <= self.level_marks.len());
         if level >= self.level_marks.len() {
             return;
         }
         let mark = self.level_marks[level] as usize;
-        self.undo_to(model, mark);
+        self.undo_to(mark);
         self.level_marks.truncate(level);
     }
 
@@ -605,7 +739,7 @@ impl PropagationEngine {
             self.clear_on_conflict();
             return Err(Conflict);
         }
-        self.drain_events(model);
+        self.drain_events();
         self.fixpoint(model)
     }
 
@@ -619,7 +753,7 @@ impl PropagationEngine {
     /// per-invocation shaving), while the objective genuinely needs the
     /// wake because its rhs may have tightened since the subtree was
     /// entered. In naive mode every propagator is re-enqueued instead.
-    pub fn undo_to(&mut self, model: &Model, mark: usize) {
+    pub fn undo_to(&mut self, mark: usize) {
         while self.trail.len() > mark {
             let e = self.trail.pop().unwrap();
             self.domains[e.var as usize].restore((e.old_lo, e.old_hi));
@@ -637,11 +771,11 @@ impl PropagationEngine {
                 continue;
             }
             let vi = e.var as usize;
-            for wi in 0..model.watches[vi].len() {
-                let (w, _) = model.watches[vi][wi];
+            for k in self.watch.span(vi) {
+                let (w, _) = *self.watch.at(k);
                 self.enqueue(w);
             }
-            if !self.cum_index[vi].is_empty() {
+            if !self.cum_index.row_is_empty(vi) {
                 self.resync_var(vi);
             }
         }

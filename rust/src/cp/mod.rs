@@ -26,7 +26,10 @@
 //!   incremental `Cumulative` state (a cached timetable profile of
 //!   compulsory parts, updated from events and re-synchronised on
 //!   backtrack) so the profile is never rebuilt from scratch inside the
-//!   search loop.
+//!   search loop. The profile structure is selectable
+//!   ([`ProfileMode`]): a sparse lazy segment tree (`segtree.rs`,
+//!   O(log H) per part move/query — the large-graph default) or the
+//!   linear diff-map step profile retained as the A/B oracle.
 //! * **Search** comes in two strategies (see [`SearchStrategy`]). The
 //!   *chronological* baseline is DFS with first-unfixed variable
 //!   selection via a trailed pointer over a caller-supplied branch
@@ -54,8 +57,10 @@ mod engine;
 mod learn;
 mod propagators;
 mod search;
+mod segtree;
 
 pub use domain::{event, Domain, DomainEvent, Lit, VarId};
+pub use engine::ProfileMode;
 pub use propagators::{CumItem, Propagator};
 pub use search::{SearchMode, SearchResult, SearchStats, SearchStrategy, Solver, Status};
 

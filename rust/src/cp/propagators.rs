@@ -8,6 +8,7 @@
 //! soundness unconditional.
 
 use super::domain::{event, Domain, DomainEvent, Lit, VarId};
+use super::segtree::SegTreeProfile;
 use std::sync::Arc;
 
 /// One trailed bound change: exactly the restore data the undo path
@@ -84,6 +85,11 @@ pub(crate) struct ExplState {
     pub reason: u32,
     /// Whether explanations are recorded at all.
     pub enabled: bool,
+    /// Scratch index buffer reused by `Cover` passes (the
+    /// possible-candidate list) — one buffer per engine instead of one
+    /// heap allocation per propagation. Lives here because `ExplState`
+    /// is the per-pass state already threaded into every `Ctx`.
+    pub cover_scratch: Vec<u32>,
 }
 
 impl ExplState {
@@ -98,6 +104,7 @@ impl ExplState {
             last_entry: if enabled { vec![NO_ENTRY; nvars] } else { Vec::new() },
             reason: REASON_PROP,
             enabled,
+            cover_scratch: Vec::new(),
         }
     }
 }
@@ -401,10 +408,20 @@ impl Propagator {
             }
             Propagator::Cumulative { items, cap } => prop_cumulative(items, *cap, ctx),
             Propagator::Cover { targets, candidates } => {
+                // reuse the engine's scratch buffer for the
+                // possible-candidate list (taken, not borrowed, so the
+                // pass can still mutate ctx; handed back on every exit)
+                let mut possible = std::mem::take(&mut ctx.expl.cover_scratch);
+                let mut r = Ok(());
                 for &(active, start) in targets.iter() {
-                    prop_cover(active, start, candidates, ctx)?;
+                    r = prop_cover(active, start, candidates, &mut possible, ctx);
+                    if r.is_err() {
+                        break;
+                    }
                 }
-                Ok(())
+                possible.clear();
+                ctx.expl.cover_scratch = possible;
+                r
             }
             Propagator::AllDifferent { vars } => prop_all_different(vars, ctx),
         }
@@ -530,6 +547,78 @@ pub(crate) fn profile_load_at(profile: &[(i64, i64)], t: i64) -> i64 {
     }
 }
 
+/// Read-only view over a compulsory-part profile — the one filtering
+/// implementation ([`timetable_filter_item`]) runs against either
+/// representation, so the linear and the segment-tree timetable can
+/// never drift apart:
+///
+/// * [`ProfileView::Steps`] — the flattened `(time, load)` step vector
+///   (the naive propagator's from-scratch profile and the engine's
+///   `--profile linear` diff-map cache; retained as the fuzz oracle).
+/// * [`ProfileView::Tree`] — the engine's sparse lazy segment tree
+///   (`--profile segtree`, the default): O(log H) point loads and
+///   first-overload queries instead of O(K) scans.
+///
+/// Both views answer every query with identical *values* (loads are
+/// step functions over the same breakpoints), so filtering — and hence
+/// the explored search tree — is representation-independent.
+pub(crate) enum ProfileView<'a> {
+    /// Flattened step profile, breakpoints ascending.
+    Steps(&'a [(i64, i64)]),
+    /// Sparse lazy range-add / max segment tree.
+    Tree(&'a SegTreeProfile),
+}
+
+impl ProfileView<'_> {
+    /// Load at time `t`.
+    #[inline]
+    pub fn load_at(&self, t: i64) -> i64 {
+        match self {
+            ProfileView::Steps(p) => profile_load_at(p, t),
+            ProfileView::Tree(t_) => t_.load_at(t),
+        }
+    }
+
+    /// Earliest `t ∈ {lo} ∪ [lo, hi]` with `load(t) > cap`, if any.
+    /// The point `lo` is probed even when `lo > hi` — a degenerate
+    /// window can reach the fixed-placement check transiently (before
+    /// the interval-validity pair prunes it), and the historical linear
+    /// scan probed `load(s)` unconditionally; the tree arm mirrors that
+    /// exactly so both views stay witness-identical. Within a proper
+    /// window the step scan and the tree descent return the *same*
+    /// time: the load only changes at part boundaries, and both report
+    /// the leftmost point of the first region exceeding `cap`.
+    pub fn first_over(&self, lo: i64, hi: i64, cap: i64) -> Option<i64> {
+        match self {
+            ProfileView::Steps(p) => {
+                if profile_load_at(p, lo) > cap {
+                    return Some(lo);
+                }
+                for &(t, l) in p.iter() {
+                    if t > hi {
+                        break;
+                    }
+                    if t >= lo && l > cap {
+                        return Some(t);
+                    }
+                }
+                None
+            }
+            ProfileView::Tree(t_) => {
+                // degenerate window (lo > hi): the historical scan
+                // still probes load(lo), so mirror it; proper windows
+                // get the lo answer from the descent itself (it returns
+                // the leftmost over-cap point), sparing a second
+                // O(log H) walk on the hot path
+                if lo > hi {
+                    return (t_.load_at(lo) > cap).then_some(lo);
+                }
+                t_.first_over(lo, hi, cap)
+            }
+        }
+    }
+}
+
 /// Push the explanation of the compulsory-part load at time `t` into
 /// the scratch buffer (callers `begin_expl` first): for every item
 /// whose compulsory part under the *current* domains covers `t`, the
@@ -572,7 +661,7 @@ pub(crate) fn timetable_filter_item(
     items: &[CumItem],
     ii: usize,
     cap: i64,
-    profile: &[(i64, i64)],
+    profile: &ProfileView,
     ctx: &mut Ctx,
 ) -> Result<(), Conflict> {
     let it = &items[ii];
@@ -598,7 +687,7 @@ pub(crate) fn timetable_filter_item(
         loop {
             let s = ctx.min(it.start);
             let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
-            if profile_load_at(profile, s) - own(ms, me, true, s) + d <= cap {
+            if profile.load_at(s) - own(ms, me, true, s) + d <= cap {
                 break;
             }
             if ctx.explaining() {
@@ -629,7 +718,7 @@ pub(crate) fn timetable_filter_item(
         loop {
             let e = ctx.max(it.end);
             let (ms, me) = (ctx.max(it.start), ctx.min(it.end));
-            if profile_load_at(profile, e) - own(ms, me, true, e) + d <= cap {
+            if profile.load_at(e) - own(ms, me, true, e) + d <= cap {
                 break;
             }
             if ctx.explaining() {
@@ -657,19 +746,8 @@ pub(crate) fn timetable_filter_item(
         // undetermined active with fixed placement: would it overload?
         let s = ctx.min(it.start);
         let e = ctx.min(it.end);
-        // check only at profile breakpoints within [s, e] plus s
-        let mut over = (profile_load_at(profile, s) + d > cap).then_some(s);
-        if over.is_none() {
-            for &(t, l) in profile {
-                if t > e {
-                    break;
-                }
-                if t >= s && l + d > cap {
-                    over = Some(t);
-                    break;
-                }
-            }
-        }
+        // earliest overload point in [s, e] (a breakpoint or s itself)
+        let over = profile.first_over(s, e, cap - d);
         if let Some(t) = over {
             if ctx.explaining() {
                 ctx.begin_expl();
@@ -729,8 +807,9 @@ fn prop_cumulative(items: &[CumItem], cap: i64, ctx: &mut Ctx) -> Result<(), Con
         }
     }
     // Filter each potentially-active interval against the profile.
+    let view = ProfileView::Steps(&profile[..]);
     for ii in 0..items.len() {
-        timetable_filter_item(items, ii, cap, &profile, ctx)?;
+        timetable_filter_item(items, ii, cap, &view, ctx)?;
     }
     Ok(())
 }
@@ -761,11 +840,45 @@ fn push_cover_exclusion(
     }
 }
 
-/// Reservoir-style precedence cover.
+/// Explain a window-bound tightening of a covered start: the target is
+/// active, every impossible candidate is excluded, and each possible
+/// candidate's own window bound (`is_lo`: its start's min; else its
+/// end's max) caps what it could cover.
+fn explain_cover_window(
+    active: VarId,
+    start: VarId,
+    candidates: &[(VarId, VarId, VarId)],
+    possible: &[u32],
+    is_lo: bool,
+    ctx: &mut Ctx,
+) {
+    ctx.begin_expl();
+    ctx.expl_push(Lit::geq(active, 1));
+    let mut p = 0;
+    for j in 0..candidates.len() {
+        if p < possible.len() && possible[p] as usize == j {
+            p += 1;
+            let (_, s, e) = candidates[j];
+            let l = if is_lo {
+                Lit::geq(s, ctx.min(s))
+            } else {
+                Lit::leq(e, ctx.max(e))
+            };
+            ctx.expl_push(l);
+        } else {
+            push_cover_exclusion(start, candidates, j, ctx);
+        }
+    }
+}
+
+/// Reservoir-style precedence cover. `possible` is a caller-owned
+/// scratch buffer for the possible-candidate indices (cleared here),
+/// so the hottest cheap propagator performs no per-pass allocation.
 fn prop_cover(
     active: VarId,
     start: VarId,
     candidates: &[(VarId, VarId, VarId)],
+    possible: &mut Vec<u32>,
     ctx: &mut Ctx,
 ) -> Result<(), Conflict> {
     if ctx.max(active) == 0 {
@@ -775,13 +888,13 @@ fn prop_cover(
     let t_max = ctx.max(start);
     // candidate j can possibly cover some t in [t_min, t_max] iff
     // s_j.min + 1 <= t_max  and  e_j.max >= t_min  and a_j can be 1.
-    let mut possible: Vec<usize> = Vec::with_capacity(candidates.len());
+    possible.clear();
     for (j, &(a, s, e)) in candidates.iter().enumerate() {
         if ctx.max(a) == 0 {
             continue;
         }
         if ctx.min(s) + 1 <= t_max && ctx.max(e) >= t_min {
-            possible.push(j);
+            possible.push(j as u32);
         }
     }
     if possible.is_empty() {
@@ -806,48 +919,30 @@ fn prop_cover(
     // candidate windows. Explanation: the target is active, every
     // candidate outside `possible` is excluded, and each possible
     // candidate's own window bound caps what it could cover.
-    let lo = possible.iter().map(|&j| ctx.min(candidates[j].1) + 1).min().unwrap();
-    let hi = possible.iter().map(|&j| ctx.max(candidates[j].2)).max().unwrap();
-    let explain_window = |is_lo: bool, ctx: &mut Ctx| {
-        ctx.begin_expl();
-        ctx.expl_push(Lit::geq(active, 1));
-        let mut p = 0;
-        for j in 0..candidates.len() {
-            if p < possible.len() && possible[p] == j {
-                p += 1;
-                let (_, s, e) = candidates[j];
-                let l = if is_lo {
-                    Lit::geq(s, ctx.min(s))
-                } else {
-                    Lit::leq(e, ctx.max(e))
-                };
-                ctx.expl_push(l);
-            } else {
-                push_cover_exclusion(start, candidates, j, ctx);
-            }
-        }
-    };
+    let lo = possible.iter().map(|&j| ctx.min(candidates[j as usize].1) + 1).min().unwrap();
+    let hi = possible.iter().map(|&j| ctx.max(candidates[j as usize].2)).max().unwrap();
     if lo > ctx.min(start) {
         if ctx.explaining() {
-            explain_window(true, ctx);
+            explain_cover_window(active, start, candidates, possible, true, ctx);
         }
         ctx.set_min(start, lo)?;
     }
     if hi < ctx.max(start) {
         if ctx.explaining() {
-            explain_window(false, ctx);
+            explain_cover_window(active, start, candidates, possible, false, ctx);
         }
         ctx.set_max(start, hi)?;
     }
     if possible.len() == 1 {
-        let (a, s, e) = candidates[possible[0]];
+        let only = possible[0] as usize;
+        let (a, s, e) = candidates[only];
         // base reason: the target is active and every other candidate
         // is excluded → only this candidate can cover the start
         let explain_forced = |extra: Option<Lit>, ctx: &mut Ctx| {
             ctx.begin_expl();
             ctx.expl_push(Lit::geq(active, 1));
             for j in 0..candidates.len() {
-                if j != possible[0] {
+                if j != only {
                     push_cover_exclusion(start, candidates, j, ctx);
                 }
             }

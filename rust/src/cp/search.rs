@@ -12,10 +12,10 @@
 //! bugs can cost time but never correctness.
 
 use super::domain::{Lit, VarId};
-use super::engine::PropagationEngine;
+use super::engine::{ProfileMode, PropagationEngine};
 use super::learn::{analyze, luby, Analyzed, BranchHeap, VarActivity};
 use super::Model;
-use crate::util::{Deadline, Incumbent};
+use crate::util::{Csr, Deadline, Incumbent};
 use std::sync::Arc;
 
 /// Terminal status of a search.
@@ -52,8 +52,10 @@ pub struct SearchStats {
     /// Cumulative compulsory-part re-synchronisations (incremental
     /// forward updates plus backtrack undo).
     pub cum_resyncs: u64,
-    /// Cumulative profile flattenings (each replaces what used to be a
-    /// from-scratch rebuild per invocation).
+    /// Cumulative profile flattenings (linear profile mode only — each
+    /// replaces what used to be a from-scratch rebuild per invocation;
+    /// the segment-tree profile never re-flattens, so this stays 0
+    /// under `--profile segtree`).
     pub cum_rebuilds: u64,
     /// Luby restarts taken by the learned search.
     pub restarts: u64,
@@ -108,8 +110,9 @@ pub enum SearchMode {
 }
 
 /// Search-strategy configuration threaded from the CLI / coordinator
-/// down to the kernel: the exploration mode, the Luby restart unit, and
-/// the learned-no-good database cap.
+/// down to the kernel: the exploration mode, the Luby restart unit,
+/// the learned-no-good database cap, and the cumulative
+/// timetable-profile structure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SearchStrategy {
     /// Exploration mode.
@@ -120,6 +123,13 @@ pub struct SearchStrategy {
     /// No-good database size triggering an activity-based reduction at
     /// the next restart (`0` = never reduce).
     pub nogood_cap: usize,
+    /// Incremental `Cumulative` timetable structure (`--profile`):
+    /// the O(log H) segment tree by default, with the linear diff-map
+    /// profile retained as the A/B baseline and fuzz oracle. Both are
+    /// exact and walk the same search tree (see
+    /// `prop_segtree_profile_matches_linear`), so — like `restart_base`
+    /// — this does not discriminate coordinator cache keys.
+    pub profile: ProfileMode,
 }
 
 impl Default for SearchStrategy {
@@ -131,13 +141,30 @@ impl Default for SearchStrategy {
 impl SearchStrategy {
     /// The chronological baseline (no learning).
     pub fn chronological() -> Self {
-        SearchStrategy { mode: SearchMode::Chronological, restart_base: 0, nogood_cap: 0 }
+        SearchStrategy {
+            mode: SearchMode::Chronological,
+            restart_base: 0,
+            nogood_cap: 0,
+            profile: ProfileMode::SegTree,
+        }
     }
 
     /// Conflict-driven search with the default Luby-128 restart policy
     /// and a 10k no-good cap.
     pub fn learned() -> Self {
-        SearchStrategy { mode: SearchMode::Learned, restart_base: 128, nogood_cap: 10_000 }
+        SearchStrategy {
+            mode: SearchMode::Learned,
+            restart_base: 128,
+            nogood_cap: 10_000,
+            profile: ProfileMode::SegTree,
+        }
+    }
+
+    /// The same strategy with a different cumulative timetable-profile
+    /// structure (the `--profile linear|segtree` A/B knob).
+    pub fn with_profile(mut self, profile: ProfileMode) -> Self {
+        self.profile = profile;
+        self
     }
 
     /// Parse a CLI strategy name.
@@ -277,7 +304,8 @@ impl Solver {
         branch_order: &[VarId],
         mut on_solution: impl FnMut(&[i64], i64),
     ) -> SearchResult {
-        let mut eng = PropagationEngine::new(model, objective, self.naive, false);
+        let mut eng =
+            PropagationEngine::new(model, objective, self.naive, false, self.strategy.profile);
         let mut best: Option<(Vec<i64>, i64)> = None;
         // seed the objective bound from the shared pruning bound when
         // one is attached (any solver may prune against the best
@@ -438,7 +466,8 @@ impl Solver {
         branch_order: &[VarId],
         mut on_solution: impl FnMut(&[i64], i64),
     ) -> SearchResult {
-        let mut eng = PropagationEngine::new(model, objective, false, true);
+        let mut eng =
+            PropagationEngine::new(model, objective, false, true, self.strategy.profile);
         let nvars = eng.domains.len();
         let mut best: Option<(Vec<i64>, i64)> = None;
         if !objective.is_empty() {
@@ -461,17 +490,21 @@ impl Solver {
         // or disabled it re-inserts it on undo.
         let npos = branch_order.len();
         let pos_var: Vec<u32> = branch_order.iter().map(|v| v.0).collect();
-        let mut var_positions: Vec<Vec<u32>> = vec![Vec::new(); nvars];
+        let mut pos_rows: Vec<Vec<u32>> = vec![Vec::new(); nvars];
         for (p, v) in branch_order.iter().enumerate() {
-            var_positions[v.0 as usize].push(p as u32);
+            pos_rows[v.0 as usize].push(p as u32);
         }
         if let Some(gs) = &self.guards {
             for (p, g) in gs.iter().enumerate() {
                 if let Some(g) = g {
-                    var_positions[g.0 as usize].push(p as u32);
+                    pos_rows[g.0 as usize].push(p as u32);
                 }
             }
         }
+        // flattened var → branch positions map: walked on every undo
+        // and every activity bump, so it gets the CSR treatment too
+        let var_positions: Csr<u32> = Csr::from_rows(&pos_rows);
+        drop(pos_rows);
         let mut act = VarActivity::new(nvars);
         let mut heap = BranchHeap::new(npos);
         for p in 0..npos as u32 {
@@ -513,7 +546,7 @@ impl Solver {
                 restart_idx += 1;
                 conflicts_since_restart = 0;
                 eng.stats.restarts += 1;
-                requeue_undone(&mut eng, model, 0, &mut heap, &act, &pos_var, &var_positions);
+                requeue_undone(&mut eng, 0, &mut heap, &act, &pos_var, &var_positions);
                 if self.strategy.nogood_cap > 0 && eng.ng.len() > self.strategy.nogood_cap {
                     eng.ng.reduce();
                     eng.stats.db_reductions += 1;
@@ -641,7 +674,7 @@ impl Solver {
                     }
                     act.swap_bumped(&mut bumped);
                     for &v in &bumped {
-                        for &p in &var_positions[v as usize] {
+                        for &p in var_positions.row(v as usize) {
                             heap.resift(p, &act, &pos_var);
                         }
                     }
@@ -688,26 +721,24 @@ impl Solver {
 /// above the backjump target, then backjump. Inserting before the undo
 /// is fine — the heap only tracks *candidacy*; fixedness is re-checked
 /// at selection time.
-#[allow(clippy::too_many_arguments)]
 fn requeue_undone(
     eng: &mut PropagationEngine,
-    model: &Model,
     level: usize,
     heap: &mut BranchHeap,
     act: &VarActivity,
     pos_var: &[u32],
-    var_positions: &[Vec<u32>],
+    var_positions: &Csr<u32>,
 ) {
     if level >= eng.current_level() {
         return;
     }
     let mark = eng.level_marks[level] as usize;
     for e in &eng.trail[mark..] {
-        for &p in &var_positions[e.var as usize] {
+        for &p in var_positions.row(e.var as usize) {
             heap.insert(p, act, pos_var);
         }
     }
-    eng.backjump_to(model, level);
+    eng.backjump_to(level);
 }
 
 /// Backjump to `level`, store the learned no-good (size-1 no-goods are
@@ -723,9 +754,9 @@ fn apply_learned(
     heap: &mut BranchHeap,
     act: &VarActivity,
     pos_var: &[u32],
-    var_positions: &[Vec<u32>],
+    var_positions: &Csr<u32>,
 ) -> Result<(), super::propagators::Conflict> {
-    requeue_undone(eng, model, level, heap, act, pos_var, var_positions);
+    requeue_undone(eng, level, heap, act, pos_var, var_positions);
     eng.stats.nogoods_learned += 1;
     if lits.len() == 1 {
         eng.assert_root(model, lits[0].negation())
@@ -746,26 +777,27 @@ fn backtrack(
     ptr: &mut usize,
 ) -> bool {
     loop {
-        let Some(mut f) = frames.pop() else {
+        // peek instead of pop/push: the frame stays on the stack while
+        // its right branch is tried, so there is no "re-pop" that could
+        // ever see an empty stack (the empty case is exactly root
+        // exhaustion, reported as `false` — never a panic)
+        let Some(f) = frames.last_mut() else {
             return false;
         };
-        eng.undo_to(model, f.trail_len);
+        eng.undo_to(f.trail_len);
         *ptr = f.saved_ptr;
         if f.right_done {
-            continue; // both branches exhausted here; keep unwinding
+            frames.pop(); // both branches exhausted here; keep unwinding
+            continue;
         }
         // right branch: x >= value + 1
         f.right_done = true;
-        let x = f.var;
-        let v = f.value;
-        frames.push(f);
+        let (x, v) = (f.var, f.value);
         if eng.decide_ge(model, x, v + 1).is_ok() {
             return true;
         }
         eng.stats.conflicts += 1;
-        // right branch failed too: unwind further
-        let f = frames.pop().unwrap();
-        eng.undo_to(model, f.trail_len);
-        *ptr = f.saved_ptr;
+        // right branch failed too: the next iteration undoes its trail
+        // (right_done is set), pops this frame and keeps unwinding
     }
 }

@@ -1,0 +1,319 @@
+//! Sparse lazy segment tree over the time axis — the O(log H)
+//! timetable profile backing the incremental `Cumulative` propagator.
+//!
+//! The linear profile (a flattened `(time, load)` step vector rebuilt
+//! from a diff map whenever any compulsory part moves) costs O(K) per
+//! profile change, where K is the number of breakpoints — which grows
+//! with the instance, so on paper-scale-and-beyond graphs (n ≥ 1000,
+//! see `generators::LARGE_GRAPHS`) every cumulative propagation pays a
+//! scan proportional to the horizon. This tree replaces that with:
+//!
+//! * `range_add(l, r, d)` — register/unregister one compulsory part in
+//!   O(log H): nodes are allocated on demand along the two boundary
+//!   paths, so memory is proportional to the *touched* coordinates
+//!   (domain values that actually become part boundaries), never to
+//!   the horizon.
+//! * `max()` — the overload check, O(1) off the root.
+//! * `load_at(t)` — the timetable filter's point query, O(log H).
+//! * `first_over(l, r, cap)` — earliest `t ∈ [l, r]` with
+//!   `load(t) > cap`, O(log H); replaces the linear breakpoint scan of
+//!   the fixed-placement overload check and doubles as the
+//!   peak-witness lookup for conflict explanations.
+//!
+//! Lazy convention (no push-down): `Node::add` is an addition applying
+//! to the node's whole range, already included in `Node::max` but not
+//! yet propagated to children; an absent child stands for a subtree
+//! whose values all equal the sum of `add` along the path above it.
+//! Loads are step functions changing only at update boundaries, so
+//! every answer this tree gives is *value-identical* to the linear
+//! profile's — which is what lets the chronological search walk the
+//! exact same tree under either structure (asserted by
+//! `prop_segtree_profile_matches_linear`).
+
+/// Child sentinel: subtree untouched (uniform zero relative to the
+/// adds accumulated above it).
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    left: u32,
+    right: u32,
+    /// Pending addition over the node's whole range (included in
+    /// `max`, not yet pushed to children).
+    add: i64,
+    /// Maximum true value over the node's range, relative to the adds
+    /// accumulated *above* this node.
+    max: i64,
+}
+
+/// Sparse lazy range-add / max-query segment tree over `[lo, hi)`.
+#[derive(Debug)]
+pub(crate) struct SegTreeProfile {
+    lo: i64,
+    hi: i64,
+    nodes: Vec<Node>,
+}
+
+impl SegTreeProfile {
+    /// Empty profile over the half-open coordinate range `[lo, hi)`
+    /// (degenerate ranges are widened to one point).
+    pub fn new(lo: i64, hi: i64) -> Self {
+        let hi = hi.max(lo + 1);
+        SegTreeProfile {
+            lo,
+            hi,
+            nodes: vec![Node { left: NIL, right: NIL, add: 0, max: 0 }],
+        }
+    }
+
+    /// Maximum load over the whole axis (0 when nothing is registered).
+    #[inline]
+    pub fn max(&self) -> i64 {
+        self.nodes[0].max
+    }
+
+    fn child(&mut self, u: usize, right: bool) -> usize {
+        let c = if right { self.nodes[u].right } else { self.nodes[u].left };
+        if c != NIL {
+            return c as usize;
+        }
+        let id = self.nodes.len() as u32;
+        self.nodes.push(Node { left: NIL, right: NIL, add: 0, max: 0 });
+        if right {
+            self.nodes[u].right = id;
+        } else {
+            self.nodes[u].left = id;
+        }
+        id as usize
+    }
+
+    /// Add `d` on `[l, r)` (clamped to the tree's range).
+    pub fn range_add(&mut self, l: i64, r: i64, d: i64) {
+        let (l, r) = (l.max(self.lo), r.min(self.hi));
+        if l >= r || d == 0 {
+            return;
+        }
+        self.add_rec(0, self.lo, self.hi, l, r, d);
+    }
+
+    fn add_rec(&mut self, u: usize, a: i64, b: i64, l: i64, r: i64, d: i64) {
+        if l <= a && b <= r {
+            self.nodes[u].add += d;
+            self.nodes[u].max += d;
+            return;
+        }
+        let m = a + (b - a) / 2;
+        if l < m {
+            let c = self.child(u, false);
+            self.add_rec(c, a, m, l, r.min(m), d);
+        }
+        if r > m {
+            let c = self.child(u, true);
+            self.add_rec(c, m, b, l.max(m), r, d);
+        }
+        // recompute: an absent child is a uniform-zero subtree
+        let n = self.nodes[u];
+        let lm = if n.left != NIL { self.nodes[n.left as usize].max } else { 0 };
+        let rm = if n.right != NIL { self.nodes[n.right as usize].max } else { 0 };
+        self.nodes[u].max = n.add + lm.max(rm);
+    }
+
+    /// Load at point `t` (0 outside the tree's range).
+    pub fn load_at(&self, t: i64) -> i64 {
+        if t < self.lo || t >= self.hi {
+            return 0;
+        }
+        let (mut u, mut a, mut b) = (0usize, self.lo, self.hi);
+        let mut acc = 0i64;
+        loop {
+            acc += self.nodes[u].add;
+            if b - a == 1 {
+                return acc;
+            }
+            let m = a + (b - a) / 2;
+            let c = if t < m { self.nodes[u].left } else { self.nodes[u].right };
+            if c == NIL {
+                return acc;
+            }
+            if t < m {
+                b = m;
+            } else {
+                a = m;
+            }
+            u = c as usize;
+        }
+    }
+
+    /// Earliest `t ∈ [l, r]` (inclusive) with `load(t) > cap`, if any.
+    pub fn first_over(&self, l: i64, r: i64, cap: i64) -> Option<i64> {
+        let (l, r) = (l.max(self.lo), (r + 1).min(self.hi));
+        if l >= r {
+            return None;
+        }
+        self.fo_rec(Some(0), self.lo, self.hi, l, r, cap, 0)
+    }
+
+    /// A point achieving the maximum load (the overload witness for
+    /// conflict explanations). Returns the leftmost such point — the
+    /// same breakpoint the linear profile's max scan reports.
+    pub fn peak_time(&self) -> i64 {
+        self.first_over(self.lo, self.hi - 1, self.max() - 1).unwrap_or(self.lo)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fo_rec(
+        &self,
+        u: Option<usize>,
+        a: i64,
+        b: i64,
+        l: i64,
+        r: i64,
+        cap: i64,
+        acc: i64,
+    ) -> Option<i64> {
+        // invariant: [a, b) ∩ [l, r) is nonempty
+        let Some(u) = u else {
+            // untouched subtree: every point carries exactly `acc`
+            return if acc > cap { Some(a.max(l)) } else { None };
+        };
+        let n = &self.nodes[u];
+        if acc + n.max <= cap {
+            return None; // no point in this subtree exceeds the cap
+        }
+        let acc = acc + n.add;
+        if b - a == 1 {
+            return if acc > cap { Some(a) } else { None };
+        }
+        let m = a + (b - a) / 2;
+        if l < m {
+            let c = if n.left == NIL { None } else { Some(n.left as usize) };
+            if let Some(t) = self.fo_rec(c, a, m, l, r.min(m), cap, acc) {
+                return Some(t);
+            }
+        }
+        if r > m {
+            let c = if n.right == NIL { None } else { Some(n.right as usize) };
+            if let Some(t) = self.fo_rec(c, m, b, l.max(m), r, cap, acc) {
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Dense reference: a plain array over the same range.
+    struct Ref {
+        lo: i64,
+        vals: Vec<i64>,
+    }
+
+    impl Ref {
+        fn new(lo: i64, hi: i64) -> Self {
+            Ref { lo, vals: vec![0; (hi - lo) as usize] }
+        }
+        fn range_add(&mut self, l: i64, r: i64, d: i64) {
+            for t in l.max(self.lo)..r.min(self.lo + self.vals.len() as i64) {
+                self.vals[(t - self.lo) as usize] += d;
+            }
+        }
+        fn load_at(&self, t: i64) -> i64 {
+            let i = t - self.lo;
+            if i < 0 || i >= self.vals.len() as i64 {
+                0
+            } else {
+                self.vals[i as usize]
+            }
+        }
+        fn max(&self) -> i64 {
+            self.vals.iter().copied().max().unwrap_or(0).max(0)
+        }
+        fn first_over(&self, l: i64, r: i64, cap: i64) -> Option<i64> {
+            (l.max(self.lo)..=r.min(self.lo + self.vals.len() as i64 - 1))
+                .find(|&t| self.load_at(t) > cap)
+        }
+    }
+
+    #[test]
+    fn basic_parts() {
+        let mut t = SegTreeProfile::new(0, 16);
+        t.range_add(2, 6, 3); // part [2,5] demand 3
+        t.range_add(4, 9, 2); // part [4,8] demand 2
+        assert_eq!(t.max(), 5);
+        assert_eq!(t.load_at(3), 3);
+        assert_eq!(t.load_at(4), 5);
+        assert_eq!(t.load_at(6), 2);
+        assert_eq!(t.load_at(9), 0);
+        assert_eq!(t.first_over(0, 15, 3), Some(4));
+        assert_eq!(t.first_over(0, 15, 4), Some(4));
+        assert_eq!(t.first_over(0, 15, 5), None);
+        assert_eq!(t.first_over(5, 15, 3), Some(5));
+        assert_eq!(t.peak_time(), 4);
+        // removal restores the old profile exactly
+        t.range_add(4, 9, -2);
+        assert_eq!(t.max(), 3);
+        assert_eq!(t.load_at(4), 3);
+        assert_eq!(t.first_over(0, 15, 2), Some(2));
+    }
+
+    #[test]
+    fn empty_tree_is_all_zero() {
+        let t = SegTreeProfile::new(5, 5); // degenerate, widened
+        assert_eq!(t.max(), 0);
+        assert_eq!(t.load_at(5), 0);
+        assert_eq!(t.first_over(0, 100, -1), Some(5), "zero > -1 inside range");
+        assert_eq!(t.first_over(0, 100, 0), None);
+    }
+
+    /// Randomized add/remove fuzz against the dense reference — the
+    /// in-tree oracle for the tree (the cross-structure oracle is the
+    /// linear profile itself, see `prop_segtree_profile_matches_linear`).
+    #[test]
+    fn fuzz_against_dense_reference() {
+        let mut rng = Rng::seed_from_u64(0xC0FFEE);
+        for case in 0..60 {
+            let lo = rng.gen_range(40) as i64 - 20;
+            let span = 2 + rng.gen_range(120) as i64;
+            let mut tree = SegTreeProfile::new(lo, lo + span);
+            let mut reference = Ref::new(lo, lo + span);
+            let mut live: Vec<(i64, i64, i64)> = Vec::new();
+            for _ in 0..200 {
+                if !live.is_empty() && rng.gen_bool(0.4) {
+                    // remove a live part
+                    let k = rng.gen_range(live.len());
+                    let (l, r, d) = live.swap_remove(k);
+                    tree.range_add(l, r, -d);
+                    reference.range_add(l, r, -d);
+                } else {
+                    let l = lo + rng.gen_range(span as usize) as i64;
+                    let r = l + 1 + rng.gen_range(20) as i64;
+                    let d = 1 + rng.gen_range(9) as i64;
+                    tree.range_add(l, r, d);
+                    reference.range_add(l, r, d);
+                    live.push((l, r, d));
+                }
+                assert_eq!(tree.max(), reference.max(), "case {case}: max");
+                for _ in 0..8 {
+                    let t = lo - 2 + rng.gen_range((span + 4) as usize) as i64;
+                    assert_eq!(
+                        tree.load_at(t),
+                        reference.load_at(t),
+                        "case {case}: load_at({t})"
+                    );
+                }
+                let ql = lo - 1 + rng.gen_range((span + 2) as usize) as i64;
+                let qr = ql + rng.gen_range(40) as i64;
+                let cap = rng.gen_range(25) as i64 - 2;
+                assert_eq!(
+                    tree.first_over(ql, qr, cap),
+                    reference.first_over(ql, qr, cap),
+                    "case {case}: first_over({ql},{qr},{cap})"
+                );
+            }
+        }
+    }
+}

@@ -327,7 +327,7 @@ fn nogood_watches_survive_backtrack() {
     let x = m.new_var(0, 5);
     let y = m.new_var(0, 5);
     let z = m.new_var(0, 5);
-    let mut eng = PropagationEngine::new(&m, &[], false, true);
+    let mut eng = PropagationEngine::new(&m, &[], false, true, ProfileMode::SegTree);
     // forbid x ≥ 3 ∧ y ≥ 2 ∧ z ≥ 4
     eng.ng.add(vec![Lit::geq(x, 3), Lit::geq(y, 2), Lit::geq(z, 4)]);
     assert!(eng.fixpoint(&m).is_ok(), "nothing entailed yet");
@@ -337,7 +337,7 @@ fn nogood_watches_survive_backtrack() {
     assert_eq!(eng.domains[z.0 as usize].max(), 3, "no-good must prune z");
     assert_eq!(eng.stats.nogoods_pruned, 1);
     // backtrack to the root: bounds relax, watches stay put
-    eng.backjump_to(&m, 0);
+    eng.backjump_to(0);
     assert_eq!(eng.domains[z.0 as usize].max(), 5);
     assert_eq!(eng.domains[y.0 as usize].max(), 5);
     // second descent in a different order: z then x → y ≤ 1

@@ -117,6 +117,21 @@ pub fn random_layered(name: &str, n: usize, m: usize, seed: u64) -> Graph {
     Graph::from_edges(name, n, &edges, duration, mem).expect("layered construction is a DAG")
 }
 
+/// Large-tier layered instance (the `L` family, paper-scale-and-beyond:
+/// n ∈ {1000, 2500, 5000, 10000}): edge density extrapolates the
+/// G-family trend (G1 m/n ≈ 2.36 → G4 m/n ≈ 5.875, roughly linear in
+/// log n) gently past G4, so the large instances keep the "complex
+/// interconnect topology" that makes rematerialization non-trivial
+/// without degenerating into an unrealistically dense random graph.
+/// Memory-budget ratios in the bench harness stay the paper's 80/90%
+/// of the no-remat peak.
+pub fn large_layered(name: &str, n: usize, seed: u64) -> Graph {
+    assert!(n >= 1000, "large tier starts at n = 1000 (use random_layered below that)");
+    let ratio = 5.875 + (n as f64 / 1000.0).log10();
+    let m = (n as f64 * ratio).round() as usize;
+    random_layered(name, n, m, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -164,6 +164,20 @@ pub fn rw4() -> Graph {
     real_world_like("RW4", 698, 1436, 204)
 }
 
+/// Large-tier real-world-like instance (the `L` family's inference-
+/// graph half, n ∈ {1000, 2500, 5000, 10000}): edge density follows the
+/// RW family's ratio trend (RW1 m/n ≈ 2.65 declining to RW4 ≈ 2.06 as
+/// n grows — real inference graphs get *sparser* per node at scale, not
+/// denser), so the large instances remain block-structured DAGs with
+/// long skips and three-decade tensor-size heterogeneity rather than
+/// dense random graphs.
+pub fn large_real_world(name: &str, n: usize, seed: u64) -> Graph {
+    assert!(n >= 1000, "large tier starts at n = 1000 (use real_world_like below that)");
+    let ratio = (2.6 - 0.25 * (n as f64 / 1000.0).log10()).max(1.8);
+    let m = (n as f64 * ratio).round() as usize;
+    real_world_like(name, n, m, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

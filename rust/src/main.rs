@@ -3,11 +3,12 @@
 //! Subcommands:
 //!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--portfolio]
 //!           [--threads N] [--time-limit S] [--presolve off|exact|aggressive]
-//!           [--max-interval-len L] [--search chronological|learned] [--verbose]
+//!           [--max-interval-len L] [--search chronological|learned]
+//!           [--profile segtree|linear] [--verbose]
 //!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
 //!           [--time-limit S] [--compare-serial]
-//!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|ablation-topo|all>
-//!           [--time-limit S] [--quick]
+//!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|ablation-c|
+//!           ablation-topo|all> [--time-limit S] [--quick] [--xl]
 //!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`
 //!           and a build with `--features pjrt`)
 //!
@@ -18,7 +19,7 @@ use moccasin::coordinator::{Backend, Coordinator, SolveRequest};
 use moccasin::executor::{train_with_remat, TrainConfig};
 use moccasin::generators::{paper_graph, random_layered};
 use moccasin::graph::{topological_order, Graph};
-use moccasin::cp::SearchStrategy;
+use moccasin::cp::{ProfileMode, SearchStrategy};
 use moccasin::presolve::{PresolveConfig, PresolveLevel};
 use moccasin::util::fmt_u64;
 use std::time::{Duration, Instant};
@@ -42,7 +43,9 @@ fn parse_graph(spec: &str) -> Option<Graph> {
 fn graph_or_exit(args: &[String]) -> (String, Graph) {
     let spec = flag_val(args, "--graph").unwrap_or_else(|| "G1".into());
     let g = parse_graph(&spec).unwrap_or_else(|| {
-        eprintln!("unknown graph {spec} (use G1..G4, RW1..RW4, CM1, CM2, rl:n:m:seed)");
+        eprintln!(
+            "unknown graph {spec} (use G1..G4, RW1..RW4, CM1, CM2, L1..L4, rl:n:m:seed)"
+        );
         std::process::exit(2);
     });
     (spec, g)
@@ -84,6 +87,18 @@ fn main() {
             eprintln!("unknown search strategy {name} (use chronological|learned)");
             std::process::exit(2);
         }),
+    };
+    // cumulative timetable-profile A/B knob (both modes are exact and
+    // walk the same tree; segtree is the large-graph default)
+    let search = match flag_val(&args, "--profile") {
+        None => search,
+        Some(name) => match ProfileMode::parse(&name) {
+            Some(p) => search.with_profile(p),
+            None => {
+                eprintln!("unknown profile mode {name} (use segtree|linear)");
+                std::process::exit(2);
+            }
+        },
     };
 
     match args.first().map(|s| s.as_str()) {
@@ -139,8 +154,13 @@ fn main() {
                     st.nodes, st.conflicts, st.solutions, st.propagations
                 );
                 println!(
-                    "engine: events={} wakeups-skipped={} cum-resyncs={} cum-rebuilds={}",
-                    st.events_posted, st.wakeups_skipped, st.cum_resyncs, st.cum_rebuilds
+                    "engine: profile={} events={} wakeups-skipped={} cum-resyncs={} \
+                     cum-rebuilds={}",
+                    search.profile.name(),
+                    st.events_posted,
+                    st.wakeups_skipped,
+                    st.cum_resyncs,
+                    st.cum_rebuilds
                 );
                 println!(
                     "search: strategy={} restarts={} nogoods-learned={} nogoods-pruned={} \
@@ -259,22 +279,33 @@ fn main() {
                 );
             }
         }
-        Some("bench") => match args.get(1).map(|s| s.as_str()) {
-            Some("fig1") => bench::fig1(time_limit),
-            Some("fig5") => bench::fig5(time_limit, quick),
-            Some("fig6") => bench::fig6(time_limit, quick),
-            Some("table1") => bench::table1(),
-            Some("table2") => bench::table2(time_limit, quick),
-            Some("sweep") => bench::sweep_parallel(time_limit, quick),
-            Some("solver-json") => bench::bench_solver_json(time_limit, quick, search),
-            Some("ablation-c") => bench::ablation_c(time_limit),
-            Some("ablation-topo") => bench::ablation_topo(),
-            Some("all") | None => bench::run_all(time_limit, quick, search),
-            Some(other) => {
-                eprintln!("unknown bench target {other}");
-                std::process::exit(2);
+        Some("bench") => {
+            let xl = args.iter().any(|a| a == "--xl");
+            let r = match args.get(1).map(|s| s.as_str()) {
+                Some("fig1") => bench::fig1(time_limit),
+                Some("fig5") => bench::fig5(time_limit, quick),
+                Some("fig6") => bench::fig6(time_limit, quick),
+                Some("table1") => {
+                    bench::table1();
+                    Ok(())
+                }
+                Some("table2") => bench::table2(time_limit, quick),
+                Some("sweep") => bench::sweep_parallel(time_limit, quick),
+                Some("solver-json") => bench::bench_solver_json(time_limit, quick, search),
+                Some("large-json") => bench::bench_large_json(time_limit, quick, xl),
+                Some("ablation-c") => bench::ablation_c(time_limit),
+                Some("ablation-topo") => bench::ablation_topo(),
+                Some("all") | None => bench::run_all(time_limit, quick, search),
+                Some(other) => {
+                    eprintln!("unknown bench target {other}");
+                    std::process::exit(2);
+                }
+            };
+            if let Err(e) = r {
+                eprintln!("bench failed: {e}");
+                std::process::exit(1);
             }
-        },
+        }
         Some("train") => {
             let steps =
                 flag_val(&args, "--steps").and_then(|s| s.parse().ok()).unwrap_or(200);
@@ -302,14 +333,16 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: moccasin <solve|sweep|bench|train> [options]\n\
-                   solve --graph <G1..G4|RW1..RW4|CM1|CM2|rl:n:m:seed> [--budget-frac F] \
+                   solve --graph <G1..G4|RW1..RW4|CM1|CM2|L1..L4|rl:n:m:seed> \
+                 [--budget-frac F] \
                  [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
                  [--threads N] [--time-limit S] [--presolve off|exact|aggressive] \
-                 [--max-interval-len L] [--search chronological|learned] [--verbose]\n\
+                 [--max-interval-len L] [--search chronological|learned] \
+                 [--profile segtree|linear] [--verbose]\n\
                    sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
                  [--search chronological|learned] [--compare-serial]\n\
-                   bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|ablation-c|\
-                 ablation-topo|all> [--time-limit S] [--quick]\n\
+                   bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|\
+                 ablation-c|ablation-topo|all> [--time-limit S] [--quick] [--xl]\n\
                    train [--steps N] [--budget-frac F]"
             );
             std::process::exit(2);

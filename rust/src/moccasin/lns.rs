@@ -72,13 +72,23 @@ pub fn removal_polish(graph: &Graph, sol: &RematSolution, budget: u64) -> RematS
 /// "earlier events" of that stage, §2.3). Trailing useless remats are
 /// dropped. Returns per-node `(stage, is_first)` lists in sequence
 /// order.
+///
+/// Returns `None` when the sequence's first occurrences do not follow
+/// `order` exactly. This is a *validated* precondition, not a
+/// `debug_assert!`: the staged model is order-relative, so staging an
+/// out-of-order incumbent would silently build a wrong (unsound)
+/// window model in release builds — every caller must treat `None` as
+/// "this incumbent is not representable against this order".
 fn stages_of_incumbent(
     graph: &Graph,
     order: &[NodeId],
     seq: &[NodeId],
-) -> Vec<Vec<usize>> {
+) -> Option<Vec<Vec<usize>>> {
     let n = graph.n();
-    let mut topo_index = vec![0usize; n];
+    // explicit membership sentinel: stages are 1-based, so 0 would
+    // already never match, but usize::MAX makes "absent from `order`"
+    // impossible to confuse with any stage under future renumbering
+    let mut topo_index = vec![usize::MAX; n];
     for (i, &v) in order.iter().enumerate() {
         topo_index[v as usize] = i + 1;
     }
@@ -88,10 +98,11 @@ fn stages_of_incumbent(
     for &x in seq {
         let xi = x as usize;
         if !seen[xi] {
-            debug_assert_eq!(
-                topo_index[xi], next_stage,
-                "incumbent must follow the input topological order"
-            );
+            if topo_index[xi] != next_stage {
+                // out-of-order incumbent, or a node missing from
+                // `order` (sentinel): unrepresentable
+                return None;
+            }
             seen[xi] = true;
             stage_of[xi].push(next_stage);
             next_stage += 1;
@@ -105,7 +116,7 @@ fn stages_of_incumbent(
         }
         // occurrences after the last stage are useless → dropped
     }
-    stage_of
+    Some(stage_of)
 }
 
 /// Canonicalize a sequence into staged-event order: assign every
@@ -115,12 +126,17 @@ fn stages_of_incumbent(
 /// model — otherwise a feasible sequence whose within-stage remat order
 /// differs from slot order can appear (marginally) infeasible to the
 /// cumulative propagator.
+///
+/// Returns `None` when the sequence is invalid *or* its first
+/// occurrences do not follow `order` — an out-of-order sequence can no
+/// longer canonicalize silently into a wrong staging (it used to be
+/// only a `debug_assert!`, i.e. unchecked in release builds).
 pub fn canonicalize(
     graph: &Graph,
     order: &[NodeId],
     seq: &[NodeId],
 ) -> Option<RematSolution> {
-    let stage_of = stages_of_incumbent(graph, order, seq);
+    let stage_of = stages_of_incumbent(graph, order, seq)?;
     let n = graph.n();
     let mut topo_index = vec![0usize; n];
     for (i, &v) in order.iter().enumerate() {
@@ -155,7 +171,10 @@ fn solve_window(
     stats: &mut SearchStats,
 ) -> Option<RematSolution> {
     let n = graph.n();
-    let stage_of = stages_of_incumbent(graph, order, &incumbent.seq);
+    // an unrepresentable incumbent means this window cannot improve it
+    // (lns_loop canonicalizes up front, so this only trips on exotic
+    // callers) — never a wrong staging
+    let stage_of = stages_of_incumbent(graph, order, &incumbent.seq)?;
     // per-node C: at least the incumbent's interval count
     let c_v: Vec<usize> = (0..n).map(|v| c.max(stage_of[v].len())).collect();
     // NOTE (EXPERIMENTS.md §Perf): near-tight budgets the staged event
@@ -282,6 +301,16 @@ pub fn lns_loop(
             );
         }
     }
+    // An incumbent that cannot be staged against `order` can never be
+    // improved by a window re-solve (solve_window would return None on
+    // every iteration): bail out instead of burning the whole time
+    // budget spinning through no-op windows.
+    if stages_of_incumbent(graph, order, &incumbent.seq).is_none() {
+        if dbg {
+            eprintln!("lns: incumbent not representable against the input order; giving up");
+        }
+        return;
+    }
     let mut iters = 0usize;
     let mut wins = 0usize;
     let w = window.clamp(3, n);
@@ -386,9 +415,34 @@ mod tests {
         )
         .unwrap();
         let order = topological_order(&g).unwrap(); // [0,1,2,3]
-        let st = stages_of_incumbent(&g, &order, &[0, 1, 2, 0, 3]);
+        let st = stages_of_incumbent(&g, &order, &[0, 1, 2, 0, 3]).unwrap();
         assert_eq!(st[0], vec![1, 4]); // first at stage 1, remat in stage 4
         assert_eq!(st[3], vec![4]);
+    }
+
+    #[test]
+    fn out_of_order_incumbent_is_rejected_not_silently_staged() {
+        // Regression (release-build soundness): an incumbent whose
+        // first occurrences do not follow the input topological order
+        // used to pass a `debug_assert!` silently in release builds and
+        // build a wrong staging, freezing unsound LNS windows. It must
+        // be rejected by validation in every build profile.
+        let g = Graph::from_edges(
+            "d",
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            vec![1; 4],
+            vec![1; 4],
+        )
+        .unwrap();
+        let order = topological_order(&g).unwrap(); // [0,1,2,3]
+        // 2 appears before 1: valid DAG execution, but out of `order`
+        assert!(stages_of_incumbent(&g, &order, &[0, 2, 1, 3]).is_none());
+        assert!(canonicalize(&g, &order, &[0, 2, 1, 3]).is_none());
+        // a node missing from `order` (topo_index 0) is also rejected
+        assert!(stages_of_incumbent(&g, &order[..3], &[0, 1, 2, 3]).is_none());
+        // the in-order sequence still canonicalizes
+        assert!(canonicalize(&g, &order, &[0, 1, 2, 0, 3]).is_some());
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Compressed-sparse-row (CSR) arenas for per-row adjacency data.
+//!
+//! The CP kernel keeps several "row per variable" tables that the inner
+//! loop walks on every event: propagator watcher lists, cumulative
+//! item indices, branch-position maps. Stored as `Vec<Vec<T>>` each row
+//! is its own heap allocation, so a scan pays a pointer chase (and a
+//! cache miss) per variable — measurable at large n. [`Csr`] flattens
+//! the rows into one arena with `u32` offsets: row lookup is two
+//! adjacent offset reads and the data is contiguous.
+
+/// Rows of `T` flattened into a single arena with `u32` offsets
+/// (row `i` occupies `dat[off[i] .. off[i + 1]]`).
+#[derive(Debug, Clone)]
+pub struct Csr<T> {
+    off: Vec<u32>,
+    dat: Vec<T>,
+}
+
+impl<T: Clone> Csr<T> {
+    /// Flatten `rows` (consuming nothing; rows are cloned into the
+    /// arena — callers build the nested form once and drop it).
+    pub fn from_rows(rows: &[Vec<T>]) -> Self {
+        let total: usize = rows.iter().map(|r| r.len()).sum();
+        assert!(total <= u32::MAX as usize, "CSR arena exceeds u32 offsets");
+        let mut off = Vec::with_capacity(rows.len() + 1);
+        let mut dat = Vec::with_capacity(total);
+        off.push(0u32);
+        for r in rows {
+            dat.extend_from_slice(r);
+            off.push(dat.len() as u32);
+        }
+        Csr { off, dat }
+    }
+}
+
+impl<T> Csr<T> {
+    /// Number of rows.
+    pub fn num_rows(&self) -> usize {
+        self.off.len() - 1
+    }
+
+    /// The contiguous slice of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.dat[self.off[i] as usize..self.off[i + 1] as usize]
+    }
+
+    /// Index range of row `i` into the arena (for loops that must not
+    /// hold a borrow across mutations — pair with [`Csr::at`]).
+    #[inline]
+    pub fn span(&self, i: usize) -> std::ops::Range<usize> {
+        self.off[i] as usize..self.off[i + 1] as usize
+    }
+
+    /// Arena entry `k` (use with [`Csr::span`]).
+    #[inline]
+    pub fn at(&self, k: usize) -> &T {
+        &self.dat[k]
+    }
+
+    /// Whether row `i` is empty.
+    #[inline]
+    pub fn row_is_empty(&self, i: usize) -> bool {
+        self.off[i] == self.off[i + 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_rows() {
+        let rows = vec![vec![1u32, 2], vec![], vec![3], vec![4, 5, 6]];
+        let c = Csr::from_rows(&rows);
+        assert_eq!(c.num_rows(), 4);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(c.row(i), r.as_slice());
+            assert_eq!(c.row_is_empty(i), r.is_empty());
+            let got: Vec<u32> = c.span(i).map(|k| *c.at(k)).collect();
+            assert_eq!(&got, r);
+        }
+    }
+
+    #[test]
+    fn empty_csr() {
+        let c: Csr<u8> = Csr::from_rows(&[]);
+        assert_eq!(c.num_rows(), 0);
+    }
+}

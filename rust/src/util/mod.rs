@@ -1,12 +1,15 @@
 //! Small std-only utilities: a deterministic PRNG (the build is fully
 //! offline, so we carry no `rand` dependency), deadline/cancellation
-//! plumbing for anytime solvers, the shared portfolio incumbent, and a
-//! minimal error type for the runtime layers.
+//! plumbing for anytime solvers, the shared portfolio incumbent, a
+//! minimal error type for the runtime layers, and the [`Csr`]
+//! flat-arena adjacency type the CP kernel's hot loops walk.
 
+mod csr;
 mod error;
 mod incumbent;
 mod rng;
 
+pub use csr::Csr;
 pub use error::{Context, Error, Result};
 pub use incumbent::Incumbent;
 pub use rng::Rng;
@@ -92,6 +95,17 @@ impl Deadline {
         }
         self.limit.saturating_sub(self.start.elapsed())
     }
+}
+
+/// Peak resident-set size (high-water mark) of this process in
+/// kilobytes, read from `/proc/self/status` (`VmHWM`). `None` on
+/// platforms without procfs — the large-tier bench records it as 0
+/// there. Used by `bench large-json` so memory scaling of the
+/// L-instances is tracked alongside throughput.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
 }
 
 /// Format a byte/unit count with thousands separators (report output).

@@ -21,9 +21,14 @@
 //!    no-good learning, activity branching, Luby restarts) returns the
 //!    same status and optimum as the chronological baseline on the
 //!    same instance families — learning is purely pruning.
+//! 9. The segment-tree timetable profile is *query-value identical* to
+//!    the linear diff-map profile: under the chronological strategy the
+//!    two modes must walk the exact same tree (same status, optimum,
+//!    nodes, conflicts, solutions and propagations), on small exhausted
+//!    instances and on an n ≥ 1000 node-capped smoke.
 
-use moccasin::cp::{SearchStrategy, Solver, Status};
-use moccasin::generators::{cm_style, random_layered, real_world_like};
+use moccasin::cp::{ProfileMode, SearchStrategy, Solver, Status};
+use moccasin::generators::{cm_style, paper_graph, random_layered, real_world_like};
 use moccasin::graph::{eval_sequence, topological_order, Graph, NodeId};
 use moccasin::moccasin::lns::canonicalize;
 use moccasin::moccasin::{MoccasinSolver, StagedModel};
@@ -356,6 +361,131 @@ fn prop_presolve_preserves_optimum() {
         assert_eq!(s_pre, s_raw, "unstaged seed {seed}: status diverged");
         assert_eq!(o_pre, o_raw, "unstaged seed {seed}: optimum diverged");
     }
+}
+
+/// Solve one staged (or unstaged) CP model under a timetable-profile
+/// mode; returns (status, best objective, kernel stats).
+fn cp_solve_profile(
+    g: &Graph,
+    budget: u64,
+    staged: bool,
+    profile: ProfileMode,
+    strategy: SearchStrategy,
+    node_limit: u64,
+) -> (Status, Option<i64>, moccasin::cp::SearchStats) {
+    let order = topological_order(g).unwrap();
+    let c_v = vec![2usize; g.n()];
+    let sm = if staged {
+        StagedModel::build(g, &order, budget, &c_v)
+    } else {
+        StagedModel::build_unstaged(g, &order, budget, &c_v)
+    };
+    let (bo, guards) = sm.branch_order();
+    let solver = Solver {
+        node_limit,
+        guards: Some(guards),
+        strategy: strategy.with_profile(profile),
+        ..Default::default()
+    };
+    let r = solver.solve(&sm.model, &sm.objective, &bo, |_, _| {});
+    (r.status, r.best.map(|(_, o)| o), r.stats)
+}
+
+#[test]
+fn prop_segtree_profile_matches_linear() {
+    // The segment tree must answer every filter query with the same
+    // *value* as the linear step profile (point loads, overload checks,
+    // first-overload witnesses). Under the deterministic chronological
+    // strategy that means the two modes walk the *identical* tree: not
+    // just the same status/optimum, but the same node, conflict,
+    // solution and propagation counts — the strongest cheap proxy for
+    // "identical prunings". Any divergence is a tree bug (bad lazy
+    // recompute, wrong gap handling, off-by-one range clamp).
+    let mut graphs: Vec<Graph> = Vec::new();
+    for seed in 0..5u64 {
+        let n = 10 + 2 * seed as usize;
+        graphs.push(random_layered(&format!("sp-rl{seed}"), n, 2 * n + 4, seed));
+    }
+    graphs.push(cm_style("sp-cm", 11, 22, 3, 64));
+    graphs.push(real_world_like("sp-rw", 16, 40, 5));
+    for (i, g) in graphs.iter().enumerate() {
+        let order = topological_order(g).unwrap();
+        let peak = g.peak_mem_no_remat(&order).unwrap();
+        for frac in [0.85, 0.95] {
+            let budget = (peak as f64 * frac) as u64;
+            let chron = SearchStrategy::chronological();
+            let (s_l, o_l, st_l) =
+                cp_solve_profile(g, budget, true, ProfileMode::Linear, chron, 400_000);
+            let (s_t, o_t, st_t) =
+                cp_solve_profile(g, budget, true, ProfileMode::SegTree, chron, 400_000);
+            assert_eq!(s_l, s_t, "graph {i} frac {frac}: status diverged");
+            assert_eq!(o_l, o_t, "graph {i} frac {frac}: optimum diverged");
+            assert_eq!(
+                (st_l.nodes, st_l.conflicts, st_l.solutions, st_l.propagations),
+                (st_t.nodes, st_t.conflicts, st_t.solutions, st_t.propagations),
+                "graph {i} frac {frac}: the two profile modes walked different trees"
+            );
+            assert_eq!(st_t.cum_rebuilds, 0, "segtree mode never re-flattens");
+            // learned strategy: explanations are also value-identical,
+            // but assert only the exactness contract here (restart
+            // timing makes full trace equality brittle)
+            let (s_ll, o_ll, _) = cp_solve_profile(
+                g,
+                budget,
+                true,
+                ProfileMode::Linear,
+                SearchStrategy::learned(),
+                400_000,
+            );
+            let (s_lt, o_lt, _) = cp_solve_profile(
+                g,
+                budget,
+                true,
+                ProfileMode::SegTree,
+                SearchStrategy::learned(),
+                400_000,
+            );
+            assert_eq!(s_ll, s_lt, "graph {i} frac {frac}: learned status diverged");
+            assert_eq!(o_ll, o_lt, "graph {i} frac {frac}: learned optimum diverged");
+        }
+    }
+    // unstaged model (exercises AllDifferent alongside Cumulative)
+    let g = random_layered("sp-un", 7, 12, 99);
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    let chron = SearchStrategy::chronological();
+    let (s_l, o_l, st_l) =
+        cp_solve_profile(&g, peak, false, ProfileMode::Linear, chron, 400_000);
+    let (s_t, o_t, st_t) =
+        cp_solve_profile(&g, peak, false, ProfileMode::SegTree, chron, 400_000);
+    assert_eq!((s_l, o_l, st_l.nodes), (s_t, o_t, st_t.nodes), "unstaged diverged");
+}
+
+#[test]
+fn prop_segtree_matches_linear_on_large_instance_smoke() {
+    // n ≥ 1000 smoke (the tier the segment tree exists for): the same
+    // node-capped chronological B&B over the presolved L1 staged model
+    // must visit the identical tree under both profile modes.
+    let g = paper_graph("L1").unwrap();
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    let budget = (peak as f64 * 0.9) as u64;
+    let pre = Presolve::new(&g, PresolveConfig::default());
+    let sm = StagedModel::build_with(&g, &order, budget, &vec![2; g.n()], &pre, None);
+    let (bo, guards) = sm.branch_order();
+    let run = |profile: ProfileMode| {
+        let solver = Solver {
+            node_limit: 1_500,
+            guards: Some(guards.clone()),
+            strategy: SearchStrategy::chronological().with_profile(profile),
+            ..Default::default()
+        };
+        let r = solver.solve(&sm.model, &sm.objective, &bo, |_, _| {});
+        (r.status, r.best.map(|(_, o)| o), r.stats.nodes, r.stats.propagations)
+    };
+    let linear = run(ProfileMode::Linear);
+    let segtree = run(ProfileMode::SegTree);
+    assert_eq!(linear, segtree, "L1 node-capped runs diverged between profile modes");
 }
 
 #[test]
