@@ -7,7 +7,7 @@
 //! feasibility breaks — is the reproduction target.
 
 use crate::coordinator::{Backend, Coordinator, SolveRequest};
-use crate::cp::{ProfileMode, SearchStrategy, Solver};
+use crate::cp::{FilteringMode, ProfileMode, SearchStrategy, Solver};
 use crate::generators::{paper_graph, random_layered, rw2, LARGE_GRAPHS, PAPER_GRAPHS};
 use crate::graph::{random_topological_order, topological_order, Graph};
 use crate::moccasin::{MoccasinSolver, StagedModel};
@@ -560,17 +560,22 @@ pub fn bench_solver_json(
 /// Unlike `bench solver-json` (which drives the anytime stack), this
 /// bench runs a *fixed workload*: the presolved staged model is built
 /// once per instance and the same node-capped chronological B&B runs
-/// under each [`ProfileMode`], so `propagations_per_sec` is a clean
-/// segtree-vs-linear A/B (both modes walk the identical tree — the
-/// property suite proves query-value equivalence). The strategy is
-/// *always* chronological: under learned search the two profile modes
-/// need not walk the same tree (different overload witnesses can
-/// yield different no-goods), which would silently invalidate the
-/// ratio — so unlike the other bench targets, `--search` does not
-/// apply here. Each record carries nodes/sec, propagations/sec, the
-/// engine event counters, peak RSS (`VmHWM`, 0 where procfs is
-/// unavailable) and the profile mode. `quick` runs L1 only (the CI
-/// smoke configuration); `xl` adds L4 to the default L1–L3 grid.
+/// under each variant of the engine-knob grid —
+/// `(segtree, timetable)`, `(segtree, edge-finding)` and
+/// `(linear, timetable)` — so `propagations_per_sec` is a clean
+/// segtree-vs-linear A/B (those two walk the identical tree — the
+/// property suite proves query-value equivalence) and `nodes` is the
+/// filtering nodes-to-proof A/B (edge-finding may walk a *smaller*
+/// tree; the property suite proves the optimum is unchanged). The
+/// strategy is *always* chronological: under learned search the
+/// variants need not walk comparable trees (different overload
+/// witnesses can yield different no-goods), which would silently
+/// invalidate both ratios — so unlike the other bench targets,
+/// `--search` does not apply here. Each record carries nodes/sec,
+/// propagations/sec, the engine event and filtering counters, peak RSS
+/// (`VmHWM`, 0 where procfs is unavailable), the profile mode and the
+/// filtering mode. `quick` runs L1 only (the CI smoke configuration);
+/// `xl` adds L4 to the default L1–L3 grid.
 pub fn bench_large_json(
     time_limit: Duration,
     quick: bool,
@@ -612,16 +617,28 @@ pub fn bench_large_json(
             sm.model.num_vars(),
             sm.model.num_constraints()
         );
-        let mut props_per_sec_of = [0.0f64; 2];
-        let mut mode_runs: Vec<(ProfileMode, f64, crate::cp::SearchStats, Option<i64>, String)> =
-            Vec::new();
-        for (mi, mode) in [ProfileMode::SegTree, ProfileMode::Linear].into_iter().enumerate()
-        {
+        // variant 0 vs 2: segtree/linear throughput A/B (identical tree)
+        // variant 0 vs 1: timetable/edge-finding nodes-to-proof A/B
+        const VARIANTS: [(ProfileMode, FilteringMode); 3] = [
+            (ProfileMode::SegTree, FilteringMode::Timetable),
+            (ProfileMode::SegTree, FilteringMode::EdgeFinding),
+            (ProfileMode::Linear, FilteringMode::Timetable),
+        ];
+        let mut props_per_sec_of = [0.0f64; VARIANTS.len()];
+        let mut mode_runs: Vec<(
+            ProfileMode,
+            FilteringMode,
+            f64,
+            crate::cp::SearchStats,
+            Option<i64>,
+            String,
+        )> = Vec::new();
+        for (mi, (mode, filtering)) in VARIANTS.into_iter().enumerate() {
             let solver = Solver {
                 deadline: Deadline::after(time_limit),
                 node_limit: NODE_CAP,
                 guards: Some(guards.clone()),
-                strategy: search.with_profile(mode),
+                strategy: search.with_profile(mode).with_filtering(filtering),
                 ..Default::default()
             };
             let t0 = Instant::now();
@@ -632,16 +649,21 @@ pub fn bench_large_json(
             let props_per_sec = st.propagations as f64 / wall.max(1e-9);
             props_per_sec_of[mi] = props_per_sec;
             println!(
-                "  {name} [{:7}]: {wall:6.2}s wall, {} nodes ({nodes_per_sec:.0}/s), \
-                 {} propagations ({props_per_sec:.0}/s), {} resyncs, {} rebuilds",
+                "  {name} [{:7}/{:12}]: {wall:6.2}s wall, {} nodes ({nodes_per_sec:.0}/s), \
+                 {} propagations ({props_per_sec:.0}/s), {} resyncs, {} rebuilds, \
+                 {} ef-prunes, {} disj-prunes",
                 mode.name(),
+                filtering.name(),
                 st.nodes,
                 st.propagations,
                 st.cum_resyncs,
                 st.cum_rebuilds,
+                st.ef_prunes,
+                st.disj_prunes,
             );
             mode_runs.push((
                 mode,
+                filtering,
                 wall,
                 st,
                 r.best.as_ref().map(|&(_, o)| o),
@@ -654,18 +676,21 @@ pub fn bench_large_json(
         // per-instance scaling meaningful — it is deliberately NOT a
         // per-mode memory A/B (both modes share the same model anyway)
         let rss = crate::util::peak_rss_kb().unwrap_or(0);
-        for (mode, wall, st, best, status) in &mode_runs {
+        for (mode, filtering, wall, st, best, status) in &mode_runs {
             let nodes_per_sec = st.nodes as f64 / wall.max(1e-9);
             let props_per_sec = st.propagations as f64 / wall.max(1e-9);
             records.push(format!(
                 "  {{\n    \"instance\": \"{name}\",\n    \"n\": {},\n    \"m\": {},\n    \
                  \"budget\": {budget},\n    \"budget_frac\": 0.9,\n    \
-                 \"profile\": \"{}\",\n    \"search\": \"{}\",\n    \
+                 \"profile\": \"{}\",\n    \"filtering\": \"{}\",\n    \
+                 \"search\": \"{}\",\n    \
                  \"build_s\": {build_s:.4},\n    \"wall_s\": {wall:.4},\n    \
                  \"node_cap\": {NODE_CAP},\n    \"nodes\": {},\n    \
                  \"propagations\": {},\n    \"conflicts\": {},\n    \
                  \"events_posted\": {},\n    \"wakeups_skipped\": {},\n    \
                  \"cum_resyncs\": {},\n    \"cum_rebuilds\": {},\n    \
+                 \"ef_prunes\": {},\n    \"disj_prunes\": {},\n    \
+                 \"disj_pairs_detected\": {},\n    \
                  \"nodes_per_sec\": {nodes_per_sec:.1},\n    \
                  \"propagations_per_sec\": {props_per_sec:.1},\n    \
                  \"best_objective\": {},\n    \"status\": \"{status}\",\n    \
@@ -673,6 +698,7 @@ pub fn bench_large_json(
                 g.n(),
                 g.m(),
                 mode.name(),
+                filtering.name(),
                 search.name(),
                 st.nodes,
                 st.propagations,
@@ -681,15 +707,30 @@ pub fn bench_large_json(
                 st.wakeups_skipped,
                 st.cum_resyncs,
                 st.cum_rebuilds,
+                st.ef_prunes,
+                st.disj_prunes,
+                st.disj_pairs_detected,
                 best.unwrap_or(-1),
             ));
         }
-        if props_per_sec_of[1] > 0.0 {
+        if props_per_sec_of[2] > 0.0 {
             println!(
                 "  {name}: segtree/linear propagation throughput = {:.2}x \
                  (instance peak RSS {} kB)",
-                props_per_sec_of[0] / props_per_sec_of[1],
+                props_per_sec_of[0] / props_per_sec_of[2],
                 crate::util::fmt_u64(rss)
+            );
+        }
+        // nodes-to-proof A/B: how much smaller is the edge-finding tree
+        // on the same fixed workload? (valid whether or not either side
+        // finished — both run under the same node cap and deadline)
+        let (tt_nodes, ef_nodes) = (mode_runs[0].3.nodes, mode_runs[1].3.nodes);
+        if ef_nodes > 0 {
+            println!(
+                "  {name}: timetable/edge-finding nodes-to-proof = {:.2}x \
+                 ({tt_nodes} vs {ef_nodes} nodes, {} ef-prunes)",
+                tt_nodes as f64 / ef_nodes as f64,
+                mode_runs[1].3.ef_prunes
             );
         }
     }

@@ -233,14 +233,21 @@ fn checkmate_member_viable(graph: &Graph) -> bool {
 /// requested base strategy. Strategy diversification compounds with
 /// the order/seed/window diversification below.
 fn member_strategy(cfg: &PortfolioConfig, m: usize) -> SearchStrategy {
-    // members diversify over search *modes* only; the timetable-profile
-    // choice is an orthogonal A/B knob that must follow the request,
-    // or `--profile linear` could never force the linear path through
-    // a portfolio solve
+    // members diversify over search *modes* only; the timetable-profile,
+    // filtering-strength and disjunctive choices are orthogonal A/B
+    // knobs that must follow the request, or `--profile linear` /
+    // `--filtering edge-finding` / `--disjunctive off` could never
+    // force their path through a portfolio solve
     if m == 0 {
-        SearchStrategy::chronological().with_profile(cfg.search.profile)
+        SearchStrategy::chronological()
+            .with_profile(cfg.search.profile)
+            .with_filtering(cfg.search.filtering)
+            .with_disjunctive(cfg.search.disjunctive)
     } else if m % 2 == 1 {
-        SearchStrategy::learned().with_profile(cfg.search.profile)
+        SearchStrategy::learned()
+            .with_profile(cfg.search.profile)
+            .with_filtering(cfg.search.filtering)
+            .with_disjunctive(cfg.search.disjunctive)
     } else {
         cfg.search
     }

@@ -1,0 +1,255 @@
+//! Disjunctive (unary-resource) propagation over serialized intervals.
+//!
+//! The presolve detects "heavy cliques" in each cumulative constraint:
+//! items whose demands pairwise exceed the capacity
+//! (`demand_i + demand_j > cap` for every pair, guaranteed by the
+//! per-item test `2·demand > cap`). Any two such items can never
+//! overlap in time — in the Moccasin model these are the large tensors
+//! of a tight-budget regime, whose retention intervals effectively
+//! serialize. The cumulative timetable reasons about them only through
+//! compulsory parts, which is weak while the intervals are loose; the
+//! pairwise rules here fire as soon as *bounds* make an order
+//! impossible:
+//!
+//! * **Order conflict.** Both items certainly active and neither can
+//!   precede the other (`min(end_i) + 1 > max(start_j)` both ways) —
+//!   fail.
+//! * **Forced order.** Both certainly active and only one order is
+//!   possible: the follower starts after the leader's earliest end
+//!   (`start_j ≥ min(end_i) + 1`) and the leader ends before the
+//!   follower's latest start (`end_i ≤ max(start_j) − 1`).
+//! * **Deactivation.** One item certainly active, the other optional,
+//!   and no order possible: the optional item can never be activated.
+//!
+//! Every pruning emits a `cp::Lit` explanation conjunction (the
+//! activity literals plus the four interval bounds making the excluded
+//! order impossible), so 1UIP learning applies to disjunctive filtering
+//! exactly as it does to the timetable. The rules are deliberately
+//! bounds-based (no edge-finding over the clique): with the tiny clique
+//! sizes detection yields, the O(h²) pairwise pass is already cheap,
+//! and exactness never depends on strength — solutions are verified.
+
+use super::domain::{Lit, VarId};
+use super::propagators::{Conflict, Ctx};
+
+/// One optional interval on a unary (serialized) resource. Demands are
+/// deliberately absent: membership in the clique already encodes
+/// "pairwise over capacity", which is all the propagation uses.
+#[derive(Debug, Clone)]
+pub struct DisjItem {
+    /// Boolean: the interval exists.
+    pub active: VarId,
+    /// First event covered by the interval.
+    pub start: VarId,
+    /// Last event covered by the interval (inclusive).
+    pub end: VarId,
+}
+
+/// Pairwise disjunctive filtering over `items` (see module docs).
+/// `prunes` counts successful tightenings / deactivations
+/// (`SearchStats::disj_prunes`).
+pub(crate) fn prop_disjunctive(
+    items: &[DisjItem],
+    ctx: &mut Ctx,
+    prunes: &mut u64,
+) -> Result<(), Conflict> {
+    for i in 0..items.len() {
+        if ctx.max(items[i].active) == 0 {
+            continue;
+        }
+        for j in i + 1..items.len() {
+            if ctx.max(items[j].active) == 0 {
+                continue;
+            }
+            prop_pair(items, i, j, ctx, prunes)?;
+        }
+    }
+    Ok(())
+}
+
+/// Push the four bound literals making "j before i" impossible
+/// (`min(end_j) + 1 > max(start_i)`) plus both current-truth interval
+/// bounds the forced-order bounds derive through. All literals are
+/// currently true, as explanations require.
+fn push_order_impossible(a: &DisjItem, b: &DisjItem, ctx: &mut Ctx) {
+    // "b before a" impossible: end_b ≥ min(end_b) and
+    // start_a ≤ max(start_a) with min(end_b) + 1 > max(start_a)
+    let le = Lit::geq(b.end, ctx.min(b.end));
+    let ls = Lit::leq(a.start, ctx.max(a.start));
+    ctx.expl_push(le);
+    ctx.expl_push(ls);
+}
+
+/// One ordered pair: apply the three rules to `(items[i], items[j])`.
+fn prop_pair(
+    items: &[DisjItem],
+    i: usize,
+    j: usize,
+    ctx: &mut Ctx,
+    prunes: &mut u64,
+) -> Result<(), Conflict> {
+    let (a, b) = (&items[i], &items[j]);
+    // "i before j" requires end_i < start_j, possible iff
+    // min(end_i) + 1 ≤ max(start_j); symmetrically for "j before i".
+    let ij_possible = ctx.min(a.end) + 1 <= ctx.max(b.start);
+    let ji_possible = ctx.min(b.end) + 1 <= ctx.max(a.start);
+    if ij_possible && ji_possible {
+        return Ok(()); // both orders open: nothing to conclude
+    }
+    let cert_i = ctx.min(a.active) == 1;
+    let cert_j = ctx.min(b.active) == 1;
+    if cert_i && cert_j {
+        if !ij_possible && !ji_possible {
+            // overlap is forbidden and neither order fits — conflict
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(a.active, 1));
+                ctx.expl_push(Lit::geq(b.active, 1));
+                push_order_impossible(b, a, ctx); // "i before j" impossible
+                push_order_impossible(a, b, ctx); // "j before i" impossible
+            }
+            return ctx.fail();
+        }
+        // exactly one order open: orient the pair (leader, follower)
+        let (leader, follower) = if ij_possible { (a, b) } else { (b, a) };
+        // follower starts after the leader's earliest end
+        let lb = ctx.min(leader.end) + 1;
+        if ctx.min(follower.start) < lb {
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(a.active, 1));
+                ctx.expl_push(Lit::geq(b.active, 1));
+                ctx.expl_push(Lit::geq(leader.end, ctx.min(leader.end)));
+                push_order_impossible(leader, follower, ctx);
+            }
+            ctx.set_min(follower.start, lb)?;
+            *prunes += 1;
+        }
+        // leader ends before the follower's latest start
+        let ub = ctx.max(follower.start) - 1;
+        if ctx.max(leader.end) > ub {
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(a.active, 1));
+                ctx.expl_push(Lit::geq(b.active, 1));
+                ctx.expl_push(Lit::leq(follower.start, ctx.max(follower.start)));
+                push_order_impossible(leader, follower, ctx);
+            }
+            ctx.set_max(leader.end, ub)?;
+            *prunes += 1;
+        }
+        return Ok(());
+    }
+    if !ij_possible && !ji_possible && (cert_i || cert_j) {
+        // one certain, one optional, no order fits: the optional item
+        // can never be activated alongside the certain one
+        let (certain, optional) = if cert_i { (a, b) } else { (b, a) };
+        if ctx.explaining() {
+            ctx.begin_expl();
+            ctx.expl_push(Lit::geq(certain.active, 1));
+            push_order_impossible(b, a, ctx);
+            push_order_impossible(a, b, ctx);
+        }
+        ctx.set_max(optional.active, 0)?;
+        *prunes += 1;
+    }
+    Ok(())
+}
+
+/// Full-assignment check: active intervals are pairwise disjoint.
+pub(crate) fn disj_satisfied(items: &[DisjItem], a: &[i64]) -> bool {
+    let val = |v: VarId| a[v.0 as usize];
+    for i in 0..items.len() {
+        if val(items[i].active) != 1 {
+            continue;
+        }
+        for j in i + 1..items.len() {
+            if val(items[j].active) != 1 {
+                continue;
+            }
+            let before = val(items[i].end) < val(items[j].start);
+            let after = val(items[j].end) < val(items[i].start);
+            if !before && !after {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::domain::Domain;
+    use super::super::propagators::ExplState;
+    use super::*;
+    use std::sync::Arc;
+
+    fn mk(doms: &[(i64, i64)]) -> Vec<Domain> {
+        doms.iter()
+            .map(|&(lo, hi)| Domain::new(Arc::new((lo..=hi).collect())))
+            .collect()
+    }
+
+    fn item(base: u32) -> DisjItem {
+        DisjItem { active: VarId(base), start: VarId(base + 1), end: VarId(base + 2) }
+    }
+
+    fn run(items: &[DisjItem], domains: &mut Vec<Domain>) -> Result<u64, Conflict> {
+        let mut trail = Vec::new();
+        let mut changed = Vec::new();
+        let mut expl = ExplState::new(domains.len(), false);
+        let mut ctx =
+            Ctx { domains, trail: &mut trail, changed: &mut changed, expl: &mut expl };
+        let mut prunes = 0;
+        prop_disjunctive(items, &mut ctx, &mut prunes)?;
+        Ok(prunes)
+    }
+
+    #[test]
+    fn forced_order_tightens_both_sides() {
+        // i: active, start [0,2], end [3,4]; j: active, start [1,8],
+        // end [9,9]. "j before i" needs min(end_j)+1 = 10 ≤ max(start_i)
+        // = 2: impossible → i leads: start_j ≥ 4, end_i ≤ 7.
+        let mut d = mk(&[(1, 1), (0, 2), (3, 4), (1, 1), (1, 8), (9, 9)]);
+        let items = [item(0), item(3)];
+        let prunes = run(&items, &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[4].min(), 4, "follower start raised past leader's earliest end");
+        assert_eq!(d[2].max(), 4, "leader end already below follower's latest start");
+        assert_eq!(prunes, 1);
+    }
+
+    #[test]
+    fn no_order_conflicts_when_both_certain() {
+        // both fixed overlapping: [2,6] and [4,8] → neither order fits
+        let mut d = mk(&[(1, 1), (2, 2), (6, 6), (1, 1), (4, 4), (8, 8)]);
+        assert!(run(&[item(0), item(3)], &mut d).is_err());
+    }
+
+    #[test]
+    fn no_order_deactivates_optional() {
+        // same geometry but the second item is optional → active_j = 0
+        let mut d = mk(&[(1, 1), (2, 2), (6, 6), (0, 1), (4, 4), (8, 8)]);
+        let prunes = run(&[item(0), item(3)], &mut d).map_err(|_| ()).unwrap();
+        assert_eq!(d[3].max(), 0);
+        assert_eq!(prunes, 1);
+    }
+
+    #[test]
+    fn open_orders_and_optional_pairs_are_left_alone() {
+        // both orders possible → no filtering even when certain
+        let mut d = mk(&[(1, 1), (0, 9), (0, 9), (1, 1), (0, 9), (0, 9)]);
+        assert_eq!(run(&[item(0), item(3)], &mut d).unwrap_or(99), 0);
+        // both optional → no filtering regardless of geometry
+        let mut d = mk(&[(0, 1), (2, 2), (6, 6), (0, 1), (4, 4), (8, 8)]);
+        assert_eq!(run(&[item(0), item(3)], &mut d).unwrap_or(99), 0);
+    }
+
+    #[test]
+    fn satisfaction_is_pairwise_disjointness() {
+        let items = [item(0), item(3)];
+        assert!(disj_satisfied(&items, &[1, 0, 1, 1, 2, 6]));
+        assert!(!disj_satisfied(&items, &[1, 0, 4, 1, 2, 6]));
+        assert!(disj_satisfied(&items, &[1, 0, 4, 0, 2, 6]), "inactive ignored");
+        assert!(disj_satisfied(&items, &[1, 5, 9, 1, 0, 4]), "order is symmetric");
+    }
+}

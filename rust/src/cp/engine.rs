@@ -50,13 +50,15 @@
 //! Exactness never depends on filtering either way: every emitted
 //! solution is verified against all constraints before it is reported.
 
+use super::disjunctive::prop_disjunctive;
 use super::domain::{event, Domain, DomainEvent, Lit, VarId};
 use super::learn::NoGoodDb;
 use super::propagators::{
-    explain_profile_at, prop_linear_le, timetable_filter_item, Conflict, Ctx, CumItem,
-    ExplState, ProfileView, Propagator, TrailEntry, REASON_DECISION, REASON_PROP,
+    edge_finding_filter_item, explain_profile_at, prop_linear_le, timetable_filter_item,
+    Conflict, Ctx, CumItem, ExplState, ProfileView, Propagator, TrailEntry,
+    REASON_DECISION, REASON_PROP,
 };
-use super::search::SearchStats;
+use super::search::{SearchStats, SearchStrategy};
 use super::segtree::SegTreeProfile;
 use super::Model;
 use crate::util::Csr;
@@ -94,6 +96,43 @@ impl ProfileMode {
         match self {
             ProfileMode::Linear => "linear",
             ProfileMode::SegTree => "segtree",
+        }
+    }
+}
+
+/// How strongly the engine filters the cumulative memory constraint
+/// (`--filtering`). Both modes are exact — filtering strength never
+/// changes the reported status or optimum, only the size of the search
+/// tree (asserted by `prop_edge_finding_preserves_optimum`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FilteringMode {
+    /// Plain timetable filtering over compulsory parts — the default,
+    /// and the reference semantics the naive engine mirrors (the
+    /// engine-vs-naive equivalence tests walk identical trees only in
+    /// this mode).
+    Timetable,
+    /// Timetable plus timetable edge-finding: energy-based start/end
+    /// filtering over the compulsory-part profile (see
+    /// `propagators::edge_finding_filter_item`). Strictly stronger —
+    /// runs only on the engine's incremental path.
+    EdgeFinding,
+}
+
+impl FilteringMode {
+    /// Parse a CLI filtering name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "timetable" => Some(FilteringMode::Timetable),
+            "edge-finding" => Some(FilteringMode::EdgeFinding),
+            _ => None,
+        }
+    }
+
+    /// Stable display name (`bench large-json` records it per run).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FilteringMode::Timetable => "timetable",
+            FilteringMode::EdgeFinding => "edge-finding",
         }
     }
 }
@@ -207,6 +246,18 @@ pub(crate) struct PropagationEngine {
     /// Reference mode: wake everything on any event, single queue,
     /// from-scratch `Cumulative`, re-enqueue all on backtrack.
     naive: bool,
+    /// Cumulative filtering strength (`SearchStrategy::filtering`).
+    filtering: FilteringMode,
+    /// Whether `Disjunctive` propagators run (`SearchStrategy::
+    /// disjunctive`); when off they are intercepted as no-ops in both
+    /// engine and naive mode, so one built model serves both sides of
+    /// the A/B.
+    disjunctive: bool,
+    /// Explanation-soundness audits performed so far (test / prop-audit
+    /// builds only): every explained pruning and conflict is replayed
+    /// against a fresh naive propagation until the budget is spent.
+    #[cfg(any(test, feature = "prop-audit"))]
+    audits_done: u64,
 }
 
 /// Compulsory part of an item under `domains`: `[max(start), min(end)]`
@@ -249,6 +300,7 @@ fn add_diff(diff: &mut BTreeMap<i64, i64>, t: i64, d: i64) {
 /// filter either every item (profile moved) or only dirty ones.
 fn cumulative_filter(
     cs: &mut CumState,
+    filtering: FilteringMode,
     ctx: &mut Ctx,
     stats: &mut SearchStats,
 ) -> Result<(), Conflict> {
@@ -298,13 +350,34 @@ fn cumulative_filter(
             ProfileData::Linear { profile, .. } => ProfileView::Steps(&profile[..]),
             ProfileData::Seg(t) => ProfileView::Tree(t),
         };
+        let ef = filtering == FilteringMode::EdgeFinding;
         if cs.last_filter_version != cs.version {
             for ii in 0..cs.items.len() {
                 timetable_filter_item(&cs.items, ii, cs.cap, &view, ctx)?;
+                if ef {
+                    edge_finding_filter_item(
+                        &cs.items,
+                        ii,
+                        cs.cap,
+                        &view,
+                        ctx,
+                        &mut stats.ef_prunes,
+                    )?;
+                }
             }
         } else {
             for &ii in &cs.dirty {
                 timetable_filter_item(&cs.items, ii as usize, cs.cap, &view, ctx)?;
+                if ef {
+                    edge_finding_filter_item(
+                        &cs.items,
+                        ii as usize,
+                        cs.cap,
+                        &view,
+                        ctx,
+                        &mut stats.ef_prunes,
+                    )?;
+                }
             }
         }
     }
@@ -323,15 +396,18 @@ impl PropagationEngine {
     /// satisfaction). `naive` selects the reference re-enqueue-everything
     /// semantics; `explain` turns on explanation recording (the learned
     /// search's requirement — chronological search passes `false` and
-    /// pays nothing); `profile` selects the incremental `Cumulative`
-    /// timetable structure (see [`ProfileMode`]).
+    /// pays nothing); `strategy` carries the kernel-level knobs the
+    /// engine reads: the incremental `Cumulative` timetable structure
+    /// ([`ProfileMode`]), the cumulative filtering strength
+    /// ([`FilteringMode`]) and the disjunctive on/off gate.
     pub fn new(
         model: &Model,
         objective: &[(i64, VarId)],
         naive: bool,
         explain: bool,
-        profile: ProfileMode,
+        strategy: &SearchStrategy,
     ) -> Self {
+        let profile = strategy.profile;
         let nvars = model.domains.len();
         let nprops = model.props.len();
         let domains = model.domains.clone();
@@ -348,6 +424,15 @@ impl PropagationEngine {
         let mut cum_of_prop: Vec<Option<u32>> = vec![None; nprops + 1];
         let mut cum_states: Vec<CumState> = Vec::new();
         let mut cum_rows: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nvars];
+        // stamp the detection result into this run's stats so portfolio
+        // merges and `solve --verbose` see it on every solve path
+        let mut stats = SearchStats::default();
+        for p in model.props.iter() {
+            if let Propagator::Disjunctive { items } = p {
+                let h = items.len() as u64;
+                stats.disj_pairs_detected += h * (h - 1) / 2;
+            }
+        }
         for (pid, p) in model.props.iter().enumerate() {
             let Propagator::Cumulative { items, cap } = p else {
                 continue;
@@ -419,7 +504,7 @@ impl PropagationEngine {
             expl: ExplState::new(nvars, explain),
             level_marks: Vec::new(),
             ng: NoGoodDb::new(nvars),
-            stats: SearchStats::default(),
+            stats,
             events: Vec::new(),
             queue_fast: Vec::with_capacity(nprops + 1),
             queue_slow: Vec::new(),
@@ -435,6 +520,10 @@ impl PropagationEngine {
             obj_pid: nprops as u32,
             has_obj,
             naive,
+            filtering: strategy.filtering,
+            disjunctive: strategy.disjunctive,
+            #[cfg(any(test, feature = "prop-audit"))]
+            audits_done: 0,
         }
     }
 
@@ -558,6 +647,21 @@ impl PropagationEngine {
             };
             return prop_linear_le(&self.obj_terms, self.obj_rhs, &mut ctx);
         }
+        // Disjunctive runs identically in naive and engine mode (the
+        // intercept sits before the naive check), so the A/B knob never
+        // perturbs naive-vs-engine tree equality.
+        if let Propagator::Disjunctive { items } = &model.props[pid as usize] {
+            if !self.disjunctive {
+                return Ok(());
+            }
+            let mut ctx = Ctx {
+                domains: &mut self.domains,
+                trail: &mut self.trail,
+                changed: &mut self.events,
+                expl: &mut self.expl,
+            };
+            return prop_disjunctive(items, &mut ctx, &mut self.stats.disj_prunes);
+        }
         if !self.naive {
             if let Some(ci) = self.cum_of_prop[pid as usize] {
                 let cs = &mut self.cum_states[ci as usize];
@@ -567,7 +671,7 @@ impl PropagationEngine {
                     changed: &mut self.events,
                     expl: &mut self.expl,
                 };
-                return cumulative_filter(cs, &mut ctx, &mut self.stats);
+                return cumulative_filter(cs, self.filtering, &mut ctx, &mut self.stats);
             }
         }
         let mut ctx = Ctx {
@@ -613,11 +717,17 @@ impl PropagationEngine {
             };
             self.in_queue[pid as usize] = false;
             self.stats.propagations += 1;
+            #[cfg(any(test, feature = "prop-audit"))]
+            let audit_mark = self.trail.len();
             if self.run_prop(model, pid).is_err() {
                 debug_conflict(model, pid, self.obj_pid);
+                #[cfg(any(test, feature = "prop-audit"))]
+                self.audit_conflict(model);
                 self.clear_on_conflict();
                 return Err(Conflict);
             }
+            #[cfg(any(test, feature = "prop-audit"))]
+            self.audit_entries(model, audit_mark);
             self.drain_events();
         }
     }
@@ -808,7 +918,246 @@ fn debug_conflict(model: &Model, pid: u32, obj_pid: u32) {
                 format!("Cover({} targets, {} candidates)", targets.len(), candidates.len())
             }
             Propagator::AllDifferent { .. } => "AllDifferent".into(),
+            Propagator::Disjunctive { items } => {
+                format!("Disjunctive({} items)", items.len())
+            }
         }
     };
     eprintln!("conflict in {kind}");
+}
+
+/// Per-engine budget of explanation-soundness audits: enough to cover
+/// every pruning of the small models unit tests solve, while bounding
+/// the overhead on the larger property-test instances.
+#[cfg(any(test, feature = "prop-audit"))]
+const AUDIT_CAP: u64 = 20_000;
+
+/// Explanation-soundness audit (test / `prop-audit` builds): every
+/// explanation a propagator records — the premise of a pruning or a
+/// conflict — is replayed against a fresh propagation from the *root*
+/// domains, and the claimed consequence must be re-derived. An unsound
+/// conjunction (one that does not imply what it explains) would
+/// otherwise surface only as a wrong learned no-good, far from the
+/// propagator that emitted it; the audit panics at the source instead.
+///
+/// Only entries created inside `run_prop` are audited: decisions and
+/// root assertions carry no explanation, and no-good propagations
+/// (`run_nogood`) derive from learned clauses that are not re-derivable
+/// from the model's propagators alone.
+#[cfg(any(test, feature = "prop-audit"))]
+impl PropagationEngine {
+    /// Root-state copy of the domains: the current domains with every
+    /// trail entry at or above the first decision undone. Holes carved
+    /// at root (including `assert_root` facts and the root fixpoint)
+    /// are kept — recorded literals are post-snap values over the same
+    /// root holes, so the replay must share them.
+    fn audit_root_domains(&self) -> Vec<Domain> {
+        let mut doms = self.domains.clone();
+        let root = self.level_marks.first().map_or(self.trail.len(), |&m| m as usize);
+        for e in self.trail[root..].iter().rev() {
+            doms[e.var as usize].restore((e.old_lo, e.old_hi));
+        }
+        doms
+    }
+
+    /// Audit every trail entry recorded by the `run_prop` call that just
+    /// returned `Ok` (`mark` = trail length before the call).
+    fn audit_entries(&mut self, model: &Model, mark: usize) {
+        if !self.expl.enabled || self.audits_done >= AUDIT_CAP || self.trail.len() == mark {
+            return;
+        }
+        let root = self.audit_root_domains();
+        for idx in mark..self.trail.len() {
+            if self.audits_done >= AUDIT_CAP {
+                return;
+            }
+            self.audits_done += 1;
+            let meta = &self.expl.meta[idx];
+            debug_assert_eq!(meta.reason, REASON_PROP, "audit outside a propagator pass");
+            let lit = meta.lit;
+            let premise: Vec<Lit> = self.expl.arena
+                [meta.expl_start as usize..(meta.expl_start + meta.expl_len) as usize]
+                .to_vec();
+            audit_replay(
+                model,
+                &self.obj_terms,
+                self.obj_rhs,
+                self.has_obj,
+                self.filtering,
+                self.disjunctive,
+                root.clone(),
+                &premise,
+                Some(lit),
+            );
+        }
+    }
+
+    /// Audit the conflict explanation the failing `run_prop` call left
+    /// in `expl.conflict`: replayed from root, the conjunction must be
+    /// refutable by propagation.
+    fn audit_conflict(&mut self, model: &Model) {
+        if !self.expl.enabled || self.audits_done >= AUDIT_CAP || self.expl.conflict.is_empty()
+        {
+            return;
+        }
+        self.audits_done += 1;
+        let premise = self.expl.conflict.clone();
+        audit_replay(
+            model,
+            &self.obj_terms,
+            self.obj_rhs,
+            self.has_obj,
+            self.filtering,
+            self.disjunctive,
+            self.audit_root_domains(),
+            &premise,
+            None,
+        );
+    }
+}
+
+/// Replay one recorded explanation: apply `premise` to the root
+/// `domains`, propagate every model propagator (plus the objective
+/// bound) to fixpoint, and check the consequence — `target` literal
+/// entailed (`Some`), or the premise refuted (`None`). A conflict
+/// during replay always passes: for conflict audits it is the expected
+/// refutation, for pruning audits it entails everything vacuously.
+#[cfg(any(test, feature = "prop-audit"))]
+#[allow(clippy::too_many_arguments)]
+fn audit_replay(
+    model: &Model,
+    obj_terms: &[(i64, VarId)],
+    obj_rhs: i64,
+    has_obj: bool,
+    filtering: FilteringMode,
+    disjunctive: bool,
+    mut domains: Vec<Domain>,
+    premise: &[Lit],
+    target: Option<Lit>,
+) {
+    let mut trail: Vec<TrailEntry> = Vec::new();
+    let mut changed: Vec<DomainEvent> = Vec::new();
+    let mut expl = ExplState::new(domains.len(), false);
+    {
+        let mut ctx = Ctx {
+            domains: &mut domains,
+            trail: &mut trail,
+            changed: &mut changed,
+            expl: &mut expl,
+        };
+        for &l in premise {
+            let r = if l.is_lb { ctx.set_min(l.var, l.val) } else { ctx.set_max(l.var, l.val) };
+            if r.is_err() {
+                return; // premise self-contradictory at root: vacuous
+            }
+        }
+    }
+    loop {
+        let before = trail.len();
+        let mut failed = false;
+        {
+            let mut ctx = Ctx {
+                domains: &mut domains,
+                trail: &mut trail,
+                changed: &mut changed,
+                expl: &mut expl,
+            };
+            for p in model.props.iter() {
+                let r = match p {
+                    Propagator::Cumulative { items, cap } => {
+                        replay_cumulative(items, *cap, filtering, &mut ctx)
+                    }
+                    Propagator::Disjunctive { .. } if !disjunctive => Ok(()),
+                    _ => p.propagate(&mut ctx),
+                };
+                if r.is_err() {
+                    failed = true;
+                    break;
+                }
+            }
+            if !failed && has_obj && prop_linear_le(obj_terms, obj_rhs, &mut ctx).is_err() {
+                failed = true;
+            }
+        }
+        if failed {
+            return; // refuted: the audited consequence holds vacuously
+        }
+        if trail.len() == before {
+            break; // fixpoint
+        }
+        changed.clear();
+    }
+    match target {
+        Some(l) => assert!(
+            l.is_true(&domains[l.var.0 as usize]),
+            "unsound explanation: {premise:?} does not entail {l:?} \
+             (replay reached min={} max={})",
+            domains[l.var.0 as usize].min(),
+            domains[l.var.0 as usize].max(),
+        ),
+        None => panic!("unsound conflict explanation: {premise:?} is consistent under replay"),
+    }
+}
+
+/// The audit replay's `Cumulative` pass: a from-scratch compulsory-part
+/// profile with overload check, timetable filtering, and — when the
+/// audited engine ran edge-finding — the same edge-finding pass, so EF
+/// prunings are re-derivable. Interval validity (`active → start ≤ end`,
+/// the model's constraint-(2) pairing the timetable coupling assumes)
+/// is applied explicitly first, making the coupling's prunings
+/// re-derivable on any model, paired or not.
+#[cfg(any(test, feature = "prop-audit"))]
+fn replay_cumulative(
+    items: &[CumItem],
+    cap: i64,
+    filtering: FilteringMode,
+    ctx: &mut Ctx,
+) -> Result<(), Conflict> {
+    for it in items {
+        if ctx.min(it.active) == 1 {
+            let s = ctx.min(it.start);
+            if ctx.min(it.end) < s {
+                ctx.set_min(it.end, s)?;
+            }
+            let e = ctx.max(it.end);
+            if ctx.max(it.start) > e {
+                ctx.set_max(it.start, e)?;
+            }
+        }
+    }
+    let mut diff: BTreeMap<i64, i64> = BTreeMap::new();
+    let mut nparts = 0u32;
+    for it in items {
+        if it.demand == 0 {
+            continue;
+        }
+        if let Some((a, b)) = compulsory_part(ctx.domains, it) {
+            add_diff(&mut diff, a, it.demand);
+            add_diff(&mut diff, b + 1, -it.demand);
+            nparts += 1;
+        }
+    }
+    if nparts == 0 {
+        return Ok(());
+    }
+    let mut profile: Vec<(i64, i64)> = Vec::with_capacity(diff.len());
+    let mut load = 0i64;
+    let mut max_load = 0i64;
+    for (&t, &d) in diff.iter() {
+        load += d;
+        profile.push((t, load));
+        max_load = max_load.max(load);
+    }
+    if max_load > cap {
+        return ctx.fail();
+    }
+    let view = ProfileView::Steps(&profile);
+    let mut ef_prunes = 0u64;
+    for ii in 0..items.len() {
+        timetable_filter_item(items, ii, cap, &view, ctx)?;
+        if filtering == FilteringMode::EdgeFinding {
+            edge_finding_filter_item(items, ii, cap, &view, ctx, &mut ef_prunes)?;
+        }
+    }
+    Ok(())
 }

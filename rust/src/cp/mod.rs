@@ -16,8 +16,11 @@
 //!   by a Boolean — interval validity), `CumulativeTimetable` (renewable
 //!   resource / the paper's memory constraint (4)), `Cover` (the
 //!   reservoir-style precedence constraint (5): an active start must be
-//!   covered by an active producer interval), and `AllDifferent`
-//!   (constraint (6), used only by the unstaged model).
+//!   covered by an active producer interval), `AllDifferent`
+//!   (constraint (6), used only by the unstaged model), and
+//!   `Disjunctive` (a redundant unary-resource constraint over
+//!   presolve-detected heavy cliques of the cumulative — see
+//!   `disjunctive.rs`).
 //! * **Propagation** runs on a persistent, event-driven engine
 //!   (`engine::PropagationEngine`): typed lower-bound / upper-bound / fixed domain
 //!   events with per-event watch lists (a propagator wakes only on the
@@ -52,6 +55,7 @@
 //! layer re-validates each extracted sequence against the Appendix-A.3
 //! evaluator, so no solver bug can silently corrupt reported numbers.
 
+mod disjunctive;
 mod domain;
 mod engine;
 mod learn;
@@ -59,8 +63,9 @@ mod propagators;
 mod search;
 mod segtree;
 
+pub use disjunctive::DisjItem;
 pub use domain::{event, Domain, DomainEvent, Lit, VarId};
-pub use engine::ProfileMode;
+pub use engine::{FilteringMode, ProfileMode};
 pub use propagators::{CumItem, Propagator};
 pub use search::{SearchMode, SearchResult, SearchStats, SearchStrategy, Solver, Status};
 
@@ -187,6 +192,16 @@ impl Model {
     /// (4), CP-SAT's `AddCumulative`).
     pub fn cumulative(&mut self, items: Vec<CumItem>, cap: i64) {
         self.push_prop(Propagator::Cumulative { items, cap });
+    }
+
+    /// Unary-resource (disjunctive) constraint over a presolve-detected
+    /// heavy clique: active intervals are pairwise disjoint. Redundant
+    /// with the [`Model::cumulative`] constraint it was detected in
+    /// (every pair of members exceeds its capacity), but propagates
+    /// order information the timetable cannot see; gated at propagation
+    /// time by `SearchStrategy::disjunctive`.
+    pub fn disjunctive(&mut self, items: Vec<DisjItem>) {
+        self.push_prop(Propagator::Disjunctive { items });
     }
 
     /// Reservoir-style precedence (paper constraint (5), CP-SAT's

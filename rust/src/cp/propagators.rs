@@ -7,6 +7,7 @@
 //! exactness of the solver comes from search; the final check makes
 //! soundness unconditional.
 
+use super::disjunctive::{disj_satisfied, prop_disjunctive, DisjItem};
 use super::domain::{event, Domain, DomainEvent, Lit, VarId};
 use super::segtree::SegTreeProfile;
 use std::sync::Arc;
@@ -145,6 +146,13 @@ pub enum Propagator {
     Cover { targets: Arc<[(VarId, VarId)]>, candidates: Arc<[(VarId, VarId, VarId)]> },
     /// Pairwise distinct values.
     AllDifferent { vars: Vec<VarId> },
+    /// Unary resource over a presolve-detected heavy clique: active
+    /// intervals are pairwise disjoint (redundant with `Cumulative` —
+    /// any two members' demands exceed its capacity — but propagates
+    /// order information the timetable cannot see; see
+    /// `cp::disjunctive`). Gated at propagation time by
+    /// `SearchStrategy::disjunctive`.
+    Disjunctive { items: Vec<DisjItem> },
 }
 
 /// Conflict marker.
@@ -320,6 +328,9 @@ impl Propagator {
     /// * `Cover` reads both bounds of the covered start, `min(active)`,
     ///   and per candidate `max(a)`, `min(s)`, `max(e)`.
     /// * `AllDifferent` reads everything.
+    /// * `Disjunctive` reads `min(active)` (an activation can certify a
+    ///   member; `max(active)` dropping to 0 only makes pairs vacuous),
+    ///   `min(end)` and `max(start)` — the bounds that close an order.
     pub fn watch_masks(&self) -> Vec<(VarId, u8)> {
         match self {
             Propagator::LinearLe { terms, .. } => terms
@@ -358,6 +369,12 @@ impl Propagator {
             Propagator::AllDifferent { vars } => {
                 vars.iter().map(|&v| (v, event::ANY)).collect()
             }
+            Propagator::Disjunctive { items } => items
+                .iter()
+                .flat_map(|i| {
+                    [(i.active, event::LB), (i.start, event::UB), (i.end, event::LB)]
+                })
+                .collect(),
         }
     }
 
@@ -424,6 +441,13 @@ impl Propagator {
                 r
             }
             Propagator::AllDifferent { vars } => prop_all_different(vars, ctx),
+            Propagator::Disjunctive { items } => {
+                // direct calls (naive reference, audit replay, tests)
+                // discard the prune count; the engine intercepts this
+                // variant in `run_prop` to count into `SearchStats`
+                let mut prunes = 0u64;
+                prop_disjunctive(items, ctx, &mut prunes)
+            }
         }
     }
 
@@ -469,6 +493,7 @@ impl Propagator {
                 vals.sort_unstable();
                 vals.windows(2).all(|w| w[0] != w[1])
             }
+            Propagator::Disjunctive { items } => disj_satisfied(items, a),
         }
     }
 }
@@ -758,6 +783,120 @@ pub(crate) fn timetable_filter_item(
                 explain_profile_at(items, t, ii, ctx);
             }
             ctx.set_max(it.active, 0)?;
+        }
+    }
+    Ok(())
+}
+
+/// Timetable edge-finding for one cumulative item (`--filtering
+/// edge-finding`): energy-based start/end filtering over the
+/// compulsory-part profile, run *after* [`timetable_filter_item`].
+///
+/// Retention intervals have variable duration (start and end are
+/// separate variables), so an item's minimal energy inside any window
+/// is exactly its compulsory-part intersection — classic est/lct
+/// edge-finding degenerates, and the real strengthening left is
+/// window-scan filtering against the profile: the timetable raises
+/// `min(start)` only through a *contiguous* overloaded prefix, while
+/// the rules here jump bounds past any overloaded point the item would
+/// necessarily cover.
+///
+/// * **Rule S** (certainly active): for `u ∈ [min(start),
+///   min(min(end), max(start) − 1)]`, `start ≤ u` together with
+///   `end ≥ u` (entailed: `u ≤ min(end)`) makes the item cover `u`;
+///   if the profile load there (own part excluded — `u < max(start)`
+///   keeps `u` outside it) plus the demand overloads, then
+///   `start ≥ u + 1`. The *latest* such `u` gives the strongest bound.
+/// * **Rule E** (symmetric): for `u ∈ [max(max(start), min(end) + 1),
+///   max(end)]`, `end ≥ u` makes the item cover `u` (`u ≥ max(start)`
+///   entails `start ≤ u`); an overload forces `end ≤ u − 1`. The
+///   *earliest* such `u` is strongest.
+/// * **Rule A** (optional): if activation would create a compulsory
+///   part `[max(start), min(end)]` containing an overloaded point, the
+///   item can never be activated — the bounds-based generalisation of
+///   the fixed-placement check in [`timetable_filter_item`].
+///
+/// All three emit explanation conjunctions in the same `cp::Lit`
+/// vocabulary as the timetable, so 1UIP learning consumes them
+/// unchanged. `prunes` counts successful tightenings
+/// (`SearchStats::ef_prunes`).
+pub(crate) fn edge_finding_filter_item(
+    items: &[CumItem],
+    ii: usize,
+    cap: i64,
+    profile: &ProfileView,
+    ctx: &mut Ctx,
+    prunes: &mut u64,
+) -> Result<(), Conflict> {
+    let it = &items[ii];
+    let d = it.demand;
+    if d == 0 || ctx.max(it.active) == 0 {
+        return Ok(());
+    }
+    if ctx.min(it.active) != 1 {
+        // Rule A: would the compulsory part created by activation
+        // cover an overloaded point? (Optional items are never part of
+        // the profile, so no own-load subtraction is needed.)
+        let ls = ctx.max(it.start);
+        let ee = ctx.min(it.end);
+        if ls <= ee {
+            if let Some(u) = profile.first_over(ls, ee, cap - d) {
+                if ctx.explaining() {
+                    ctx.begin_expl();
+                    ctx.expl_push(Lit::leq(it.start, u));
+                    ctx.expl_push(Lit::geq(it.end, u));
+                    explain_profile_at(items, u, ii, ctx);
+                }
+                ctx.set_max(it.active, 0)?;
+                *prunes += 1;
+            }
+        }
+        return Ok(());
+    }
+    // Rule S: strongest overloaded point below the compulsory zone.
+    // `u ≤ max(start) − 1` keeps `u` outside the item's own part (the
+    // profile load there never includes the item), `u ≤ min(end)`
+    // makes `end ≥ u` entailed, `u ≥ min(start)` makes it filtering.
+    let es = ctx.min(it.start);
+    let hi = ctx.min(it.end).min(ctx.max(it.start) - 1);
+    if es <= hi {
+        if let Some(first) = profile.first_over(es, hi, cap - d) {
+            // the last overloaded point in the window is the strongest
+            // bound; scan down from `hi` (bounded effort, like every
+            // cumulative shaving loop), falling back to the first
+            // overload when the top of the window is clean
+            let mut u = first;
+            for k in 0..=(hi - first).min(63) {
+                if profile.load_at(hi - k) + d > cap {
+                    u = hi - k;
+                    break;
+                }
+            }
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(it.active, 1));
+                ctx.expl_push(Lit::geq(it.end, u));
+                explain_profile_at(items, u, ii, ctx);
+            }
+            ctx.set_min(it.start, u + 1)?;
+            *prunes += 1;
+        }
+    }
+    // Rule E: earliest overloaded point above the compulsory zone
+    // (`u ≥ min(end) + 1` keeps `u` outside the own part and the new
+    // bound consistent; `u ≥ max(start)` makes `start ≤ u` entailed).
+    let lo = ctx.max(it.start).max(ctx.min(it.end) + 1);
+    let le = ctx.max(it.end);
+    if lo <= le {
+        if let Some(u) = profile.first_over(lo, le, cap - d) {
+            if ctx.explaining() {
+                ctx.begin_expl();
+                ctx.expl_push(Lit::geq(it.active, 1));
+                ctx.expl_push(Lit::leq(it.start, u));
+                explain_profile_at(items, u, ii, ctx);
+            }
+            ctx.set_max(it.end, u - 1)?;
+            *prunes += 1;
         }
     }
     Ok(())

@@ -12,7 +12,7 @@
 //! bugs can cost time but never correctness.
 
 use super::domain::{Lit, VarId};
-use super::engine::{ProfileMode, PropagationEngine};
+use super::engine::{FilteringMode, ProfileMode, PropagationEngine};
 use super::learn::{analyze, luby, Analyzed, BranchHeap, VarActivity};
 use super::Model;
 use crate::util::{Csr, Deadline, Incumbent};
@@ -67,6 +67,19 @@ pub struct SearchStats {
     pub nogoods_pruned: u64,
     /// Activity-based reductions of the no-good database.
     pub db_reductions: u64,
+    /// Bound tightenings contributed by the timetable edge-finding
+    /// rules beyond plain timetable filtering (`--filtering
+    /// edge-finding` only; stays 0 under `--filtering timetable`).
+    pub ef_prunes: u64,
+    /// Bound tightenings and deactivations asserted by the disjunctive
+    /// propagator over presolve-detected serialized heavy-item cliques.
+    pub disj_prunes: u64,
+    /// Heavy-item pairs covered by presolve-detected [`Disjunctive`]
+    /// propagators in the model this engine ran on (`h·(h−1)/2` summed
+    /// over cliques; 0 when detection found nothing or was disabled).
+    ///
+    /// [`Disjunctive`]: super::Propagator::Disjunctive
+    pub disj_pairs_detected: u64,
     /// Root-presolve counters folded in at model-build time (see
     /// [`crate::presolve::PresolveStats`]), accumulated like every
     /// other counter — an LNS run adds one contribution per window
@@ -90,6 +103,9 @@ impl SearchStats {
         self.nogoods_learned += o.nogoods_learned;
         self.nogoods_pruned += o.nogoods_pruned;
         self.db_reductions += o.db_reductions;
+        self.ef_prunes += o.ef_prunes;
+        self.disj_prunes += o.disj_prunes;
+        self.disj_pairs_detected += o.disj_pairs_detected;
         self.presolve.add(&o.presolve);
     }
 }
@@ -130,6 +146,20 @@ pub struct SearchStrategy {
     /// `prop_segtree_profile_matches_linear`), so — like `restart_base`
     /// — this does not discriminate coordinator cache keys.
     pub profile: ProfileMode,
+    /// Cumulative filtering strength (`--filtering`): plain timetable
+    /// filtering (the default, and the reference semantics the naive
+    /// engine mirrors) or timetable edge-finding, which additionally
+    /// runs energy-based start/end filtering over the compulsory-part
+    /// profile. Both are exact; edge-finding can only shrink the tree
+    /// (asserted by `prop_edge_finding_preserves_optimum`).
+    pub filtering: FilteringMode,
+    /// Whether presolve-detected [`Disjunctive`] propagators run
+    /// (`--disjunctive on|off`). Detection itself always happens at
+    /// model build; this knob gates propagation so one built model can
+    /// be A/B'd with and without the serialization reasoning.
+    ///
+    /// [`Disjunctive`]: super::Propagator::Disjunctive
+    pub disjunctive: bool,
 }
 
 impl Default for SearchStrategy {
@@ -146,6 +176,8 @@ impl SearchStrategy {
             restart_base: 0,
             nogood_cap: 0,
             profile: ProfileMode::SegTree,
+            filtering: FilteringMode::Timetable,
+            disjunctive: true,
         }
     }
 
@@ -157,6 +189,8 @@ impl SearchStrategy {
             restart_base: 128,
             nogood_cap: 10_000,
             profile: ProfileMode::SegTree,
+            filtering: FilteringMode::Timetable,
+            disjunctive: true,
         }
     }
 
@@ -164,6 +198,20 @@ impl SearchStrategy {
     /// structure (the `--profile linear|segtree` A/B knob).
     pub fn with_profile(mut self, profile: ProfileMode) -> Self {
         self.profile = profile;
+        self
+    }
+
+    /// The same strategy with a different cumulative filtering strength
+    /// (the `--filtering timetable|edge-finding` knob).
+    pub fn with_filtering(mut self, filtering: FilteringMode) -> Self {
+        self.filtering = filtering;
+        self
+    }
+
+    /// The same strategy with disjunctive propagation toggled (the
+    /// `--disjunctive on|off` knob).
+    pub fn with_disjunctive(mut self, disjunctive: bool) -> Self {
+        self.disjunctive = disjunctive;
         self
     }
 
@@ -186,12 +234,22 @@ impl SearchStrategy {
         }
     }
 
-    /// Cache-key discriminant (see [`SearchStrategy::name`]).
+    /// Cache-key discriminant (see [`SearchStrategy::name`]). All
+    /// encoded knobs are exact — they never change the reported status
+    /// or optimum — but filtering and disjunctive change the *tree*
+    /// (node counts, learned clauses), so cached search results keyed
+    /// without them would silently mix A/B measurements. Layout:
+    /// bit 0 = mode, bit 1 = filtering, bit 2 = disjunctive.
     pub fn cache_key(&self) -> u8 {
-        match self.mode {
-            SearchMode::Chronological => 0,
+        let mode = match self.mode {
+            SearchMode::Chronological => 0u8,
             SearchMode::Learned => 1,
-        }
+        };
+        let filtering = match self.filtering {
+            FilteringMode::Timetable => 0u8,
+            FilteringMode::EdgeFinding => 1,
+        };
+        mode | filtering << 1 | (self.disjunctive as u8) << 2
     }
 }
 
@@ -305,7 +363,7 @@ impl Solver {
         mut on_solution: impl FnMut(&[i64], i64),
     ) -> SearchResult {
         let mut eng =
-            PropagationEngine::new(model, objective, self.naive, false, self.strategy.profile);
+            PropagationEngine::new(model, objective, self.naive, false, &self.strategy);
         let mut best: Option<(Vec<i64>, i64)> = None;
         // seed the objective bound from the shared pruning bound when
         // one is attached (any solver may prune against the best
@@ -467,7 +525,7 @@ impl Solver {
         mut on_solution: impl FnMut(&[i64], i64),
     ) -> SearchResult {
         let mut eng =
-            PropagationEngine::new(model, objective, false, true, self.strategy.profile);
+            PropagationEngine::new(model, objective, false, true, &self.strategy);
         let nvars = eng.domains.len();
         let mut best: Option<(Vec<i64>, i64)> = None;
         if !objective.is_empty() {

@@ -327,7 +327,7 @@ fn nogood_watches_survive_backtrack() {
     let x = m.new_var(0, 5);
     let y = m.new_var(0, 5);
     let z = m.new_var(0, 5);
-    let mut eng = PropagationEngine::new(&m, &[], false, true, ProfileMode::SegTree);
+    let mut eng = PropagationEngine::new(&m, &[], false, true, &SearchStrategy::learned());
     // forbid x ≥ 3 ∧ y ≥ 2 ∧ z ≥ 4
     eng.ng.add(vec![Lit::geq(x, 3), Lit::geq(y, 2), Lit::geq(z, 4)]);
     assert!(eng.fixpoint(&m).is_ok(), "nothing entailed yet");
@@ -351,6 +351,149 @@ fn nogood_watches_survive_backtrack() {
     assert_eq!(eng.stats.nogoods_pruned, 2);
 }
 
+/// Regression (distilled from the PR-5 fuzz divergence): an optional
+/// item whose *fixed* placement is degenerate (start beyond end) still
+/// reaches the fixed-placement overload probe, whose window `[s, e]`
+/// has `s > e`. `ProfileView::first_over` must probe `load(s)` for the
+/// degenerate window in both profile structures, or the linear and the
+/// segment-tree engines diverge on which branch deactivates the item.
+#[test]
+fn regression_degenerate_window_load_probe() {
+    let build = || {
+        let mut m = Model::new();
+        let a0 = m.new_bool();
+        m.fix(a0, 1);
+        let s0 = m.new_var(4, 4);
+        let e0 = m.new_var(6, 6);
+        let a1 = m.new_bool();
+        let s1 = m.new_var(5, 5);
+        let e1 = m.new_var(3, 3);
+        let items = vec![
+            CumItem { active: a0, start: s0, end: e0, demand: 1 },
+            CumItem { active: a1, start: s1, end: e1, demand: 1 },
+        ];
+        m.cumulative(items, 1);
+        (m, a1)
+    };
+    let mut results = Vec::new();
+    for profile in [ProfileMode::Linear, ProfileMode::SegTree] {
+        let (m, a1) = build();
+        let s = Solver {
+            strategy: SearchStrategy::chronological().with_profile(profile),
+            ..Default::default()
+        };
+        let r = s.solve(&m, &[], &all_vars(&m), |_, _| {});
+        assert!(r.found(), "feasible with the degenerate item deactivated");
+        let (sol, _) = r.best.as_ref().unwrap();
+        assert_eq!(sol[a1.0 as usize], 0, "degenerate placement must deactivate");
+        results.push((r.status, r.stats.nodes));
+    }
+    assert_eq!(results[0], results[1], "profile structures diverged");
+}
+
+/// Regression (distilled from the PR-4 fuzz divergence): an infeasible
+/// packing whose refutation cascades conflicts with explanations lying
+/// entirely below the failing decision level — 1UIP analysis must
+/// backjump through them without losing the infeasibility proof. All
+/// three engines must agree.
+#[test]
+fn regression_all_lower_level_conflict() {
+    // three mandatory length-3 unit-demand intervals on capacity 1 need
+    // 9 disjoint slots; the horizon [0, 7] offers 8 → infeasible
+    let mut m = Model::new();
+    let mut items = Vec::new();
+    for _ in 0..3 {
+        let a = m.new_bool();
+        m.fix(a, 1);
+        let s = m.new_var(0, 7);
+        let e = m.new_var(0, 7);
+        m.le_offset(s, 2, e); // length >= 3
+        items.push(CumItem { active: a, start: s, end: e, demand: 1 });
+    }
+    m.cumulative(items, 1);
+    let ch = Solver::default().solve(&m, &[], &all_vars(&m), |_, _| {});
+    let na = Solver { naive: true, ..Default::default() }.solve(&m, &[], &all_vars(&m), |_, _| {});
+    let ln = Solver { strategy: SearchStrategy::learned(), ..Default::default() }
+        .solve(&m, &[], &all_vars(&m), |_, _| {});
+    assert_eq!(ch.status, Status::Infeasible);
+    assert_eq!(na.status, Status::Infeasible);
+    assert_eq!(ln.status, Status::Infeasible);
+    assert!(ln.stats.conflicts > 0, "refutation must be conflict-driven");
+}
+
+/// The disjunctive propagator is redundant strengthening: solving a
+/// heavy-clique model with it on and off must agree on status and
+/// optimum, and the on-side must actually detect the clique. Runs under
+/// both search strategies (the learned one also exercises the
+/// explanation-soundness audit on disjunctive explanations).
+#[test]
+fn disjunctive_knob_preserves_optimum() {
+    let build = || {
+        let mut m = Model::new();
+        let mut items = Vec::new();
+        let mut ends = Vec::new();
+        for _ in 0..3 {
+            let a = m.new_bool();
+            m.fix(a, 1);
+            let s = m.new_var(0, 11);
+            let e = m.new_var(0, 11);
+            m.le_offset(s, 1, e); // length >= 2
+            items.push(CumItem { active: a, start: s, end: e, demand: 3 });
+            ends.push(e);
+        }
+        // cap 4 < 2·3: all three demands are heavy → pairwise disjoint
+        let clique = crate::presolve::detect_serialized_clique(&items, 4);
+        assert_eq!(clique.len(), 3);
+        m.cumulative(items, 4);
+        m.disjunctive(clique);
+        let obj: Vec<(i64, VarId)> = ends.iter().map(|&e| (1, e)).collect();
+        (m, obj)
+    };
+    for (i, base) in
+        [SearchStrategy::chronological(), SearchStrategy::learned()].into_iter().enumerate()
+    {
+        let (m, obj) = build();
+        let on = Solver { strategy: base.clone().with_disjunctive(true), ..Default::default() }
+            .solve(&m, &obj, &all_vars(&m), |_, _| {});
+        let (m2, obj2) = build();
+        let off = Solver { strategy: base.with_disjunctive(false), ..Default::default() }
+            .solve(&m2, &obj2, &all_vars(&m2), |_, _| {});
+        assert_eq!(on.status, Status::Optimal);
+        assert_eq!(off.status, Status::Optimal);
+        assert_eq!(on.best.as_ref().unwrap().1, off.best.as_ref().unwrap().1);
+        assert_eq!(on.stats.disj_pairs_detected, 3, "3 heavy items = 3 pairs");
+        if i == 0 {
+            // chronological DFS with fixed branch order: monotone
+            // filtering can only shrink the tree (learned search is
+            // exempt — restarts and VSIDS make node counts non-monotone)
+            assert!(on.stats.nodes <= off.stats.nodes, "filtering must not grow the tree");
+        }
+    }
+}
+
+/// Edge-finding is exact strengthening over the timetable: equal status
+/// and optimum, never a larger tree (on this instance), and the
+/// learned run audits every EF explanation conjunction.
+#[test]
+fn edge_finding_knob_preserves_optimum() {
+    let (m, obj, bo) = scheduling_model();
+    for base in [SearchStrategy::chronological(), SearchStrategy::learned()] {
+        let tt = Solver {
+            strategy: base.clone().with_filtering(FilteringMode::Timetable),
+            ..Default::default()
+        }
+        .solve(&m, &obj, &bo, |_, _| {});
+        let ef = Solver {
+            strategy: base.clone().with_filtering(FilteringMode::EdgeFinding),
+            ..Default::default()
+        }
+        .solve(&m, &obj, &bo, |_, _| {});
+        assert_eq!(tt.status, Status::Optimal);
+        assert_eq!(ef.status, Status::Optimal);
+        assert_eq!(tt.best.as_ref().unwrap().1, ef.best.as_ref().unwrap().1);
+    }
+}
+
 #[test]
 fn stats_merge_accumulates() {
     let mut a = SearchStats { nodes: 3, propagations: 10, events_posted: 7, ..Default::default() };
@@ -363,6 +506,9 @@ fn stats_merge_accumulates() {
         nogoods_learned: 6,
         nogoods_pruned: 9,
         db_reductions: 1,
+        ef_prunes: 11,
+        disj_prunes: 12,
+        disj_pairs_detected: 13,
         ..Default::default()
     };
     a.merge(&b);
@@ -376,4 +522,7 @@ fn stats_merge_accumulates() {
     assert_eq!(a.nogoods_learned, 6);
     assert_eq!(a.nogoods_pruned, 9);
     assert_eq!(a.db_reductions, 1);
+    assert_eq!(a.ef_prunes, 11);
+    assert_eq!(a.disj_prunes, 12);
+    assert_eq!(a.disj_pairs_detected, 13);
 }

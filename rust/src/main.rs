@@ -4,7 +4,8 @@
 //!   solve   --graph <name|rl:n:m:seed> --budget-frac F [--backend B] [--portfolio]
 //!           [--threads N] [--time-limit S] [--presolve off|exact|aggressive]
 //!           [--max-interval-len L] [--search chronological|learned]
-//!           [--profile segtree|linear] [--verbose]
+//!           [--profile segtree|linear] [--filtering timetable|edge-finding]
+//!           [--disjunctive on|off] [--verbose]
 //!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
 //!           [--time-limit S] [--compare-serial]
 //!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|ablation-c|
@@ -19,7 +20,7 @@ use moccasin::coordinator::{Backend, Coordinator, SolveRequest};
 use moccasin::executor::{train_with_remat, TrainConfig};
 use moccasin::generators::{paper_graph, random_layered};
 use moccasin::graph::{topological_order, Graph};
-use moccasin::cp::{ProfileMode, SearchStrategy};
+use moccasin::cp::{FilteringMode, ProfileMode, SearchStrategy};
 use moccasin::presolve::{PresolveConfig, PresolveLevel};
 use moccasin::util::fmt_u64;
 use std::time::{Duration, Instant};
@@ -100,6 +101,28 @@ fn main() {
             }
         },
     };
+    // cumulative filtering-strength A/B knob (both modes are exact;
+    // edge-finding adds energy-based start/end filtering)
+    let search = match flag_val(&args, "--filtering") {
+        None => search,
+        Some(name) => match FilteringMode::parse(&name) {
+            Some(f) => search.with_filtering(f),
+            None => {
+                eprintln!("unknown filtering mode {name} (use timetable|edge-finding)");
+                std::process::exit(2);
+            }
+        },
+    };
+    // disjunctive (heavy-clique serialization) propagation knob
+    let search = match flag_val(&args, "--disjunctive").as_deref() {
+        None => search,
+        Some("on") => search.with_disjunctive(true),
+        Some("off") => search.with_disjunctive(false),
+        Some(other) => {
+            eprintln!("invalid --disjunctive {other} (use on|off)");
+            std::process::exit(2);
+        }
+    };
 
     match args.first().map(|s| s.as_str()) {
         Some("solve") => {
@@ -161,6 +184,15 @@ fn main() {
                     st.wakeups_skipped,
                     st.cum_resyncs,
                     st.cum_rebuilds
+                );
+                println!(
+                    "filtering: mode={} ef-prunes={} disjunctive={} disj-pairs={} \
+                     disj-prunes={}",
+                    search.filtering.name(),
+                    st.ef_prunes,
+                    if search.disjunctive { "on" } else { "off" },
+                    st.disj_pairs_detected,
+                    st.disj_prunes
                 );
                 println!(
                     "search: strategy={} restarts={} nogoods-learned={} nogoods-pruned={} \
@@ -338,7 +370,8 @@ fn main() {
                  [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
                  [--threads N] [--time-limit S] [--presolve off|exact|aggressive] \
                  [--max-interval-len L] [--search chronological|learned] \
-                 [--profile segtree|linear] [--verbose]\n\
+                 [--profile segtree|linear] [--filtering timetable|edge-finding] \
+                 [--disjunctive on|off] [--verbose]\n\
                    sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
                  [--search chronological|learned] [--compare-serial]\n\
                    bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|\

@@ -29,7 +29,7 @@
 
 use crate::cp::{CumItem, Model, VarId};
 use crate::graph::{Graph, NodeId};
-use crate::presolve::{staged_caps, Presolve, PresolveStats};
+use crate::presolve::{detect_serialized_clique, staged_caps, Presolve, PresolveStats};
 use std::sync::Arc;
 
 /// CP variables of one retention interval.
@@ -490,7 +490,14 @@ impl StagedModel {
                 demand: graph.mem[iv.node as usize] as i64,
             })
             .collect();
+        // tight-budget regimes: tensors over half the budget pairwise
+        // serialize — post the redundant disjunctive clique alongside
+        // the cumulative (the `--disjunctive` knob gates propagation)
+        let clique = detect_serialized_clique(&items, budget as i64);
         model.cumulative(items, budget as i64);
+        if !clique.is_empty() {
+            model.disjunctive(clique);
+        }
 
         // --- precedence constraints (5): one multi-target cover per
         //     edge, shared target/candidate slices ---
@@ -705,7 +712,11 @@ impl StagedModel {
                 demand: graph.mem[iv.node as usize] as i64,
             })
             .collect();
+        let clique = detect_serialized_clique(&items, budget as i64);
         model.cumulative(items, budget as i64);
+        if !clique.is_empty() {
+            model.disjunctive(clique);
+        }
         emit_presolved_covers(&mut model, graph, &by_node, &intervals, pre, &mut stats);
         // (6): starts pairwise distinct
         let starts: Vec<VarId> = intervals.iter().map(|iv| iv.start).collect();

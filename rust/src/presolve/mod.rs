@@ -43,6 +43,15 @@
 //!   paper's §3 search-space reduction `e − s ≤ L`; near-optimal in the
 //!   paper's experiments but not exactness-preserving, so off by
 //!   default.
+//! * **Disjunctive (heavy-clique) detection** (always exact — the
+//!   emitted constraint is *redundant*). Cumulative items whose demand
+//!   exceeds half the budget (`2·demand > cap`) pairwise overload it,
+//!   so their active intervals must be pairwise disjoint; when at least
+//!   two such items exist, [`detect_serialized_clique`] yields a
+//!   [`Disjunctive`] constraint over them, giving the engine pairwise
+//!   order filtering the timetable cannot see. Characteristic of the
+//!   paper's tight-budget regimes, where the largest tensors
+//!   effectively serialize.
 //! * **MILP row reduction** ([`reduce_rows`], always exact). Fixed-
 //!   variable substitution, forced singleton/forcing-row fixings and
 //!   vacuous-row elimination on the CHECKMATE constraint matrix.
@@ -53,6 +62,7 @@
 //! and every LNS window re-solve via `Arc<GraphAnalysis>`.
 //!
 //! [`Cover`]: crate::cp::Propagator
+//! [`Disjunctive`]: crate::cp::Propagator
 
 mod analysis;
 mod milp;
@@ -60,8 +70,35 @@ mod milp;
 pub use analysis::{staged_caps, GraphAnalysis, StagedCaps};
 pub use milp::{reduce_rows, RowReduction};
 
+use crate::cp::{CumItem, DisjItem};
 use crate::graph::Graph;
 use std::sync::Arc;
+
+/// Detect the "heavy clique" of a cumulative constraint: the items
+/// whose demand alone exceeds half the capacity, so any two of them
+/// overloaded it together — their active intervals must be pairwise
+/// disjoint. Returns the clique as [`DisjItem`]s when it has at least
+/// two members (a single heavy item serializes with nothing), empty
+/// otherwise. Zero-demand items never qualify, and with `cap ≤ 0` the
+/// test `2·demand > cap` admits every positive-demand item — which is
+/// still correct: any two of them exceed a non-positive budget.
+///
+/// The emitted constraint is redundant with the cumulative it was
+/// detected in, so posting it is exactness-preserving at any
+/// [`PresolveLevel`]; it exists purely to give the engine pairwise
+/// order filtering (see `cp::disjunctive`).
+pub fn detect_serialized_clique(items: &[CumItem], cap: i64) -> Vec<DisjItem> {
+    let heavy: Vec<DisjItem> = items
+        .iter()
+        .filter(|it| it.demand > 0 && 2 * it.demand > cap)
+        .map(|it| DisjItem { active: it.active, start: it.start, end: it.end })
+        .collect();
+    if heavy.len() >= 2 {
+        heavy
+    } else {
+        Vec::new()
+    }
+}
 
 /// How aggressively presolve may transform the model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -213,6 +250,45 @@ impl PresolveStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cp::VarId;
+
+    fn cum_item(base: u32, demand: i64) -> CumItem {
+        CumItem {
+            active: VarId(base),
+            start: VarId(base + 1),
+            end: VarId(base + 2),
+            demand,
+        }
+    }
+
+    #[test]
+    fn heavy_clique_detection() {
+        // cap 10: demands 6 and 7 are heavy (2d > 10), 5 and 0 are not
+        let items =
+            [cum_item(0, 6), cum_item(3, 5), cum_item(6, 7), cum_item(9, 0)];
+        let clique = detect_serialized_clique(&items, 10);
+        assert_eq!(clique.len(), 2);
+        assert_eq!(clique[0].active, VarId(0));
+        assert_eq!(clique[1].active, VarId(6));
+    }
+
+    #[test]
+    fn single_heavy_item_is_no_clique() {
+        let items = [cum_item(0, 9), cum_item(3, 2)];
+        assert!(detect_serialized_clique(&items, 10).is_empty());
+    }
+
+    #[test]
+    fn loose_budget_detects_nothing() {
+        let items = [cum_item(0, 3), cum_item(3, 4), cum_item(6, 5)];
+        assert!(detect_serialized_clique(&items, 100).is_empty());
+    }
+
+    #[test]
+    fn non_positive_cap_serializes_all_positive_demands() {
+        let items = [cum_item(0, 1), cum_item(3, 1), cum_item(6, 0)];
+        assert_eq!(detect_serialized_clique(&items, 0).len(), 2);
+    }
 
     fn diamond_shortcut() -> Graph {
         Graph::from_edges(

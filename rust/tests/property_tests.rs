@@ -26,14 +26,40 @@
 //!    two modes must walk the exact same tree (same status, optimum,
 //!    nodes, conflicts, solutions and propagations), on small exhausted
 //!    instances and on an n ≥ 1000 node-capped smoke.
+//! 10. Timetable edge-finding (`--filtering edge-finding`) returns the
+//!    same status and optimum as the default timetable filtering, and
+//!    under the chronological strategy never grows the tree — the
+//!    extra energy reasoning is purely pruning.
+//! 11. The disjunctive propagator emitted by heavy-clique presolve
+//!    detection preserves status and optimum when toggled, and when no
+//!    clique was detected the toggle leaves the tree bit-identical.
+//!
+//! Every randomized sweep multiplies its case count by the
+//! `MOCCASIN_PROP_CASES` env var (default 1; the nightly deep-test CI
+//! job sets 10) and stamps the generator seed into its graph names and
+//! assertion messages, so a CI failure reproduces as a one-liner.
 
-use moccasin::cp::{ProfileMode, SearchStrategy, Solver, Status};
+use moccasin::cp::{FilteringMode, ProfileMode, SearchStrategy, Solver, Status};
 use moccasin::generators::{cm_style, paper_graph, random_layered, real_world_like};
 use moccasin::graph::{eval_sequence, topological_order, Graph, NodeId};
 use moccasin::moccasin::lns::canonicalize;
 use moccasin::moccasin::{MoccasinSolver, StagedModel};
 use moccasin::presolve::{Presolve, PresolveConfig};
 use std::time::Duration;
+
+/// Case-count multiplier for the randomized sweeps, read from
+/// `MOCCASIN_PROP_CASES` (default 1; the nightly deep-test CI job sets
+/// 10). Extra cases reuse the same generators with fresh seeds while
+/// instance *sizes* stay bounded (`seed % base` in the size formulas),
+/// so deep runs widen coverage without changing the exhaustion budget
+/// per case. Any failure reproduces from the seed in the message.
+fn prop_case_scale() -> u64 {
+    std::env::var("MOCCASIN_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(1)
+}
 
 /// Brute-force Appendix-A.3 oracle: O(L² · m) recomputation of the
 /// memory profile from first principles.
@@ -63,8 +89,9 @@ fn brute_force_peak(g: &Graph, seq: &[NodeId]) -> u64 {
 
 fn graphs() -> Vec<Graph> {
     let mut gs = Vec::new();
-    for seed in 0..6 {
-        let (n, m) = (40 + 10 * seed as usize, 100 + 20 * seed as usize);
+    for seed in 0..6 * prop_case_scale() {
+        let size = (seed % 6) as usize;
+        let (n, m) = (40 + 10 * size, 100 + 20 * size);
         gs.push(random_layered(&format!("rl{seed}"), n, m, seed));
     }
     gs.push(cm_style("cm", 21, 45, 3, 256));
@@ -74,10 +101,10 @@ fn graphs() -> Vec<Graph> {
 
 #[test]
 fn prop_eval_matches_brute_force() {
-    for (i, g) in graphs().iter().enumerate() {
+    for g in &graphs() {
         let order = topological_order(g).unwrap();
         let ev = eval_sequence(g, &order).unwrap();
-        assert_eq!(ev.peak_mem, brute_force_peak(g, &order), "graph {i} no-remat");
+        assert_eq!(ev.peak_mem, brute_force_peak(g, &order), "graph {} no-remat", g.name);
         // and with a remat sequence from the solver
         let peak = ev.peak_mem;
         let solver = MoccasinSolver { time_limit: Duration::from_secs(2), ..Default::default() };
@@ -85,7 +112,8 @@ fn prop_eval_matches_brute_force() {
             assert_eq!(
                 best.eval.peak_mem,
                 brute_force_peak(g, &best.seq),
-                "graph {i} remat seq"
+                "graph {} remat seq",
+                g.name
             );
         }
     }
@@ -93,7 +121,7 @@ fn prop_eval_matches_brute_force() {
 
 #[test]
 fn prop_solutions_valid_and_within_budget() {
-    for (i, g) in graphs().iter().enumerate() {
+    for g in &graphs() {
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
         for frac in [0.95, 0.85] {
@@ -102,8 +130,8 @@ fn prop_solutions_valid_and_within_budget() {
                 MoccasinSolver { time_limit: Duration::from_secs(2), ..Default::default() };
             if let Some(best) = solver.solve(g, budget, None).best {
                 let ev = eval_sequence(g, &best.seq).expect("valid sequence");
-                assert!(ev.peak_mem <= budget, "graph {i} frac {frac}");
-                assert_eq!(ev.duration, best.eval.duration, "graph {i} self-consistent");
+                assert!(ev.peak_mem <= budget, "graph {} frac {frac}", g.name);
+                assert_eq!(ev.duration, best.eval.duration, "graph {} self-consistent", g.name);
             }
         }
     }
@@ -111,7 +139,7 @@ fn prop_solutions_valid_and_within_budget() {
 
 #[test]
 fn prop_duration_monotone_in_budget() {
-    for (i, g) in graphs().iter().enumerate() {
+    for g in &graphs() {
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
         let mut last: Option<u64> = None;
@@ -127,7 +155,8 @@ fn prop_duration_monotone_in_budget() {
                 // heuristic solver: allow tiny non-monotonicity (2%)
                 assert!(
                     cur as f64 <= prev as f64 * 1.02,
-                    "graph {i}: duration rose {prev} -> {cur} as budget loosened"
+                    "graph {}: duration rose {prev} -> {cur} as budget loosened",
+                    g.name
                 );
             }
             if d.is_some() {
@@ -135,21 +164,21 @@ fn prop_duration_monotone_in_budget() {
             }
         }
         // at full budget there must be no remat
-        assert_eq!(last, Some(g.total_duration()), "graph {i} full budget");
+        assert_eq!(last, Some(g.total_duration()), "graph {} full budget", g.name);
     }
 }
 
 #[test]
 fn prop_canonicalize_preserves_duration() {
-    for (i, g) in graphs().iter().enumerate() {
+    for g in &graphs() {
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
         let solver = MoccasinSolver { time_limit: Duration::from_secs(2), ..Default::default() };
         if let Some(best) = solver.solve(g, (peak as f64 * 0.9) as u64, Some(order.clone())).best
         {
             if let Some(c) = canonicalize(g, &order, &best.seq) {
-                assert!(c.eval.duration <= best.eval.duration, "graph {i}");
-                assert!(eval_sequence(g, &c.seq).is_ok(), "graph {i} canonical valid");
+                assert!(c.eval.duration <= best.eval.duration, "graph {}", g.name);
+                assert!(eval_sequence(g, &c.seq).is_ok(), "graph {} canonical valid", g.name);
             }
         }
     }
@@ -184,20 +213,20 @@ fn prop_engine_matches_naive_reference() {
     // propagation is confluent, so any divergence is an engine bug
     // (missed wakeup, stale cumulative profile, bad backtrack resync).
     let mut graphs: Vec<Graph> = Vec::new();
-    for seed in 0..4u64 {
-        let n = 10 + 2 * seed as usize;
+    for seed in 0..4 * prop_case_scale() {
+        let n = 10 + 2 * (seed % 4) as usize;
         graphs.push(random_layered(&format!("eq-rl{seed}"), n, 2 * n + 4, seed));
     }
     graphs.push(cm_style("eq-cm", 11, 22, 3, 64));
-    for (i, g) in graphs.iter().enumerate() {
+    for g in &graphs {
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
         for frac in [0.85, 0.95] {
             let budget = (peak as f64 * frac) as u64;
             let (s_ev, o_ev) = cp_solve(g, budget, true, false, 200_000);
             let (s_na, o_na) = cp_solve(g, budget, true, true, 200_000);
-            assert_eq!(s_ev, s_na, "graph {i} frac {frac}: status diverged");
-            assert_eq!(o_ev, o_na, "graph {i} frac {frac}: optimum diverged");
+            assert_eq!(s_ev, s_na, "graph {} frac {frac}: status diverged", g.name);
+            assert_eq!(o_ev, o_na, "graph {} frac {frac}: optimum diverged", g.name);
         }
     }
     // unstaged model (exercises AllDifferent) on a tiny instance
@@ -241,12 +270,12 @@ fn prop_learned_matches_chronological() {
     // explanation, a bad 1UIP cut, a wrong no-good assertion, a branch
     // heap that lost a position and declared a premature leaf).
     let mut graphs: Vec<Graph> = Vec::new();
-    for seed in 0..4u64 {
-        let n = 10 + 2 * seed as usize;
+    for seed in 0..4 * prop_case_scale() {
+        let n = 10 + 2 * (seed % 4) as usize;
         graphs.push(random_layered(&format!("lr-rl{seed}"), n, 2 * n + 4, seed));
     }
     graphs.push(cm_style("lr-cm", 11, 22, 3, 64));
-    for (i, g) in graphs.iter().enumerate() {
+    for g in &graphs {
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
         for frac in [0.85, 0.95] {
@@ -255,15 +284,16 @@ fn prop_learned_matches_chronological() {
                 cp_solve_strategy(g, budget, true, SearchStrategy::chronological(), 400_000);
             let (s_ln, o_ln, st_ln) =
                 cp_solve_strategy(g, budget, true, SearchStrategy::learned(), 400_000);
-            assert_eq!(s_ch, s_ln, "graph {i} frac {frac}: status diverged");
-            assert_eq!(o_ch, o_ln, "graph {i} frac {frac}: optimum diverged");
+            assert_eq!(s_ch, s_ln, "graph {} frac {frac}: status diverged", g.name);
+            assert_eq!(o_ch, o_ln, "graph {} frac {frac}: optimum diverged", g.name);
             // chronological must not pay any learning overhead …
             assert_eq!(st_ch.nogoods_learned, 0);
             // … and the learned run must actually have learned whenever
             // it saw a conflict at a decision level
             assert!(
                 st_ln.conflicts == 0 || st_ln.nogoods_learned > 0,
-                "graph {i} frac {frac}: conflicts without learning"
+                "graph {} frac {frac}: conflicts without learning",
+                g.name
             );
         }
     }
@@ -324,12 +354,12 @@ fn prop_presolve_preserves_optimum() {
     // constraint that was not implied). Mirrors the PR 2
     // engine-vs-naive harness.
     let mut graphs: Vec<Graph> = Vec::new();
-    for seed in 0..4u64 {
-        let n = 10 + 2 * seed as usize;
+    for seed in 0..4 * prop_case_scale() {
+        let n = 10 + 2 * (seed % 4) as usize;
         graphs.push(random_layered(&format!("pre-rl{seed}"), n, 2 * n + 4, seed));
     }
     graphs.push(cm_style("pre-cm", 11, 22, 3, 64));
-    for (i, g) in graphs.iter().enumerate() {
+    for g in &graphs {
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
         for frac in [0.85, 0.95] {
@@ -338,15 +368,17 @@ fn prop_presolve_preserves_optimum() {
                 cp_solve_presolve(g, budget, true, true, 400_000);
             let (s_raw, o_raw, props_raw, dom_raw) =
                 cp_solve_presolve(g, budget, true, false, 400_000);
-            assert_eq!(s_pre, s_raw, "graph {i} frac {frac}: status diverged");
-            assert_eq!(o_pre, o_raw, "graph {i} frac {frac}: optimum diverged");
+            assert_eq!(s_pre, s_raw, "graph {} frac {frac}: status diverged", g.name);
+            assert_eq!(o_pre, o_raw, "graph {} frac {frac}: optimum diverged", g.name);
             assert!(
                 props_pre < props_raw,
-                "graph {i} frac {frac}: presolve must construct fewer propagators"
+                "graph {} frac {frac}: presolve must construct fewer propagators",
+                g.name
             );
             assert!(
                 dom_pre < dom_raw,
-                "graph {i} frac {frac}: presolve must shrink summed domain size"
+                "graph {} frac {frac}: presolve must shrink summed domain size",
+                g.name
             );
         }
     }
@@ -402,13 +434,13 @@ fn prop_segtree_profile_matches_linear() {
     // "identical prunings". Any divergence is a tree bug (bad lazy
     // recompute, wrong gap handling, off-by-one range clamp).
     let mut graphs: Vec<Graph> = Vec::new();
-    for seed in 0..5u64 {
-        let n = 10 + 2 * seed as usize;
+    for seed in 0..5 * prop_case_scale() {
+        let n = 10 + 2 * (seed % 5) as usize;
         graphs.push(random_layered(&format!("sp-rl{seed}"), n, 2 * n + 4, seed));
     }
     graphs.push(cm_style("sp-cm", 11, 22, 3, 64));
     graphs.push(real_world_like("sp-rw", 16, 40, 5));
-    for (i, g) in graphs.iter().enumerate() {
+    for g in &graphs {
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
         for frac in [0.85, 0.95] {
@@ -418,12 +450,13 @@ fn prop_segtree_profile_matches_linear() {
                 cp_solve_profile(g, budget, true, ProfileMode::Linear, chron, 400_000);
             let (s_t, o_t, st_t) =
                 cp_solve_profile(g, budget, true, ProfileMode::SegTree, chron, 400_000);
-            assert_eq!(s_l, s_t, "graph {i} frac {frac}: status diverged");
-            assert_eq!(o_l, o_t, "graph {i} frac {frac}: optimum diverged");
+            assert_eq!(s_l, s_t, "graph {} frac {frac}: status diverged", g.name);
+            assert_eq!(o_l, o_t, "graph {} frac {frac}: optimum diverged", g.name);
             assert_eq!(
                 (st_l.nodes, st_l.conflicts, st_l.solutions, st_l.propagations),
                 (st_t.nodes, st_t.conflicts, st_t.solutions, st_t.propagations),
-                "graph {i} frac {frac}: the two profile modes walked different trees"
+                "graph {} frac {frac}: the two profile modes walked different trees",
+                g.name
             );
             assert_eq!(st_t.cum_rebuilds, 0, "segtree mode never re-flattens");
             // learned strategy: explanations are also value-identical,
@@ -445,8 +478,8 @@ fn prop_segtree_profile_matches_linear() {
                 SearchStrategy::learned(),
                 400_000,
             );
-            assert_eq!(s_ll, s_lt, "graph {i} frac {frac}: learned status diverged");
-            assert_eq!(o_ll, o_lt, "graph {i} frac {frac}: learned optimum diverged");
+            assert_eq!(s_ll, s_lt, "graph {} frac {frac}: learned status diverged", g.name);
+            assert_eq!(o_ll, o_lt, "graph {} frac {frac}: learned optimum diverged", g.name);
         }
     }
     // unstaged model (exercises AllDifferent alongside Cumulative)
@@ -488,17 +521,214 @@ fn prop_segtree_matches_linear_on_large_instance_smoke() {
     assert_eq!(linear, segtree, "L1 node-capped runs diverged between profile modes");
 }
 
+/// Solve one *presolved* staged (or unstaged) CP model with the given
+/// search strategy; returns (status, best objective, kernel stats).
+/// The presolved builders are the ones that run heavy-clique detection
+/// and emit the redundant disjunctive constraint, so this is the
+/// harness for the `--disjunctive` knob.
+fn cp_solve_presolved_strategy(
+    g: &Graph,
+    budget: u64,
+    staged: bool,
+    strategy: SearchStrategy,
+    node_limit: u64,
+) -> (Status, Option<i64>, moccasin::cp::SearchStats) {
+    let order = topological_order(g).unwrap();
+    let c_v = vec![2usize; g.n()];
+    let pre = Presolve::new(g, PresolveConfig::default());
+    let sm = if staged {
+        StagedModel::build_with(g, &order, budget, &c_v, &pre, None)
+    } else {
+        StagedModel::build_unstaged_with(g, &order, budget, &c_v, &pre)
+    };
+    let (bo, guards) = sm.branch_order();
+    let solver = Solver { node_limit, guards: Some(guards), strategy, ..Default::default() };
+    let r = solver.solve(&sm.model, &sm.objective, &bo, |_, _| {});
+    (r.status, r.best.map(|(_, o)| o), r.stats)
+}
+
+/// A tiny fan-out graph whose first tensor dwarfs the rest: under any
+/// budget near the no-remat peak, more than half the memory capacity
+/// is taken by each copy of node 0, so heavy-clique detection is
+/// *guaranteed* to fire and emit a disjunctive constraint over node
+/// 0's interval copies. Keeps the disjunctive on/off sweep from
+/// silently degenerating into the no-clique case on every instance.
+fn dominant_tensor_graph() -> Graph {
+    let edges: Vec<(NodeId, NodeId)> =
+        vec![(0, 1), (0, 2), (0, 3), (1, 4), (2, 4), (3, 4)];
+    Graph::from_edges(
+        "dj-dominant",
+        5,
+        &edges,
+        vec![3, 1, 1, 1, 2],
+        vec![100, 6, 6, 6, 10],
+    )
+    .expect("dominant-tensor graph is a DAG")
+}
+
+#[test]
+fn prop_edge_finding_preserves_optimum() {
+    // Edge-finding is a *strengthening* of the timetable filter: it may
+    // only remove values that cannot appear in any solution, so both
+    // filtering modes must agree on status AND optimum everywhere.
+    // Under the deterministic chronological strategy the stronger
+    // filter can also never grow the tree. (Learned-search node counts
+    // are deliberately not compared: VSIDS activities and restart
+    // timing make them non-monotone in filtering strength.)
+    let scale = prop_case_scale();
+    for seed in 0..4 * scale {
+        let n = 10 + 2 * (seed % 4) as usize;
+        let g = random_layered(&format!("ef-rl{seed}"), n, 2 * n + 4, seed);
+        let order = topological_order(&g).unwrap();
+        let peak = g.peak_mem_no_remat(&order).unwrap();
+        for frac in [0.85, 0.95] {
+            let budget = (peak as f64 * frac) as u64;
+            for strat in [SearchStrategy::chronological(), SearchStrategy::learned()] {
+                let (s_tt, o_tt, st_tt) = cp_solve_strategy(
+                    &g,
+                    budget,
+                    true,
+                    strat.with_filtering(FilteringMode::Timetable),
+                    400_000,
+                );
+                let (s_ef, o_ef, st_ef) = cp_solve_strategy(
+                    &g,
+                    budget,
+                    true,
+                    strat.with_filtering(FilteringMode::EdgeFinding),
+                    400_000,
+                );
+                assert_eq!(
+                    s_tt, s_ef,
+                    "graph {} frac {frac} {strat:?}: status diverged",
+                    g.name
+                );
+                assert_eq!(
+                    o_tt, o_ef,
+                    "graph {} frac {frac} {strat:?}: optimum diverged",
+                    g.name
+                );
+                if strat == SearchStrategy::chronological() {
+                    assert!(
+                        st_ef.nodes <= st_tt.nodes,
+                        "graph {} frac {frac}: edge-finding grew the chronological \
+                         tree ({} vs {} nodes)",
+                        g.name,
+                        st_ef.nodes,
+                        st_tt.nodes
+                    );
+                }
+            }
+        }
+    }
+    // unstaged model (AllDifferent + Cumulative) on a tiny instance
+    let g = random_layered("ef-un", 7, 12, 99);
+    let order = topological_order(&g).unwrap();
+    let peak = g.peak_mem_no_remat(&order).unwrap();
+    for strat in [SearchStrategy::chronological(), SearchStrategy::learned()] {
+        let (s_tt, o_tt, _) = cp_solve_strategy(
+            &g,
+            peak,
+            false,
+            strat.with_filtering(FilteringMode::Timetable),
+            400_000,
+        );
+        let (s_ef, o_ef, _) = cp_solve_strategy(
+            &g,
+            peak,
+            false,
+            strat.with_filtering(FilteringMode::EdgeFinding),
+            400_000,
+        );
+        assert_eq!(s_tt, s_ef, "unstaged {strat:?}: status diverged");
+        assert_eq!(o_tt, o_ef, "unstaged {strat:?}: optimum diverged");
+    }
+}
+
+#[test]
+fn prop_disjunctive_preserves_optimum() {
+    // The disjunctive constraint emitted by heavy-clique detection is
+    // redundant (implied by the cumulative it was extracted from), so
+    // toggling its propagation must never change status or optimum.
+    // When no clique was detected the model carries no disjunctive
+    // propagator at all and the toggle must leave the tree
+    // bit-identical — any node-count difference is a gating bug.
+    let scale = prop_case_scale();
+    let mut graphs: Vec<Graph> = vec![dominant_tensor_graph()];
+    for seed in 0..4 * scale {
+        let n = 10 + 2 * (seed % 4) as usize;
+        graphs.push(random_layered(&format!("dj-rl{seed}"), n, 2 * n + 4, seed));
+    }
+    let mut pairs_seen = 0u64;
+    for g in &graphs {
+        let order = topological_order(g).unwrap();
+        let peak = g.peak_mem_no_remat(&order).unwrap();
+        for frac in [0.85, 0.95] {
+            let budget = (peak as f64 * frac) as u64;
+            for strat in [SearchStrategy::chronological(), SearchStrategy::learned()] {
+                let (s_on, o_on, st_on) = cp_solve_presolved_strategy(
+                    g,
+                    budget,
+                    true,
+                    strat.with_disjunctive(true),
+                    400_000,
+                );
+                let (s_off, o_off, st_off) = cp_solve_presolved_strategy(
+                    g,
+                    budget,
+                    true,
+                    strat.with_disjunctive(false),
+                    400_000,
+                );
+                assert_eq!(
+                    s_on, s_off,
+                    "graph {} frac {frac} {strat:?}: status diverged",
+                    g.name
+                );
+                assert_eq!(
+                    o_on, o_off,
+                    "graph {} frac {frac} {strat:?}: optimum diverged",
+                    g.name
+                );
+                // detection happens at model build time, so both runs
+                // see the same pair count regardless of the knob
+                assert_eq!(
+                    st_on.disj_pairs_detected, st_off.disj_pairs_detected,
+                    "graph {} frac {frac}: detection depends on the knob",
+                    g.name
+                );
+                pairs_seen += st_on.disj_pairs_detected;
+                if st_on.disj_pairs_detected == 0 {
+                    // no disjunctive propagator exists → the knob is
+                    // inert and both runs must walk the same tree
+                    assert_eq!(
+                        st_on.nodes, st_off.nodes,
+                        "graph {} frac {frac} {strat:?}: knob changed the tree \
+                         with no disjunctive constraint in the model",
+                        g.name
+                    );
+                    assert_eq!(st_on.disj_prunes, 0, "prunes without a propagator");
+                }
+            }
+        }
+    }
+    // the hand-built dominant-tensor instance guarantees at least one
+    // detected clique across the sweep — the on/off A/B above is never
+    // vacuously exercising only the no-clique branch
+    assert!(pairs_seen > 0, "no instance produced a heavy clique");
+}
+
 #[test]
 fn prop_floor_is_lower_bound() {
-    for (i, g) in graphs().iter().enumerate() {
+    for g in &graphs() {
         let floor = g.working_set_floor();
         let order = topological_order(g).unwrap();
         let peak = g.peak_mem_no_remat(&order).unwrap();
-        assert!(floor <= peak, "graph {i}");
+        assert!(floor <= peak, "graph {}", g.name);
         // any solver result respects the floor
         let solver = MoccasinSolver { time_limit: Duration::from_secs(1), ..Default::default() };
         if let Some(best) = solver.solve(g, (peak as f64 * 0.85) as u64, None).best {
-            assert!(best.eval.peak_mem >= floor, "graph {i}");
+            assert!(best.eval.peak_mem >= floor, "graph {}", g.name);
         }
     }
 }
