@@ -438,8 +438,11 @@ fn presolve_effect(g: &Graph, budget: u64) -> PresolveStats {
 /// `BENCH_solver.json` — one record per instance with wall time,
 /// nodes/sec, propagations/sec, the engine's event counters, the
 /// search-strategy counter block (restarts, no-goods learned/pruned,
-/// database reductions) and the presolve counter block (raw vs
-/// compacted formulation sizes) — so the kernel's perf trajectory can
+/// database reductions), the presolve counter block (raw vs
+/// compacted formulation sizes) and the degradation/resilience block
+/// (ladder rung, absorbed failures, per-phase wall spend, watchdog and
+/// retry counters — see `docs/BENCHMARKS.md`) — so the kernel's perf
+/// trajectory can
 /// be tracked across commits and the two strategies A/B-compared (the
 /// CI smoke-bench step runs the quick variant once per strategy on
 /// every push and uploads both files).
@@ -505,6 +508,9 @@ pub fn bench_solver_json(
              \"cum_rebuilds\": {},\n    \"nodes_per_sec\": {nodes_per_sec:.1},\n    \
              \"propagations_per_sec\": {props_per_sec:.1},\n    \
              \"best_duration\": {},\n    \"proved_optimal\": {},\n    \
+             \"degradation\": {},\n    \
+             \"resilience\": {{\"lock_recoveries\": {}, \"watchdog_kills\": {}, \
+             \"member_panics\": {}, \"member_retries\": {}}},\n    \
              \"search\": {{\n      \"strategy\": \"{}\",\n      \"conflicts\": {},\n      \
              \"restarts\": {},\n      \"nogoods_learned\": {},\n      \
              \"nogoods_pruned\": {},\n      \"db_reductions\": {}\n    }},\n    \
@@ -523,6 +529,11 @@ pub fn bench_solver_json(
             st.cum_rebuilds,
             out.best.as_ref().map(|b| b.eval.duration as i64).unwrap_or(-1),
             out.proved_optimal,
+            out.degradation.to_json(),
+            st.lock_recoveries,
+            st.watchdog_kills,
+            st.member_panics,
+            st.member_retries,
             search.name(),
             st.conflicts,
             st.restarts,

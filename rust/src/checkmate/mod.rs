@@ -318,6 +318,13 @@ pub fn solve_milp(
     search: SearchStrategy,
     mut on_solution: impl FnMut(&RematSolution),
 ) -> Result<CheckmateResult, CheckmateError> {
+    // failpoint: a spurious timeout or error surfaces as `NoSolution`
+    // (the natural "MILP gave nothing" path callers already handle); a
+    // panic unwinds to the portfolio member's `catch_unwind`
+    crate::fail_point!(
+        "checkmate.milp",
+        Err(CheckmateError::NoSolution { stats: crate::cp::SearchStats::default() })
+    );
     let (layout, mut rows) = build(graph, order, budget, 400_000, 12_000_000)?;
     let mut pre_stats = crate::presolve::PresolveStats::default();
     let mut fixed: Vec<Option<i64>> = Vec::new();
@@ -370,9 +377,14 @@ pub fn solve_milp(
         bo.push(vars[col]);
     }
 
-    // publish validated improvements to the shared portfolio incumbent
+    // Publish validated improvements to the shared portfolio incumbent
     // (when one rides along on the deadline) so racing solvers prune;
-    // as a full model this B&B may in turn prune against the global best
+    // as a full model this B&B may in turn prune against the global
+    // best. Deadline-gap audit (PR 7): beyond the search loop's
+    // iteration-cadence polls, the engine checks cancellation and the
+    // hard stop inside every propagation fixpoint
+    // (`PropagationEngine::watchdog_tick`), so a MILP wedged in one
+    // pass over its large constraint rows is still cancellable.
     let incumbent = deadline.incumbent().cloned();
     let solver =
         Solver { deadline, bound: incumbent.clone(), strategy: search, ..Default::default() };

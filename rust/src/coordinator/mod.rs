@@ -20,18 +20,21 @@
 //!   misses reach the pool.
 
 pub mod portfolio;
+pub mod watchdog;
 
 pub use portfolio::{solve_portfolio, PortfolioConfig};
+pub use watchdog::{KillReason, Watchdog, WatchdogConfig, WatchdogReport};
 
 use crate::checkmate::{self, CheckmateError};
-use crate::cp::{SearchStats, SearchStrategy};
+use crate::cp::{SearchMode, SearchStats, SearchStrategy};
 use crate::graph::{topological_order, Graph, NodeId};
-use crate::moccasin::{MoccasinSolver, RematSolution, SolveOutcome};
+use crate::moccasin::{Degradation, MoccasinSolver, RematSolution, Rung, SolveOutcome};
 use crate::presolve::{Presolve, PresolveConfig};
-use crate::util::Deadline;
+use crate::util::{events, panic_note, Deadline, Incumbent, Rng};
 use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Which solver backend to use.
@@ -71,12 +74,15 @@ pub struct SolveRequest {
     /// cache key: both modes reach the same optimum, but traces, stats
     /// and proofs-per-member differ, so responses are not interchangeable.
     pub search: SearchStrategy,
-    /// Test-only fault injection: makes the uncached solve panic, so
-    /// the batched path's panic containment (catch_unwind, poisoned
-    /// slot recovery) stays regression-tested even though order
-    /// validation removed every representable panicking input.
-    #[cfg(test)]
-    pub(crate) panic_for_test: bool,
+    /// Watchdog heartbeat-stall threshold override in milliseconds
+    /// (`None` = derived from `time_limit`; see
+    /// [`WatchdogConfig::for_wall`]). Part of the cache key: a solve
+    /// killed under an aggressive stall budget is not interchangeable
+    /// with an unconstrained one.
+    pub stall_ms: Option<u64>,
+    /// Watchdog peak-RSS limit in kilobytes (`None` = no memory guard).
+    /// Part of the cache key for the same reason as `stall_ms`.
+    pub rss_limit_kb: Option<u64>,
 }
 
 impl Default for SolveRequest {
@@ -89,8 +95,8 @@ impl Default for SolveRequest {
             order: None,
             presolve: PresolveConfig::default(),
             search: SearchStrategy::default(),
-            #[cfg(test)]
-            panic_for_test: false,
+            stall_ms: None,
+            rss_limit_kb: None,
         }
     }
 }
@@ -113,15 +119,23 @@ pub struct SolveResponse {
     /// members for [`Backend::Portfolio`]; zero for pure-LP backends
     /// and preserved from the original solve on cache hits).
     pub stats: SearchStats,
+    /// Degradation provenance: which ladder rung answered and what
+    /// failed along the way (see [`Degradation`]). `Some` for the
+    /// MOCCASIN and portfolio backends (which run the fallback ladder);
+    /// `None` for baseline backends unless the watchdog intervened, and
+    /// for synthesized member-failure responses.
+    pub degradation: Option<Degradation>,
 }
 
 /// Cache key: (graph fingerprint, budget, C, backend discriminant,
 /// presolve level discriminant, interval-length cap, search-strategy
-/// discriminant, explicit-order hash). The order hash matters: the
-/// staged model is order-relative, so responses for different explicit
-/// orders — including order-validation failures — are not
-/// interchangeable (0 = no explicit order).
-type CacheKey = (u64, u64, usize, u8, u8, i64, u8, u64);
+/// discriminant, explicit-order hash, stall override, RSS limit). The
+/// order hash matters: the staged model is order-relative, so responses
+/// for different explicit orders — including order-validation failures
+/// — are not interchangeable (0 = no explicit order). The watchdog
+/// knobs are `value + 1` with 0 = unset, so `Some(0)` and `None` stay
+/// distinct.
+type CacheKey = (u64, u64, usize, u8, u8, i64, u8, u64, u64, u64);
 
 /// The coordinator: solver portfolio + solution cache + worker pool
 /// configuration for batched solves.
@@ -177,10 +191,17 @@ impl Coordinator {
             req.presolve.max_interval_len.map(|l| l.max(0)).unwrap_or(-1),
             req.search.cache_key(),
             order_hash,
+            req.stall_ms.map(|v| v.saturating_add(1)).unwrap_or(0),
+            req.rss_limit_kb.map(|v| v.saturating_add(1)).unwrap_or(0),
         )
     }
 
-    /// Solve (or fetch from cache).
+    /// Solve (or fetch from cache). The uncached solve runs under
+    /// `catch_unwind`: whatever a backend does — including an injected
+    /// failpoint panic — the caller gets a structured member-failure
+    /// response, never an unwound stack. Panic responses are not
+    /// cached (a surviving panic is not input-deterministic; a retry
+    /// may well succeed).
     pub fn solve(&mut self, graph: &Graph, req: &SolveRequest) -> SolveResponse {
         let key = Self::cache_key(graph, req);
         if let Some(hit) = self.cache.get(&key) {
@@ -190,9 +211,17 @@ impl Coordinator {
             return r;
         }
         self.misses += 1;
-        let resp = self.solve_uncached(graph, req);
-        self.cache.insert(key, resp.clone());
-        resp
+        let solved = catch_unwind(AssertUnwindSafe(|| self.solve_uncached(graph, req)));
+        match solved {
+            Ok(resp) => {
+                self.cache.insert(key, resp.clone());
+                resp
+            }
+            Err(p) => {
+                events::note_member_panic();
+                member_failure_response(&panic_note(p.as_ref()))
+            }
+        }
     }
 
     /// Solve a batch of requests across the worker pool with cache-aware
@@ -235,20 +264,24 @@ impl Coordinator {
         }
 
         // Run unique misses on the worker pool. Failure containment
-        // (regression-tested by `solve_many_survives_panicking_member`):
+        // (regression-tested by the `resilience` integration suite):
         // a panicking solve used to poison its slot mutex and abort the
         // *whole batch* when the scope re-raised the panic — now each
         // solve runs under `catch_unwind`, a poisoned slot lock is
         // recovered (the data is a plain `Option` write, so poisoning
         // carries no invariant), and a slot a worker never filled is
         // surfaced as that request's member failure instead of an
-        // `expect` abort.
+        // `expect` abort. A panicked solve is additionally retried
+        // *once* after a short deterministic jittered backoff: a
+        // surviving panic is by construction not input-deterministic
+        // (order validation removed those), so a retry often succeeds
+        // — and when it does, the response carries `retries: 1` plus
+        // the first attempt's panic in its degradation provenance.
         // slot payload: (response, cacheable) — a response from a
         // *completed* solve (including deterministic validation
-        // failures) is cacheable; one synthesized from a contained
-        // panic is not, since a surviving panic is by construction not
-        // input-deterministic (validation removed those) and a retry
-        // may well succeed
+        // failures) is cacheable; one synthesized from a doubly
+        // contained panic is not, so a later retry of the same request
+        // actually re-solves
         let results: Vec<Option<(SolveResponse, bool)>> = {
             let slots: Vec<Mutex<Option<(SolveResponse, bool)>>> =
                 jobs.iter().map(|_| Mutex::new(None)).collect();
@@ -267,13 +300,16 @@ impl Coordinator {
                         }
                         let i = jobs_ref[j];
                         let (graph, req) = &requests[i];
-                        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || me.solve_uncached(graph, req),
-                        ))
-                        .map(|r| (r, true))
-                        .unwrap_or_else(|p| {
-                            (member_failure_response(&panic_message(&p)), false)
-                        });
+                        let resp = match catch_unwind(AssertUnwindSafe(|| {
+                            me.solve_uncached(graph, req)
+                        })) {
+                            Ok(r) => (r, true),
+                            Err(p) => {
+                                events::note_member_panic();
+                                let note = panic_note(p.as_ref());
+                                (me.retry_after_panic(graph, req, i, &note), false)
+                            }
+                        };
                         match slots[j].lock() {
                             Ok(mut g) => *g = Some(resp),
                             Err(poisoned) => *poisoned.into_inner() = Some(resp),
@@ -335,22 +371,64 @@ impl Coordinator {
             .collect()
     }
 
+    /// Retry a request whose first solve attempt panicked: one retry
+    /// after a short deterministic jittered backoff (seeded by the
+    /// request's batch index so concurrent retries do not stampede in
+    /// lockstep, yet runs stay reproducible). A successful retry
+    /// reports `retries: 1` and the first attempt's panic in its
+    /// degradation provenance; a second panic becomes a member-failure
+    /// response carrying both payloads.
+    fn retry_after_panic(
+        &self,
+        graph: &Graph,
+        req: &SolveRequest,
+        job_idx: usize,
+        first_panic: &str,
+    ) -> SolveResponse {
+        events::note_member_retry();
+        let mut rng = Rng::seed_from_u64(0xBACC ^ job_idx as u64);
+        std::thread::sleep(Duration::from_millis(5 + rng.next_u64() % 20));
+        match catch_unwind(AssertUnwindSafe(|| self.solve_uncached(graph, req))) {
+            Ok(mut r) => {
+                let deg = r
+                    .degradation
+                    .get_or_insert_with(|| Degradation::clean(base_rung(req.search)));
+                deg.retries += 1;
+                deg.note_failure(format!("first attempt panicked: {first_panic}"));
+                r.stats.member_panics += 1;
+                r.stats.member_retries += 1;
+                r
+            }
+            Err(p2) => {
+                events::note_member_panic();
+                member_failure_response(&format!(
+                    "{first_panic}; retry also panicked: {}",
+                    panic_note(p2.as_ref())
+                ))
+            }
+        }
+    }
+
     /// Solve one request without consulting the cache. An explicit
     /// order is validated up front (right length, in-range ids, a
     /// permutation, topological): every backend indexes by order
     /// positions and the staged model is order-relative, so a bad
-    /// order must become an error response — on the serial path there
-    /// is no `catch_unwind` to save the process (the batched path
-    /// keeps one anyway as defense in depth against other panics).
+    /// order must become an error response — on the serial path
+    /// [`Coordinator::solve`]'s `catch_unwind` is the last line of
+    /// defense against other panics (including injected faults from
+    /// the `coordinator.solve` failpoint).
     fn solve_uncached(&self, graph: &Graph, req: &SolveRequest) -> SolveResponse {
         if let Some(o) = &req.order {
             if let Err(why) = validate_order(graph, o) {
                 return member_failure_response(&why);
             }
         }
-        #[cfg(test)]
-        if req.panic_for_test {
-            panic!("injected test panic (solver fault injection)");
+        // fault-injection site replacing the PR-5 `panic_for_test`
+        // hook: `panic` exercises the containment above/in solve_many,
+        // `error`/`timeout` exercise the structured failure path
+        #[cfg(any(test, feature = "failpoints"))]
+        if crate::util::failpoint::hit("coordinator.solve").is_some() {
+            return member_failure_response("failpoint 'coordinator.solve': injected failure");
         }
         let order = req
             .order
@@ -358,21 +436,36 @@ impl Coordinator {
             .unwrap_or_else(|| topological_order(graph).expect("DAG required"));
         match req.backend {
             Backend::Moccasin => {
+                let ev0 = events::snapshot();
+                let inc = Arc::new(Incumbent::new());
                 let solver = MoccasinSolver {
                     c: req.c,
                     time_limit: req.time_limit,
                     presolve: req.presolve,
                     search: req.search,
+                    incumbent: Some(Arc::clone(&inc)),
                     ..Default::default()
                 };
+                let wd = Watchdog::spawn(
+                    Arc::clone(&inc),
+                    WatchdogConfig::for_wall(req.time_limit, req.rss_limit_kb, req.stall_ms),
+                );
                 let out: SolveOutcome = solver.solve(graph, req.budget, Some(order));
+                let report = wd.stop();
+                let mut degradation = out.degradation;
+                if let Some(reason) = report.reason {
+                    degradation.note_failure(format!("watchdog: {}", reason.as_str()));
+                }
+                let mut stats = out.stats;
+                stats.absorb_events(&events::snapshot().delta_since(&ev0));
                 SolveResponse {
                     trace: out.trace.iter().map(|p| (p.elapsed, p.duration)).collect(),
                     proved_optimal: out.proved_optimal,
                     solution: out.best,
                     from_cache: false,
                     error: None,
-                    stats: out.stats,
+                    stats,
+                    degradation: Some(degradation),
                 }
             }
             Backend::Portfolio => {
@@ -384,11 +477,22 @@ impl Coordinator {
                     include_checkmate: true,
                     presolve: req.presolve,
                     search: req.search,
+                    stall_ms: req.stall_ms,
+                    rss_limit_kb: req.rss_limit_kb,
                 };
                 solve_portfolio(graph, req.budget, Some(order), &cfg)
             }
             Backend::CheckmateMilp => {
-                let deadline = Deadline::after(req.time_limit);
+                let ev0 = events::snapshot();
+                // the incumbent gives the watchdog a cancellation path
+                // into the MILP's engine (which beats + polls it inside
+                // each fixpoint; see `PropagationEngine::set_watchdog`)
+                let inc = Arc::new(Incumbent::new());
+                let deadline = Deadline::with_incumbent(req.time_limit, Arc::clone(&inc));
+                let wd = Watchdog::spawn(
+                    Arc::clone(&inc),
+                    WatchdogConfig::for_wall(req.time_limit, req.rss_limit_kb, req.stall_ms),
+                );
                 let mut trace = Vec::new();
                 let r = checkmate::solve_milp(
                     graph,
@@ -403,26 +507,46 @@ impl Coordinator {
                         trace.push((deadline.elapsed(), sol.eval.duration));
                     },
                 );
+                let report = wd.stop();
+                let degradation = report.reason.map(|reason| {
+                    let mut d = Degradation::clean(base_rung(req.search));
+                    d.note_failure(format!("watchdog: {}", reason.as_str()));
+                    d
+                });
+                let ev = events::snapshot().delta_since(&ev0);
                 match r {
-                    Ok(res) => SolveResponse {
-                        solution: Some(res.solution),
-                        trace,
-                        proved_optimal: res.proved_optimal,
-                        from_cache: false,
-                        error: None,
-                        stats: res.stats,
-                    },
-                    Err(e) => SolveResponse {
-                        solution: None,
-                        trace,
-                        proved_optimal: matches!(e, CheckmateError::NoSolution { .. }),
-                        from_cache: false,
-                        stats: match &e {
+                    Ok(res) => {
+                        let mut stats = res.stats;
+                        stats.absorb_events(&ev);
+                        SolveResponse {
+                            solution: Some(res.solution),
+                            trace,
+                            // a watchdog kill means the proof race was
+                            // cancelled, not decided
+                            proved_optimal: res.proved_optimal && report.kills == 0,
+                            from_cache: false,
+                            error: None,
+                            stats,
+                            degradation,
+                        }
+                    }
+                    Err(e) => {
+                        let mut stats = match &e {
                             CheckmateError::NoSolution { stats } => *stats,
                             _ => SearchStats::default(),
-                        },
-                        error: Some(e.to_string()),
-                    },
+                        };
+                        stats.absorb_events(&ev);
+                        SolveResponse {
+                            solution: None,
+                            trace,
+                            proved_optimal: matches!(e, CheckmateError::NoSolution { .. })
+                                && report.kills == 0,
+                            from_cache: false,
+                            stats,
+                            error: Some(e.to_string()),
+                            degradation,
+                        }
+                    }
                 }
             }
             Backend::CheckmateLpRounding => {
@@ -430,6 +554,9 @@ impl Coordinator {
                 // iteration count scaled to the time limit (PDHG is the
                 // dominant cost)
                 let iters = (req.time_limit.as_millis() as usize * 2).clamp(2_000, 200_000);
+                // no watchdog here: the PDHG loop has no cancellation
+                // channel (no engine, no incumbent), and its iteration
+                // count is already scaled to the time limit above
                 match checkmate::solve_lp_rounding(graph, &order, req.budget, iters) {
                     Ok(res) => SolveResponse {
                         trace: vec![(t0.elapsed(), res.solution.eval.duration)],
@@ -438,6 +565,7 @@ impl Coordinator {
                         from_cache: false,
                         error: None,
                         stats: SearchStats::default(),
+                        degradation: None,
                     },
                     Err(e) => SolveResponse {
                         solution: None,
@@ -446,6 +574,7 @@ impl Coordinator {
                         from_cache: false,
                         error: Some(e.to_string()),
                         stats: SearchStats::default(),
+                        degradation: None,
                     },
                 }
             }
@@ -487,6 +616,15 @@ fn validate_order(graph: &Graph, order: &[NodeId]) -> Result<(), String> {
     Ok(())
 }
 
+/// The ladder rung a request's configured search strategy corresponds
+/// to (where a retried or baseline response's provenance starts).
+fn base_rung(search: SearchStrategy) -> Rung {
+    match search.mode {
+        SearchMode::Learned => Rung::Learned,
+        SearchMode::Chronological => Rung::Chronological,
+    }
+}
+
 /// The response reported for a request whose solve did not complete
 /// (panicked worker / unfilled slot): an error, never an abort.
 fn member_failure_response(why: &str) -> SolveResponse {
@@ -497,18 +635,7 @@ fn member_failure_response(why: &str) -> SolveResponse {
         from_cache: false,
         error: Some(format!("solver member failed: {why}")),
         stats: SearchStats::default(),
-    }
-}
-
-/// Best-effort panic payload message (panics carry `&str` or `String`
-/// in practice).
-fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "panicked (non-string payload)".to_string()
+        degradation: None,
     }
 }
 
@@ -581,38 +708,29 @@ mod tests {
         );
     }
 
+    // NOTE: the panicking-member containment tests (formerly driven by
+    // a test-only `panic_for_test` request flag) live in the
+    // `resilience` integration suite now — panics are injected through
+    // the `coordinator.solve` failpoint, which must not be armed from
+    // in-process unit tests (the registry is process-global and unit
+    // tests run concurrently).
+
     #[test]
-    fn solve_many_survives_panicking_member() {
-        // Regression: one panicking worker used to poison its slot
-        // mutex and abort the whole batch (scope re-raises the panic);
-        // now it must surface as that request's member failure while
-        // every other request in the batch is answered normally.
-        // Order validation (below) removed every representable
-        // panicking input, so the panic is injected via the test-only
-        // fault flag. (A panic backtrace on stderr is expected output
-        // of this test.)
+    fn clean_solve_carries_clean_provenance() {
         let g = chain();
         let mut c = Coordinator::new();
-        let good = SolveRequest {
-            budget: 10,
-            time_limit: Duration::from_secs(5),
-            ..Default::default()
-        };
-        let bad = SolveRequest {
-            budget: 11, // distinct cache key from `good`
-            time_limit: Duration::from_secs(5),
-            panic_for_test: true,
-            ..Default::default()
-        };
-        let responses =
-            c.solve_many(&[(&g, good.clone()), (&g, bad), (&g, good)]);
-        assert_eq!(responses.len(), 3);
-        assert!(responses[0].solution.is_some(), "good request must still solve");
-        assert!(responses[2].solution.is_some(), "dup of good request answered");
-        assert!(responses[1].solution.is_none());
-        let err = responses[1].error.as_deref().unwrap_or("");
-        assert!(err.contains("member failed"), "unexpected error text: {err}");
-        assert!(err.contains("injected test panic"), "panic payload lost: {err}");
+        let req =
+            SolveRequest { budget: 10, time_limit: Duration::from_secs(5), ..Default::default() };
+        let r = c.solve(&g, &req);
+        assert!(r.solution.is_some());
+        let deg = r.degradation.expect("moccasin backend reports provenance");
+        assert!(deg.is_clean(), "fault-free solve must be clean: {:?}", deg.failures);
+        // (no zero-assertion on the absorbed global event counters:
+        // they are process-global and other tests run concurrently)
+        // cached copies keep the provenance verbatim
+        let again = c.solve(&g, &req);
+        assert!(again.from_cache);
+        assert!(again.degradation.expect("cached provenance").is_clean());
     }
 
     #[test]

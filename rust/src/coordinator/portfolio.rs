@@ -26,13 +26,14 @@
 //! proof bounds its own order only, so such members contribute
 //! solutions and pruning bounds but never cancel the race.
 
+use super::watchdog::{Watchdog, WatchdogConfig};
 use super::SolveResponse;
 use crate::checkmate;
 use crate::cp::{SearchStats, SearchStrategy};
 use crate::graph::{random_topological_order, topological_order, Graph, NodeId};
-use crate::moccasin::{MoccasinSolver, RematSolution};
+use crate::moccasin::{Degradation, MoccasinSolver, RematSolution, Rung};
 use crate::presolve::{GraphAnalysis, Presolve, PresolveConfig, PresolveLevel};
-use crate::util::{Deadline, Incumbent, Rng};
+use crate::util::{events, Deadline, Incumbent, Rng};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -64,6 +65,12 @@ pub struct PortfolioConfig {
     /// learning-free search), odd members run the learned strategy, and
     /// the remaining members follow this setting.
     pub search: SearchStrategy,
+    /// Watchdog heartbeat-stall threshold override in milliseconds
+    /// (`None` = derived from the wall budget; see
+    /// [`WatchdogConfig::for_wall`]).
+    pub stall_ms: Option<u64>,
+    /// Watchdog peak-RSS limit in kilobytes (`None` = no memory guard).
+    pub rss_limit_kb: Option<u64>,
 }
 
 impl Default for PortfolioConfig {
@@ -76,6 +83,8 @@ impl Default for PortfolioConfig {
             include_checkmate: true,
             presolve: PresolveConfig::default(),
             search: SearchStrategy::default(),
+            stall_ms: None,
+            rss_limit_kb: None,
         }
     }
 }
@@ -99,6 +108,10 @@ struct Shared {
     trace: Mutex<Vec<(Duration, u64)>>,
     /// CP kernel statistics summed across all members
     stats: Mutex<SearchStats>,
+    /// degradation provenance for the whole race: member 0 (the
+    /// canonical-order member) contributes its rung and phase spend;
+    /// every member contributes absorbed failures
+    degradation: Mutex<Degradation>,
     proved: AtomicBool,
     started: Instant,
 }
@@ -107,9 +120,14 @@ struct Shared {
 /// data are plain values (an `Option`, a `Vec`, counters) written in
 /// single statements, so a panic while holding the lock leaves no
 /// broken invariant — and one crashed member must degrade to a member
-/// failure, never abort the race for everyone.
+/// failure, never abort the race for everyone. Recoveries are counted
+/// in the global resilience events so they surface in stats instead of
+/// passing silently.
 fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|p| p.into_inner())
+    m.lock().unwrap_or_else(|p| {
+        events::note_lock_recovery();
+        p.into_inner()
+    })
 }
 
 impl Shared {
@@ -166,20 +184,29 @@ pub fn solve_portfolio(
     let threads = cfg.effective_threads();
     let base_order =
         order.unwrap_or_else(|| topological_order(graph).expect("DAG required"));
+    let ev0 = events::snapshot();
     let shared = Shared {
         incumbent: Arc::new(Incumbent::new()),
         best: Mutex::new(None),
         trace: Mutex::new(Vec::new()),
         stats: Mutex::new(SearchStats::default()),
+        // member 0 runs chronologically (see `member_strategy`), so that
+        // is the race's baseline rung until member 0 reports otherwise
+        degradation: Mutex::new(Degradation::clean(Rung::Chronological)),
         proved: AtomicBool::new(false),
         started: Instant::now(),
     };
     let checkmate_member =
         cfg.include_checkmate && threads >= 2 && checkmate_member_viable(graph);
     // presolve once, share across members: the expensive reachability /
-    // transitive-reduction analysis is order-independent
+    // transitive-reduction analysis is order-independent (run before the
+    // watchdog starts so analysis time does not eat the stall warmup)
     let analysis: Option<Arc<GraphAnalysis>> = (cfg.presolve.level != PresolveLevel::Off)
         .then(|| Arc::new(GraphAnalysis::analyze(graph)));
+    let watchdog = Watchdog::spawn(
+        Arc::clone(&shared.incumbent),
+        WatchdogConfig::for_wall(cfg.time_limit, cfg.rss_limit_kb, cfg.stall_ms),
+    );
 
     std::thread::scope(|s| {
         for m in 0..threads {
@@ -191,23 +218,41 @@ pub fn solve_portfolio(
                 // nothing, but must not poison the race for the rest
                 // (the scope would re-raise its panic otherwise)
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    #[cfg(any(test, feature = "failpoints"))]
+                    if crate::util::failpoint::hit("portfolio.member").is_some() {
+                        lock_recover(&shared.degradation).note_failure(format!(
+                            "failpoint 'portfolio.member': member {m} suppressed at startup"
+                        ));
+                        return;
+                    }
                     if checkmate_member && m == threads - 1 {
                         run_checkmate_member(graph, budget, base_order, cfg, analysis, shared);
                     } else {
                         run_moccasin_member(graph, budget, base_order, cfg, analysis, shared, m);
                     }
                 }));
-                if r.is_err() {
-                    eprintln!("portfolio: member {m} crashed (continuing without it)");
+                if let Err(p) = r {
+                    events::note_member_panic();
+                    lock_recover(&shared.degradation).note_failure(format!(
+                        "portfolio member {m} panicked: {}",
+                        crate::util::panic_note(p.as_ref())
+                    ));
                 }
             });
         }
     });
 
-    let Shared { best, trace, stats, proved, .. } = shared;
+    let report = watchdog.stop();
+    let Shared { best, trace, stats, degradation, proved, .. } = shared;
     let best = best.into_inner().unwrap_or_else(|p| p.into_inner());
     let mut trace = trace.into_inner().unwrap_or_else(|p| p.into_inner());
     trace.sort_unstable();
+    let mut degradation = degradation.into_inner().unwrap_or_else(|p| p.into_inner());
+    if let Some(reason) = report.reason {
+        degradation.note_failure(format!("watchdog: {}", reason.as_str()));
+    }
+    let mut stats = stats.into_inner().unwrap_or_else(|p| p.into_inner());
+    stats.absorb_events(&events::snapshot().delta_since(&ev0));
     SolveResponse {
         error: best
             .is_none()
@@ -216,7 +261,8 @@ pub fn solve_portfolio(
         trace,
         proved_optimal: proved.load(Ordering::Acquire),
         from_cache: false,
-        stats: stats.into_inner().unwrap_or_else(|p| p.into_inner()),
+        stats,
+        degradation: Some(degradation),
     }
 }
 
@@ -286,6 +332,20 @@ fn run_moccasin_member(
     };
     let out = solver.solve_with(graph, budget, Some(order), |sol| shared.publish(sol));
     lock_recover(&shared.stats).merge(&out.stats);
+    // fold degradation provenance: member 0 is the canonical member, so
+    // its rung and phase spend describe the race; every member's
+    // absorbed failures and retries are worth surfacing
+    {
+        let mut deg = lock_recover(&shared.degradation);
+        if member == 0 {
+            deg.rung = out.degradation.rung;
+            deg.spend = out.degradation.spend;
+        }
+        deg.retries += out.degradation.retries;
+        for f in &out.degradation.failures {
+            deg.note_failure(format!("member {member}: {f}"));
+        }
+    }
     // Only the canonical-order member may declare the race decided (the
     // staged model is order-relative; see module docs). Its proof is
     // either optimality at its best duration or infeasibility.

@@ -1,0 +1,230 @@
+//! Watchdog monitor for in-flight solves.
+//!
+//! A solve should never be able to wedge its caller: cooperative
+//! deadline polls cover the common paths, and the propagation engine
+//! checks cancellation inside each fixpoint, but *something* has to
+//! trip the cancellation flag when a solve stops making progress — a
+//! propagator spinning on a pathological instance, an injected delay,
+//! or a member blocked where no poll runs. The [`Watchdog`] is a small
+//! monitor thread that observes the solve's shared
+//! [`Incumbent`]: the wall clock against the budget slice, the
+//! heartbeat epoch published by the engine's fixpoint loop
+//! ([`Incumbent::beat`]), and the process peak RSS
+//! ([`crate::util::peak_rss_kb`]) against an optional memory limit.
+//! On a violation it cancels the incumbent — which every deadline and
+//! every in-fixpoint check observes — records the kill in the global
+//! resilience counters ([`crate::util::events`]), and reports the
+//! reason to the caller for degradation provenance.
+
+use crate::util::{events, peak_rss_kb, Incumbent};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Why the watchdog cancelled a solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KillReason {
+    /// Wall clock ran past the budget slice plus grace.
+    WallOverrun,
+    /// The heartbeat epoch stood still past the stall threshold.
+    HeartbeatStall,
+    /// Process peak RSS crossed the memory limit (bail to the incumbent
+    /// before the OS OOM-killer bails for us).
+    RssLimit,
+}
+
+impl KillReason {
+    /// Stable lower-case name (diagnostics / JSON).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KillReason::WallOverrun => "wall-overrun",
+            KillReason::HeartbeatStall => "heartbeat-stall",
+            KillReason::RssLimit => "rss-limit",
+        }
+    }
+}
+
+/// Watchdog tuning for one monitored solve.
+#[derive(Debug, Clone, Copy)]
+pub struct WatchdogConfig {
+    /// The solve's wall budget; the watchdog cancels at `wall + grace`
+    /// (the cooperative deadline should have stopped the solve at
+    /// `wall` — the watchdog is the backstop for when it could not).
+    pub wall: Duration,
+    /// Grace past `wall` before a wall-overrun kill.
+    pub grace: Duration,
+    /// Heartbeat stall threshold once the first beat has been seen.
+    pub stall: Duration,
+    /// Stall allowance before the first beat (model build, presolve and
+    /// Phase-1 greedy run before the engine starts beating).
+    pub warmup: Duration,
+    /// Peak-RSS limit in kilobytes (`None` = no memory guard).
+    pub rss_limit_kb: Option<u64>,
+    /// Monitor poll interval.
+    pub poll: Duration,
+}
+
+impl WatchdogConfig {
+    /// Derive a config from a wall budget: grace = wall/4 clamped to
+    /// [250ms, 5s], stall = wall/3 clamped to [500ms, 10s] (overridable
+    /// via `stall_ms` — mainly for tests and ops), warmup = 4×stall.
+    /// The stall default is deliberately generous: heartbeats come from
+    /// the propagation engine, so long beat-free phases (greedy
+    /// simulation, model builds on large graphs) must not read as wedged.
+    pub fn for_wall(wall: Duration, rss_limit_kb: Option<u64>, stall_ms: Option<u64>) -> Self {
+        let grace = (wall / 4).clamp(Duration::from_millis(250), Duration::from_secs(5));
+        let stall = match stall_ms {
+            Some(ms) => Duration::from_millis(ms.max(1)),
+            None => (wall / 3).clamp(Duration::from_millis(500), Duration::from_secs(10)),
+        };
+        WatchdogConfig {
+            wall,
+            grace,
+            stall,
+            warmup: stall * 4,
+            rss_limit_kb,
+            poll: Duration::from_millis(10).min(stall / 2).max(Duration::from_millis(1)),
+        }
+    }
+}
+
+/// What the watchdog observed over the solve it monitored.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WatchdogReport {
+    /// Number of kills performed (0 or 1 — a watchdog kills at most
+    /// once; the cancellation flag is sticky).
+    pub kills: u32,
+    /// Reason for the kill, if one happened.
+    pub reason: Option<KillReason>,
+}
+
+/// A monitor thread watching one solve's shared [`Incumbent`]. Create
+/// with [`Watchdog::spawn`] before starting the solve, and call
+/// [`Watchdog::stop`] after it returns to collect the report.
+pub struct Watchdog {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<WatchdogReport>>,
+}
+
+impl Watchdog {
+    /// Spawn the monitor over `inc`. If the OS refuses a thread the
+    /// watchdog degrades to a no-op (the solve still has its
+    /// cooperative deadline) rather than failing the solve.
+    pub fn spawn(inc: Arc<Incumbent>, cfg: WatchdogConfig) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("moccasin-watchdog".to_string())
+            .spawn(move || monitor(&inc, cfg, &stop2))
+            .ok();
+        Watchdog { stop, handle }
+    }
+
+    /// Signal the monitor to exit and collect its report.
+    pub fn stop(self) -> WatchdogReport {
+        self.stop.store(true, Ordering::Release);
+        match self.handle {
+            Some(h) => h.join().unwrap_or_default(),
+            None => WatchdogReport::default(),
+        }
+    }
+}
+
+fn monitor(inc: &Incumbent, cfg: WatchdogConfig, stop: &AtomicBool) -> WatchdogReport {
+    let start = Instant::now();
+    let mut report = WatchdogReport::default();
+    let mut last_epoch = inc.epoch();
+    let mut last_change = start;
+    let mut beaten = false;
+    while !stop.load(Ordering::Acquire) {
+        std::thread::sleep(cfg.poll);
+        if stop.load(Ordering::Acquire) || report.kills > 0 || inc.is_cancelled() {
+            // killed already (sticky flag) or the race is over: nothing
+            // left to watch, just wait for the stop signal
+            continue;
+        }
+        let now = Instant::now();
+        let epoch = inc.epoch();
+        if epoch != last_epoch {
+            last_epoch = epoch;
+            last_change = now;
+            beaten = true;
+        }
+        let stall_allow = if beaten { cfg.stall } else { cfg.stall.max(cfg.warmup) };
+        let reason = if now.duration_since(start) >= cfg.wall + cfg.grace {
+            Some(KillReason::WallOverrun)
+        } else if now.duration_since(last_change) >= stall_allow {
+            Some(KillReason::HeartbeatStall)
+        } else if cfg.rss_limit_kb.is_some_and(|lim| peak_rss_kb().unwrap_or(0) > lim) {
+            Some(KillReason::RssLimit)
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            inc.cancel();
+            events::note_watchdog_kill();
+            report.kills += 1;
+            report.reason = Some(reason);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_heartbeat_triggers_stall_kill() {
+        let inc = Arc::new(Incumbent::new());
+        let cfg = WatchdogConfig::for_wall(Duration::from_secs(60), None, Some(20));
+        // warmup = 4×20ms = 80ms with no beats → stall kill well before
+        // the wall
+        let wd = Watchdog::spawn(Arc::clone(&inc), cfg);
+        let t0 = Instant::now();
+        while !inc.is_cancelled() && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let report = wd.stop();
+        assert!(inc.is_cancelled(), "watchdog must cancel a silent solve");
+        assert_eq!(report.kills, 1);
+        assert_eq!(report.reason, Some(KillReason::HeartbeatStall));
+    }
+
+    #[test]
+    fn steady_heartbeat_is_left_alone() {
+        let inc = Arc::new(Incumbent::new());
+        let cfg = WatchdogConfig::for_wall(Duration::from_secs(60), None, Some(50));
+        let wd = Watchdog::spawn(Arc::clone(&inc), cfg);
+        for _ in 0..20 {
+            inc.beat();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let report = wd.stop();
+        assert!(!inc.is_cancelled(), "beating solve must not be killed");
+        assert_eq!(report.kills, 0);
+    }
+
+    #[test]
+    fn wall_overrun_kills_even_with_heartbeat() {
+        let inc = Arc::new(Incumbent::new());
+        let cfg = WatchdogConfig {
+            wall: Duration::from_millis(30),
+            grace: Duration::from_millis(10),
+            stall: Duration::from_secs(10),
+            warmup: Duration::from_secs(10),
+            rss_limit_kb: None,
+            poll: Duration::from_millis(5),
+        };
+        let wd = Watchdog::spawn(Arc::clone(&inc), cfg);
+        let t0 = Instant::now();
+        while !inc.is_cancelled() && t0.elapsed() < Duration::from_secs(10) {
+            inc.beat();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let report = wd.stop();
+        assert!(inc.is_cancelled());
+        assert_eq!(report.reason, Some(KillReason::WallOverrun));
+    }
+}

@@ -61,9 +61,18 @@ use super::propagators::{
 use super::search::{SearchStats, SearchStrategy};
 use super::segtree::SegTreeProfile;
 use super::Model;
-use crate::util::Csr;
+use crate::util::{Csr, Incumbent};
 use std::collections::BTreeMap;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Cadence (in propagator runs, power of two) at which `fixpoint`
+/// publishes a heartbeat and polls the cancellation flag.
+const PULSE_EVERY: u32 = 64;
+/// Cadence (in propagator runs, power of two, multiple of
+/// `PULSE_EVERY`) at which `fixpoint` reads the monotonic clock and
+/// compares it against the hard stop.
+const CLOCK_EVERY: u32 = 1024;
 
 /// Which data structure the incremental `Cumulative` state maintains
 /// for its compulsory-part timetable profile. Both are exact and
@@ -253,6 +262,23 @@ pub(crate) struct PropagationEngine {
     /// engine and naive mode, so one built model serves both sides of
     /// the A/B.
     disjunctive: bool,
+    /// Watchdog plumbing: heartbeat/cancellation handle observed
+    /// *inside* `fixpoint` at a coarse cadence, so a solve stuck in a
+    /// single propagation pass is still cancellable (the search loops'
+    /// deadline polls only run between nodes). The engine publishes a
+    /// progress epoch ([`Incumbent::beat`]) and aborts when the shared
+    /// incumbent is cancelled.
+    pulse: Option<Arc<Incumbent>>,
+    /// Absolute wall-clock stop checked (even more coarsely) inside
+    /// `fixpoint`, covering solves that have no shared incumbent.
+    hard_stop: Option<Instant>,
+    /// Set when `fixpoint` bailed out early on cancellation or the hard
+    /// stop: domains are mid-propagation (sound — only narrowed), no
+    /// conflict was raised, and the search loop must treat the node as
+    /// a timeout rather than keep branching.
+    pub(crate) aborted: bool,
+    /// Coarse tick counter driving the in-fixpoint watchdog checks.
+    ticks: u32,
     /// Explanation-soundness audits performed so far (test / prop-audit
     /// builds only): every explained pruning and conflict is replayed
     /// against a fresh naive propagation until the budget is spent.
@@ -522,9 +548,48 @@ impl PropagationEngine {
             naive,
             filtering: strategy.filtering,
             disjunctive: strategy.disjunctive,
+            pulse: None,
+            hard_stop: None,
+            aborted: false,
+            ticks: 0,
             #[cfg(any(test, feature = "prop-audit"))]
             audits_done: 0,
         }
+    }
+
+    /// Attach the watchdog channel: `pulse` receives heartbeat epochs
+    /// and supplies the cancellation flag; `hard_stop` is the absolute
+    /// wall-clock limit. Both are polled inside `fixpoint` at a coarse
+    /// cadence (every `PULSE_EVERY`/`CLOCK_EVERY` propagator runs).
+    pub fn set_watchdog(&mut self, pulse: Option<Arc<Incumbent>>, hard_stop: Option<Instant>) {
+        self.pulse = pulse;
+        self.hard_stop = hard_stop;
+    }
+
+    /// In-fixpoint watchdog poll: publish a heartbeat and check for
+    /// cancellation every `PULSE_EVERY` propagator runs, and compare
+    /// the monotonic clock against the hard stop every `CLOCK_EVERY`.
+    /// Returns `true` when the current `fixpoint` call must abort.
+    #[inline]
+    fn watchdog_tick(&mut self) -> bool {
+        self.ticks = self.ticks.wrapping_add(1);
+        if self.ticks & (PULSE_EVERY - 1) != 0 {
+            return false;
+        }
+        if let Some(p) = &self.pulse {
+            p.beat();
+            if p.is_cancelled() {
+                return true;
+            }
+        }
+        if self.ticks & (CLOCK_EVERY - 1) == 0 {
+            if let Some(h) = self.hard_stop {
+                if Instant::now() >= h {
+                    return true;
+                }
+            }
+        }
+        false
     }
 
     /// Tighten the objective bound in place; re-enqueues the objective
@@ -575,6 +640,7 @@ impl PropagationEngine {
     /// `vi` with the current domains (forward events and undo share
     /// this path — both just recompute the compulsory part).
     fn resync_var(&mut self, vi: usize) {
+        crate::fail_point!("engine.resync");
         for k in self.cum_index.span(vi) {
             let (ci, ii) = *self.cum_index.at(k);
             let (ci, ii) = (ci as usize, ii as usize);
@@ -697,8 +763,28 @@ impl PropagationEngine {
     /// Propagate to fixpoint: drain the cheap tier (model propagators
     /// and learned no-goods), then run one expensive propagator,
     /// repeat. `Err` leaves cleared queues (the caller backtracks).
+    ///
+    /// Aborts early — returning `Ok(())` with [`Self::aborted`] set —
+    /// when the attached watchdog channel reports cancellation or the
+    /// hard wall-clock stop has passed. An aborted pass leaves the
+    /// domains mid-propagation (only ever narrowed, so still sound);
+    /// the search loop checks the flag right after every fixpoint call
+    /// and winds down as on a timeout instead of branching further.
     pub fn fixpoint(&mut self, model: &Model) -> Result<(), Conflict> {
+        // both a spurious timeout and an error-return are modelled as
+        // an abort: fixpoint has no error path that is sound to fake (a
+        // fabricated Conflict would feed conflict analysis an
+        // unexplainable clause)
+        #[cfg(any(test, feature = "failpoints"))]
+        if crate::util::failpoint::hit("engine.propagate").is_some() {
+            self.aborted = true;
+            return Ok(());
+        }
         loop {
+            if self.watchdog_tick() {
+                self.aborted = true;
+                return Ok(());
+            }
             if let Some(gid) = self.ng.pop_queue() {
                 self.stats.propagations += 1;
                 if self.run_nogood(gid).is_err() {

@@ -85,6 +85,18 @@ pub struct SearchStats {
     /// other counter — an LNS run adds one contribution per window
     /// re-solve.
     pub presolve: crate::presolve::PresolveStats,
+    /// Poisoned mutexes recovered by `lock_recover` during this solve
+    /// (portfolio shared state after a contained member panic).
+    pub lock_recoveries: u64,
+    /// Solves/members cancelled by a watchdog: heartbeat stall, wall
+    /// overrun past the budget slice, or the RSS guard.
+    pub watchdog_kills: u64,
+    /// Panics contained by `catch_unwind` (portfolio members,
+    /// `solve_many` workers, degradation-ladder rungs).
+    pub member_panics: u64,
+    /// Transient member failures retried (once, with jittered backoff)
+    /// by `solve_many`.
+    pub member_retries: u64,
 }
 
 impl SearchStats {
@@ -107,6 +119,22 @@ impl SearchStats {
         self.disj_prunes += o.disj_prunes;
         self.disj_pairs_detected += o.disj_pairs_detected;
         self.presolve.add(&o.presolve);
+        self.lock_recoveries += o.lock_recoveries;
+        self.watchdog_kills += o.watchdog_kills;
+        self.member_panics += o.member_panics;
+        self.member_retries += o.member_retries;
+    }
+
+    /// Fold a delta of the process-global resilience counters (see
+    /// [`crate::util::events`]) into this run's stats — how recovery
+    /// events observed by code with no `SearchStats` in scope (lock
+    /// recovery, watchdog kills) surface in `merge` output and
+    /// `solve --verbose`.
+    pub fn absorb_events(&mut self, d: &crate::util::events::EventSnapshot) {
+        self.lock_recoveries += d.lock_recoveries;
+        self.watchdog_kills += d.watchdog_kills;
+        self.member_panics += d.member_panics;
+        self.member_retries += d.member_retries;
     }
 }
 
@@ -364,6 +392,10 @@ impl Solver {
     ) -> SearchResult {
         let mut eng =
             PropagationEngine::new(model, objective, self.naive, false, &self.strategy);
+        // watchdog channel: fixpoint publishes heartbeats into the
+        // deadline's incumbent and aborts on cancellation / hard stop,
+        // so even a single long propagation pass stays cancellable
+        eng.set_watchdog(self.deadline.incumbent().cloned(), self.deadline.hard_stop());
         let mut best: Option<(Vec<i64>, i64)> = None;
         // seed the objective bound from the shared pruning bound when
         // one is attached (any solver may prune against the best
@@ -378,6 +410,9 @@ impl Solver {
         eng.enqueue_all();
         if eng.fixpoint(model).is_err() {
             return SearchResult { status: Status::Infeasible, best: None, stats: eng.stats };
+        }
+        if eng.aborted {
+            return SearchResult { status: Status::Unknown, best: None, stats: eng.stats };
         }
 
         let mut frames: Vec<Frame> = Vec::new();
@@ -402,8 +437,10 @@ impl Solver {
         'search: loop {
             iters += 1;
             // limits (the deadline poll also observes portfolio
-            // cancellation)
+            // cancellation; `aborted` is the engine's in-fixpoint
+            // watchdog having tripped on the previous iteration)
             if eng.stats.nodes >= self.node_limit
+                || eng.aborted
                 || (iters % 128 == 0 && self.deadline.exceeded())
             {
                 limit_hit = true;
@@ -526,6 +563,7 @@ impl Solver {
     ) -> SearchResult {
         let mut eng =
             PropagationEngine::new(model, objective, false, true, &self.strategy);
+        eng.set_watchdog(self.deadline.incumbent().cloned(), self.deadline.hard_stop());
         let nvars = eng.domains.len();
         let mut best: Option<(Vec<i64>, i64)> = None;
         if !objective.is_empty() {
@@ -536,6 +574,9 @@ impl Solver {
         eng.enqueue_all();
         if eng.fixpoint(model).is_err() {
             return SearchResult { status: Status::Infeasible, best: None, stats: eng.stats };
+        }
+        if eng.aborted {
+            return SearchResult { status: Status::Unknown, best: None, stats: eng.stats };
         }
 
         // Brancher state: an indexed max-heap over branch positions
@@ -584,6 +625,7 @@ impl Solver {
         'search: loop {
             iters += 1;
             if eng.stats.nodes >= self.node_limit
+                || eng.aborted
                 || (iters % 128 == 0 && self.deadline.exceeded())
             {
                 limit_hit = true;
@@ -606,6 +648,7 @@ impl Solver {
                 eng.stats.restarts += 1;
                 requeue_undone(&mut eng, 0, &mut heap, &act, &pos_var, &var_positions);
                 if self.strategy.nogood_cap > 0 && eng.ng.len() > self.strategy.nogood_cap {
+                    crate::fail_point!("search.nogood_reduce");
                     eng.ng.reduce();
                     eng.stats.db_reductions += 1;
                 }

@@ -5,7 +5,7 @@
 //!           [--threads N] [--time-limit S] [--presolve off|exact|aggressive]
 //!           [--max-interval-len L] [--search chronological|learned]
 //!           [--profile segtree|linear] [--filtering timetable|edge-finding]
-//!           [--disjunctive on|off] [--verbose]
+//!           [--disjunctive on|off] [--stall-ms MS] [--rss-limit-kb KB] [--verbose]
 //!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
 //!           [--time-limit S] [--compare-serial]
 //!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|ablation-c|
@@ -146,6 +146,8 @@ fn main() {
                 "{spec}: n={} m={} no-remat peak={} budget={} ({frac:.0}%)",
                 g.n(), g.m(), fmt_u64(peak), fmt_u64(budget), frac = frac * 100.0
             );
+            let stall_ms = flag_val(&args, "--stall-ms").and_then(|s| s.parse().ok());
+            let rss_limit_kb = flag_val(&args, "--rss-limit-kb").and_then(|s| s.parse().ok());
             let mut coord = Coordinator::new();
             coord.threads = threads;
             let resp = coord.solve(
@@ -156,6 +158,8 @@ fn main() {
                     backend,
                     presolve,
                     search,
+                    stall_ms,
+                    rss_limit_kb,
                     ..Default::default()
                 },
             );
@@ -222,6 +226,29 @@ fn main() {
                     );
                 } else {
                     println!("presolve: off");
+                }
+                println!(
+                    "resilience: lock-recoveries={} watchdog-kills={} member-panics={} \
+                     member-retries={}",
+                    st.lock_recoveries, st.watchdog_kills, st.member_panics, st.member_retries
+                );
+                match &resp.degradation {
+                    Some(deg) => {
+                        println!(
+                            "degradation: rung={} clean={} retries={} spend-ms: presolve={} \
+                             search={} polish={}",
+                            deg.rung.as_str(),
+                            deg.is_clean(),
+                            deg.retries,
+                            deg.spend.presolve_ms,
+                            deg.spend.search_ms,
+                            deg.spend.polish_ms
+                        );
+                        for f in &deg.failures {
+                            println!("  absorbed failure: {f}");
+                        }
+                    }
+                    None => println!("degradation: (not reported by this backend)"),
                 }
             }
         }
@@ -371,7 +398,7 @@ fn main() {
                  [--threads N] [--time-limit S] [--presolve off|exact|aggressive] \
                  [--max-interval-len L] [--search chronological|learned] \
                  [--profile segtree|linear] [--filtering timetable|edge-finding] \
-                 [--disjunctive on|off] [--verbose]\n\
+                 [--disjunctive on|off] [--stall-ms MS] [--rss-limit-kb KB] [--verbose]\n\
                    sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
                  [--search chronological|learned] [--compare-serial]\n\
                    bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|\

@@ -1,0 +1,192 @@
+//! Degradation provenance: what failed during a solve and which
+//! fallback produced the answer.
+//!
+//! The solve pipeline never lets a contained failure (panic, spurious
+//! timeout, watchdog kill, window error) take down the caller — it
+//! falls back down a ladder of cheaper strategies (learned →
+//! chronological → LNS-from-greedy → greedy-only) and returns the best
+//! incumbent it has. That is only acceptable if degraded answers are
+//! *visibly* degraded: a [`Degradation`] value travels with every
+//! [`SolveOutcome`](super::SolveOutcome) / `SolveResponse`, recording
+//! the ladder rung that answered, every failure absorbed along the way,
+//! retry counts, and wall-clock spend per pipeline phase, and is
+//! surfaced by `solve --verbose` and the bench JSONs.
+
+use std::time::Duration;
+
+/// The ladder rung (strategy tier) that produced the final answer.
+/// Rungs are ordered strongest-first; a solve that absorbs a failure
+/// falls to the next rung down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rung {
+    /// Conflict-driven learned search ran the improvement phase.
+    Learned,
+    /// Chronological DFS ran the improvement phase (either as
+    /// configured, or as the fallback after a learned-search failure).
+    Chronological,
+    /// Exact search was skipped or failed; only LNS polish from the
+    /// greedy warm start ran.
+    LnsGreedy,
+    /// Every improvement attempt failed; the answer is the greedy
+    /// Phase-1 sequence (plus deterministic removal polish).
+    GreedyOnly,
+}
+
+impl Rung {
+    /// Stable lower-case name (CLI / JSON).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Rung::Learned => "learned",
+            Rung::Chronological => "chronological",
+            Rung::LnsGreedy => "lns-greedy",
+            Rung::GreedyOnly => "greedy-only",
+        }
+    }
+}
+
+/// Wall-clock actually consumed per pipeline phase, in milliseconds.
+/// Phases follow the solve structure: presolve + Phase-1 greedy, the
+/// exact/portfolio search, and the LNS polish loop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseSpend {
+    /// Presolve + Phase-1 greedy feasibility.
+    pub presolve_ms: u64,
+    /// Exact branch & bound (or portfolio member search).
+    pub search_ms: u64,
+    /// LNS polish loop.
+    pub polish_ms: u64,
+}
+
+/// Per-phase wall-clock budget split of a solve's total time limit.
+/// The exact search phase is capped at its slice (so a pathological
+/// proof attempt cannot starve the anytime LNS polish); presolve and
+/// polish run within whatever remains of the request deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseBudgets {
+    /// Slice for presolve + Phase-1 greedy.
+    pub presolve: Duration,
+    /// Slice for the exact search phase.
+    pub search: Duration,
+    /// Slice for the LNS polish phase.
+    pub polish: Duration,
+}
+
+impl PhaseBudgets {
+    /// Default partition of a total wall budget: 15% presolve, 60%
+    /// exact search, 25% LNS polish.
+    pub fn split(total: Duration) -> Self {
+        PhaseBudgets {
+            presolve: total.mul_f64(0.15),
+            search: total.mul_f64(0.60),
+            polish: total.mul_f64(0.25),
+        }
+    }
+}
+
+/// Provenance of how an answer was produced when parts of the pipeline
+/// failed — and proof that nothing failed when it didn't.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Degradation {
+    /// Ladder rung that produced the final answer.
+    pub rung: Rung,
+    /// Failures absorbed on the way (one human-readable entry each:
+    /// `"panic at rung learned: failpoint 'engine.propagate': ..."`,
+    /// `"watchdog: heartbeat stall"`, ...). Empty on a clean solve.
+    pub failures: Vec<String>,
+    /// Transient member failures retried by `solve_many` for this
+    /// request.
+    pub retries: u32,
+    /// Wall-clock consumed per pipeline phase.
+    pub spend: PhaseSpend,
+}
+
+impl Degradation {
+    /// A clean (so-far failure-free) provenance answered by `rung`.
+    pub fn clean(rung: Rung) -> Self {
+        Degradation { rung, failures: Vec::new(), retries: 0, spend: PhaseSpend::default() }
+    }
+
+    /// True when nothing failed and nothing was retried — the answer is
+    /// indistinguishable from a fault-free run.
+    pub fn is_clean(&self) -> bool {
+        self.failures.is_empty() && self.retries == 0
+    }
+
+    /// Record an absorbed failure.
+    pub fn note_failure(&mut self, why: impl Into<String>) {
+        self.failures.push(why.into());
+    }
+
+    /// Compact JSON object (used verbatim by the bench JSON writers and
+    /// anything else that reports degradation per solve).
+    pub fn to_json(&self) -> String {
+        let fails: Vec<String> =
+            self.failures.iter().map(|f| format!("\"{}\"", json_escape(f))).collect();
+        format!(
+            "{{\"rung\":\"{}\",\"clean\":{},\"failures\":[{}],\"retries\":{},\
+             \"spend_ms\":{{\"presolve\":{},\"search\":{},\"polish\":{}}}}}",
+            self.rung.as_str(),
+            self.is_clean(),
+            fails.join(","),
+            self.retries,
+            self.spend.presolve_ms,
+            self.spend.search_ms,
+            self.spend.polish_ms,
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push(' '),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_roundtrip() {
+        let d = Degradation::clean(Rung::Learned);
+        assert!(d.is_clean());
+        let j = d.to_json();
+        assert!(j.contains("\"rung\":\"learned\""), "{j}");
+        assert!(j.contains("\"clean\":true"), "{j}");
+        assert!(j.contains("\"failures\":[]"), "{j}");
+    }
+
+    #[test]
+    fn failures_escape_and_mark_dirty() {
+        let mut d = Degradation::clean(Rung::Chronological);
+        d.note_failure("panic: said \"boom\"\nat line 3");
+        assert!(!d.is_clean());
+        let j = d.to_json();
+        assert!(j.contains("\\\"boom\\\""), "{j}");
+        assert!(!j.contains('\n'), "control chars must be stripped: {j}");
+    }
+
+    #[test]
+    fn budget_split_covers_total() {
+        let b = PhaseBudgets::split(Duration::from_secs(10));
+        let sum = b.presolve + b.search + b.polish;
+        assert!(sum <= Duration::from_secs(10));
+        assert!(sum >= Duration::from_millis(9_900));
+        assert!(b.search > b.presolve && b.search > b.polish);
+    }
+
+    #[test]
+    fn rungs_order_strongest_first() {
+        assert!(Rung::Learned < Rung::Chronological);
+        assert!(Rung::Chronological < Rung::LnsGreedy);
+        assert!(Rung::LnsGreedy < Rung::GreedyOnly);
+    }
+}

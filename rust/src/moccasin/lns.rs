@@ -170,6 +170,11 @@ fn solve_window(
     search: SearchStrategy,
     stats: &mut SearchStats,
 ) -> Option<RematSolution> {
+    // failpoint: a spurious timeout or error makes this window report
+    // "no improvement" (the loop's natural failure path); a panic
+    // unwinds to the degradation ladder; a delay simulates a slow
+    // window for watchdog tests
+    crate::fail_point!("lns.window", None);
     let n = graph.n();
     // an unrepresentable incumbent means this window cannot improve it
     // (lns_loop canonicalizes up front, so this only trips on exotic
@@ -337,8 +342,13 @@ pub fn lns_loop(
         if slice.is_zero() {
             break;
         }
-        // the sub-deadline inherits the shared incumbent, so window
-        // re-solves prune against (and are cancelled by) the portfolio
+        // The sub-deadline inherits the shared incumbent, so window
+        // re-solves prune against (and are cancelled by) the portfolio.
+        // Deadline-gap audit (PR 7): besides this per-iteration poll,
+        // the window's propagation engine checks cancellation and the
+        // slice's hard stop *inside* each fixpoint call
+        // (`PropagationEngine::watchdog_tick`), so a window wedged in a
+        // single propagation pass cannot overrun the slice unbounded.
         let sub_deadline = deadline.sub(slice);
         match solve_window(
             graph, order, budget, c, &incumbent, j0, j1, sub_deadline, pre, search, stats,

@@ -29,19 +29,22 @@
 //! duration minimization warm-started from Phase 1) and reports an
 //! anytime progress trace (used by the Figure 1/5/6 benches).
 
+pub mod degradation;
 pub mod exact;
 pub mod greedy;
 pub mod lns;
 pub mod model;
 pub mod solution;
 
+pub use degradation::{Degradation, PhaseBudgets, PhaseSpend, Rung};
 pub use model::{IntervalVars, StagedModel};
 pub use solution::{intervals_from_sequence, RematSolution};
 
-use crate::cp::{SearchStats, SearchStrategy};
+use crate::cp::{SearchMode, SearchStats, SearchStrategy};
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::presolve::{GraphAnalysis, Presolve, PresolveConfig};
 use crate::util::{Deadline, Incumbent, Rng};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -73,6 +76,10 @@ pub struct SolveOutcome {
     /// Aggregated CP kernel statistics across the exact solve and every
     /// LNS window re-solve (nodes, propagations, event counters).
     pub stats: SearchStats,
+    /// Degradation provenance: which ladder rung produced the answer,
+    /// every failure absorbed along the way, and per-phase wall-clock
+    /// spend. [`Degradation::is_clean`] is `true` on a fault-free run.
+    pub degradation: Degradation,
 }
 
 /// Configuration of the MOCCASIN solver (paper defaults: `C = 2`,
@@ -112,6 +119,11 @@ pub struct MoccasinSolver {
     /// window re-solve (chronological DFS or conflict-driven learned
     /// search — both exact; see [`SearchStrategy`]).
     pub search: SearchStrategy,
+    /// Per-phase wall-clock budget partition. `None` (the default)
+    /// splits `time_limit` with [`PhaseBudgets::split`]; the exact
+    /// search phase is capped at its slice so a pathological proof
+    /// attempt cannot starve the anytime LNS polish.
+    pub budgets: Option<PhaseBudgets>,
 }
 
 impl Default for MoccasinSolver {
@@ -127,6 +139,7 @@ impl Default for MoccasinSolver {
             presolve: PresolveConfig::default(),
             analysis: None,
             search: SearchStrategy::default(),
+            budgets: None,
         }
     }
 }
@@ -168,6 +181,11 @@ impl MoccasinSolver {
         let mut best: Option<RematSolution> = None;
         let mut proved_optimal = false;
         let mut stats = SearchStats::default();
+        let budgets = self.budgets.unwrap_or_else(|| PhaseBudgets::split(self.time_limit));
+        let configured_rung = match self.search.mode {
+            SearchMode::Learned => Rung::Learned,
+            SearchMode::Chronological => Rung::Chronological,
+        };
 
         let mut record = |sol: &RematSolution,
                           trace: &mut Vec<ProgressPoint>,
@@ -213,23 +231,45 @@ impl MoccasinSolver {
         let phase1_time = deadline.elapsed();
         let Some(p1) = phase1 else {
             // Budget unreachable by the heuristic. Try the exact model
-            // for tiny graphs; otherwise report failure.
+            // for tiny graphs; otherwise report failure. The exact run
+            // is panic-contained like every ladder rung: a crash here
+            // degrades to "no solution found" instead of unwinding
+            // through the caller.
+            let mut degradation = Degradation::clean(configured_rung);
+            degradation.spend.presolve_ms = phase1_time.as_millis() as u64;
             if graph.n() <= self.exact_threshold {
-                let ex = exact::solve_exact(
-                    graph,
-                    &order,
-                    budget,
-                    self.c,
-                    deadline.clone(),
-                    self.staged,
-                    &pre,
-                    self.search,
-                    |sol| record(sol, &mut trace, &mut best),
-                );
-                proved_optimal = ex.proved_optimal;
-                stats.merge(&ex.stats);
+                let t0 = deadline.elapsed();
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    exact::solve_exact(
+                        graph,
+                        &order,
+                        budget,
+                        self.c,
+                        deadline.clone(),
+                        self.staged,
+                        &pre,
+                        self.search,
+                        |sol| record(sol, &mut trace, &mut best),
+                    )
+                }));
+                degradation.spend.search_ms =
+                    deadline.elapsed().saturating_sub(t0).as_millis() as u64;
+                match r {
+                    Ok(ex) => {
+                        proved_optimal = ex.proved_optimal;
+                        stats.merge(&ex.stats);
+                    }
+                    Err(p) => {
+                        stats.member_panics += 1;
+                        degradation.note_failure(format!(
+                            "panic at rung {}: {}",
+                            configured_rung.as_str(),
+                            crate::util::panic_note(p.as_ref()),
+                        ));
+                    }
+                }
             }
-            return SolveOutcome { best, trace, proved_optimal, phase1_time, stats };
+            return SolveOutcome { best, trace, proved_optimal, phase1_time, stats, degradation };
         };
         record(&p1, &mut trace, &mut best);
 
@@ -239,56 +279,120 @@ impl MoccasinSolver {
         let polished = lns::removal_polish(graph, best.as_ref().unwrap(), budget);
         record(&polished, &mut trace, &mut best);
 
-        // 2b. Exact B&B for small instances (proves optimality). The
-        //     search prunes against the shared incumbent (which already
-        //     holds the Phase-1 bound), so exhausting the space with
-        //     nothing better found proves the incumbent optimal —
-        //     unless a racing portfolio member holds a strictly better
-        //     duration, in which case *our* best is not the optimum.
-        if graph.n() <= self.exact_threshold {
-            let ex = exact::solve_exact(
-                graph,
-                &order,
-                budget,
-                self.c,
-                deadline.clone(),
-                self.staged,
-                &pre,
-                self.search,
-                |sol| record(sol, &mut trace, &mut best),
-            );
-            stats.merge(&ex.stats);
-            let global = incumbent.best();
-            proved_optimal = ex.proved_optimal
-                && best
-                    .as_ref()
-                    .map(|b| {
-                        b.eval.duration <= ex.best_duration
-                            && global.map_or(true, |g| b.eval.duration <= g)
-                    })
-                    .unwrap_or(false);
+        // 2b/2c. Improvement phase, run down the degradation ladder.
+        //
+        //     Each rung attempts exact B&B for small instances (proves
+        //     optimality; capped at its phase-budget slice so a
+        //     pathological proof cannot starve the polish) followed by
+        //     the LNS anytime loop, all inside `catch_unwind`: a panic
+        //     anywhere in the CP kernel (or injected by a failpoint)
+        //     burns that rung, records provenance, and falls through to
+        //     the next cheaper strategy — learned → chronological →
+        //     LNS-from-greedy — with the greedy/polished incumbent as
+        //     the guaranteed floor (rung `greedy-only`). The incumbent
+        //     can only improve monotonically, so a degraded answer is
+        //     never worse than plain greedy.
+        let mut degradation = Degradation::clean(configured_rung);
+        degradation.spend.presolve_ms = phase1_time.as_millis() as u64;
+        let chrono = SearchStrategy::chronological()
+            .with_profile(self.search.profile)
+            .with_filtering(self.search.filtering)
+            .with_disjunctive(self.search.disjunctive);
+        let mut attempts: Vec<(Rung, SearchStrategy, bool)> = Vec::new();
+        attempts.push((configured_rung, self.search, true));
+        if self.search.mode == SearchMode::Learned {
+            attempts.push((Rung::Chronological, chrono, true));
         }
-
-        // 2c. …LNS anytime loop for the rest of the budgeted time.
-        if !proved_optimal {
-            let mut rng = Rng::seed_from_u64(self.seed);
-            lns::lns_loop(
-                graph,
-                &order,
-                budget,
-                self.c,
-                self.window,
-                deadline.clone(),
-                &mut rng,
-                &pre,
-                self.search,
-                best.clone().unwrap(),
-                &mut stats,
-                |sol| record(sol, &mut trace, &mut best),
-            );
+        attempts.push((Rung::LnsGreedy, chrono, false));
+        let mut answered: Option<Rung> = None;
+        for (attempt_idx, (rung, strat, allow_exact)) in attempts.iter().enumerate() {
+            if deadline.exceeded() {
+                break;
+            }
+            // attempt 0 keeps the configured seed so a clean run is
+            // bit-identical to the pre-ladder behavior; fallback rungs
+            // diversify it
+            let seed = if attempt_idx == 0 {
+                self.seed
+            } else {
+                self.seed ^ (attempt_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            };
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                let mut astats = SearchStats::default();
+                let mut proved = false;
+                let mut search_ms = 0u64;
+                if *allow_exact && graph.n() <= self.exact_threshold {
+                    let t0 = deadline.elapsed();
+                    let ex = exact::solve_exact(
+                        graph,
+                        &order,
+                        budget,
+                        self.c,
+                        deadline.sub(budgets.search),
+                        self.staged,
+                        &pre,
+                        *strat,
+                        |sol| record(sol, &mut trace, &mut best),
+                    );
+                    search_ms = deadline.elapsed().saturating_sub(t0).as_millis() as u64;
+                    astats.merge(&ex.stats);
+                    // exhausting the space proves the incumbent optimal
+                    // unless a racing portfolio member holds a strictly
+                    // better duration
+                    let global = incumbent.best();
+                    proved = ex.proved_optimal
+                        && best
+                            .as_ref()
+                            .map(|b| {
+                                b.eval.duration <= ex.best_duration
+                                    && global.map_or(true, |g| b.eval.duration <= g)
+                            })
+                            .unwrap_or(false);
+                }
+                let mut polish_ms = 0u64;
+                if !proved {
+                    let t0 = deadline.elapsed();
+                    let mut rng = Rng::seed_from_u64(seed);
+                    lns::lns_loop(
+                        graph,
+                        &order,
+                        budget,
+                        self.c,
+                        self.window,
+                        deadline.clone(),
+                        &mut rng,
+                        &pre,
+                        *strat,
+                        best.clone().unwrap(),
+                        &mut astats,
+                        |sol| record(sol, &mut trace, &mut best),
+                    );
+                    polish_ms = deadline.elapsed().saturating_sub(t0).as_millis() as u64;
+                }
+                (astats, proved, search_ms, polish_ms)
+            }));
+            match r {
+                Ok((astats, proved, search_ms, polish_ms)) => {
+                    stats.merge(&astats);
+                    proved_optimal = proved;
+                    degradation.spend.search_ms += search_ms;
+                    degradation.spend.polish_ms += polish_ms;
+                    answered = Some(*rung);
+                    break;
+                }
+                Err(p) => {
+                    stats.member_panics += 1;
+                    degradation.note_failure(format!(
+                        "panic at rung {}: {}",
+                        rung.as_str(),
+                        crate::util::panic_note(p.as_ref()),
+                    ));
+                }
+            }
         }
+        degradation.rung = answered.unwrap_or(Rung::GreedyOnly);
 
-        SolveOutcome { best, trace, proved_optimal, phase1_time, stats }
+        SolveOutcome { best, trace, proved_optimal, phase1_time, stats, degradation }
     }
 }
 
@@ -322,6 +426,18 @@ mod tests {
         // optimal: exactly one remat (duration 6), proved by exact B&B
         assert_eq!(best.eval.duration, 6);
         assert!(out.proved_optimal);
+    }
+
+    #[test]
+    fn clean_solve_reports_clean_degradation() {
+        let g = tiny_graph();
+        let out = MoccasinSolver::default().solve(&g, 10, None);
+        assert!(out.degradation.is_clean(), "{:?}", out.degradation);
+        // default strategy is chronological, so that rung answers
+        assert_eq!(out.degradation.rung, Rung::Chronological);
+        assert_eq!(out.degradation.retries, 0);
+        assert_eq!(out.stats.member_panics, 0);
+        assert_eq!(out.stats.watchdog_kills, 0);
     }
 
     #[test]

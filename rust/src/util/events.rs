@@ -1,0 +1,95 @@
+//! Process-global resilience event counters.
+//!
+//! Recovery paths that have no `SearchStats` in scope — poisoned-lock
+//! recovery in the portfolio shared state, watchdog kills from the
+//! coordinator's monitor thread, contained member panics — record here
+//! instead of logging nothing. Callers that *do* own stats take a
+//! [`snapshot`] before the work and fold the delta into their
+//! `SearchStats` afterwards, so the counters surface in
+//! `SearchStats::merge` output, `solve --verbose`, and the bench JSONs.
+//!
+//! Counters are monotone for the life of the process; concurrent solves
+//! may attribute each other's events to themselves, which is acceptable
+//! for diagnostics (the process-wide totals stay exact).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static LOCK_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+static WATCHDOG_KILLS: AtomicU64 = AtomicU64::new(0);
+static MEMBER_PANICS: AtomicU64 = AtomicU64::new(0);
+static MEMBER_RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// A point-in-time reading of the process-global resilience counters
+/// (also used to represent deltas between two readings).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventSnapshot {
+    /// Poisoned mutexes recovered via `lock_recover`.
+    pub lock_recoveries: u64,
+    /// Members/solves cancelled by a watchdog (stall, wall overrun, or
+    /// RSS guard).
+    pub watchdog_kills: u64,
+    /// Panics contained by `catch_unwind` in members/workers.
+    pub member_panics: u64,
+    /// Transient member failures retried by `solve_many`.
+    pub member_retries: u64,
+}
+
+impl EventSnapshot {
+    /// Counter increments since `earlier` was taken.
+    pub fn delta_since(&self, earlier: &EventSnapshot) -> EventSnapshot {
+        EventSnapshot {
+            lock_recoveries: self.lock_recoveries - earlier.lock_recoveries,
+            watchdog_kills: self.watchdog_kills - earlier.watchdog_kills,
+            member_panics: self.member_panics - earlier.member_panics,
+            member_retries: self.member_retries - earlier.member_retries,
+        }
+    }
+}
+
+/// Read the current process-global counters.
+pub fn snapshot() -> EventSnapshot {
+    EventSnapshot {
+        lock_recoveries: LOCK_RECOVERIES.load(Ordering::Relaxed),
+        watchdog_kills: WATCHDOG_KILLS.load(Ordering::Relaxed),
+        member_panics: MEMBER_PANICS.load(Ordering::Relaxed),
+        member_retries: MEMBER_RETRIES.load(Ordering::Relaxed),
+    }
+}
+
+/// Record recovery of a poisoned mutex.
+pub fn note_lock_recovery() {
+    LOCK_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record a watchdog cancelling a wedged or over-budget solve.
+pub fn note_watchdog_kill() {
+    WATCHDOG_KILLS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record a panic contained by a member/worker `catch_unwind`.
+pub fn note_member_panic() {
+    MEMBER_PANICS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record a transient member failure being retried.
+pub fn note_member_retry() {
+    MEMBER_RETRIES.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deltas_isolate_concurrent_noise_free_runs() {
+        let before = snapshot();
+        note_lock_recovery();
+        note_watchdog_kill();
+        note_watchdog_kill();
+        let d = snapshot().delta_since(&before);
+        // Other tests may bump counters concurrently, so assert lower
+        // bounds only.
+        assert!(d.lock_recoveries >= 1);
+        assert!(d.watchdog_kills >= 2);
+    }
+}

@@ -1,0 +1,288 @@
+//! Deterministic fault injection for the solve pipeline.
+//!
+//! A *failpoint* is a named site in the code (e.g. `"engine.propagate"`)
+//! where a fault can be injected at runtime: a panic, an artificial
+//! delay, a spurious timeout, or an error return. Sites are compiled in
+//! only under `cfg(test)` or the `failpoints` cargo feature; in default
+//! builds every site is a no-op with zero runtime cost, so the hot
+//! propagation loops are unaffected.
+//!
+//! Sites are armed two ways:
+//!
+//! * **Environment**: `MOCCASIN_FAILPOINTS="site=action;site=action"`,
+//!   parsed once on first use. Actions: `panic`, `delay(ms)`, `timeout`,
+//!   `error`, `off`; an optional `*N` suffix limits the number of
+//!   firings (e.g. `lns.window=delay(50)*3`). This is how the CI
+//!   fault-injection matrix arms a point for a whole test run.
+//! * **Programmatically**: [`arm`] / [`disarm`] / [`reset`] from tests.
+//!   [`reset`] restores the environment baseline (it does not erase
+//!   env-armed points), so suites running under a `MOCCASIN_FAILPOINTS`
+//!   matrix entry keep that entry armed across tests.
+//!
+//! The registry is process-global; test binaries that arm points must
+//! serialize those tests (see `rust/tests/resilience.rs`).
+//!
+//! Call sites use the [`fail_point!`](crate::fail_point) macro, or call
+//! [`hit`] directly when they need to distinguish a spurious timeout
+//! from an error return.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// The fault a site injects when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailAction {
+    /// Panic with a message carrying the site name (tests `catch_unwind`
+    /// containment and the degradation ladder).
+    Panic,
+    /// Sleep for the given number of milliseconds, then continue
+    /// normally (tests watchdog stall detection and budget slices).
+    Delay(u64),
+    /// Report a spurious timeout: the site behaves as if its deadline
+    /// had expired.
+    Timeout,
+    /// Report an error: the site takes its error-return path.
+    Error,
+    /// Explicitly disarmed (lets the env string override a default).
+    Off,
+}
+
+/// What a fired failpoint asks the call site to do, beyond the effects
+/// (panic, sleep) already performed inside [`hit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailSignal {
+    /// Behave as if the deadline expired at this site.
+    Timeout,
+    /// Take the site's error-return path.
+    Error,
+}
+
+struct Armed {
+    action: FailAction,
+    /// Remaining firings; `None` = unlimited.
+    remaining: Option<u64>,
+}
+
+struct State {
+    points: Mutex<HashMap<String, Armed>>,
+    /// Number of currently armed points — the fast-path gate that keeps
+    /// `hit()` to one atomic load when nothing is armed.
+    armed: AtomicUsize,
+    fired: Mutex<HashMap<String, u64>>,
+}
+
+static STATE: OnceLock<State> = OnceLock::new();
+
+fn parse_env() -> HashMap<String, Armed> {
+    let mut map = HashMap::new();
+    let Ok(spec) = std::env::var("MOCCASIN_FAILPOINTS") else {
+        return map;
+    };
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let Some((site, rhs)) = entry.split_once('=') else {
+            continue;
+        };
+        let (action_str, count) = match rhs.rsplit_once('*') {
+            Some((a, n)) => (a, n.trim().parse::<u64>().ok()),
+            None => (rhs, None),
+        };
+        let Some(action) = parse_action(action_str.trim()) else {
+            continue;
+        };
+        if action == FailAction::Off {
+            map.remove(site.trim());
+            continue;
+        }
+        map.insert(site.trim().to_string(), Armed { action, remaining: count });
+    }
+    map
+}
+
+fn parse_action(s: &str) -> Option<FailAction> {
+    if let Some(ms) = s.strip_prefix("delay(").and_then(|r| r.strip_suffix(')')) {
+        return ms.trim().parse().ok().map(FailAction::Delay);
+    }
+    match s {
+        "panic" => Some(FailAction::Panic),
+        "timeout" => Some(FailAction::Timeout),
+        "error" => Some(FailAction::Error),
+        "off" => Some(FailAction::Off),
+        _ => None,
+    }
+}
+
+fn state() -> &'static State {
+    STATE.get_or_init(|| {
+        let map = parse_env();
+        State {
+            armed: AtomicUsize::new(map.len()),
+            points: Mutex::new(map),
+            fired: Mutex::new(HashMap::new()),
+        }
+    })
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm `site` with `action`, firing at most `count` times (`None` =
+/// unlimited). Overrides any previous arming of the same site,
+/// including one from `MOCCASIN_FAILPOINTS`.
+pub fn arm(site: &str, action: FailAction, count: Option<u64>) {
+    let st = state();
+    let mut pts = lock(&st.points);
+    if action == FailAction::Off {
+        if pts.remove(site).is_some() {
+            st.armed.fetch_sub(1, Ordering::Relaxed);
+        }
+        return;
+    }
+    if pts.insert(site.to_string(), Armed { action, remaining: count }).is_none() {
+        st.armed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Disarm `site` (no-op if it was not armed).
+pub fn disarm(site: &str) {
+    arm(site, FailAction::Off, None);
+}
+
+/// Disarm every programmatically armed point, clear the fired counters,
+/// and restore the `MOCCASIN_FAILPOINTS` environment baseline.
+pub fn reset() {
+    let st = state();
+    let map = parse_env();
+    let mut pts = lock(&st.points);
+    st.armed.store(map.len(), Ordering::Relaxed);
+    *pts = map;
+    lock(&st.fired).clear();
+}
+
+/// How many times `site` has fired since the last [`reset`].
+pub fn fired(site: &str) -> u64 {
+    lock(&state().fired).get(site).copied().unwrap_or(0)
+}
+
+/// Evaluate the failpoint at `site`. Panics and delays are performed
+/// here; `Timeout`/`Error` are returned as a [`FailSignal`] for the
+/// call site to interpret. Returns `None` when the site is not armed
+/// (the overwhelmingly common case — one atomic load).
+pub fn hit(site: &str) -> Option<FailSignal> {
+    let st = state();
+    if st.armed.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let action = {
+        let mut pts = lock(&st.points);
+        let armed = pts.get_mut(site)?;
+        let action = armed.action;
+        if let Some(rem) = &mut armed.remaining {
+            if *rem == 0 {
+                pts.remove(site);
+                st.armed.fetch_sub(1, Ordering::Relaxed);
+                return None;
+            }
+            *rem -= 1;
+            if *rem == 0 {
+                pts.remove(site);
+                st.armed.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        action
+    };
+    *lock(&state().fired).entry(site.to_string()).or_insert(0) += 1;
+    match action {
+        FailAction::Panic => panic!("failpoint '{site}': injected panic"),
+        FailAction::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        FailAction::Timeout => Some(FailSignal::Timeout),
+        FailAction::Error => Some(FailSignal::Error),
+        FailAction::Off => None,
+    }
+}
+
+/// Injects a fault at a named site when armed (see
+/// [`util::failpoint`](crate::util::failpoint)). The one-argument form
+/// performs panics and delays and ignores timeout/error signals; the
+/// two-argument form additionally early-returns the given expression on
+/// a timeout or error signal. Compiles to nothing outside `cfg(test)` /
+/// `--features failpoints`.
+#[cfg(any(test, feature = "failpoints"))]
+#[macro_export]
+macro_rules! fail_point {
+    ($site:expr) => {
+        let _ = $crate::util::failpoint::hit($site);
+    };
+    ($site:expr, $ret:expr) => {
+        if $crate::util::failpoint::hit($site).is_some() {
+            return $ret;
+        }
+    };
+}
+
+/// Injects a fault at a named site when armed (see
+/// [`util::failpoint`](crate::util::failpoint)). Fault injection is
+/// compiled out in this build (enable with `--features failpoints`).
+#[cfg(not(any(test, feature = "failpoints")))]
+#[macro_export]
+macro_rules! fail_point {
+    ($site:expr) => {};
+    ($site:expr, $ret:expr) => {};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; these tests use sites no other
+    // test touches, so they are safe to run concurrently.
+
+    #[test]
+    fn unarmed_site_is_silent() {
+        assert_eq!(hit("fp.test.unarmed"), None);
+        assert_eq!(fired("fp.test.unarmed"), 0);
+    }
+
+    #[test]
+    fn count_limited_arming_expires() {
+        arm("fp.test.count", FailAction::Error, Some(2));
+        assert_eq!(hit("fp.test.count"), Some(FailSignal::Error));
+        assert_eq!(hit("fp.test.count"), Some(FailSignal::Error));
+        assert_eq!(hit("fp.test.count"), None, "count must expire");
+        assert_eq!(fired("fp.test.count"), 2);
+    }
+
+    #[test]
+    fn disarm_removes_point() {
+        arm("fp.test.disarm", FailAction::Timeout, None);
+        assert_eq!(hit("fp.test.disarm"), Some(FailSignal::Timeout));
+        disarm("fp.test.disarm");
+        assert_eq!(hit("fp.test.disarm"), None);
+    }
+
+    #[test]
+    fn panic_action_carries_site_name() {
+        arm("fp.test.panic", FailAction::Panic, Some(1));
+        let r = std::panic::catch_unwind(|| hit("fp.test.panic"));
+        let msg = r.expect_err("must panic");
+        let msg = msg.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("fp.test.panic"), "panic message: {msg}");
+    }
+
+    #[test]
+    fn spec_parsing_roundtrip() {
+        let spec = parse_action("delay(25)");
+        assert_eq!(spec, Some(FailAction::Delay(25)));
+        assert_eq!(parse_action("panic"), Some(FailAction::Panic));
+        assert_eq!(parse_action("bogus"), None);
+    }
+}

@@ -28,12 +28,35 @@ pub struct Incumbent {
     /// Set once a member proves optimality/infeasibility; observed by
     /// every deadline carrying this incumbent.
     cancelled: AtomicBool,
+    /// Liveness heartbeat: solver inner loops bump this epoch as they
+    /// make progress. A watchdog that sees the epoch stand still past
+    /// its stall threshold concludes the solve is wedged (stuck inside
+    /// one propagation fixpoint, blocked on I/O, ...) and cancels it.
+    progress: AtomicU64,
 }
 
 impl Incumbent {
     /// Fresh incumbent: no bound, not cancelled.
     pub fn new() -> Self {
-        Incumbent { best: AtomicU64::new(NONE), cancelled: AtomicBool::new(false) }
+        Incumbent {
+            best: AtomicU64::new(NONE),
+            cancelled: AtomicBool::new(false),
+            progress: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish one unit of liveness (called from solver inner loops at a
+    /// coarse cadence; a relaxed fetch-add, cheap enough for hot paths).
+    #[inline]
+    pub fn beat(&self) {
+        self.progress.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current heartbeat epoch (monotone; watchdogs compare successive
+    /// readings to detect a wedged solve).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.progress.load(Ordering::Relaxed)
     }
 
     /// The best duration recorded so far, if any.
@@ -86,6 +109,15 @@ mod tests {
         let other = Arc::clone(&inc);
         other.cancel();
         assert!(inc.is_cancelled());
+    }
+
+    #[test]
+    fn heartbeat_epoch_is_monotone() {
+        let inc = Incumbent::new();
+        assert_eq!(inc.epoch(), 0);
+        inc.beat();
+        inc.beat();
+        assert_eq!(inc.epoch(), 2);
     }
 
     #[test]

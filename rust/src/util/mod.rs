@@ -6,6 +6,8 @@
 
 mod csr;
 mod error;
+pub mod events;
+pub mod failpoint;
 mod incumbent;
 mod rng;
 
@@ -94,6 +96,28 @@ impl Deadline {
             return Duration::ZERO;
         }
         self.limit.saturating_sub(self.start.elapsed())
+    }
+
+    /// The absolute instant at which this deadline expires, or `None`
+    /// for (practically) unlimited deadlines. Used by the propagation
+    /// engine's coarse in-fixpoint clock check, which compares against
+    /// a monotonic `Instant` instead of re-deriving elapsed time.
+    pub fn hard_stop(&self) -> Option<Instant> {
+        self.start.checked_add(self.limit)
+    }
+}
+
+/// Render a `catch_unwind` payload as a diagnostic string (panic
+/// messages from `panic!("...")` are `String` or `&str`; anything else
+/// becomes an opaque marker). Contained-panic responses embed this so a
+/// failpoint-injected panic carries its site name to the caller.
+pub fn panic_note(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
     }
 }
 
