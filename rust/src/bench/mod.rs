@@ -6,6 +6,10 @@
 //! "Substitutions"); the *shape* — who wins, who times out, where
 //! feasibility breaks — is the reproduction target.
 
+mod serve;
+
+pub use serve::bench_serve_json;
+
 use crate::coordinator::{Backend, Coordinator, SolveRequest};
 use crate::cp::{FilteringMode, ProfileMode, SearchStrategy, Solver};
 use crate::generators::{paper_graph, random_layered, rw2, LARGE_GRAPHS, PAPER_GRAPHS};

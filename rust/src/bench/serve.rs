@@ -1,0 +1,289 @@
+//! `bench serve-json`: a load generator for the serving tier, emitting
+//! `BENCH_serve.json`.
+//!
+//! Sweeps client concurrency against a solver service and reports, per
+//! level: p50/p99/max end-to-end latency of served requests, delivered
+//! throughput, shed/expired/failed/retry counts, cache hits, and —
+//! load-bearing for the robustness claim — that **every submitted
+//! request received exactly one terminal** (the bench hangs, and CI
+//! with it, if one doesn't; it errors if counts disagree). Runs either
+//! in-process (default: starts its own [`SolverService`]) or against a
+//! live daemon over its Unix socket (`--socket PATH`), exercising the
+//! full NDJSON wire path. Arm `MOCCASIN_FAILPOINTS` (e.g.
+//! `serve.worker=panic*3;serve.session=delay(150)*2`) to measure the
+//! same sweep under injected worker deaths and stalls — the CI smoke
+//! does exactly that.
+
+use crate::serve::{ServeConfig, ServeEvent, ServeRequest, SolverService, Terminal};
+use crate::util::Context as _;
+use std::fmt::Write as _;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Per-request observation: outcome class, end-to-end latency, cache.
+struct Obs {
+    outcome: &'static str,
+    latency: Duration,
+    from_cache: bool,
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// The request mix: small random-layered instances, `distinct` unique
+/// seeds cycled across the batch so repeats exercise the shared cache.
+fn request_mix(total: usize, distinct: usize, deadline: Duration) -> Vec<ServeRequest> {
+    let graphs: Vec<Arc<crate::graph::Graph>> = (0..distinct)
+        .map(|s| {
+            Arc::new(crate::generators::random_layered(
+                &format!("serve-{s}"),
+                40,
+                90,
+                s as u64 + 1,
+            ))
+        })
+        .collect();
+    (0..total)
+        .map(|i| {
+            let g = Arc::clone(&graphs[i % distinct]);
+            let order = crate::graph::topological_order(&g).unwrap();
+            let peak = g.peak_mem_no_remat(&order).unwrap();
+            ServeRequest {
+                deadline,
+                ..ServeRequest::new(g, (peak as f64 * 0.85) as u64)
+            }
+        })
+        .collect()
+}
+
+/// Drive one concurrency level against an in-process service. Returns
+/// one observation per submitted request — the exactly-one-terminal
+/// invariant made measurable.
+fn run_level_inprocess(
+    svc: &SolverService,
+    requests: Vec<ServeRequest>,
+) -> crate::util::Result<Vec<Obs>> {
+    let mut waiters = Vec::with_capacity(requests.len());
+    for req in requests {
+        let (tx, rx) = mpsc::channel::<ServeEvent>();
+        let t0 = Instant::now();
+        svc.submit(req, tx);
+        waiters.push((t0, rx));
+    }
+    let mut obs = Vec::with_capacity(waiters.len());
+    for (t0, rx) in waiters {
+        // a terminal MUST arrive for every submit; a hang here is a
+        // service bug and the bench (deliberately) fails with it
+        let outcome = loop {
+            let ev = rx
+                .recv_timeout(Duration::from_secs(120))
+                .ok()
+                .context("request hung: no terminal within 120s — invariant broken")?;
+            if let ServeEvent::Terminal { outcome, .. } = ev {
+                break outcome;
+            }
+        };
+        let from_cache = match &outcome {
+            Terminal::Solved(r) => r.from_cache,
+            _ => false,
+        };
+        obs.push(Obs { outcome: outcome.name(), latency: t0.elapsed(), from_cache });
+    }
+    Ok(obs)
+}
+
+/// Drive one concurrency level against a live daemon: one connection
+/// per request, full NDJSON round trip.
+#[cfg(unix)]
+fn run_level_socket(
+    socket: &std::path::Path,
+    n_requests: usize,
+    distinct: usize,
+    deadline: Duration,
+) -> crate::util::Result<Vec<Obs>> {
+    use crate::serve::json::Json;
+    use std::io::{BufRead, BufReader, Write as _};
+    use std::os::unix::net::UnixStream;
+    let mut joins = Vec::new();
+    for i in 0..n_requests {
+        let socket = socket.to_path_buf();
+        let deadline_ms = deadline.as_millis() as u64;
+        joins.push(std::thread::spawn(move || -> Result<Obs, String> {
+            let mut stream =
+                UnixStream::connect(&socket).map_err(|e| format!("connect {socket:?}: {e}"))?;
+            stream
+                .set_read_timeout(Some(Duration::from_secs(120)))
+                .map_err(|e| e.to_string())?;
+            let line = format!(
+                "{{\"graph\":\"rl:40:90:{}\",\"budget_frac\":0.85,\
+                 \"deadline_ms\":{deadline_ms},\"tag\":\"r{i}\"}}\n",
+                i % distinct + 1
+            );
+            let t0 = Instant::now();
+            stream.write_all(line.as_bytes()).map_err(|e| e.to_string())?;
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let line = line.map_err(|e| format!("read: {e} (no terminal — hang?)"))?;
+                let v = crate::serve::json::parse(&line)?;
+                if v.get("event").and_then(Json::as_str) == Some("terminal") {
+                    let outcome = match v.get("outcome").and_then(Json::as_str) {
+                        Some("solved") => "solved",
+                        Some("preempted") => "preempted",
+                        Some("cancelled") => "cancelled",
+                        Some("overloaded") => "overloaded",
+                        Some("expired") => "expired",
+                        _ => "failed",
+                    };
+                    let from_cache =
+                        v.get("from_cache").and_then(Json::as_bool).unwrap_or(false);
+                    return Ok(Obs { outcome, latency: t0.elapsed(), from_cache });
+                }
+            }
+            Err("connection closed before terminal".to_string())
+        }));
+    }
+    let mut obs = Vec::new();
+    for j in joins {
+        let o = j
+            .join()
+            .map_err(|_| crate::util::Error::msg("socket client panicked"))?
+            .map_err(crate::util::Error::msg)?;
+        obs.push(o);
+    }
+    Ok(obs)
+}
+
+#[cfg(not(unix))]
+fn run_level_socket(
+    _socket: &std::path::Path,
+    _n_requests: usize,
+    _distinct: usize,
+    _deadline: Duration,
+) -> crate::util::Result<Vec<Obs>> {
+    Err(crate::util::Error::msg("--socket requires a unix platform"))
+}
+
+/// The `bench serve-json` entry point. `socket` switches from the
+/// in-process service to a live daemon.
+pub fn bench_serve_json(
+    quick: bool,
+    socket: Option<&std::path::Path>,
+) -> crate::util::Result<()> {
+    crate::util::failpoint::reset(); // re-arm from MOCCASIN_FAILPOINTS
+    let levels: &[usize] = if quick { &[4, 16] } else { &[4, 16, 64] };
+    let deadline = Duration::from_secs(if quick { 10 } else { 20 });
+    let workers = 2;
+    let queue_cap = 16;
+    println!(
+        "== serving-tier load sweep (BENCH_serve.json, {} mode, workers={workers}, \
+         queue_cap={queue_cap}) ==",
+        if socket.is_some() { "socket" } else { "in-process" }
+    );
+    let mut records = Vec::new();
+    for &level in levels {
+        let distinct = (level / 2).max(2);
+        let t_level = Instant::now();
+        let (obs, retries, deaths) = match socket {
+            Some(path) => {
+                let obs = run_level_socket(path, level, distinct, deadline)?;
+                // daemon-side counters are not visible over the wire
+                (obs, None, None)
+            }
+            None => {
+                let svc = SolverService::start(ServeConfig {
+                    workers,
+                    queue_cap,
+                    ..Default::default()
+                });
+                let obs = run_level_inprocess(&svc, request_mix(level, distinct, deadline))?;
+                let s = svc.stats();
+                if s.submitted
+                    != s.solved + s.preempted + s.cancelled + s.shed + s.expired + s.failed
+                {
+                    return Err(crate::util::Error::msg(format!(
+                        "terminal ledger disagrees with submissions: {s:?}"
+                    )));
+                }
+                svc.shutdown();
+                (obs, Some(s.retries), Some(s.worker_deaths))
+            }
+        };
+        let wall = t_level.elapsed().as_secs_f64();
+        let mut by_class: std::collections::BTreeMap<&str, usize> = Default::default();
+        for o in &obs {
+            *by_class.entry(o.outcome).or_insert(0) += 1;
+        }
+        let solved = by_class.get("solved").copied().unwrap_or(0);
+        let shed = by_class.get("overloaded").copied().unwrap_or(0);
+        let cache_hits = obs.iter().filter(|o| o.from_cache).count();
+        let mut served_ms: Vec<f64> = obs
+            .iter()
+            .filter(|o| o.outcome == "solved" || o.outcome == "preempted")
+            .map(|o| o.latency.as_secs_f64() * 1000.0)
+            .collect();
+        served_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p99) = (percentile(&served_ms, 0.50), percentile(&served_ms, 0.99));
+        let max_ms = served_ms.last().copied().unwrap_or(0.0);
+        let throughput = solved as f64 / wall.max(1e-9);
+        let shed_rate = shed as f64 / obs.len().max(1) as f64;
+        println!(
+            "  level {level:>3}: {solved} solved ({cache_hits} cached), {shed} shed, \
+             p50 {p50:.1}ms p99 {p99:.1}ms, {throughput:.1} solved/s, \
+             retries {} deaths {}",
+            retries.map(|r| r.to_string()).unwrap_or_else(|| "n/a".into()),
+            deaths.map(|d| d.to_string()).unwrap_or_else(|| "n/a".into()),
+        );
+        let mut classes = String::new();
+        for (k, v) in &by_class {
+            let _ = write!(classes, "{}\"{k}\": {v}", if classes.is_empty() { "" } else { ", " });
+        }
+        records.push(format!(
+            "  {{\n    \"mode\": \"{}\",\n    \"concurrency\": {level},\n    \
+             \"requests\": {},\n    \"workers\": {workers},\n    \
+             \"queue_cap\": {queue_cap},\n    \"deadline_ms\": {},\n    \
+             \"outcomes\": {{{classes}}},\n    \"cache_hits\": {cache_hits},\n    \
+             \"p50_ms\": {p50:.2},\n    \"p99_ms\": {p99:.2},\n    \
+             \"max_ms\": {max_ms:.2},\n    \"throughput_rps\": {throughput:.2},\n    \
+             \"shed_rate\": {shed_rate:.4},\n    \"retries\": {},\n    \
+             \"worker_deaths\": {},\n    \"wall_s\": {wall:.3}\n  }}",
+            if socket.is_some() { "socket" } else { "in-process" },
+            obs.len(),
+            deadline.as_millis(),
+            retries.map(|r| r.to_string()).unwrap_or_else(|| "null".into()),
+            deaths.map(|d| d.to_string()).unwrap_or_else(|| "null".into()),
+        ));
+    }
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let path = std::path::Path::new("BENCH_serve.json");
+    std::fs::write(path, &json).with_context(|| format!("could not write {path:?}"))?;
+    println!("  [json] {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_order_statistics() {
+        let ms = [1.0, 2.0, 3.0, 4.0, 100.0];
+        assert_eq!(percentile(&ms, 0.5), 3.0);
+        assert_eq!(percentile(&ms, 0.99), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn request_mix_cycles_distinct_graphs() {
+        let reqs = request_mix(6, 2, Duration::from_secs(5));
+        assert_eq!(reqs.len(), 6);
+        // repeats share the same Arc'd graph (cache-hit fodder)
+        assert!(Arc::ptr_eq(&reqs[0].graph, &reqs[2].graph));
+        assert!(!Arc::ptr_eq(&reqs[0].graph, &reqs[1].graph));
+        assert!(reqs[0].budget > 0);
+    }
+}

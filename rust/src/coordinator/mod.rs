@@ -30,7 +30,7 @@ use crate::cp::{SearchMode, SearchStats, SearchStrategy};
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::moccasin::{Degradation, MoccasinSolver, RematSolution, Rung, SolveOutcome};
 use crate::presolve::{Presolve, PresolveConfig};
-use crate::util::{events, panic_note, Deadline, Incumbent, Rng};
+use crate::util::{events, panic_note, Deadline, Incumbent, LruCache, Rng};
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -135,13 +135,23 @@ pub struct SolveResponse {
 /// — are not interchangeable (0 = no explicit order). The watchdog
 /// knobs are `value + 1` with 0 = unset, so `Some(0)` and `None` stay
 /// distinct.
-type CacheKey = (u64, u64, usize, u8, u8, i64, u8, u64, u64, u64);
+pub(crate) type CacheKey = (u64, u64, usize, u8, u8, i64, u8, u64, u64, u64);
+
+/// Default schedule-cache capacity (entries). Sized so a long-running
+/// daemon serving fleet traffic stays bounded while a compile pipeline's
+/// working set (one model × a budget sweep) fits comfortably.
+pub const DEFAULT_CACHE_CAP: usize = 4096;
 
 /// The coordinator: solver portfolio + solution cache + worker pool
 /// configuration for batched solves.
-#[derive(Default)]
+///
+/// The schedule cache is a *bounded* LRU ([`LruCache`]) — it used to be
+/// an unbounded `HashMap`, which was fine for one batch but a slow leak
+/// for a long-running serve daemon whose key space (graph fingerprint ×
+/// budget × knobs) grows without bound. Eviction counts are exposed via
+/// [`Coordinator::cache_evictions`].
 pub struct Coordinator {
-    cache: HashMap<CacheKey, SolveResponse>,
+    cache: LruCache<CacheKey, SolveResponse>,
     /// Worker threads used by [`Coordinator::solve_many`] and by
     /// [`Backend::Portfolio`] members. `0` = auto (available
     /// parallelism).
@@ -152,10 +162,39 @@ pub struct Coordinator {
     pub misses: u64,
 }
 
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::with_cache_cap(DEFAULT_CACHE_CAP)
+    }
+}
+
 impl Coordinator {
-    /// Fresh coordinator with an empty cache and automatic parallelism.
+    /// Fresh coordinator with an empty cache (default capacity) and
+    /// automatic parallelism.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Fresh coordinator with an explicit schedule-cache capacity
+    /// (`0` disables caching entirely).
+    pub fn with_cache_cap(cap: usize) -> Self {
+        Coordinator { cache: LruCache::new(cap), threads: 0, hits: 0, misses: 0 }
+    }
+
+    /// Entries evicted from the schedule cache to make room (never
+    /// counts explicit invalidation — there is none).
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.evictions
+    }
+
+    /// Live schedule-cache entry count.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Configured schedule-cache capacity.
+    pub fn cache_cap(&self) -> usize {
+        self.cache.cap()
     }
 
     /// Worker count for batched solves (resolves the `0` = auto
@@ -167,7 +206,7 @@ impl Coordinator {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     }
 
-    fn cache_key(graph: &Graph, req: &SolveRequest) -> CacheKey {
+    pub(crate) fn cache_key(graph: &Graph, req: &SolveRequest) -> CacheKey {
         let order_hash = req
             .order
             .as_ref()
@@ -436,7 +475,6 @@ impl Coordinator {
             .unwrap_or_else(|| topological_order(graph).expect("DAG required"));
         match req.backend {
             Backend::Moccasin => {
-                let ev0 = events::snapshot();
                 let inc = Arc::new(Incumbent::new());
                 let solver = MoccasinSolver {
                     c: req.c,
@@ -457,7 +495,10 @@ impl Coordinator {
                     degradation.note_failure(format!("watchdog: {}", reason.as_str()));
                 }
                 let mut stats = out.stats;
-                stats.absorb_events(&events::snapshot().delta_since(&ev0));
+                // exact attribution: this solve's own watchdog reports
+                // its kills — the old global snapshot/delta absorption
+                // let concurrent solves steal each other's counts
+                stats.watchdog_kills += u64::from(report.kills);
                 SolveResponse {
                     trace: out.trace.iter().map(|p| (p.elapsed, p.duration)).collect(),
                     proved_optimal: out.proved_optimal,
@@ -483,7 +524,6 @@ impl Coordinator {
                 solve_portfolio(graph, req.budget, Some(order), &cfg)
             }
             Backend::CheckmateMilp => {
-                let ev0 = events::snapshot();
                 // the incumbent gives the watchdog a cancellation path
                 // into the MILP's engine (which beats + polls it inside
                 // each fixpoint; see `PropagationEngine::set_watchdog`)
@@ -513,11 +553,10 @@ impl Coordinator {
                     d.note_failure(format!("watchdog: {}", reason.as_str()));
                     d
                 });
-                let ev = events::snapshot().delta_since(&ev0);
                 match r {
                     Ok(res) => {
                         let mut stats = res.stats;
-                        stats.absorb_events(&ev);
+                        stats.watchdog_kills += u64::from(report.kills);
                         SolveResponse {
                             solution: Some(res.solution),
                             trace,
@@ -535,7 +574,7 @@ impl Coordinator {
                             CheckmateError::NoSolution { stats } => *stats,
                             _ => SearchStats::default(),
                         };
-                        stats.absorb_events(&ev);
+                        stats.watchdog_kills += u64::from(report.kills);
                         SolveResponse {
                             solution: None,
                             trace,
@@ -771,6 +810,35 @@ mod tests {
         let no_order = c.solve(&g, &base);
         assert!(no_order.solution.is_some());
         assert!(!no_order.from_cache, "explicit-order response must not be shared");
+    }
+
+    #[test]
+    fn bounded_cache_evicts_lru_and_counts() {
+        let g = chain();
+        let mut c = Coordinator::with_cache_cap(1);
+        assert_eq!(c.cache_cap(), 1);
+        let req = |budget: u64| SolveRequest {
+            budget,
+            time_limit: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let _ = c.solve(&g, &req(10));
+        assert_eq!(c.cache_len(), 1);
+        // second key evicts the first (cap 1)
+        let _ = c.solve(&g, &req(13));
+        assert_eq!(c.cache_len(), 1);
+        assert_eq!(c.cache_evictions(), 1);
+        // the evicted request re-solves: a miss, not a hit
+        let r = c.solve(&g, &req(10));
+        assert!(!r.from_cache, "evicted entry must re-solve");
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.misses, 3);
+        // cap 0 disables caching without disabling solving
+        let mut off = Coordinator::with_cache_cap(0);
+        let a = off.solve(&g, &req(10));
+        let b = off.solve(&g, &req(10));
+        assert!(a.solution.is_some() && !b.from_cache);
+        assert_eq!(off.cache_len(), 0);
     }
 
     #[test]

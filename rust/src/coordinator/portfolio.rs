@@ -112,6 +112,10 @@ struct Shared {
     /// canonical-order member) contributes its rung and phase spend;
     /// every member contributes absorbed failures
     degradation: Mutex<Degradation>,
+    /// per-request resilience counters: this race's lock recoveries and
+    /// member panics, never another in-flight request's (the serving
+    /// tier runs many races concurrently)
+    rec: events::Recorder,
     proved: AtomicBool,
     started: Instant,
 }
@@ -121,11 +125,16 @@ struct Shared {
 /// single statements, so a panic while holding the lock leaves no
 /// broken invariant — and one crashed member must degrade to a member
 /// failure, never abort the race for everyone. Recoveries are counted
-/// in the global resilience events so they surface in stats instead of
-/// passing silently.
-fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+/// against the race's [`events::Recorder`] (which also bumps the
+/// process-global diagnostics) so they surface in *this request's*
+/// stats instead of passing silently or leaking into a concurrent
+/// solve's.
+fn lock_recover<'a, T>(
+    m: &'a Mutex<T>,
+    rec: &events::Recorder,
+) -> std::sync::MutexGuard<'a, T> {
     m.lock().unwrap_or_else(|p| {
-        events::note_lock_recovery();
+        rec.note_lock_recovery();
         p.into_inner()
     })
 }
@@ -134,11 +143,12 @@ impl Shared {
     /// Publish a member's validated solution into the shared best +
     /// merged trace (strict improvements only).
     fn publish(&self, sol: &RematSolution) {
-        let mut best = lock_recover(&self.best);
+        let mut best = lock_recover(&self.best, &self.rec);
         let improved =
             best.as_ref().map(|b| sol.eval.duration < b.eval.duration).unwrap_or(true);
         if improved {
-            lock_recover(&self.trace).push((self.started.elapsed(), sol.eval.duration));
+            lock_recover(&self.trace, &self.rec)
+                .push((self.started.elapsed(), sol.eval.duration));
             *best = Some(sol.clone());
         }
     }
@@ -153,7 +163,7 @@ impl Shared {
     /// `proved` flag — without this, the response could claim
     /// optimality for a solution no proof covers.
     fn decide(&self, proven: Option<u64>) {
-        let best = lock_recover(&self.best);
+        let best = lock_recover(&self.best, &self.rec);
         let current = best.as_ref().map(|b| b.eval.duration);
         let covered = match (proven, current) {
             // optimality proof at exactly the shared best
@@ -184,7 +194,6 @@ pub fn solve_portfolio(
     let threads = cfg.effective_threads();
     let base_order =
         order.unwrap_or_else(|| topological_order(graph).expect("DAG required"));
-    let ev0 = events::snapshot();
     let shared = Shared {
         incumbent: Arc::new(Incumbent::new()),
         best: Mutex::new(None),
@@ -193,6 +202,7 @@ pub fn solve_portfolio(
         // member 0 runs chronologically (see `member_strategy`), so that
         // is the race's baseline rung until member 0 reports otherwise
         degradation: Mutex::new(Degradation::clean(Rung::Chronological)),
+        rec: events::Recorder::new(),
         proved: AtomicBool::new(false),
         started: Instant::now(),
     };
@@ -220,7 +230,7 @@ pub fn solve_portfolio(
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     #[cfg(any(test, feature = "failpoints"))]
                     if crate::util::failpoint::hit("portfolio.member").is_some() {
-                        lock_recover(&shared.degradation).note_failure(format!(
+                        lock_recover(&shared.degradation, &shared.rec).note_failure(format!(
                             "failpoint 'portfolio.member': member {m} suppressed at startup"
                         ));
                         return;
@@ -232,8 +242,8 @@ pub fn solve_portfolio(
                     }
                 }));
                 if let Err(p) = r {
-                    events::note_member_panic();
-                    lock_recover(&shared.degradation).note_failure(format!(
+                    shared.rec.note_member_panic();
+                    lock_recover(&shared.degradation, &shared.rec).note_failure(format!(
                         "portfolio member {m} panicked: {}",
                         crate::util::panic_note(p.as_ref())
                     ));
@@ -243,6 +253,10 @@ pub fn solve_portfolio(
     });
 
     let report = watchdog.stop();
+    // exact per-request attribution: this race's own recorder plus its
+    // own watchdog's kill count — never a concurrent solve's (the old
+    // global snapshot/delta absorption spanned overlapping windows)
+    let local_events = shared.rec.local();
     let Shared { best, trace, stats, degradation, proved, .. } = shared;
     let best = best.into_inner().unwrap_or_else(|p| p.into_inner());
     let mut trace = trace.into_inner().unwrap_or_else(|p| p.into_inner());
@@ -252,7 +266,8 @@ pub fn solve_portfolio(
         degradation.note_failure(format!("watchdog: {}", reason.as_str()));
     }
     let mut stats = stats.into_inner().unwrap_or_else(|p| p.into_inner());
-    stats.absorb_events(&events::snapshot().delta_since(&ev0));
+    stats.absorb_events(&local_events);
+    stats.watchdog_kills += u64::from(report.kills);
     SolveResponse {
         error: best
             .is_none()
@@ -331,12 +346,12 @@ fn run_moccasin_member(
         ..Default::default()
     };
     let out = solver.solve_with(graph, budget, Some(order), |sol| shared.publish(sol));
-    lock_recover(&shared.stats).merge(&out.stats);
+    lock_recover(&shared.stats, &shared.rec).merge(&out.stats);
     // fold degradation provenance: member 0 is the canonical member, so
     // its rung and phase spend describe the race; every member's
     // absorbed failures and retries are worth surfacing
     {
-        let mut deg = lock_recover(&shared.degradation);
+        let mut deg = lock_recover(&shared.degradation, &shared.rec);
         if member == 0 {
             deg.rung = out.degradation.rung;
             deg.spend = out.degradation.spend;
@@ -376,14 +391,14 @@ fn run_checkmate_member(
     });
     match result {
         Ok(res) => {
-            lock_recover(&shared.stats).merge(&res.stats);
+            lock_recover(&shared.stats, &shared.rec).merge(&res.stats);
             if res.proved_optimal {
                 shared.decide(Some(res.solution.eval.duration));
             }
         }
         // a failed attempt still did kernel work worth counting
         Err(checkmate::CheckmateError::NoSolution { stats }) => {
-            lock_recover(&shared.stats).merge(&stats);
+            lock_recover(&shared.stats, &shared.rec).merge(&stats);
         }
         Err(_) => {}
     }

@@ -139,9 +139,12 @@ fn monitor(inc: &Incumbent, cfg: WatchdogConfig, stop: &AtomicBool) -> WatchdogR
     let mut beaten = false;
     while !stop.load(Ordering::Acquire) {
         std::thread::sleep(cfg.poll);
-        if stop.load(Ordering::Acquire) || report.kills > 0 || inc.is_cancelled() {
-            // killed already (sticky flag) or the race is over: nothing
-            // left to watch, just wait for the stop signal
+        if stop.load(Ordering::Acquire) || report.kills > 0 || inc.should_stop() {
+            // killed already (sticky flag), the race is over, or a
+            // serving-tier controller preempted the solve — a preempted
+            // solve stops beating *by design*, and turning that into a
+            // stall kill would relabel a wanted best-so-far answer as a
+            // watchdog casualty. Nothing left to watch; wait for stop.
             continue;
         }
         let now = Instant::now();

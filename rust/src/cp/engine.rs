@@ -576,9 +576,13 @@ impl PropagationEngine {
         if self.ticks & (PULSE_EVERY - 1) != 0 {
             return false;
         }
+        // `should_stop` folds in both cancellation (watchdog / proof
+        // race) and serving-tier preemption, so a `Preempt` control
+        // signal interrupts a solve wedged *inside* one fixpoint at the
+        // same cadence a watchdog kill would.
         if let Some(p) = &self.pulse {
             p.beat();
-            if p.is_cancelled() {
+            if p.should_stop() {
                 return true;
             }
         }

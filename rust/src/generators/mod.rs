@@ -61,6 +61,24 @@ pub fn paper_graph(name: &str) -> Option<Graph> {
     })
 }
 
+/// Resolve a graph *spec* as accepted by the CLI and the serving wire
+/// format: a named paper instance (see [`paper_graph`]) or
+/// `rl:n:m:seed` for an ad-hoc random layered graph. `None` for
+/// anything else.
+pub fn graph_from_spec(spec: &str) -> Option<Graph> {
+    if let Some(g) = paper_graph(spec) {
+        return Some(g);
+    }
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() == 4 && parts[0] == "rl" {
+        let n = parts[1].parse().ok()?;
+        let m = parts[2].parse().ok()?;
+        let s = parts[3].parse().ok()?;
+        return Some(random_layered(spec, n, m, s));
+    }
+    None
+}
+
 /// All paper instance names in Table 2/3 order.
 pub const PAPER_GRAPHS: [&str; 10] =
     ["G1", "G2", "G3", "G4", "RW1", "RW2", "RW3", "RW4", "CM1", "CM2"];

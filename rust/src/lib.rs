@@ -30,6 +30,10 @@
 //!   ([`coordinator::Backend::Portfolio`]), and the batched
 //!   [`coordinator::Coordinator::solve_many`] used for parallel budget
 //!   sweeps.
+//! * **serve** — solver-as-a-service: an admission-controlled request
+//!   queue in front of interruptible worker sessions, streaming anytime
+//!   incumbents and shedding overload with structured answers (NDJSON
+//!   over a Unix socket via `moccasin serve`).
 //! * **bench** — harness regenerating every table and figure of the paper.
 //!
 //! See `README.md` for the quickstart and the paper-to-module map, and
@@ -64,3 +68,4 @@ pub mod executor;
 pub mod runtime;
 pub mod bench;
 pub mod coordinator;
+pub mod serve;

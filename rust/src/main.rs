@@ -8,8 +8,11 @@
 //!           [--disjunctive on|off] [--stall-ms MS] [--rss-limit-kb KB] [--verbose]
 //!   sweep   --graph <name|rl:n:m:seed> [--fracs 95,90,...] [--threads N]
 //!           [--time-limit S] [--compare-serial]
-//!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|ablation-c|
-//!           ablation-topo|all> [--time-limit S] [--quick] [--xl]
+//!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|serve-json|
+//!           ablation-c|ablation-topo|all> [--time-limit S] [--quick] [--xl]
+//!           [--socket PATH]
+//!   serve   [--socket PATH] [--workers N] [--queue-cap N] [--cache-cap N]
+//!           [--deadline-ms MS] [--stall-ms MS]   (NDJSON over a Unix socket)
 //!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`
 //!           and a build with `--features pjrt`)
 //!
@@ -18,7 +21,7 @@
 use moccasin::bench;
 use moccasin::coordinator::{Backend, Coordinator, SolveRequest};
 use moccasin::executor::{train_with_remat, TrainConfig};
-use moccasin::generators::{paper_graph, random_layered};
+use moccasin::generators::graph_from_spec;
 use moccasin::graph::{topological_order, Graph};
 use moccasin::cp::{FilteringMode, ProfileMode, SearchStrategy};
 use moccasin::presolve::{PresolveConfig, PresolveLevel};
@@ -30,15 +33,7 @@ fn flag_val(args: &[String], name: &str) -> Option<String> {
 }
 
 fn parse_graph(spec: &str) -> Option<Graph> {
-    if let Some(g) = paper_graph(spec) {
-        return Some(g);
-    }
-    let parts: Vec<&str> = spec.split(':').collect();
-    if parts.len() == 4 && parts[0] == "rl" {
-        let (n, m, s) = (parts[1].parse().ok()?, parts[2].parse().ok()?, parts[3].parse().ok()?);
-        return Some(random_layered(spec, n, m, s));
-    }
-    None
+    graph_from_spec(spec)
 }
 
 fn graph_or_exit(args: &[String]) -> (String, Graph) {
@@ -352,6 +347,10 @@ fn main() {
                 Some("sweep") => bench::sweep_parallel(time_limit, quick),
                 Some("solver-json") => bench::bench_solver_json(time_limit, quick, search),
                 Some("large-json") => bench::bench_large_json(time_limit, quick, xl),
+                Some("serve-json") => {
+                    let socket = flag_val(&args, "--socket").map(std::path::PathBuf::from);
+                    bench::bench_serve_json(quick, socket.as_deref())
+                }
                 Some("ablation-c") => bench::ablation_c(time_limit),
                 Some("ablation-topo") => bench::ablation_topo(),
                 Some("all") | None => bench::run_all(time_limit, quick, search),
@@ -363,6 +362,55 @@ fn main() {
             if let Err(e) = r {
                 eprintln!("bench failed: {e}");
                 std::process::exit(1);
+            }
+        }
+        Some("serve") => {
+            #[cfg(unix)]
+            {
+                let socket = std::path::PathBuf::from(
+                    flag_val(&args, "--socket").unwrap_or_else(|| "moccasin.sock".into()),
+                );
+                let cfg = moccasin::serve::ServeConfig {
+                    workers: flag_val(&args, "--workers")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(0),
+                    queue_cap: flag_val(&args, "--queue-cap")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(64),
+                    cache_cap: flag_val(&args, "--cache-cap")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(moccasin::coordinator::DEFAULT_CACHE_CAP),
+                    default_deadline: Duration::from_millis(
+                        flag_val(&args, "--deadline-ms")
+                            .and_then(|s| s.parse().ok())
+                            .unwrap_or(30_000),
+                    ),
+                    stall_ms: flag_val(&args, "--stall-ms").and_then(|s| s.parse().ok()),
+                };
+                let workers = cfg.effective_workers();
+                match moccasin::serve::server::Server::bind(&socket, cfg) {
+                    Ok(server) => {
+                        println!(
+                            "serving on {} ({workers} workers); NDJSON submits like \
+                             {{\"graph\":\"G1\",\"budget_frac\":0.9}} — try `nc -U {}`",
+                            socket.display(),
+                            socket.display()
+                        );
+                        if let Err(e) = server.serve() {
+                            eprintln!("serve failed: {e}");
+                            std::process::exit(1);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("could not bind {}: {e}", socket.display());
+                        std::process::exit(1);
+                    }
+                }
+            }
+            #[cfg(not(unix))]
+            {
+                eprintln!("serve requires a unix platform (unix-domain socket transport)");
+                std::process::exit(2);
             }
         }
         Some("train") => {
@@ -391,7 +439,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: moccasin <solve|sweep|bench|train> [options]\n\
+                "usage: moccasin <solve|sweep|bench|serve|train> [options]\n\
                    solve --graph <G1..G4|RW1..RW4|CM1|CM2|L1..L4|rl:n:m:seed> \
                  [--budget-frac F] \
                  [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
@@ -402,7 +450,10 @@ fn main() {
                    sweep --graph <spec> [--fracs 95,90,...] [--threads N] [--time-limit S] \
                  [--search chronological|learned] [--compare-serial]\n\
                    bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|\
-                 ablation-c|ablation-topo|all> [--time-limit S] [--quick] [--xl]\n\
+                 serve-json|ablation-c|ablation-topo|all> [--time-limit S] [--quick] \
+                 [--xl] [--socket PATH]\n\
+                   serve [--socket PATH] [--workers N] [--queue-cap N] [--cache-cap N] \
+                 [--deadline-ms MS] [--stall-ms MS]\n\
                    train [--steps N] [--budget-frac F]"
             );
             std::process::exit(2);

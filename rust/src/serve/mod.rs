@@ -1,0 +1,921 @@
+//! Solver-as-a-service: an admission-controlled request queue in front
+//! of a fixed pool of interruptible solver sessions.
+//!
+//! The coordinator ([`crate::coordinator`]) answers one caller at a
+//! time; a compiler fleet talks to a long-running daemon instead. This
+//! module is that daemon's core, independent of any transport:
+//!
+//! * **Admission control** — [`SolverService::submit`] never blocks and
+//!   never silently drops. A request that cannot be served within its
+//!   deadline — queue at capacity, or the estimated wait (backlog ×
+//!   recent solve time / workers) already exceeding the deadline — is
+//!   answered immediately with a structured [`Terminal::Overloaded`].
+//! * **Interruptible sessions** — every accepted job owns a shared
+//!   [`Incumbent`]; typed [`ControlSignal`]s act on it directly:
+//!   `Cancel` trips the cancellation flag, `Preempt` trips the
+//!   preemption flag (the solve yields its best-so-far at the next
+//!   cooperative poll — the propagation engine's in-fixpoint heartbeat
+//!   tick), and `TightenBound` publishes an external bound the branch &
+//!   bound prunes against mid-solve.
+//! * **Streaming anytime results** — every improving incumbent is
+//!   emitted as a [`ServeEvent::Incumbent`] over the caller's channel
+//!   while the solve is still running, so a client can act on a good
+//!   schedule before the proof lands.
+//! * **Worker-death recovery** — a session that panics (or is killed by
+//!   its per-session watchdog) takes its worker thread down; the pool
+//!   respawns a replacement, the request is retried exactly once on a
+//!   fresh worker (front of queue, deterministic jittered backoff), and
+//!   the retried response carries the first attempt's failure in its
+//!   [`Degradation`](crate::moccasin::Degradation) provenance.
+//! * **Exactly one terminal** — whatever happens (solved, degraded,
+//!   preempted, cancelled, shed, expired in queue, failed), each
+//!   submitted job receives exactly one [`ServeEvent::Terminal`],
+//!   arbitrated by a compare-and-swap on the job handle. No hangs, no
+//!   drops, no duplicate terminals — regression-tested under fault
+//!   injection by `rust/tests/resilience.rs`.
+//!
+//! Wire transport (NDJSON over a Unix socket) lives in [`wire`] and
+//! [`server`]; the `bench serve-json` load generator drives either the
+//! in-process service or a live socket.
+
+pub mod json;
+mod queue;
+#[cfg(unix)]
+pub mod server;
+pub mod wire;
+mod worker;
+
+pub(crate) use queue::JobHandle;
+use queue::QueuedJob;
+
+use crate::coordinator::{CacheKey, SolveResponse, DEFAULT_CACHE_CAP};
+use crate::cp::SearchStrategy;
+use crate::graph::Graph;
+use crate::presolve::PresolveConfig;
+use crate::util::{Incumbent, LruCache};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Identifies one submitted request for control signals and events.
+pub type JobId = u64;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker sessions solving concurrently. `0` = auto: available
+    /// parallelism capped at 4.
+    pub workers: usize,
+    /// Queued (not yet dispatched) request cap; a submit beyond it is
+    /// shed with [`Terminal::Overloaded`].
+    pub queue_cap: usize,
+    /// Schedule-cache capacity shared across all requests (entries;
+    /// `0` disables caching). Only clean, completed solves are cached —
+    /// never preempted, killed, retried or panicked ones.
+    pub cache_cap: usize,
+    /// Deadline applied by the wire layer when a request carries none.
+    pub default_deadline: Duration,
+    /// Per-session watchdog heartbeat-stall override in milliseconds
+    /// (`None` = derived from the request deadline).
+    pub stall_ms: Option<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 0,
+            queue_cap: 64,
+            cache_cap: DEFAULT_CACHE_CAP,
+            default_deadline: Duration::from_secs(30),
+            stall_ms: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve `workers == 0` to the machine's parallelism, capped at 4.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers != 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(1, 4)
+    }
+}
+
+/// One solve request as the service sees it (the wire layer resolves
+/// graph specs and budget fractions into this).
+#[derive(Clone)]
+pub struct ServeRequest {
+    /// The compute graph (shared — the service never copies it).
+    pub graph: Arc<Graph>,
+    /// Memory budget `M`.
+    pub budget: u64,
+    /// Max retention intervals per node (the paper's `C`).
+    pub c: usize,
+    /// End-to-end latency budget: queue wait plus solve. A request
+    /// whose deadline passes while still queued is answered with
+    /// [`Terminal::Expired`] without ever being dispatched.
+    pub deadline: Duration,
+    /// CP kernel search strategy.
+    pub search: SearchStrategy,
+    /// Root presolve configuration.
+    pub presolve: PresolveConfig,
+}
+
+impl ServeRequest {
+    /// A request with the library defaults (`C = 2`, 30 s deadline,
+    /// default search/presolve).
+    pub fn new(graph: Arc<Graph>, budget: u64) -> Self {
+        ServeRequest {
+            graph,
+            budget,
+            c: 2,
+            deadline: Duration::from_secs(30),
+            search: SearchStrategy::default(),
+            presolve: PresolveConfig::default(),
+        }
+    }
+}
+
+/// Typed control signals acting on an in-flight (or queued) job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlSignal {
+    /// Stop at the next cooperative poll and return the best incumbent
+    /// found so far ([`Terminal::Preempted`]). A still-queued job is
+    /// answered immediately (with nothing computed).
+    Preempt,
+    /// Publish an external upper bound on the objective; the session's
+    /// branch & bound prunes against it from the next poll on. Does not
+    /// stop the solve.
+    TightenBound(u64),
+    /// Abandon the job: the result is no longer wanted
+    /// ([`Terminal::Cancelled`]).
+    Cancel,
+}
+
+/// Events streamed to the submitter over its channel. Every job
+/// receives exactly one [`ServeEvent::Terminal`]; all other events are
+/// progress.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// The job passed admission and is waiting for a worker.
+    Queued {
+        /// The job.
+        job: JobId,
+        /// Number of requests ahead of it in the queue at admission.
+        position: usize,
+    },
+    /// A worker session started solving (attempt 0, or 1 for the single
+    /// post-death retry).
+    Started {
+        /// The job.
+        job: JobId,
+        /// 0 = first attempt, 1 = retry after a worker death.
+        attempt: u32,
+    },
+    /// An improving incumbent, streamed while the solve is running.
+    Incumbent {
+        /// The job.
+        job: JobId,
+        /// Total schedule duration of the new best.
+        duration: u64,
+        /// Its peak memory footprint.
+        peak_mem: u64,
+        /// Its rematerialization count.
+        remats: usize,
+        /// Wall-clock since the session started.
+        elapsed: Duration,
+    },
+    /// The worker session died (panic — injected or real). If
+    /// `will_retry`, the job goes back to the front of the queue for
+    /// one retry on a fresh worker; otherwise a terminal follows.
+    Died {
+        /// The job.
+        job: JobId,
+        /// The attempt that died.
+        attempt: u32,
+        /// The panic note.
+        note: String,
+        /// Whether the single retry is still available (and the job's
+        /// deadline has not passed).
+        will_retry: bool,
+    },
+    /// The job's single terminal outcome.
+    Terminal {
+        /// The job.
+        job: JobId,
+        /// What happened.
+        outcome: Terminal,
+    },
+}
+
+/// The one terminal outcome every submitted job receives.
+#[derive(Debug, Clone)]
+pub enum Terminal {
+    /// The solve completed (possibly degraded — see
+    /// `response.degradation` — and possibly with no feasible
+    /// schedule, in which case `solution` is `None`).
+    Solved(Box<SolveResponse>),
+    /// A [`ControlSignal::Preempt`] stopped the solve; the response
+    /// carries the best-so-far (which may be nothing for a job
+    /// preempted while still queued).
+    Preempted(Box<SolveResponse>),
+    /// A [`ControlSignal::Cancel`] abandoned the job.
+    Cancelled,
+    /// Admission control shed the request — the structured "try later /
+    /// elsewhere" answer, never a silent drop.
+    Overloaded {
+        /// Queue length observed at admission.
+        queue_len: usize,
+        /// Estimated wait at admission, in milliseconds.
+        est_wait_ms: u64,
+        /// Which admission rule shed it.
+        reason: String,
+    },
+    /// The deadline passed while the request was still queued; it was
+    /// never dispatched.
+    Expired {
+        /// How long it had been queued, in milliseconds.
+        waited_ms: u64,
+    },
+    /// The solve failed structurally (both attempts panicked, or the
+    /// service shut down with the job still queued).
+    Failed {
+        /// Diagnostic.
+        error: String,
+    },
+}
+
+impl Terminal {
+    /// Stable lower-case class name (wire format / bench JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Terminal::Solved(_) => "solved",
+            Terminal::Preempted(_) => "preempted",
+            Terminal::Cancelled => "cancelled",
+            Terminal::Overloaded { .. } => "overloaded",
+            Terminal::Expired { .. } => "expired",
+            Terminal::Failed { .. } => "failed",
+        }
+    }
+}
+
+/// Monotone service counters (atomics — read with
+/// [`ServiceStats::snapshot`]).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    solved: AtomicU64,
+    preempted: AtomicU64,
+    cancelled: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    failed: AtomicU64,
+    retries: AtomicU64,
+    worker_deaths: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+}
+
+/// A point-in-time reading of the service counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStatsSnapshot {
+    /// Requests submitted (all of them — every one gets a terminal).
+    pub submitted: u64,
+    /// Requests that passed admission into the queue.
+    pub admitted: u64,
+    /// [`Terminal::Solved`] outcomes delivered.
+    pub solved: u64,
+    /// [`Terminal::Preempted`] outcomes delivered.
+    pub preempted: u64,
+    /// [`Terminal::Cancelled`] outcomes delivered.
+    pub cancelled: u64,
+    /// [`Terminal::Overloaded`] outcomes delivered (admission sheds).
+    pub shed: u64,
+    /// [`Terminal::Expired`] outcomes delivered (died in queue).
+    pub expired: u64,
+    /// [`Terminal::Failed`] outcomes delivered.
+    pub failed: u64,
+    /// Post-death retries dispatched (at most one per job).
+    pub retries: u64,
+    /// Worker threads lost to a panicking session (each respawned).
+    pub worker_deaths: u64,
+    /// Requests answered from the shared schedule cache.
+    pub cache_hits: u64,
+    /// Requests that had to solve.
+    pub cache_misses: u64,
+}
+
+impl ServiceStats {
+    fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Read all counters.
+    pub fn snapshot(&self) -> ServiceStatsSnapshot {
+        ServiceStatsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            solved: self.solved.load(Ordering::Relaxed),
+            preempted: self.preempted.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            worker_deaths: self.worker_deaths.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shared state behind the service facade (workers, the sweeper and the
+/// facade all hold an `Arc` of this).
+pub(crate) struct ServiceInner {
+    pub(crate) cfg: ServeConfig,
+    /// Admitted, not-yet-dispatched jobs. Lock order: `queue` before
+    /// `jobs` (never the reverse).
+    pub(crate) queue: Mutex<VecDeque<QueuedJob>>,
+    /// Signalled on enqueue / control / shutdown.
+    pub(crate) available: Condvar,
+    /// Every live (un-terminated) job, for control-signal routing.
+    pub(crate) jobs: Mutex<HashMap<JobId, Arc<JobHandle>>>,
+    pub(crate) next_id: AtomicU64,
+    /// Sessions currently solving (for the admission wait estimate).
+    pub(crate) in_flight: AtomicUsize,
+    pub(crate) shutdown: AtomicBool,
+    /// Bounded schedule cache shared across requests (keyed exactly
+    /// like the coordinator's, with the Moccasin backend).
+    pub(crate) cache: Mutex<LruCache<CacheKey, SolveResponse>>,
+    /// Exponential moving average of recent session wall-clock, in ms
+    /// (0 = no completed solve yet; admission then relies on the queue
+    /// cap alone).
+    pub(crate) ema_solve_ms: AtomicU64,
+    pub(crate) stats: ServiceStats,
+    /// Worker (and sweeper) join handles; dying workers push their
+    /// replacement's handle here before exiting.
+    pub(crate) worker_handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Recover a poisoned service lock: every guarded structure here (a
+/// `VecDeque`, a `HashMap`, an `LruCache`) is only ever mutated in
+/// single statements, so poisoning carries no broken invariant — and
+/// the service must keep draining its queue even after a worker panic.
+pub(crate) fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl ServiceInner {
+    /// Deliver `outcome` as the job's terminal iff no other path beat
+    /// us to it, bump the matching counter, and unregister the job.
+    pub(crate) fn finish(&self, handle: &JobHandle, outcome: Terminal) -> bool {
+        let class = match &outcome {
+            Terminal::Solved(_) => &self.stats.solved,
+            Terminal::Preempted(_) => &self.stats.preempted,
+            Terminal::Cancelled => &self.stats.cancelled,
+            Terminal::Overloaded { .. } => &self.stats.shed,
+            Terminal::Expired { .. } => &self.stats.expired,
+            Terminal::Failed { .. } => &self.stats.failed,
+        };
+        if handle.finish(outcome) {
+            ServiceStats::bump(class);
+            lock(&self.jobs).remove(&handle.id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fold one completed session's wall-clock into the admission EMA
+    /// (`ema := (3·ema + sample) / 4`, seeded by the first sample).
+    pub(crate) fn update_ema(&self, sample_ms: u64) {
+        let sample = sample_ms.max(1);
+        let _ = self.ema_solve_ms.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+            Some(if old == 0 { sample } else { (3 * old + sample) / 4 })
+        });
+    }
+}
+
+/// Which admission rule rejects a request, if any. Pure function of the
+/// observed service state so the policy is unit-testable.
+pub(crate) fn admission_verdict(
+    queue_len: usize,
+    in_flight: usize,
+    workers: usize,
+    ema_solve_ms: u64,
+    deadline_ms: u64,
+    queue_cap: usize,
+) -> Result<(), (u64, String)> {
+    if queue_len >= queue_cap {
+        let est = (queue_len + in_flight) as u64 * ema_solve_ms / workers.max(1) as u64;
+        return Err((est, format!("queue full ({queue_len}/{queue_cap})")));
+    }
+    // backlog ahead of this request, spread across the pool, paced by
+    // the recent per-solve wall clock; no completed solve yet (ema 0)
+    // means no estimate — admit and let the queue cap govern
+    let est = (queue_len + in_flight) as u64 * ema_solve_ms / workers.max(1) as u64;
+    if ema_solve_ms > 0 && est > deadline_ms {
+        return Err((
+            est,
+            format!("estimated wait {est}ms exceeds deadline {deadline_ms}ms"),
+        ));
+    }
+    Ok(())
+}
+
+/// The solver service: a fixed pool of interruptible worker sessions
+/// behind an admission-controlled queue. See the module docs for the
+/// full contract.
+pub struct SolverService {
+    inner: Arc<ServiceInner>,
+    joined: AtomicBool,
+}
+
+impl SolverService {
+    /// Start the service: spawns the worker pool and the queue sweeper.
+    pub fn start(cfg: ServeConfig) -> Self {
+        let workers = cfg.effective_workers();
+        let cache_cap = cfg.cache_cap;
+        let inner = Arc::new(ServiceInner {
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            jobs: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+            in_flight: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            cache: Mutex::new(LruCache::new(cache_cap)),
+            ema_solve_ms: AtomicU64::new(0),
+            stats: ServiceStats::default(),
+            worker_handles: Mutex::new(Vec::new()),
+        });
+        for idx in 0..workers {
+            worker::spawn_worker(&inner, idx);
+        }
+        queue::spawn_sweeper(&inner);
+        SolverService { inner, joined: AtomicBool::new(false) }
+    }
+
+    /// Submit a request. Never blocks on solving; every outcome —
+    /// including an admission shed — arrives on `events` as exactly one
+    /// [`ServeEvent::Terminal`]. The returned [`JobId`] addresses
+    /// [`SolverService::control`].
+    pub fn submit(&self, req: ServeRequest, events: mpsc::Sender<ServeEvent>) -> JobId {
+        let inner = &self.inner;
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let handle = JobHandle::new(id, events);
+        ServiceStats::bump(&inner.stats.submitted);
+        lock(&inner.jobs).insert(id, Arc::clone(&handle));
+        if inner.shutdown.load(Ordering::Acquire) {
+            inner.finish(
+                &handle,
+                Terminal::Overloaded {
+                    queue_len: 0,
+                    est_wait_ms: 0,
+                    reason: "service shutting down".to_string(),
+                },
+            );
+            return id;
+        }
+        let deadline_ms = req.deadline.as_millis() as u64;
+        let mut q = lock(&inner.queue);
+        // re-check under the queue lock: shutdown drains the queue while
+        // holding it, and a job enqueued after that drain would never be
+        // dispatched (and so never answered)
+        if inner.shutdown.load(Ordering::Acquire) {
+            drop(q);
+            inner.finish(
+                &handle,
+                Terminal::Overloaded {
+                    queue_len: 0,
+                    est_wait_ms: 0,
+                    reason: "service shutting down".to_string(),
+                },
+            );
+            return id;
+        }
+        let verdict = admission_verdict(
+            q.len(),
+            inner.in_flight.load(Ordering::Relaxed),
+            inner.cfg.effective_workers(),
+            inner.ema_solve_ms.load(Ordering::Relaxed),
+            deadline_ms,
+            inner.cfg.queue_cap,
+        );
+        match verdict {
+            Err((est_wait_ms, reason)) => {
+                let queue_len = q.len();
+                drop(q);
+                inner.finish(
+                    &handle,
+                    Terminal::Overloaded { queue_len, est_wait_ms, reason },
+                );
+            }
+            Ok(()) => {
+                let position = q.len();
+                q.push_back(QueuedJob {
+                    handle: Arc::clone(&handle),
+                    req,
+                    attempt: 0,
+                    enqueued: Instant::now(),
+                    prior_failure: None,
+                });
+                drop(q);
+                ServiceStats::bump(&inner.stats.admitted);
+                handle.emit(ServeEvent::Queued { job: id, position });
+                inner.available.notify_one();
+            }
+        }
+        id
+    }
+
+    /// Send a control signal to a job. Returns `false` if the job is
+    /// unknown or already terminated (signals are then no-ops — the
+    /// terminal has been delivered).
+    pub fn control(&self, job: JobId, signal: ControlSignal) -> bool {
+        let handle = lock(&self.inner.jobs).get(&job).cloned();
+        let Some(handle) = handle else {
+            return false;
+        };
+        match signal {
+            ControlSignal::Preempt => handle.incumbent.preempt(),
+            ControlSignal::TightenBound(bound) => {
+                handle.incumbent.record(bound);
+            }
+            ControlSignal::Cancel => {
+                handle.client_cancel.store(true, Ordering::Release);
+                handle.incumbent.cancel();
+            }
+        }
+        // wake idle workers / the sweeper so queued jobs resolve their
+        // cancel or preempt promptly
+        self.inner.available.notify_all();
+        true
+    }
+
+    /// Read the service counters.
+    pub fn stats(&self) -> ServiceStatsSnapshot {
+        self.inner.stats.snapshot()
+    }
+
+    /// Queued (admitted, not yet dispatched) request count.
+    pub fn queue_len(&self) -> usize {
+        lock(&self.inner.queue).len()
+    }
+
+    /// Schedule-cache observability: (hits, misses, evictions, len) of
+    /// the shared cache — lookup counters, not the request-level
+    /// `cache_hits` in [`ServiceStats`].
+    pub fn cache_counters(&self) -> (u64, u64, u64, usize) {
+        let c = lock(&self.inner.cache);
+        (c.hits, c.misses, c.evictions, c.len())
+    }
+
+    /// Stop the service: reject new submits, preempt in-flight
+    /// sessions (they terminate with their best-so-far), fail still
+    /// queued jobs structurally, and join every worker. Idempotent.
+    pub fn shutdown(&self) {
+        if self.joined.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let inner = &self.inner;
+        inner.shutdown.store(true, Ordering::Release);
+        // fail everything still queued (each gets its one terminal)
+        let drained: Vec<QueuedJob> = lock(&inner.queue).drain(..).collect();
+        for job in drained {
+            inner.finish(
+                &job.handle,
+                Terminal::Failed { error: "service shut down before dispatch".to_string() },
+            );
+        }
+        // ask in-flight sessions to yield their best-so-far
+        for handle in lock(&inner.jobs).values() {
+            handle.incumbent.preempt();
+        }
+        inner.available.notify_all();
+        // dying workers may push replacement handles while we join, so
+        // drain until the vector stays empty
+        loop {
+            let h = lock(&inner.worker_handles).pop();
+            match h {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+impl Drop for SolverService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::failpoint::{self, FailAction};
+
+    /// The serve failpoint sites are process-global; tests that arm
+    /// them (or depend on them *not* being armed) serialize here
+    /// (`pub(crate)` so the socket test in [`server`] joins the queue).
+    static GATE: Mutex<()> = Mutex::new(());
+
+    pub(crate) fn serial() -> std::sync::MutexGuard<'static, ()> {
+        GATE.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Chain + long skip with heavy source: optimum duration 6 at
+    /// budget 10 (one remat of node 0), solved in milliseconds.
+    fn chain() -> Arc<Graph> {
+        Arc::new(
+            Graph::from_edges(
+                "c",
+                5,
+                &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+                vec![1; 5],
+                vec![5, 4, 4, 4, 1],
+            )
+            .unwrap(),
+        )
+    }
+
+    fn drain_until_terminal(rx: &mpsc::Receiver<ServeEvent>) -> (Vec<ServeEvent>, Terminal) {
+        let mut progress = Vec::new();
+        loop {
+            let ev = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("terminal must arrive (no hangs)");
+            match ev {
+                ServeEvent::Terminal { outcome, .. } => return (progress, outcome),
+                other => progress.push(other),
+            }
+        }
+    }
+
+    #[test]
+    fn submit_solves_streams_and_caches() {
+        let _g = serial();
+        failpoint::reset();
+        let svc = SolverService::start(ServeConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let (tx, rx) = mpsc::channel();
+        let req = ServeRequest {
+            deadline: Duration::from_secs(20),
+            ..ServeRequest::new(chain(), 10)
+        };
+        let id = svc.submit(req.clone(), tx);
+        let (progress, outcome) = drain_until_terminal(&rx);
+        assert!(progress
+            .iter()
+            .any(|e| matches!(e, ServeEvent::Queued { job, .. } if *job == id)));
+        assert!(progress
+            .iter()
+            .any(|e| matches!(e, ServeEvent::Started { attempt: 0, .. })));
+        assert!(
+            progress.iter().any(|e| matches!(e, ServeEvent::Incumbent { .. })),
+            "anytime incumbents must stream"
+        );
+        let resp = match outcome {
+            Terminal::Solved(resp) => resp,
+            other => panic!("expected solved, got {}", other.name()),
+        };
+        assert_eq!(resp.solution.as_ref().unwrap().eval.duration, 6);
+        assert!(resp.proved_optimal);
+        assert!(!resp.from_cache);
+        // second submit: same key, served from the shared cache
+        let (tx2, rx2) = mpsc::channel();
+        svc.submit(req, tx2);
+        let (_, outcome2) = drain_until_terminal(&rx2);
+        let Terminal::Solved(resp2) = outcome2 else {
+            panic!("expected cached solved");
+        };
+        assert!(resp2.from_cache);
+        let s = svc.stats();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.solved, 2);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+        svc.shutdown();
+        // exactly one terminal each: channels are drained and closed
+        assert!(rx.try_recv().is_err());
+        assert!(rx2.try_recv().is_err());
+    }
+
+    #[test]
+    fn queue_full_sheds_with_structured_overload() {
+        let _g = serial();
+        failpoint::reset();
+        // slow the (single) worker down deterministically so the queue
+        // backs up: the session sleeps 300 ms before solving
+        failpoint::arm("serve.session", FailAction::Delay(300), Some(1));
+        let svc = SolverService::start(ServeConfig {
+            workers: 1,
+            queue_cap: 1,
+            ..Default::default()
+        });
+        let (tx_a, rx_a) = mpsc::channel();
+        let mk = || ServeRequest {
+            deadline: Duration::from_secs(20),
+            ..ServeRequest::new(chain(), 10)
+        };
+        svc.submit(mk(), tx_a);
+        // let the worker take A into its delayed session
+        std::thread::sleep(Duration::from_millis(100));
+        let (tx_b, rx_b) = mpsc::channel();
+        svc.submit(mk(), tx_b); // queued (1/1)
+        let (tx_c, rx_c) = mpsc::channel();
+        svc.submit(mk(), tx_c); // queue full -> shed
+        let (_, outcome_c) = drain_until_terminal(&rx_c);
+        match outcome_c {
+            Terminal::Overloaded { queue_len, reason, .. } => {
+                assert_eq!(queue_len, 1);
+                assert!(reason.contains("queue full"), "reason: {reason}");
+            }
+            other => panic!("expected overloaded, got {}", other.name()),
+        }
+        // the shed request never blocks the admitted ones
+        let (_, oa) = drain_until_terminal(&rx_a);
+        let (_, ob) = drain_until_terminal(&rx_b);
+        assert!(matches!(oa, Terminal::Solved(_)));
+        assert!(matches!(ob, Terminal::Solved(_)));
+        assert_eq!(svc.stats().shed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_expires_in_queue_without_dispatch() {
+        let _g = serial();
+        failpoint::reset();
+        // occupy the single worker long enough for B's deadline to pass
+        failpoint::arm("serve.session", FailAction::Delay(400), Some(1));
+        let svc = SolverService::start(ServeConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let (tx_a, rx_a) = mpsc::channel();
+        svc.submit(
+            ServeRequest { deadline: Duration::from_secs(20), ..ServeRequest::new(chain(), 10) },
+            tx_a,
+        );
+        std::thread::sleep(Duration::from_millis(100));
+        let (tx_b, rx_b) = mpsc::channel();
+        let t0 = Instant::now();
+        svc.submit(
+            ServeRequest {
+                deadline: Duration::from_millis(50),
+                ..ServeRequest::new(chain(), 10)
+            },
+            tx_b,
+        );
+        let (progress_b, outcome_b) = drain_until_terminal(&rx_b);
+        // the sweeper answers the expired request while the worker is
+        // still busy — long before A's 400 ms session ends
+        assert!(
+            t0.elapsed() < Duration::from_millis(300),
+            "expiry must not wait for the busy worker"
+        );
+        match outcome_b {
+            Terminal::Expired { waited_ms } => assert!(waited_ms >= 50),
+            other => panic!("expected expired, got {}", other.name()),
+        }
+        assert!(
+            !progress_b.iter().any(|e| matches!(e, ServeEvent::Started { .. })),
+            "an expired request must never be dispatched"
+        );
+        let (_, oa) = drain_until_terminal(&rx_a);
+        assert!(matches!(oa, Terminal::Solved(_)));
+        assert_eq!(svc.stats().expired, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn preempt_yields_best_so_far_and_cancel_is_distinct() {
+        let _g = serial();
+        failpoint::reset();
+        failpoint::arm("serve.session", FailAction::Delay(250), Some(2));
+        let svc = SolverService::start(ServeConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let mk = || ServeRequest {
+            deadline: Duration::from_secs(20),
+            ..ServeRequest::new(chain(), 10)
+        };
+        // A: preempted mid-session (during the injected delay)
+        let (tx_a, rx_a) = mpsc::channel();
+        let a = svc.submit(mk(), tx_a);
+        // B: cancelled mid-session
+        let (tx_b, rx_b) = mpsc::channel();
+        let b = svc.submit(mk(), tx_b);
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(svc.control(a, ControlSignal::Preempt));
+        assert!(svc.control(b, ControlSignal::Cancel));
+        let (_, oa) = drain_until_terminal(&rx_a);
+        let (_, ob) = drain_until_terminal(&rx_b);
+        assert!(
+            matches!(oa, Terminal::Preempted(_)),
+            "preempt must label the outcome preempted, got {}",
+            oa.name()
+        );
+        assert!(
+            matches!(ob, Terminal::Cancelled),
+            "cancel must label the outcome cancelled, got {}",
+            ob.name()
+        );
+        // signals to finished or unknown jobs are rejected
+        assert!(!svc.control(a, ControlSignal::Preempt));
+        assert!(!svc.control(9999, ControlSignal::Cancel));
+        // preempted/cancelled responses are never cached: a re-submit
+        // of the same request solves cleanly
+        let (tx_c, rx_c) = mpsc::channel();
+        svc.submit(mk(), tx_c);
+        let (_, oc) = drain_until_terminal(&rx_c);
+        let Terminal::Solved(resp) = oc else { panic!("expected solved") };
+        assert!(!resp.from_cache);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tighten_bound_reaches_a_live_job() {
+        let _g = serial();
+        failpoint::reset();
+        failpoint::arm("serve.session", FailAction::Delay(150), Some(1));
+        let svc = SolverService::start(ServeConfig { workers: 1, ..Default::default() });
+        let (tx, rx) = mpsc::channel();
+        let id = svc.submit(
+            ServeRequest { deadline: Duration::from_secs(20), ..ServeRequest::new(chain(), 10) },
+            tx,
+        );
+        std::thread::sleep(Duration::from_millis(50));
+        // an external bound at the known optimum: the session prunes
+        // against it and still terminates cleanly
+        assert!(svc.control(id, ControlSignal::TightenBound(6)));
+        let (_, outcome) = drain_until_terminal(&rx);
+        assert!(matches!(outcome, Terminal::Solved(_)), "got {}", outcome.name());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_policy_is_exact() {
+        // pure-function checks of the two shed rules
+        assert!(admission_verdict(0, 0, 2, 0, 1000, 8).is_ok());
+        // queue at cap
+        let err = admission_verdict(8, 2, 2, 100, 10_000, 8).unwrap_err();
+        assert!(err.1.contains("queue full"));
+        // estimated wait beyond deadline: (4+2)/2 * 400ms = 1200ms > 1s
+        let err = admission_verdict(4, 2, 2, 400, 1000, 8).unwrap_err();
+        assert_eq!(err.0, 1200);
+        assert!(err.1.contains("exceeds deadline"));
+        // same backlog, roomier deadline: admitted
+        assert!(admission_verdict(4, 2, 2, 400, 2000, 8).is_ok());
+        // no solve-time estimate yet: only the cap governs
+        assert!(admission_verdict(7, 7, 1, 0, 1, 8).is_ok());
+    }
+
+    #[test]
+    fn shutdown_fails_queued_jobs_structurally() {
+        let _g = serial();
+        failpoint::reset();
+        failpoint::arm("serve.session", FailAction::Delay(300), Some(1));
+        let svc = SolverService::start(ServeConfig { workers: 1, ..Default::default() });
+        let mk = || ServeRequest {
+            deadline: Duration::from_secs(20),
+            ..ServeRequest::new(chain(), 10)
+        };
+        let (tx_a, rx_a) = mpsc::channel();
+        svc.submit(mk(), tx_a);
+        std::thread::sleep(Duration::from_millis(80));
+        let (tx_b, rx_b) = mpsc::channel();
+        svc.submit(mk(), tx_b);
+        svc.shutdown();
+        // in-flight A is preempted to its best-so-far; queued B fails
+        // structurally; post-shutdown submits shed — all terminal, none
+        // hang
+        let (_, oa) = drain_until_terminal(&rx_a);
+        assert!(
+            matches!(oa, Terminal::Preempted(_) | Terminal::Solved(_)),
+            "got {}",
+            oa.name()
+        );
+        let (_, ob) = drain_until_terminal(&rx_b);
+        assert!(matches!(ob, Terminal::Failed { .. }), "got {}", ob.name());
+        let (tx_c, rx_c) = mpsc::channel();
+        svc.submit(mk(), tx_c);
+        let (_, oc) = drain_until_terminal(&rx_c);
+        match oc {
+            Terminal::Overloaded { reason, .. } => {
+                assert!(reason.contains("shutting down"))
+            }
+            other => panic!("expected overloaded, got {}", other.name()),
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Job handles, the admitted-request queue, and the expiry sweeper.
+//!
+//! The exactly-one-terminal invariant is arbitrated here: every path
+//! that wants to deliver a job's outcome goes through
+//! [`JobHandle::finish`], a compare-and-swap that exactly one caller
+//! wins. Losers (e.g. a sweeper expiring a job the instant a worker
+//! dequeues it) see `false` and drop their outcome.
+
+use super::{lock, JobId, ServeEvent, ServeRequest, ServiceInner, Terminal};
+use crate::util::Incumbent;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-job shared state: the interrupt surface (`incumbent`), the
+/// terminal arbiter (`finished`) and the event channel back to the
+/// submitter.
+pub(crate) struct JobHandle {
+    /// The job's id (key into [`ServiceInner::jobs`]).
+    pub(crate) id: JobId,
+    /// Shared incumbent: control signals flip its flags, the session's
+    /// deadline/watchdog/engine poll them, and `TightenBound` records
+    /// into it.
+    pub(crate) incumbent: Arc<Incumbent>,
+    /// Set by [`ControlSignal::Cancel`](super::ControlSignal::Cancel)
+    /// before `incumbent.cancel()`, so a stopped session can tell a
+    /// client cancel from any other cancellation source.
+    pub(crate) client_cancel: AtomicBool,
+    /// Terminal-delivered flag (the CAS arbiter).
+    finished: AtomicBool,
+    /// Event channel to the submitter. `mpsc::Sender` is not `Sync` on
+    /// all toolchains in range, so it sits behind a mutex; sends are
+    /// brief and never block (the channel is unbounded).
+    events: Mutex<mpsc::Sender<ServeEvent>>,
+}
+
+impl JobHandle {
+    pub(crate) fn new(id: JobId, events: mpsc::Sender<ServeEvent>) -> Arc<Self> {
+        Arc::new(JobHandle {
+            id,
+            incumbent: Arc::new(Incumbent::new()),
+            client_cancel: AtomicBool::new(false),
+            finished: AtomicBool::new(false),
+            events: Mutex::new(events),
+        })
+    }
+
+    /// Best-effort progress event: a submitter that dropped its
+    /// receiver just stops listening — never an error.
+    pub(crate) fn emit(&self, ev: ServeEvent) {
+        let _ = lock(&self.events).send(ev);
+    }
+
+    /// Deliver the terminal iff this caller wins the race. Exactly one
+    /// `finish` per job returns `true`.
+    pub(crate) fn finish(&self, outcome: Terminal) -> bool {
+        if self
+            .finished
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        self.emit(ServeEvent::Terminal { job: self.id, outcome });
+        true
+    }
+
+    pub(crate) fn is_finished(&self) -> bool {
+        self.finished.load(Ordering::Acquire)
+    }
+}
+
+/// An admitted request waiting for (or re-queued to) a worker.
+pub(crate) struct QueuedJob {
+    pub(crate) handle: Arc<JobHandle>,
+    pub(crate) req: ServeRequest,
+    /// 0 = first attempt; 1 = the single post-death retry.
+    pub(crate) attempt: u32,
+    /// Original admission time — kept across a retry, so the deadline
+    /// spans queue wait + all attempts.
+    pub(crate) enqueued: Instant,
+    /// The first attempt's panic note, threaded into the retried
+    /// response's degradation provenance.
+    pub(crate) prior_failure: Option<String>,
+}
+
+impl QueuedJob {
+    /// Deadline remaining from the original admission instant.
+    pub(crate) fn remaining(&self) -> Duration {
+        self.req.deadline.saturating_sub(self.enqueued.elapsed())
+    }
+}
+
+/// Resolve a queued job that must not be dispatched: client-cancelled,
+/// preempted while queued (nothing computed — an empty best-so-far), or
+/// past its deadline. `None` means "dispatch it".
+fn undispatchable_outcome(job: &QueuedJob) -> Option<Terminal> {
+    if job.handle.client_cancel.load(Ordering::Acquire) {
+        return Some(Terminal::Cancelled);
+    }
+    if job.handle.incumbent.is_preempted() {
+        return Some(Terminal::Preempted(Box::new(super::worker::empty_response(
+            "preempted while queued",
+        ))));
+    }
+    if job.remaining().is_zero() {
+        return Some(Terminal::Expired { waited_ms: job.enqueued.elapsed().as_millis() as u64 });
+    }
+    None
+}
+
+/// Finish every queued job that became undispatchable; retain the rest.
+/// Shared by the sweeper (promptness while all workers are busy) and
+/// the dispatch path (exactness at the pop).
+fn sweep_queue(inner: &ServiceInner) {
+    let mut finish: Vec<(Arc<JobHandle>, Terminal)> = Vec::new();
+    {
+        let mut q = lock(&inner.queue);
+        q.retain(|job| match undispatchable_outcome(job) {
+            Some(outcome) => {
+                finish.push((Arc::clone(&job.handle), outcome));
+                false
+            }
+            None => true,
+        });
+    }
+    // deliver outside the queue lock (finish takes the jobs lock;
+    // queue-before-jobs is the crate's lock order, but event sends
+    // don't need either)
+    for (handle, outcome) in finish {
+        inner.finish(&handle, outcome);
+    }
+}
+
+/// Block until a dispatchable job is available (or shutdown). Expired /
+/// cancelled / queue-preempted jobs encountered on the way are answered
+/// here, never returned.
+pub(crate) fn next_job(inner: &ServiceInner) -> Option<QueuedJob> {
+    loop {
+        if inner.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        sweep_queue(inner);
+        {
+            let mut q = lock(&inner.queue);
+            if let Some(job) = q.pop_front() {
+                return Some(job);
+            }
+            // short timed wait: re-check shutdown and queue expiries
+            // even if a notify is lost to a poisoned wake
+            let (guard, _) = inner
+                .available
+                .wait_timeout(q, Duration::from_millis(20))
+                .unwrap_or_else(|p| p.into_inner());
+            drop(guard);
+        }
+    }
+}
+
+/// The expiry sweeper: answers jobs whose deadline passes (or that are
+/// cancelled/preempted) *while still queued*, promptly, even when every
+/// worker is busy — a queued request must never wait for a worker just
+/// to learn it expired.
+pub(crate) fn spawn_sweeper(inner: &Arc<ServiceInner>) {
+    let owned = Arc::clone(inner);
+    let h = std::thread::Builder::new()
+        .name("moccasin-serve-sweep".to_string())
+        .spawn(move || loop {
+            if owned.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            sweep_queue(&owned);
+            std::thread::sleep(Duration::from_millis(10));
+        })
+        .expect("spawn sweeper thread");
+    lock(&inner.worker_handles).push(h);
+}

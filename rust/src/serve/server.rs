@@ -1,0 +1,198 @@
+//! The serve daemon: NDJSON over a Unix-domain socket.
+//!
+//! One process-wide [`SolverService`] (worker pool, admission queue,
+//! shared schedule cache) serves every connection; each connection gets
+//! a reader thread (parses submit/control lines) and a writer that
+//! streams the connection's job events back, tagged for correlation.
+//! The transport is deliberately line-oriented so `nc -U` is a usable
+//! client.
+
+use super::wire::{self, WireMsg};
+use super::{ServeConfig, ServeEvent, SolverService};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::{mpsc, Arc, Mutex};
+
+/// A bound daemon, ready to accept connections.
+pub struct Server {
+    listener: UnixListener,
+    svc: Arc<SolverService>,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    /// Bind the daemon socket (replacing a stale socket file from a
+    /// previous run) and start the solver service.
+    pub fn bind(path: &Path, cfg: ServeConfig) -> std::io::Result<Server> {
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)?;
+        let svc = Arc::new(SolverService::start(cfg.clone()));
+        Ok(Server { listener, svc, cfg })
+    }
+
+    /// Accept loop: one handler thread per connection. Runs until the
+    /// process is killed (the daemon has no in-band shutdown; `SIGTERM`
+    /// it and restart — requests in flight get their terminals from the
+    /// service's own shutdown path only on clean `drop`).
+    pub fn serve(&self) -> std::io::Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let svc = Arc::clone(&self.svc);
+            let cfg = self.cfg.clone();
+            let _ = std::thread::Builder::new()
+                .name("moccasin-serve-conn".to_string())
+                .spawn(move || handle_connection(stream, &svc, &cfg));
+        }
+        Ok(())
+    }
+
+    /// The underlying service (tests and embedders).
+    pub fn service(&self) -> &SolverService {
+        &self.svc
+    }
+}
+
+/// Write one NDJSON line (shared by the event pump and the reader's
+/// error answers; the mutex keeps lines whole).
+fn send_line(out: &Mutex<BufWriter<UnixStream>>, line: &str) -> bool {
+    let mut w = out.lock().unwrap_or_else(|p| p.into_inner());
+    w.write_all(line.as_bytes()).and_then(|_| w.write_all(b"\n")).and_then(|_| w.flush()).is_ok()
+}
+
+fn handle_connection(stream: UnixStream, svc: &SolverService, cfg: &ServeConfig) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let out = Arc::new(Mutex::new(BufWriter::new(write_half)));
+    // job -> client tag, shared by the reader (registers under the lock
+    // spanning submit, so the writer can never encode a job's event
+    // before its tag is visible) and the event pump (reads at encode)
+    let tags: Arc<Mutex<HashMap<u64, Option<String>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let (tx, rx) = mpsc::channel::<ServeEvent>();
+
+    let pump = {
+        let out = Arc::clone(&out);
+        let tags = Arc::clone(&tags);
+        std::thread::Builder::new()
+            .name("moccasin-serve-pump".to_string())
+            .spawn(move || {
+                // ends when every sender is gone: the reader's handle on
+                // EOF plus each job's handle at its terminal
+                while let Ok(ev) = rx.recv() {
+                    let mut map = tags.lock().unwrap_or_else(|p| p.into_inner());
+                    let (job, terminal) = match &ev {
+                        ServeEvent::Queued { job, .. }
+                        | ServeEvent::Started { job, .. }
+                        | ServeEvent::Incumbent { job, .. }
+                        | ServeEvent::Died { job, .. } => (*job, false),
+                        ServeEvent::Terminal { job, .. } => (*job, true),
+                    };
+                    let tag = map.get(&job).cloned().flatten();
+                    if terminal {
+                        map.remove(&job);
+                    }
+                    drop(map);
+                    let line = wire::encode_event(&ev, tag.as_deref());
+                    if !send_line(&out, &line) {
+                        return; // client hung up
+                    }
+                }
+            })
+            .expect("spawn event pump")
+    };
+
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match wire::parse_line(&line, cfg) {
+            Ok(WireMsg::Submit { req, tag }) => {
+                let mut map = tags.lock().unwrap_or_else(|p| p.into_inner());
+                let id = svc.submit(req, tx.clone());
+                map.insert(id, tag);
+            }
+            Ok(WireMsg::Control { job, signal }) => {
+                if !svc.control(job, signal) {
+                    let _ = send_line(
+                        &out,
+                        &wire::encode_error(&format!(
+                            "control for unknown or finished job {job}"
+                        )),
+                    );
+                }
+            }
+            Err(e) => {
+                if !send_line(&out, &wire::encode_error(&e)) {
+                    break;
+                }
+            }
+        }
+    }
+    // EOF (or error): stop feeding the pump; it drains in-flight jobs'
+    // events and exits once their terminals have been delivered
+    drop(tx);
+    let _ = pump.join();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::json::Json;
+    use std::time::Duration;
+
+    #[test]
+    fn socket_round_trip_submit_stream_terminal() {
+        let _g = crate::serve::tests::serial();
+        crate::util::failpoint::reset();
+        let path = std::env::temp_dir()
+            .join(format!("moccasin-serve-test-{}.sock", std::process::id()));
+        let server = Server::bind(
+            &path,
+            ServeConfig { workers: 1, ..Default::default() },
+        )
+        .expect("bind");
+        let listener = server;
+        std::thread::spawn(move || {
+            let _ = listener.serve();
+        });
+
+        let mut stream = UnixStream::connect(&path).expect("connect");
+        stream
+            .write_all(
+                b"{\"graph\":\"rl:40:90:7\",\"budget_frac\":0.85,\"deadline_ms\":20000,\
+                  \"tag\":\"rt\"}\nnot json\n",
+            )
+            .unwrap();
+        stream.flush().unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let mut saw_error = false;
+        let mut saw_incumbent = false;
+        let mut outcome = None;
+        for line in reader.lines() {
+            let line = line.expect("daemon must answer before the read timeout");
+            let v = crate::serve::json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            match v.get("event").and_then(Json::as_str) {
+                Some("error") => saw_error = true,
+                Some("incumbent") => {
+                    saw_incumbent = true;
+                    assert_eq!(v.get("tag").and_then(Json::as_str), Some("rt"));
+                }
+                Some("terminal") => {
+                    assert_eq!(v.get("tag").and_then(Json::as_str), Some("rt"));
+                    outcome = v.get("outcome").and_then(Json::as_str).map(str::to_string);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        assert!(saw_error, "malformed line must be answered with an error event");
+        assert!(saw_incumbent, "incumbents must stream over the wire");
+        assert_eq!(outcome.as_deref(), Some("solved"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

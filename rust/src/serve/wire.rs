@@ -1,0 +1,379 @@
+//! NDJSON wire format: one JSON object per line, both directions.
+//!
+//! Client → server lines are either **submits** or **controls**:
+//!
+//! ```json
+//! {"graph":"G1","budget_frac":0.9,"c":2,"deadline_ms":30000,"search":"learned","tag":"a"}
+//! {"graph":"rl:100:236:1","budget":12345}
+//! {"control":"preempt","job":3}
+//! {"control":"tighten","job":3,"bound":420}
+//! {"control":"cancel","job":3}
+//! ```
+//!
+//! `graph` is a spec accepted by
+//! [`graph_from_spec`](crate::generators::graph_from_spec); the budget
+//! is absolute (`budget`) or a fraction of the graph's no-remat peak
+//! (`budget_frac`). `tag` is an opaque client string echoed on every
+//! event for that job.
+//!
+//! Server → client lines mirror [`ServeEvent`]: `{"event":"queued"|
+//! "started"|"incumbent"|"died"|"terminal", "job":N, "tag":...}` plus
+//! per-event fields; terminal lines carry `"outcome"` (`solved`,
+//! `preempted`, `cancelled`, `overloaded`, `expired`, `failed`) and,
+//! for solved/preempted, the schedule summary and degradation
+//! provenance. A malformed request line is answered with
+//! `{"event":"error","error":...}` — the wire never goes silent.
+
+use super::json::{escape, parse, Json};
+use super::{ControlSignal, JobId, ServeConfig, ServeEvent, ServeRequest, Terminal};
+use crate::cp::SearchStrategy;
+use crate::generators::graph_from_spec;
+use crate::graph::topological_order;
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A parsed client line.
+pub enum WireMsg {
+    /// Submit a solve; `tag` is echoed on every event for the job.
+    Submit {
+        /// The resolved request.
+        req: ServeRequest,
+        /// Opaque client correlation string.
+        tag: Option<String>,
+    },
+    /// A control signal for an earlier job.
+    Control {
+        /// The job (as returned in that job's `queued` event / assigned
+        /// by submit order).
+        job: JobId,
+        /// The signal.
+        signal: ControlSignal,
+    },
+}
+
+/// Parse one client line. Errors are human-readable and meant to be
+/// echoed back as an `error` event.
+pub fn parse_line(line: &str, cfg: &ServeConfig) -> Result<WireMsg, String> {
+    let v = parse(line)?;
+    if v.get("control").is_some() {
+        return parse_control(&v);
+    }
+    parse_submit(&v, cfg)
+}
+
+fn parse_control(v: &Json) -> Result<WireMsg, String> {
+    let kind = v
+        .get("control")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "\"control\" must be a string".to_string())?;
+    let job = v
+        .get("job")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "control needs a \"job\" id".to_string())?;
+    let signal = match kind {
+        "preempt" => ControlSignal::Preempt,
+        "cancel" => ControlSignal::Cancel,
+        "tighten" => {
+            let bound = v
+                .get("bound")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| "tighten needs a \"bound\"".to_string())?;
+            ControlSignal::TightenBound(bound)
+        }
+        other => return Err(format!("unknown control {other:?} (use preempt|tighten|cancel)")),
+    };
+    Ok(WireMsg::Control { job, signal })
+}
+
+fn parse_submit(v: &Json, cfg: &ServeConfig) -> Result<WireMsg, String> {
+    let spec = v
+        .get("graph")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "submit needs a \"graph\" spec".to_string())?;
+    let graph = graph_from_spec(spec)
+        .ok_or_else(|| format!("unknown graph spec {spec:?} (named instance or rl:n:m:seed)"))?;
+    let budget = match (v.get("budget").and_then(Json::as_u64), v.get("budget_frac")) {
+        (Some(b), _) => b,
+        (None, Some(f)) => {
+            let frac = f.as_f64().ok_or_else(|| "\"budget_frac\" must be a number".to_string())?;
+            if !(frac.is_finite() && frac > 0.0) {
+                return Err(format!("budget_frac {frac} out of range"));
+            }
+            let order = topological_order(&graph).ok_or_else(|| "graph has a cycle".to_string())?;
+            let peak = graph
+                .peak_mem_no_remat(&order)
+                .map_err(|e| format!("cannot evaluate no-remat peak: {e:?}"))?;
+            (peak as f64 * frac) as u64
+        }
+        (None, None) => return Err("submit needs \"budget\" or \"budget_frac\"".to_string()),
+    };
+    let c = match v.get("c") {
+        None => 2,
+        Some(c) => c.as_u64().ok_or_else(|| "\"c\" must be a nonnegative integer".to_string())?
+            as usize,
+    };
+    let deadline = match v.get("deadline_ms") {
+        None => cfg.default_deadline,
+        Some(d) => Duration::from_millis(
+            d.as_u64().ok_or_else(|| "\"deadline_ms\" must be a nonnegative integer".to_string())?,
+        ),
+    };
+    let search = match v.get("search").and_then(Json::as_str) {
+        None => SearchStrategy::default(),
+        Some(name) => SearchStrategy::parse(name)
+            .ok_or_else(|| format!("unknown search {name:?} (use chronological|learned)"))?,
+    };
+    let tag = v.get("tag").and_then(Json::as_str).map(str::to_string);
+    Ok(WireMsg::Submit {
+        req: ServeRequest {
+            graph: Arc::new(graph),
+            budget,
+            c,
+            deadline,
+            search,
+            presolve: Default::default(),
+        },
+        tag,
+    })
+}
+
+fn push_tag(out: &mut String, tag: Option<&str>) {
+    if let Some(t) = tag {
+        let _ = write!(out, ",\"tag\":\"{}\"", escape(t));
+    }
+}
+
+/// Encode an error answer for a malformed client line.
+pub fn encode_error(err: &str) -> String {
+    format!("{{\"event\":\"error\",\"error\":\"{}\"}}", escape(err))
+}
+
+/// Encode one event as a single NDJSON line (no trailing newline).
+pub fn encode_event(ev: &ServeEvent, tag: Option<&str>) -> String {
+    let mut out = String::with_capacity(96);
+    match ev {
+        ServeEvent::Queued { job, position } => {
+            let _ = write!(out, "{{\"event\":\"queued\",\"job\":{job},\"position\":{position}");
+        }
+        ServeEvent::Started { job, attempt } => {
+            let _ = write!(out, "{{\"event\":\"started\",\"job\":{job},\"attempt\":{attempt}");
+        }
+        ServeEvent::Incumbent { job, duration, peak_mem, remats, elapsed } => {
+            let _ = write!(
+                out,
+                "{{\"event\":\"incumbent\",\"job\":{job},\"duration\":{duration},\
+                 \"peak_mem\":{peak_mem},\"remats\":{remats},\"elapsed_ms\":{}",
+                elapsed.as_millis()
+            );
+        }
+        ServeEvent::Died { job, attempt, note, will_retry } => {
+            let _ = write!(
+                out,
+                "{{\"event\":\"died\",\"job\":{job},\"attempt\":{attempt},\
+                 \"note\":\"{}\",\"will_retry\":{will_retry}",
+                escape(note)
+            );
+        }
+        ServeEvent::Terminal { job, outcome } => {
+            let _ = write!(
+                out,
+                "{{\"event\":\"terminal\",\"job\":{job},\"outcome\":\"{}\"",
+                outcome.name()
+            );
+            encode_terminal(&mut out, outcome);
+        }
+    }
+    push_tag(&mut out, tag);
+    out.push('}');
+    out
+}
+
+fn encode_terminal(out: &mut String, outcome: &Terminal) {
+    match outcome {
+        Terminal::Solved(resp) | Terminal::Preempted(resp) => {
+            match resp.solution.as_ref() {
+                Some(sol) => {
+                    let _ = write!(
+                        out,
+                        ",\"duration\":{},\"peak_mem\":{},\"remats\":{}",
+                        sol.eval.duration, sol.eval.peak_mem, sol.eval.remat_count
+                    );
+                }
+                None => out.push_str(",\"duration\":null"),
+            }
+            let _ = write!(
+                out,
+                ",\"proved_optimal\":{},\"from_cache\":{},\"improvements\":{}",
+                resp.proved_optimal,
+                resp.from_cache,
+                resp.trace.len()
+            );
+            if let Some(err) = &resp.error {
+                let _ = write!(out, ",\"error\":\"{}\"", escape(err));
+            }
+            if let Some(deg) = &resp.degradation {
+                // to_json emits a complete object — embed it verbatim
+                let _ = write!(out, ",\"degradation\":{}", deg.to_json());
+            }
+        }
+        Terminal::Cancelled => {}
+        Terminal::Overloaded { queue_len, est_wait_ms, reason } => {
+            let _ = write!(
+                out,
+                ",\"queue_len\":{queue_len},\"est_wait_ms\":{est_wait_ms},\"reason\":\"{}\"",
+                escape(reason)
+            );
+        }
+        Terminal::Expired { waited_ms } => {
+            let _ = write!(out, ",\"waited_ms\":{waited_ms}");
+        }
+        Terminal::Failed { error } => {
+            let _ = write!(out, ",\"error\":\"{}\"", escape(error));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    #[test]
+    fn parses_submit_with_absolute_budget() {
+        let msg = parse_line(
+            r#"{"graph":"rl:100:236:1","budget":500,"c":3,"deadline_ms":1500,"tag":"x"}"#,
+            &cfg(),
+        )
+        .unwrap();
+        let WireMsg::Submit { req, tag } = msg else { panic!("expected submit") };
+        assert_eq!(req.budget, 500);
+        assert_eq!(req.c, 3);
+        assert_eq!(req.deadline, Duration::from_millis(1500));
+        assert_eq!(tag.as_deref(), Some("x"));
+        assert_eq!(req.graph.n(), 100);
+    }
+
+    #[test]
+    fn parses_submit_with_budget_fraction_of_no_remat_peak() {
+        let msg = parse_line(r#"{"graph":"G1","budget_frac":0.9}"#, &cfg()).unwrap();
+        let WireMsg::Submit { req, tag } = msg else { panic!("expected submit") };
+        assert!(tag.is_none());
+        assert_eq!(req.deadline, cfg().default_deadline);
+        let order = topological_order(&req.graph).unwrap();
+        let peak = req.graph.peak_mem_no_remat(&order).unwrap();
+        assert_eq!(req.budget, (peak as f64 * 0.9) as u64);
+        assert!(req.budget < peak);
+    }
+
+    #[test]
+    fn parses_controls() {
+        let m = parse_line(r#"{"control":"preempt","job":7}"#, &cfg()).unwrap();
+        assert!(
+            matches!(m, WireMsg::Control { job: 7, signal: ControlSignal::Preempt })
+        );
+        let m = parse_line(r#"{"control":"tighten","job":7,"bound":42}"#, &cfg()).unwrap();
+        assert!(matches!(
+            m,
+            WireMsg::Control { job: 7, signal: ControlSignal::TightenBound(42) }
+        ));
+        let m = parse_line(r#"{"control":"cancel","job":9}"#, &cfg()).unwrap();
+        assert!(matches!(m, WireMsg::Control { job: 9, signal: ControlSignal::Cancel }));
+    }
+
+    #[test]
+    fn malformed_lines_give_structured_errors() {
+        for (line, needle) in [
+            ("{", "expected"),
+            (r#"{"budget":1}"#, "graph"),
+            (r#"{"graph":"nope","budget":1}"#, "unknown graph spec"),
+            (r#"{"graph":"G1"}"#, "budget"),
+            (r#"{"graph":"G1","budget_frac":-0.5}"#, "out of range"),
+            (r#"{"control":"explode","job":1}"#, "unknown control"),
+            (r#"{"control":"tighten","job":1}"#, "bound"),
+            (r#"{"graph":"G1","budget":1,"search":"psychic"}"#, "unknown search"),
+        ] {
+            let err = parse_line(line, &cfg()).err().unwrap_or_else(|| {
+                panic!("line {line:?} should fail");
+            });
+            assert!(err.contains(needle), "error {err:?} should mention {needle:?}");
+            // every error encodes into a valid single-line event
+            let enc = encode_error(&err);
+            let v = parse(&enc).unwrap();
+            assert_eq!(v.get("event").and_then(Json::as_str), Some("error"));
+            assert!(!enc.contains('\n'));
+        }
+    }
+
+    #[test]
+    fn events_encode_to_single_line_json() {
+        let evs = [
+            ServeEvent::Queued { job: 1, position: 0 },
+            ServeEvent::Started { job: 1, attempt: 0 },
+            ServeEvent::Incumbent {
+                job: 1,
+                duration: 10,
+                peak_mem: 20,
+                remats: 2,
+                elapsed: Duration::from_millis(7),
+            },
+            ServeEvent::Died {
+                job: 1,
+                attempt: 0,
+                note: "boom \"quote\"".to_string(),
+                will_retry: true,
+            },
+            ServeEvent::Terminal { job: 1, outcome: Terminal::Cancelled },
+            ServeEvent::Terminal {
+                job: 2,
+                outcome: Terminal::Overloaded {
+                    queue_len: 5,
+                    est_wait_ms: 900,
+                    reason: "queue full (5/5)".to_string(),
+                },
+            },
+            ServeEvent::Terminal { job: 3, outcome: Terminal::Expired { waited_ms: 60 } },
+            ServeEvent::Terminal {
+                job: 4,
+                outcome: Terminal::Failed { error: "worker died".to_string() },
+            },
+        ];
+        for ev in &evs {
+            let line = encode_event(ev, Some("t-1"));
+            assert!(!line.contains('\n'), "single line: {line}");
+            let v = parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(v.get("tag").and_then(Json::as_str), Some("t-1"));
+            assert!(v.get("event").and_then(Json::as_str).is_some());
+        }
+        // terminal lines carry the outcome class
+        let line = encode_event(
+            &ServeEvent::Terminal { job: 2, outcome: Terminal::Cancelled },
+            None,
+        );
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("outcome").and_then(Json::as_str), Some("cancelled"));
+        assert!(v.get("tag").is_none());
+    }
+
+    #[test]
+    fn solved_terminal_carries_schedule_and_degradation() {
+        use crate::moccasin::{Degradation, Rung};
+        let resp = crate::serve::worker::empty_response("nothing yet");
+        let mut resp = resp;
+        resp.degradation = Some(Degradation::clean(Rung::Learned));
+        let line = encode_event(
+            &ServeEvent::Terminal { job: 9, outcome: Terminal::Solved(Box::new(resp)) },
+            Some("z"),
+        );
+        let v = parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(v.get("outcome").and_then(Json::as_str), Some("solved"));
+        assert!(matches!(v.get("duration"), Some(Json::Null)));
+        assert_eq!(v.get("error").and_then(Json::as_str), Some("nothing yet"));
+        let deg = v.get("degradation").expect("degradation object");
+        assert_eq!(deg.get("rung").and_then(Json::as_str), Some("learned"));
+        assert_eq!(deg.get("clean").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -1,0 +1,261 @@
+//! The worker pool: interruptible solver sessions with death recovery.
+//!
+//! Each worker thread loops `next_job -> cache probe -> session ->
+//! terminal`. The session runs under `catch_unwind`: a panicking solve
+//! (injected via the `serve.worker` failpoint or real) takes the worker
+//! down, which (a) retries the request exactly once on a fresh worker
+//! with the first attempt recorded in its degradation provenance, and
+//! (b) respawns a replacement thread so the pool never shrinks.
+
+use super::{lock, queue, JobHandle, QueuedJob, ServeEvent, ServiceInner, ServiceStats, Terminal};
+use crate::coordinator::{Backend, Coordinator, SolveRequest, SolveResponse};
+use crate::coordinator::{Watchdog, WatchdogConfig};
+use crate::moccasin::MoccasinSolver;
+use crate::util::{events, panic_note, Rng};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A response with nothing computed (a job preempted before dispatch
+/// still owes its caller a well-formed best-so-far).
+pub(crate) fn empty_response(note: &str) -> SolveResponse {
+    SolveResponse {
+        solution: None,
+        trace: Vec::new(),
+        proved_optimal: false,
+        from_cache: false,
+        error: Some(note.to_string()),
+        stats: Default::default(),
+        degradation: None,
+    }
+}
+
+/// The coordinator-shaped request a serve job corresponds to — only
+/// used to derive the shared cache key (Moccasin backend, no explicit
+/// order; `time_limit` is not part of the key).
+fn coord_request(inner: &ServiceInner, job: &QueuedJob) -> SolveRequest {
+    SolveRequest {
+        budget: job.req.budget,
+        c: job.req.c,
+        time_limit: job.req.deadline,
+        backend: Backend::Moccasin,
+        order: None,
+        presolve: job.req.presolve,
+        search: job.req.search,
+        stall_ms: inner.cfg.stall_ms,
+        rss_limit_kb: None,
+    }
+}
+
+/// Spawn worker `idx` (also used to respawn after a death). The handle
+/// is pushed into `worker_handles` for shutdown to join.
+pub(crate) fn spawn_worker(inner: &Arc<ServiceInner>, idx: usize) {
+    let owned = Arc::clone(inner);
+    let h = std::thread::Builder::new()
+        .name(format!("moccasin-serve-{idx}"))
+        .spawn(move || worker_loop(&owned, idx))
+        .expect("spawn serve worker thread");
+    lock(&inner.worker_handles).push(h);
+}
+
+fn worker_loop(inner: &Arc<ServiceInner>, idx: usize) {
+    while let Some(job) = queue::next_job(inner) {
+        if job.handle.is_finished() {
+            continue;
+        }
+        // shared schedule cache: an identical request already solved
+        // cleanly (any submitter, any time) is answered immediately
+        let key = Coordinator::cache_key(&job.req.graph, &coord_request(inner, &job));
+        let cached = lock(&inner.cache).get(&key).cloned();
+        if let Some(mut resp) = cached {
+            resp.from_cache = true;
+            ServiceStats::bump(&inner.stats.cache_hits);
+            inner.finish(&job.handle, Terminal::Solved(Box::new(resp)));
+            continue;
+        }
+        ServiceStats::bump(&inner.stats.cache_misses);
+
+        inner.in_flight.fetch_add(1, Ordering::Relaxed);
+        job.handle.emit(ServeEvent::Started { job: job.handle.id, attempt: job.attempt });
+        let t0 = Instant::now();
+        let result = catch_unwind(AssertUnwindSafe(|| run_session(inner, &job)));
+        inner.in_flight.fetch_sub(1, Ordering::Relaxed);
+
+        match result {
+            Ok((terminal, cacheable)) => {
+                inner.update_ema(t0.elapsed().as_millis() as u64);
+                if cacheable {
+                    if let Terminal::Solved(resp) = &terminal {
+                        lock(&inner.cache).insert(key, (**resp).clone());
+                    }
+                }
+                inner.finish(&job.handle, terminal);
+            }
+            Err(payload) => {
+                // the session tore this thread's stack down: recover
+                // the request, then let the thread die and respawn
+                let note = panic_note(payload.as_ref());
+                ServiceStats::bump(&inner.stats.worker_deaths);
+                events::note_member_panic();
+                let shutting_down = inner.shutdown.load(Ordering::Acquire);
+                let will_retry = job.attempt == 0
+                    && !shutting_down
+                    && !job.handle.incumbent.should_stop()
+                    && !job.remaining().is_zero();
+                job.handle.emit(ServeEvent::Died {
+                    job: job.handle.id,
+                    attempt: job.attempt,
+                    note: note.clone(),
+                    will_retry,
+                });
+                if will_retry {
+                    ServiceStats::bump(&inner.stats.retries);
+                    events::note_member_retry();
+                    // deterministic jittered backoff, as solve_many's
+                    let mut rng = Rng::seed_from_u64(0x5EBE ^ job.handle.id);
+                    std::thread::sleep(Duration::from_millis(5 + rng.next_u64() % 20));
+                    // re-check shutdown UNDER the queue lock: shutdown
+                    // drains the queue while holding it, so a retry
+                    // pushed after that drain would never be dispatched
+                    // and its job would lose its terminal
+                    let mut q = lock(&inner.queue);
+                    if inner.shutdown.load(Ordering::Acquire) {
+                        drop(q);
+                        inner.finish(
+                            &job.handle,
+                            Terminal::Failed {
+                                error: format!(
+                                    "service shut down before retry: {note}"
+                                ),
+                            },
+                        );
+                    } else {
+                        q.push_front(QueuedJob {
+                            handle: Arc::clone(&job.handle),
+                            req: job.req.clone(),
+                            attempt: 1,
+                            enqueued: job.enqueued,
+                            prior_failure: Some(note),
+                        });
+                        drop(q);
+                        inner.available.notify_one();
+                    }
+                } else {
+                    let outcome = death_terminal(&job.handle, job.attempt, &note);
+                    inner.finish(&job.handle, outcome);
+                }
+                if !shutting_down {
+                    spawn_worker(inner, idx);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Terminal for a job whose worker died with no retry left: honor an
+/// outstanding cancel/preempt label, otherwise fail structurally.
+fn death_terminal(handle: &JobHandle, attempt: u32, note: &str) -> Terminal {
+    if handle.client_cancel.load(Ordering::Acquire) {
+        return Terminal::Cancelled;
+    }
+    if handle.incumbent.is_preempted() {
+        return Terminal::Preempted(Box::new(empty_response(&format!(
+            "worker died before preempt completed: {note}"
+        ))));
+    }
+    Terminal::Failed {
+        error: format!("worker died on attempt {attempt} (no retry left): {note}"),
+    }
+}
+
+/// One solver session: watchdog-guarded, interruptible, streaming.
+/// Returns the terminal plus whether the response is cacheable (clean,
+/// first-attempt, unkilled, completed solves only).
+fn run_session(inner: &ServiceInner, job: &QueuedJob) -> (Terminal, bool) {
+    // injected structural failure (Error/Timeout) or death (Panic —
+    // propagates to the worker loop's catch_unwind); compiled out
+    // without cfg(test) / --features failpoints
+    crate::fail_point!(
+        "serve.worker",
+        (
+            Terminal::Failed { error: "failpoint 'serve.worker' fired".to_string() },
+            false,
+        )
+    );
+    let remaining = job.remaining();
+    if remaining.is_zero() {
+        // raced the sweeper at dispatch; answer exactly like it would
+        return (
+            Terminal::Expired { waited_ms: job.enqueued.elapsed().as_millis() as u64 },
+            false,
+        );
+    }
+    let inc = Arc::clone(&job.handle.incumbent);
+    let wd = Watchdog::spawn(
+        Arc::clone(&inc),
+        WatchdogConfig::for_wall(remaining, None, inner.cfg.stall_ms),
+    );
+    // injected stall (Delay): the session holds its worker without
+    // beating the heartbeat — the watchdog (and queue backpressure
+    // tests) see a genuinely stuck session
+    crate::fail_point!("serve.session");
+
+    let solver = MoccasinSolver {
+        c: job.req.c,
+        time_limit: remaining,
+        presolve: job.req.presolve,
+        search: job.req.search,
+        incumbent: Some(Arc::clone(&inc)),
+        ..Default::default()
+    };
+    let session_start = Instant::now();
+    let handle = &job.handle;
+    let out = solver.solve_with(&job.req.graph, job.req.budget, None, |sol| {
+        handle.emit(ServeEvent::Incumbent {
+            job: handle.id,
+            duration: sol.eval.duration,
+            peak_mem: sol.eval.peak_mem,
+            remats: sol.eval.remat_count,
+            elapsed: session_start.elapsed(),
+        });
+    });
+    let report = wd.stop();
+
+    let mut degradation = out.degradation;
+    if let Some(reason) = report.reason {
+        degradation.note_failure(format!("watchdog: {}", reason.as_str()));
+    }
+    if let Some(prior) = &job.prior_failure {
+        degradation.note_failure(format!("worker death on attempt 0: {prior}"));
+        degradation.retries += 1;
+    }
+    let mut stats = out.stats;
+    stats.watchdog_kills += u64::from(report.kills);
+    if job.attempt > 0 {
+        stats.member_panics += 1;
+        stats.member_retries += 1;
+    }
+    let cacheable = job.attempt == 0
+        && report.kills == 0
+        && degradation.is_clean()
+        && (out.best.is_some() || out.proved_optimal);
+    let resp = SolveResponse {
+        solution: out.best,
+        trace: out.trace.iter().map(|p| (p.elapsed, p.duration)).collect(),
+        // a watchdog-killed session cannot claim a proof
+        proved_optimal: out.proved_optimal && report.kills == 0,
+        from_cache: false,
+        error: None,
+        stats,
+        degradation: Some(degradation),
+    };
+    if handle.client_cancel.load(Ordering::Acquire) {
+        (Terminal::Cancelled, false)
+    } else if inc.is_preempted() {
+        (Terminal::Preempted(Box::new(resp)), false)
+    } else {
+        (Terminal::Solved(Box::new(resp)), cacheable)
+    }
+}

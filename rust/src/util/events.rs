@@ -1,18 +1,25 @@
-//! Process-global resilience event counters.
+//! Process-global resilience event counters, plus per-request
+//! [`Recorder`] handles for exact attribution.
 //!
 //! Recovery paths that have no `SearchStats` in scope — poisoned-lock
 //! recovery in the portfolio shared state, watchdog kills from the
 //! coordinator's monitor thread, contained member panics — record here
-//! instead of logging nothing. Callers that *do* own stats take a
-//! [`snapshot`] before the work and fold the delta into their
-//! `SearchStats` afterwards, so the counters surface in
+//! instead of logging nothing, so the counters surface in
 //! `SearchStats::merge` output, `solve --verbose`, and the bench JSONs.
 //!
-//! Counters are monotone for the life of the process; concurrent solves
-//! may attribute each other's events to themselves, which is acceptable
-//! for diagnostics (the process-wide totals stay exact).
+//! The global counters are monotone for the life of the process and are
+//! *process-wide diagnostics only*. Per-solve attribution goes through a
+//! [`Recorder`]: a cloneable handle owned by one request whose `note_*`
+//! methods bump both the request's local counters and the globals.
+//! Before PR 8, solve paths attributed events by taking a global
+//! [`snapshot`] before the work and folding the delta in afterwards —
+//! under the serving tier's concurrent solves, two in-flight requests
+//! would absorb each other's `watchdog_kills`/`member_retries` that way
+//! (both deltas span the same window), so owned counters replaced the
+//! delta absorption everywhere a request is identifiable.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 static LOCK_RECOVERIES: AtomicU64 = AtomicU64::new(0);
 static WATCHDOG_KILLS: AtomicU64 = AtomicU64::new(0);
@@ -76,6 +83,69 @@ pub fn note_member_retry() {
     MEMBER_RETRIES.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Per-request resilience counters: a cloneable handle threaded through
+/// one solve (portfolio shared state, `solve_many` worker, serve
+/// session) whose `note_*` methods record against both this request and
+/// the process-global totals. [`Recorder::local`] reads only what *this
+/// request's* paths recorded, so two in-flight solves can no longer
+/// steal each other's counts the way global snapshot/delta absorption
+/// allowed.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    inner: Arc<RecorderInner>,
+}
+
+#[derive(Debug, Default)]
+struct RecorderInner {
+    lock_recoveries: AtomicU64,
+    watchdog_kills: AtomicU64,
+    member_panics: AtomicU64,
+    member_retries: AtomicU64,
+}
+
+impl Recorder {
+    /// Fresh per-request recorder with zeroed local counters.
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    /// Record recovery of a poisoned mutex against this request.
+    pub fn note_lock_recovery(&self) {
+        self.inner.lock_recoveries.fetch_add(1, Ordering::Relaxed);
+        note_lock_recovery();
+    }
+
+    /// Record a watchdog kill against this request.
+    pub fn note_watchdog_kill(&self) {
+        self.inner.watchdog_kills.fetch_add(1, Ordering::Relaxed);
+        note_watchdog_kill();
+    }
+
+    /// Record a contained member panic against this request.
+    pub fn note_member_panic(&self) {
+        self.inner.member_panics.fetch_add(1, Ordering::Relaxed);
+        note_member_panic();
+    }
+
+    /// Record a retried member failure against this request.
+    pub fn note_member_retry(&self) {
+        self.inner.member_retries.fetch_add(1, Ordering::Relaxed);
+        note_member_retry();
+    }
+
+    /// This request's own counters (never another in-flight request's)
+    /// — fold into `SearchStats` with
+    /// [`SearchStats::absorb_events`](crate::cp::SearchStats::absorb_events).
+    pub fn local(&self) -> EventSnapshot {
+        EventSnapshot {
+            lock_recoveries: self.inner.lock_recoveries.load(Ordering::Relaxed),
+            watchdog_kills: self.inner.watchdog_kills.load(Ordering::Relaxed),
+            member_panics: self.inner.member_panics.load(Ordering::Relaxed),
+            member_retries: self.inner.member_retries.load(Ordering::Relaxed),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +161,35 @@ mod tests {
         // bounds only.
         assert!(d.lock_recoveries >= 1);
         assert!(d.watchdog_kills >= 2);
+    }
+
+    #[test]
+    fn recorders_isolate_concurrent_requests() {
+        // two "in-flight requests": events recorded on one handle must
+        // never appear in the other's local snapshot, even though the
+        // globals see both
+        let a = Recorder::new();
+        let b = Recorder::new();
+        let before = snapshot();
+        a.note_watchdog_kill();
+        a.note_member_retry();
+        b.note_member_panic();
+        let la = a.local();
+        let lb = b.local();
+        assert_eq!(la.watchdog_kills, 1);
+        assert_eq!(la.member_retries, 1);
+        assert_eq!(la.member_panics, 0, "b's panic must not leak into a");
+        assert_eq!(lb.member_panics, 1);
+        assert_eq!(lb.watchdog_kills, 0, "a's kill must not leak into b");
+        let d = snapshot().delta_since(&before);
+        assert!(d.watchdog_kills >= 1 && d.member_panics >= 1 && d.member_retries >= 1);
+    }
+
+    #[test]
+    fn recorder_clones_share_counters() {
+        let a = Recorder::new();
+        let a2 = a.clone();
+        a2.note_lock_recovery();
+        assert_eq!(a.local().lock_recoveries, 1);
     }
 }

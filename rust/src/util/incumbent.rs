@@ -33,6 +33,14 @@ pub struct Incumbent {
     /// its stall threshold concludes the solve is wedged (stuck inside
     /// one propagation fixpoint, blocked on I/O, ...) and cancels it.
     progress: AtomicU64,
+    /// Set when a serving-tier controller asks the solve to *yield*:
+    /// stop at the next cooperative poll and return the best incumbent
+    /// found so far. Unlike [`Incumbent::cancel`] — which means "the
+    /// caller no longer wants any result" — a preempted solve's answer
+    /// is still wanted; the two flags share the same stopping machinery
+    /// ([`Incumbent::should_stop`]) but let the caller label the
+    /// outcome differently.
+    preempted: AtomicBool,
 }
 
 impl Incumbent {
@@ -42,6 +50,7 @@ impl Incumbent {
             best: AtomicU64::new(NONE),
             cancelled: AtomicBool::new(false),
             progress: AtomicU64::new(0),
+            preempted: AtomicBool::new(false),
         }
     }
 
@@ -83,6 +92,27 @@ impl Incumbent {
     pub fn is_cancelled(&self) -> bool {
         self.cancelled.load(Ordering::Acquire)
     }
+
+    /// Ask the solve to yield: stop at the next cooperative poll and
+    /// return its best-so-far incumbent. Sticky, like cancellation.
+    pub fn preempt(&self) {
+        self.preempted.store(true, Ordering::Release);
+    }
+
+    /// Has a controller requested preemption?
+    pub fn is_preempted(&self) -> bool {
+        self.preempted.load(Ordering::Acquire)
+    }
+
+    /// Should the solve stop at its next cooperative poll — either
+    /// because the race was cancelled or because a controller preempted
+    /// it? This is what [`Deadline`](super::Deadline) polls and what
+    /// the propagation engine's in-fixpoint heartbeat tick checks, so
+    /// both signals interrupt a solve within one node batch.
+    #[inline]
+    pub fn should_stop(&self) -> bool {
+        self.is_cancelled() || self.is_preempted()
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +148,20 @@ mod tests {
         inc.beat();
         inc.beat();
         assert_eq!(inc.epoch(), 2);
+    }
+
+    #[test]
+    fn preempt_is_distinct_from_cancel_but_both_stop() {
+        let inc = Incumbent::new();
+        assert!(!inc.should_stop());
+        inc.preempt();
+        assert!(inc.is_preempted());
+        assert!(!inc.is_cancelled(), "preemption must not read as cancellation");
+        assert!(inc.should_stop());
+        let inc2 = Incumbent::new();
+        inc2.cancel();
+        assert!(inc2.should_stop());
+        assert!(!inc2.is_preempted());
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Bounded least-recently-used cache for cross-request schedule reuse.
+//!
+//! The coordinator's (and the serve tier's) schedule cache used to be
+//! an unbounded `HashMap` — fine for one batch, fatal for a
+//! long-running daemon whose key space (graph fingerprint × budget ×
+//! knobs) grows without bound under fleet traffic. [`LruCache`] caps
+//! the entry count and evicts the least-recently-*used* entry on
+//! overflow, tracking hit/miss/evict counters so cache behaviour is
+//! observable in stats and the serve bench.
+//!
+//! Implementation: a `HashMap` from key to `(value, stamp)` plus a
+//! `BTreeMap` from stamp to key ordered by recency (stamps come from a
+//! monotone counter bumped on every touch). Lookup and insert are
+//! O(log n) — no intrusive linked list, no unsafe, and n is the
+//! configured cap (thousands), so the tree walk is noise next to a
+//! solve.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+
+/// A bounded LRU map with hit/miss/evict counters.
+#[derive(Debug)]
+pub struct LruCache<K, V> {
+    cap: usize,
+    map: HashMap<K, (V, u64)>,
+    by_recency: BTreeMap<u64, K>,
+    tick: u64,
+    /// Lookups that found a live entry.
+    pub hits: u64,
+    /// Lookups that found nothing.
+    pub misses: u64,
+    /// Entries evicted to make room (never counts explicit removals).
+    pub evictions: u64,
+}
+
+impl<K: Hash + Eq + Clone, V> LruCache<K, V> {
+    /// Cache holding at most `cap` entries. `cap == 0` disables storage
+    /// entirely (every insert is dropped, every lookup misses) — the
+    /// "no caching" configuration, kept valid so ops can turn the cache
+    /// off without a separate code path.
+    pub fn new(cap: usize) -> Self {
+        LruCache {
+            cap,
+            map: HashMap::new(),
+            by_recency: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Entry cap this cache was configured with.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the cache currently holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Look up `key`, marking the entry most-recently-used on a hit.
+    /// Counts a hit or a miss.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let old_stamp = match self.map.get(key) {
+            Some((_, s)) => *s,
+            None => {
+                self.misses += 1;
+                return None;
+            }
+        };
+        self.hits += 1;
+        let tick = self.next_tick();
+        self.by_recency.remove(&old_stamp);
+        self.by_recency.insert(tick, key.clone());
+        if let Some(entry) = self.map.get_mut(key) {
+            entry.1 = tick;
+        }
+        self.map.get(key).map(|(v, _)| v)
+    }
+
+    /// Insert (or replace) `key`, evicting the least-recently-used
+    /// entry if the cache is full. No-op when the cap is 0.
+    pub fn insert(&mut self, key: K, value: V) {
+        if self.cap == 0 {
+            return;
+        }
+        let old_stamp = self.map.get(&key).map(|(_, s)| *s);
+        if let Some(stamp) = old_stamp {
+            // replacing in place: recency refreshes, no eviction needed
+            self.by_recency.remove(&stamp);
+        } else if self.map.len() >= self.cap {
+            // evict the coldest entry (smallest stamp)
+            if let Some((&stamp, _)) = self.by_recency.iter().next() {
+                if let Some(victim) = self.by_recency.remove(&stamp) {
+                    self.map.remove(&victim);
+                    self.evictions += 1;
+                }
+            }
+        }
+        let tick = self.next_tick();
+        self.by_recency.insert(tick, key.clone());
+        self.map.insert(key, (value, tick));
+    }
+
+    /// Whether `key` is present, without touching recency or counters.
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_misses_and_recency() {
+        let mut c: LruCache<u32, &'static str> = LruCache::new(2);
+        assert!(c.get(&1).is_none());
+        assert_eq!(c.misses, 1);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.hits, 1);
+        // 1 is now the most recent; inserting 3 must evict 2
+        c.insert(3, "c");
+        assert_eq!(c.evictions, 1);
+        assert!(c.contains(&1) && c.contains(&3));
+        assert!(!c.contains(&2), "LRU victim must be the cold entry");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn replace_refreshes_without_evicting() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // replace: no eviction, 1 becomes hottest
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.get(&1), Some(&11));
+        c.insert(3, 30); // now 2 is coldest
+        assert!(!c.contains(&2));
+        assert!(c.contains(&1) && c.contains(&3));
+    }
+
+    #[test]
+    fn zero_cap_disables_storage() {
+        let mut c: LruCache<u32, u32> = LruCache::new(0);
+        c.insert(1, 10);
+        assert!(c.is_empty());
+        assert!(c.get(&1).is_none());
+        assert_eq!(c.evictions, 0);
+    }
+
+    #[test]
+    fn eviction_order_follows_use_not_insertion() {
+        let mut c: LruCache<u32, u32> = LruCache::new(3);
+        for k in 1..=3 {
+            c.insert(k, k);
+        }
+        // touch in reverse insertion order: 1 becomes hottest
+        assert!(c.get(&2).is_some());
+        assert!(c.get(&1).is_some());
+        c.insert(4, 4); // evicts 3 (untouched)
+        c.insert(5, 5); // evicts 2
+        assert!(c.contains(&1), "most recently used must survive");
+        assert!(!c.contains(&3) && !c.contains(&2));
+        assert_eq!(c.evictions, 2);
+    }
+}

@@ -9,11 +9,13 @@ mod error;
 pub mod events;
 pub mod failpoint;
 mod incumbent;
+mod lru;
 mod rng;
 
 pub use csr::Csr;
 pub use error::{Context, Error, Result};
 pub use incumbent::Incumbent;
+pub use lru::LruCache;
 pub use rng::Rng;
 
 use std::sync::Arc;
@@ -71,14 +73,18 @@ impl Deadline {
         }
     }
 
-    /// Has the shared incumbent (if any) been cancelled?
+    /// Has the shared incumbent (if any) been asked to stop — cancelled
+    /// by a portfolio proof / watchdog, or preempted by a serving-tier
+    /// controller? Both signals stop the solve at the next poll; the
+    /// caller distinguishes them via [`Incumbent::is_preempted`] when
+    /// labelling the outcome.
     #[inline]
     pub fn cancelled(&self) -> bool {
-        self.incumbent.as_ref().is_some_and(|i| i.is_cancelled())
+        self.incumbent.as_ref().is_some_and(|i| i.should_stop())
     }
 
     /// True once the time limit has passed *or* the shared incumbent has
-    /// been cancelled.
+    /// been cancelled (or preempted).
     #[inline]
     pub fn exceeded(&self) -> bool {
         self.cancelled() || self.start.elapsed() >= self.limit

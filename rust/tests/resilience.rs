@@ -16,8 +16,9 @@ use moccasin::coordinator::{Coordinator, SolveRequest};
 use moccasin::generators::random_layered;
 use moccasin::graph::{topological_order, Graph};
 use moccasin::moccasin::{MoccasinSolver, Rung};
+use moccasin::serve::{ServeConfig, ServeEvent, ServeRequest, SolverService, Terminal};
 use moccasin::util::failpoint::{self, FailAction};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Serializes the tests in this binary: the failpoint registry and the
@@ -244,4 +245,288 @@ fn ladder_floor_is_never_worse_than_plain_greedy() {
         // conjured a solution either
         assert!(degraded.best.is_none());
     }
+}
+
+// ---------------------------------------------------------------------------
+// Serving-tier fault matrix: the `serve.worker` / `serve.session`
+// failpoints against the admission queue, the worker pool's
+// retry-once-and-respawn policy, and the exactly-one-terminal
+// invariant.
+// ---------------------------------------------------------------------------
+
+fn serve_request(deadline: Duration) -> ServeRequest {
+    ServeRequest { deadline, ..ServeRequest::new(Arc::new(chain()), 10) }
+}
+
+/// Drain one job's channel to its terminal (progress events returned
+/// too); panics — rather than hangs — if no terminal arrives.
+fn terminal_of(rx: &mpsc::Receiver<ServeEvent>) -> (Vec<ServeEvent>, Terminal) {
+    let mut progress = Vec::new();
+    loop {
+        let ev = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("every submitted request must receive a terminal");
+        match ev {
+            ServeEvent::Terminal { outcome, .. } => return (progress, outcome),
+            other => progress.push(other),
+        }
+    }
+}
+
+#[test]
+fn serve_worker_panic_retries_once_on_fresh_worker_with_provenance() {
+    let _g = serial();
+    failpoint::reset();
+    // the first session to reach the serve.worker site dies; the job
+    // must be retried exactly once on a respawned worker and succeed,
+    // with the first attempt's death in its degradation provenance
+    failpoint::arm("serve.worker", FailAction::Panic, Some(1));
+    let svc = SolverService::start(ServeConfig { workers: 1, ..Default::default() });
+    let (tx, rx) = mpsc::channel();
+    svc.submit(serve_request(Duration::from_secs(30)), tx);
+    let (progress, outcome) = terminal_of(&rx);
+    let died: Vec<&ServeEvent> = progress
+        .iter()
+        .filter(|e| matches!(e, ServeEvent::Died { .. }))
+        .collect();
+    assert_eq!(died.len(), 1, "exactly one worker death event");
+    let ServeEvent::Died { attempt, note, will_retry, .. } = died[0] else {
+        unreachable!()
+    };
+    assert_eq!(*attempt, 0);
+    assert!(*will_retry);
+    assert!(note.contains("failpoint 'serve.worker'"), "note: {note}");
+    assert!(
+        progress
+            .iter()
+            .any(|e| matches!(e, ServeEvent::Started { attempt: 1, .. })),
+        "the retry must start on a fresh worker"
+    );
+    let resp = match outcome {
+        Terminal::Solved(resp) => resp,
+        other => panic!("retry must succeed, got {}", other.name()),
+    };
+    assert_eq!(resp.solution.as_ref().unwrap().eval.duration, 6);
+    let deg = resp.degradation.as_ref().expect("retried response carries provenance");
+    assert!(deg.retries >= 1);
+    assert!(
+        deg.failures.iter().any(|f| f.contains("serve.worker")),
+        "provenance must name the failpoint: {:?}",
+        deg.failures
+    );
+    if env_clear() {
+        let s = svc.stats();
+        assert_eq!(s.worker_deaths, 1);
+        assert_eq!(s.retries, 1);
+    }
+    svc.shutdown();
+    failpoint::reset();
+}
+
+#[test]
+fn serve_persistent_panic_fails_structurally_and_queue_keeps_draining() {
+    let _g = serial();
+    failpoint::reset();
+    // every session dies, forever: each job burns its single retry and
+    // must then FAIL structurally — while the queue keeps draining the
+    // jobs behind it (each death respawns the worker)
+    failpoint::arm("serve.worker", FailAction::Panic, None);
+    let svc = SolverService::start(ServeConfig { workers: 1, ..Default::default() });
+    let rxs: Vec<mpsc::Receiver<ServeEvent>> = (0..3)
+        .map(|_| {
+            let (tx, rx) = mpsc::channel();
+            svc.submit(serve_request(Duration::from_secs(30)), tx);
+            rx
+        })
+        .collect();
+    for rx in &rxs {
+        let (_, outcome) = terminal_of(rx);
+        let error = match outcome {
+            Terminal::Failed { error } => error,
+            other => {
+                panic!("persistent panic must fail structurally, got {}", other.name())
+            }
+        };
+        assert!(error.contains("no retry left"), "error: {error}");
+        assert!(error.contains("failpoint 'serve.worker'"), "error: {error}");
+    }
+    // disarm: the (respawned) pool must still serve new requests
+    failpoint::disarm("serve.worker");
+    let (tx, rx) = mpsc::channel();
+    svc.submit(serve_request(Duration::from_secs(30)), tx);
+    let (_, outcome) = terminal_of(&rx);
+    assert!(
+        matches!(outcome, Terminal::Solved(_)),
+        "pool must recover once the fault clears, got {}",
+        outcome.name()
+    );
+    svc.shutdown();
+    failpoint::reset();
+}
+
+#[test]
+fn serve_watchdog_kills_stalled_session_while_others_keep_solving() {
+    let _g = serial();
+    failpoint::reset();
+    // one session stalls 2.5s without heartbeats against a 100ms stall
+    // budget (warmup 4x = 400ms): its watchdog must kill it, the
+    // response must carry the kill, and concurrent jobs on the other
+    // worker must be unaffected
+    failpoint::arm("serve.session", FailAction::Delay(2_500), Some(1));
+    let svc = SolverService::start(ServeConfig {
+        workers: 2,
+        stall_ms: Some(100),
+        ..Default::default()
+    });
+    let rxs: Vec<mpsc::Receiver<ServeEvent>> = (0..4)
+        .map(|_| {
+            let (tx, rx) = mpsc::channel();
+            svc.submit(serve_request(Duration::from_secs(30)), tx);
+            rx
+        })
+        .collect();
+    let mut kills = 0u64;
+    let mut solved = 0usize;
+    for rx in &rxs {
+        let (_, outcome) = terminal_of(rx);
+        match outcome {
+            Terminal::Solved(resp) => {
+                solved += 1;
+                kills += resp.stats.watchdog_kills;
+                if resp.stats.watchdog_kills > 0 {
+                    assert!(
+                        !resp.proved_optimal,
+                        "a killed session cannot claim an optimality proof"
+                    );
+                    let deg = resp.degradation.as_ref().unwrap();
+                    assert!(
+                        deg.failures.iter().any(|f| f.contains("watchdog")),
+                        "kill must be in provenance: {:?}",
+                        deg.failures
+                    );
+                }
+            }
+            other => panic!("expected solved terminals, got {}", other.name()),
+        }
+    }
+    assert_eq!(solved, 4, "the stall must not take other requests down");
+    assert!(kills >= 1, "the stalled session's watchdog kill must surface");
+    svc.shutdown();
+    failpoint::reset();
+}
+
+#[test]
+fn serve_queue_full_shed_is_a_structured_answer_not_a_drop() {
+    let _g = serial();
+    failpoint::reset();
+    // hold the single worker in a 500ms stall so the 1-deep queue
+    // fills; the third submit must be answered immediately with a
+    // structured Overloaded terminal — never silently dropped
+    failpoint::arm("serve.session", FailAction::Delay(500), Some(1));
+    let svc = SolverService::start(ServeConfig {
+        workers: 1,
+        queue_cap: 1,
+        ..Default::default()
+    });
+    let (tx_a, rx_a) = mpsc::channel();
+    svc.submit(serve_request(Duration::from_secs(30)), tx_a);
+    std::thread::sleep(Duration::from_millis(150)); // A is in-session
+    let (tx_b, rx_b) = mpsc::channel();
+    svc.submit(serve_request(Duration::from_secs(30)), tx_b);
+    let (tx_c, rx_c) = mpsc::channel();
+    svc.submit(serve_request(Duration::from_secs(30)), tx_c);
+    let t0 = Instant::now();
+    let (progress_c, outcome_c) = terminal_of(&rx_c);
+    assert!(
+        t0.elapsed() < Duration::from_millis(200),
+        "a shed must be answered immediately, not after the backlog"
+    );
+    assert!(progress_c.is_empty(), "a shed request is never queued or started");
+    let (queue_len, reason) = match outcome_c {
+        Terminal::Overloaded { queue_len, reason, .. } => (queue_len, reason),
+        other => panic!("expected overloaded, got {}", other.name()),
+    };
+    assert_eq!(queue_len, 1);
+    assert!(reason.contains("queue full"), "reason: {reason}");
+    for rx in [&rx_a, &rx_b] {
+        let (_, o) = terminal_of(rx);
+        assert!(matches!(o, Terminal::Solved(_)), "admitted jobs still solve");
+    }
+    assert_eq!(svc.stats().shed, 1);
+    svc.shutdown();
+    failpoint::reset();
+}
+
+/// The PR's acceptance invariant: under injected worker panics AND
+/// stalls, with 64 concurrent requests racing a 4-worker pool and a
+/// bounded queue, every submitted request receives EXACTLY one terminal
+/// response — no hangs, no drops, no duplicates — and the service
+/// ledger agrees with the delivered outcomes.
+#[test]
+fn serve_64_concurrent_requests_each_get_exactly_one_terminal_under_faults() {
+    let _g = serial();
+    failpoint::reset();
+    failpoint::arm("serve.worker", FailAction::Panic, Some(5));
+    failpoint::arm("serve.session", FailAction::Delay(150), Some(3));
+    let svc = SolverService::start(ServeConfig {
+        workers: 4,
+        queue_cap: 64,
+        ..Default::default()
+    });
+    const N: usize = 64;
+    let rxs: Vec<mpsc::Receiver<ServeEvent>> = (0..N)
+        .map(|i| {
+            let (tx, rx) = mpsc::channel();
+            let req = if i % 4 == 0 {
+                // mix in a larger instance so sessions overlap for real
+                let g = Arc::new(random_layered("srv64", 40, 95, (i % 8) as u64 + 1));
+                let order = topological_order(&g).unwrap();
+                let peak = g.peak_mem_no_remat(&order).unwrap();
+                ServeRequest {
+                    deadline: Duration::from_secs(60),
+                    ..ServeRequest::new(g, (peak as f64 * 0.9) as u64)
+                }
+            } else {
+                serve_request(Duration::from_secs(60))
+            };
+            svc.submit(req, tx);
+            rx
+        })
+        .collect();
+    let mut by_class = std::collections::BTreeMap::<&'static str, u64>::new();
+    let mut terminals = Vec::with_capacity(N);
+    for rx in &rxs {
+        let (_, outcome) = terminal_of(rx); // panics on hang
+        *by_class.entry(outcome.name()).or_insert(0) += 1;
+        terminals.push(outcome);
+    }
+    // exactly one terminal each: after shutdown every channel must be
+    // fully drained with no second terminal behind the first
+    svc.shutdown();
+    for rx in &rxs {
+        while let Ok(ev) = rx.try_recv() {
+            assert!(
+                !matches!(ev, ServeEvent::Terminal { .. }),
+                "duplicate terminal delivered: {ev:?}"
+            );
+        }
+    }
+    let s = svc.stats();
+    assert_eq!(s.submitted, N as u64);
+    assert_eq!(
+        s.solved + s.preempted + s.cancelled + s.shed + s.expired + s.failed,
+        N as u64,
+        "terminal ledger must account for every submission: {s:?}"
+    );
+    assert_eq!(
+        by_class.values().sum::<u64>(),
+        N as u64,
+        "delivered terminals must match submissions: {by_class:?}"
+    );
+    // the faults were survivable: the overwhelming majority still solve
+    assert!(
+        by_class.get("solved").copied().unwrap_or(0) >= (N as u64) - 8,
+        "outcomes: {by_class:?}"
+    );
+    failpoint::reset();
 }
