@@ -1,0 +1,463 @@
+//! `bench compare`: the CI perf ratchet.
+//!
+//! Diffs two bench JSON files (the previous run's uploaded artifact vs
+//! the file the current build just emitted) record by record and fails
+//! on kernel-throughput regressions, so a change that silently costs
+//! >10% of `nodes_per_sec` or `propagations_per_sec` turns the build
+//! red instead of accumulating unnoticed. Records are matched by a
+//! composite identity key (instance / profile / filtering / search
+//! strategy / serve mode+concurrency — whichever fields the file
+//! carries), so the solver, large-graph and serve benches all compare
+//! through the same code path.
+//!
+//! Design points:
+//!
+//! * **Versioned envelope.** Every `BENCH_*.json` is
+//!   `{"schema_version": N, "records": [...]}`; the comparator refuses
+//!   (exit 2, explicit message) to diff files with a missing or
+//!   mismatched version — including the pre-envelope top-level-array
+//!   format — instead of producing a silently wrong comparison.
+//! * **Noise floor.** Throughput ratios over tiny workloads are
+//!   meaningless: a metric is reported as `noise` (never a failure)
+//!   unless both sides cleared a minimum event count *and* wall time.
+//!   A quick CI smoke therefore ratchets only what it measured
+//!   credibly; skipped metrics are listed, never silently dropped.
+//! * **`--warn-only`.** Demotes every failure to a loud warning with
+//!   exit 0 — the smoke-test mode. The nightly deep bench runs strict.
+//!
+//! Exit codes: 0 = no credible regression (or `--warn-only`),
+//! 1 = regression beyond the threshold, 2 = not comparable (missing
+//! file, parse error, schema mismatch).
+
+use crate::serve::json::{parse, Json};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Version stamped into every `BENCH_*.json` envelope by
+/// [`super::bench_envelope`]. Bump when a record field the comparator
+/// reads changes meaning.
+pub(crate) const SCHEMA_VERSION: u64 = 1;
+
+/// Ratcheted metrics: `(field, gating count field, minimum count)`.
+/// A comparison is credible only when both sides report at least the
+/// minimum count — a handful of nodes in a 50ms solve says nothing
+/// about kernel throughput.
+const METRICS: [(&str, &str, f64); 3] = [
+    ("nodes_per_sec", "nodes", 1_000.0),
+    ("propagations_per_sec", "propagations", 20_000.0),
+    ("throughput_rps", "requests", 16.0),
+];
+
+/// Wall-time noise floor: below this, per-second rates are dominated by
+/// startup effects regardless of the event counts.
+const MIN_WALL_S: f64 = 0.2;
+
+/// Outcome of one (record, metric) comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Verdict {
+    /// Within the threshold band either way.
+    Ok,
+    /// Faster than baseline by more than the threshold.
+    Improved,
+    /// Slower than baseline by more than the threshold.
+    Regression,
+    /// Workload too small on at least one side — skipped, reported.
+    Noise,
+}
+
+impl Verdict {
+    fn name(self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Improved => "improved",
+            Verdict::Regression => "REGRESSION",
+            Verdict::Noise => "noise (skipped)",
+        }
+    }
+}
+
+/// One compared metric of one matched record pair.
+pub(crate) struct MetricDelta {
+    /// Composite record identity (`instance=G1,search=learned`, ...).
+    pub key: String,
+    /// Metric field name.
+    pub metric: &'static str,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// Comparison outcome under the configured threshold.
+    pub verdict: Verdict,
+}
+
+/// Composite identity of a bench record: every identity-bearing field
+/// the three emitters use, in a fixed order. Metrics fields never
+/// appear here, so a perf change can never unmatch a record.
+fn record_key(r: &Json) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    for k in ["instance", "mode", "profile", "filtering"] {
+        if let Some(s) = r.get(k).and_then(Json::as_str) {
+            parts.push(format!("{k}={s}"));
+        }
+    }
+    // solver-json nests the strategy ({"search": {"strategy": ...}}),
+    // large-json carries it flat ({"search": "chronological"})
+    match r.get("search") {
+        Some(Json::Str(s)) => parts.push(format!("search={s}")),
+        Some(obj @ Json::Obj(_)) => {
+            if let Some(s) = obj.get("strategy").and_then(Json::as_str) {
+                parts.push(format!("search={s}"));
+            }
+        }
+        _ => {}
+    }
+    if let Some(c) = r.get("concurrency").and_then(Json::as_u64) {
+        parts.push(format!("concurrency={c}"));
+    }
+    parts.join(",")
+}
+
+/// Unwrap the versioned envelope, rejecting anything the comparator
+/// cannot interpret *by name* — a wrong-but-parsing comparison is worse
+/// than a refused one.
+fn envelope_records(doc: &Json, label: &str) -> Result<&[Json], String> {
+    match doc {
+        Json::Arr(_) => Err(format!(
+            "{label}: top-level array with no schema_version envelope — this file \
+             predates the versioned bench format; regenerate it with the current \
+             binary (first CI run after the format change: delete the stale \
+             baseline artifact or pass --warn-only)"
+        )),
+        Json::Obj(_) => {
+            let ver = doc
+                .get("schema_version")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("{label}: missing/non-integer schema_version"))?;
+            if ver != SCHEMA_VERSION {
+                return Err(format!(
+                    "{label}: schema_version {ver}, but this binary compares version \
+                     {SCHEMA_VERSION} — regenerate the older side"
+                ));
+            }
+            match doc.get("records") {
+                Some(Json::Arr(rs)) => Ok(rs),
+                _ => Err(format!("{label}: missing \"records\" array")),
+            }
+        }
+        _ => Err(format!("{label}: expected a JSON object envelope")),
+    }
+}
+
+/// Compare two parsed bench documents. Current records with no
+/// baseline counterpart (new instance, renamed variant) are skipped —
+/// a ratchet can only hold ground it has already measured.
+pub(crate) fn compare_docs(
+    base: &Json,
+    cur: &Json,
+    threshold_pct: f64,
+) -> Result<Vec<MetricDelta>, String> {
+    let base_rs = envelope_records(base, "baseline")?;
+    let cur_rs = envelope_records(cur, "current")?;
+    let lo = 1.0 - threshold_pct / 100.0;
+    let hi = 1.0 + threshold_pct / 100.0;
+    let mut out = Vec::new();
+    for cr in cur_rs {
+        let key = record_key(cr);
+        let Some(br) = base_rs.iter().find(|r| record_key(r) == key) else {
+            continue;
+        };
+        for (metric, count_field, min_count) in METRICS {
+            let (Some(b), Some(c)) = (
+                br.get(metric).and_then(Json::as_f64),
+                cr.get(metric).and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            let credible = |r: &Json| {
+                r.get(count_field).and_then(Json::as_f64).is_some_and(|n| n >= min_count)
+                    && r.get("wall_s").and_then(Json::as_f64).map_or(true, |w| w >= MIN_WALL_S)
+            };
+            let verdict = if !credible(br) || !credible(cr) {
+                Verdict::Noise
+            } else if b > 0.0 && c < b * lo {
+                Verdict::Regression
+            } else if b > 0.0 && c > b * hi {
+                Verdict::Improved
+            } else {
+                Verdict::Ok
+            };
+            out.push(MetricDelta { key: key.clone(), metric, baseline: b, current: c, verdict });
+        }
+    }
+    Ok(out)
+}
+
+/// Render the comparison report (printed to stdout and uploaded as a CI
+/// artifact).
+fn render_report(
+    baseline: &Path,
+    current: &Path,
+    threshold_pct: f64,
+    deltas: &[MetricDelta],
+) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "perf ratchet: {} vs {} (threshold {threshold_pct:.0}%)",
+        baseline.display(),
+        current.display()
+    );
+    if deltas.is_empty() {
+        let _ = writeln!(s, "  no matching records — nothing to ratchet");
+    }
+    for d in deltas {
+        let ratio = if d.baseline > 0.0 { d.current / d.baseline } else { f64::NAN };
+        let _ = writeln!(
+            s,
+            "  [{}] {} {}: {:.1} -> {:.1} ({:.2}x)",
+            d.verdict.name(),
+            d.key,
+            d.metric,
+            d.baseline,
+            d.current,
+            ratio
+        );
+    }
+    let regressions = deltas.iter().filter(|d| d.verdict == Verdict::Regression).count();
+    let noise = deltas.iter().filter(|d| d.verdict == Verdict::Noise).count();
+    let _ = writeln!(
+        s,
+        "  summary: {} compared, {regressions} regression(s), {noise} below the noise floor",
+        deltas.len()
+    );
+    s
+}
+
+/// The `bench compare` entry point: load, compare, report, and return
+/// the process exit code (0 ok / 1 regression / 2 not comparable;
+/// `warn_only` demotes both failures to warnings with exit 0). The
+/// report is also written to `report_path` so CI can upload it.
+pub fn bench_compare(
+    baseline: &Path,
+    current: &Path,
+    threshold_pct: f64,
+    warn_only: bool,
+    report_path: &Path,
+) -> i32 {
+    let fail = |msg: String| -> i32 {
+        if warn_only {
+            println!("WARNING (--warn-only, not failing the build): {msg}");
+            0
+        } else {
+            eprintln!("bench compare: {msg}");
+            2
+        }
+    };
+    let load = |p: &Path, label: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| format!("{label} {p:?} unreadable: {e}"))?;
+        parse(&text).map_err(|e| format!("{label} {p:?}: {e}"))
+    };
+    let (base, cur) = match (load(baseline, "baseline"), load(current, "current")) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => return fail(e),
+    };
+    let deltas = match compare_docs(&base, &cur, threshold_pct) {
+        Ok(d) => d,
+        Err(e) => return fail(e),
+    };
+    let report = render_report(baseline, current, threshold_pct, &deltas);
+    print!("{report}");
+    if let Err(e) = std::fs::write(report_path, &report) {
+        eprintln!("warning: could not write {report_path:?}: {e}");
+    } else {
+        println!("  [report] {}", report_path.display());
+    }
+    let regressions = deltas.iter().filter(|d| d.verdict == Verdict::Regression).count();
+    if regressions == 0 {
+        0
+    } else if warn_only {
+        println!(
+            "WARNING (--warn-only, not failing the build): {regressions} throughput \
+             regression(s) beyond {threshold_pct:.0}%"
+        );
+        0
+    } else {
+        eprintln!(
+            "bench compare: {regressions} throughput regression(s) beyond {threshold_pct:.0}%"
+        );
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(records: &str) -> Json {
+        parse(&format!("{{\"schema_version\": 1, \"records\": [{records}]}}")).unwrap()
+    }
+
+    fn solver_record(nodes: u64, nps: f64, props: u64, pps: f64) -> String {
+        format!(
+            "{{\"instance\": \"G1\", \"wall_s\": 2.0, \"nodes\": {nodes}, \
+             \"propagations\": {props}, \"nodes_per_sec\": {nps:.1}, \
+             \"propagations_per_sec\": {pps:.1}, \
+             \"search\": {{\"strategy\": \"learned\"}}}}"
+        )
+    }
+
+    #[test]
+    fn regression_beyond_threshold_is_flagged() {
+        let base = doc(&solver_record(100_000, 50_000.0, 1_000_000, 500_000.0));
+        // nodes/sec down 20%, props/sec flat
+        let cur = doc(&solver_record(100_000, 40_000.0, 1_000_000, 500_000.0));
+        let d = compare_docs(&base, &cur, 10.0).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].metric, "nodes_per_sec");
+        assert_eq!(d[0].verdict, Verdict::Regression);
+        assert_eq!(d[1].verdict, Verdict::Ok);
+    }
+
+    #[test]
+    fn small_changes_and_improvements_pass() {
+        let base = doc(&solver_record(100_000, 50_000.0, 1_000_000, 500_000.0));
+        // 5% dip is inside the band; 30% gain reports as improved
+        let cur = doc(&solver_record(100_000, 47_500.0, 1_000_000, 650_000.0));
+        let d = compare_docs(&base, &cur, 10.0).unwrap();
+        assert_eq!(d[0].verdict, Verdict::Ok);
+        assert_eq!(d[1].verdict, Verdict::Improved);
+        assert!(d.iter().all(|x| x.verdict != Verdict::Regression));
+    }
+
+    #[test]
+    fn tiny_workloads_fall_below_the_noise_floor() {
+        // a 50-node run can halve its nodes/sec without meaning anything
+        let base = doc(&solver_record(50, 50_000.0, 500, 500_000.0));
+        let cur = doc(&solver_record(50, 25_000.0, 500, 100_000.0));
+        let d = compare_docs(&base, &cur, 10.0).unwrap();
+        assert!(d.iter().all(|x| x.verdict == Verdict::Noise), "all skipped as noise");
+    }
+
+    #[test]
+    fn records_match_by_identity_not_position() {
+        let base = doc(&format!(
+            "{},{}",
+            solver_record(100_000, 50_000.0, 1_000_000, 500_000.0),
+            "{\"instance\": \"G2\", \"wall_s\": 2.0, \"nodes\": 100000, \
+             \"propagations\": 1000000, \"nodes_per_sec\": 10000.0, \
+             \"propagations_per_sec\": 100000.0, \
+             \"search\": {\"strategy\": \"learned\"}}"
+        ));
+        // current lists G2 first; G2 regressed, G1 did not
+        let cur = doc(&format!(
+            "{},{}",
+            "{\"instance\": \"G2\", \"wall_s\": 2.0, \"nodes\": 100000, \
+             \"propagations\": 1000000, \"nodes_per_sec\": 5000.0, \
+             \"propagations_per_sec\": 100000.0, \
+             \"search\": {\"strategy\": \"learned\"}}",
+            solver_record(100_000, 50_000.0, 1_000_000, 500_000.0)
+        ));
+        let d = compare_docs(&base, &cur, 10.0).unwrap();
+        let g2 = d.iter().find(|x| x.key.contains("G2") && x.metric == "nodes_per_sec");
+        let g1 = d.iter().find(|x| x.key.contains("G1") && x.metric == "nodes_per_sec");
+        assert_eq!(g2.unwrap().verdict, Verdict::Regression);
+        assert_eq!(g1.unwrap().verdict, Verdict::Ok);
+    }
+
+    #[test]
+    fn schema_mismatch_and_legacy_format_are_refused() {
+        let good = doc(&solver_record(100_000, 1.0, 1_000_000, 1.0));
+        let old_array = parse("[{\"instance\": \"G1\"}]").unwrap();
+        let e = compare_docs(&old_array, &good, 10.0).unwrap_err();
+        assert!(e.contains("schema_version"), "unhelpful error: {e}");
+        let future = parse("{\"schema_version\": 99, \"records\": []}").unwrap();
+        let e = compare_docs(&good, &future, 10.0).unwrap_err();
+        assert!(e.contains("99"), "should name the offending version: {e}");
+        let missing = parse("{\"records\": []}").unwrap();
+        assert!(compare_docs(&missing, &good, 10.0).is_err());
+    }
+
+    #[test]
+    fn new_instances_have_nothing_to_ratchet() {
+        let base = doc(&solver_record(100_000, 50_000.0, 1_000_000, 500_000.0));
+        let cur = doc(
+            "{\"instance\": \"G9\", \"wall_s\": 2.0, \"nodes\": 100000, \
+             \"propagations\": 1000000, \"nodes_per_sec\": 1.0, \
+             \"propagations_per_sec\": 1.0, \"search\": {\"strategy\": \"learned\"}}",
+        );
+        assert!(compare_docs(&base, &cur, 10.0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn large_bench_variants_keep_distinct_keys() {
+        let rec = |profile: &str, nps: f64| {
+            format!(
+                "{{\"instance\": \"L1\", \"profile\": \"{profile}\", \
+                 \"filtering\": \"timetable\", \"search\": \"chronological\", \
+                 \"wall_s\": 5.0, \"nodes\": 200000, \"propagations\": 5000000, \
+                 \"nodes_per_sec\": {nps:.1}, \"propagations_per_sec\": 1000000.0}}"
+            )
+        };
+        let base = doc(&format!("{},{}", rec("segtree", 40_000.0), rec("linear", 10_000.0)));
+        let cur = doc(&format!("{},{}", rec("segtree", 40_000.0), rec("linear", 2_000.0)));
+        let d = compare_docs(&base, &cur, 10.0).unwrap();
+        let lin = d
+            .iter()
+            .find(|x| x.key.contains("profile=linear") && x.metric == "nodes_per_sec")
+            .unwrap();
+        let seg = d
+            .iter()
+            .find(|x| x.key.contains("profile=segtree") && x.metric == "nodes_per_sec")
+            .unwrap();
+        assert_eq!(lin.verdict, Verdict::Regression);
+        assert_eq!(seg.verdict, Verdict::Ok);
+    }
+
+    #[test]
+    fn end_to_end_exit_codes() {
+        let dir = std::env::temp_dir().join(format!("bench_cmp_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let base_p = dir.join("base.json");
+        let cur_p = dir.join("cur.json");
+        let rep_p = dir.join("report.txt");
+        let envelope = |r: &str| format!("{{\"schema_version\": 1, \"records\": [{r}]}}");
+        std::fs::write(
+            &base_p,
+            envelope(&solver_record(100_000, 50_000.0, 1_000_000, 500_000.0)),
+        )
+        .unwrap();
+        // regression fixture: nonzero strict, zero with --warn-only
+        std::fs::write(
+            &cur_p,
+            envelope(&solver_record(100_000, 30_000.0, 1_000_000, 500_000.0)),
+        )
+        .unwrap();
+        assert_eq!(bench_compare(&base_p, &cur_p, 10.0, false, &rep_p), 1);
+        assert_eq!(bench_compare(&base_p, &cur_p, 10.0, true, &rep_p), 0);
+        let report = std::fs::read_to_string(&rep_p).unwrap();
+        assert!(report.contains("REGRESSION"), "{report}");
+        // noise fixture: inside the band, exit 0
+        std::fs::write(
+            &cur_p,
+            envelope(&solver_record(100_000, 48_000.0, 1_000_000, 510_000.0)),
+        )
+        .unwrap();
+        assert_eq!(bench_compare(&base_p, &cur_p, 10.0, false, &rep_p), 0);
+        // missing baseline: not comparable
+        assert_eq!(bench_compare(&dir.join("nope.json"), &cur_p, 10.0, false, &rep_p), 2);
+        assert_eq!(bench_compare(&dir.join("nope.json"), &cur_p, 10.0, true, &rep_p), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn emitted_envelope_parses_and_compares_clean_against_itself() {
+        let records =
+            vec![solver_record(100_000, 50_000.0, 1_000_000, 500_000.0)];
+        let text = super::super::bench_envelope(&records);
+        let v = parse(&text).unwrap();
+        let d = compare_docs(&v, &v, 10.0).unwrap();
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.verdict == Verdict::Ok));
+    }
+}

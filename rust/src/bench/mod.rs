@@ -6,8 +6,10 @@
 //! "Substitutions"); the *shape* — who wins, who times out, where
 //! feasibility breaks — is the reproduction target.
 
+mod compare;
 mod serve;
 
+pub use compare::bench_compare;
 pub use serve::bench_serve_json;
 
 use crate::coordinator::{Backend, Coordinator, SolveRequest};
@@ -42,6 +44,20 @@ fn write_csv(name: &str, contents: &str) {
     } else {
         println!("  [csv] {}", path.display());
     }
+}
+
+/// Wrap bench records in the versioned envelope every `BENCH_*.json`
+/// emitter shares: `{"schema_version": N, "records": [...]}`. The
+/// `bench compare` ratchet validates the version on both sides and
+/// refuses (exit 2, clear message) to diff files whose versions
+/// disagree — bump [`compare::SCHEMA_VERSION`] whenever a record field
+/// the comparator reads changes meaning.
+pub(crate) fn bench_envelope(records: &[String]) -> String {
+    format!(
+        "{{\n\"schema_version\": {},\n\"records\": [\n{}\n]\n}}\n",
+        compare::SCHEMA_VERSION,
+        records.join(",\n")
+    )
 }
 
 fn budget_at(g: &Graph, frac: f64) -> u64 {
@@ -556,7 +572,7 @@ pub fn bench_solver_json(
             pe.edges_removed
         ));
     }
-    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let json = bench_envelope(&records);
     let path = std::path::Path::new("BENCH_solver.json");
     if let Err(e) = std::fs::write(path, &json) {
         eprintln!("warning: could not write {path:?}: {e}");
@@ -749,7 +765,7 @@ pub fn bench_large_json(
             );
         }
     }
-    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let json = bench_envelope(&records);
     let path = std::path::Path::new("BENCH_large.json");
     std::fs::write(path, &json).with_context(|| format!("could not write {path:?}"))?;
     println!("  [json] {}", path.display());

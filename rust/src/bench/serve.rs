@@ -258,7 +258,7 @@ pub fn bench_serve_json(
             deaths.map(|d| d.to_string()).unwrap_or_else(|| "null".into()),
         ));
     }
-    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let json = super::bench_envelope(&records);
     let path = std::path::Path::new("BENCH_serve.json");
     std::fs::write(path, &json).with_context(|| format!("could not write {path:?}"))?;
     println!("  [json] {}", path.display());

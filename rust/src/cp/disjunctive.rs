@@ -179,27 +179,30 @@ pub(crate) fn disj_satisfied(items: &[DisjItem], a: &[i64]) -> bool {
 
 #[cfg(test)]
 mod tests {
-    use super::super::domain::Domain;
+    use super::super::domain::{DomStore, Domain};
     use super::super::propagators::ExplState;
     use super::*;
     use std::sync::Arc;
 
-    fn mk(doms: &[(i64, i64)]) -> Vec<Domain> {
-        doms.iter()
+    fn mk(doms: &[(i64, i64)]) -> DomStore {
+        let doms: Vec<Domain> = doms
+            .iter()
             .map(|&(lo, hi)| Domain::new(Arc::new((lo..=hi).collect())))
-            .collect()
+            .collect();
+        let mut store = DomStore::default();
+        store.load_from(&doms);
+        store
     }
 
     fn item(base: u32) -> DisjItem {
         DisjItem { active: VarId(base), start: VarId(base + 1), end: VarId(base + 2) }
     }
 
-    fn run(items: &[DisjItem], domains: &mut Vec<Domain>) -> Result<u64, Conflict> {
+    fn run(items: &[DisjItem], doms: &mut DomStore) -> Result<u64, Conflict> {
         let mut trail = Vec::new();
         let mut changed = Vec::new();
-        let mut expl = ExplState::new(domains.len(), false);
-        let mut ctx =
-            Ctx { domains, trail: &mut trail, changed: &mut changed, expl: &mut expl };
+        let mut expl = ExplState::new(doms.len(), false);
+        let mut ctx = Ctx { doms, trail: &mut trail, changed: &mut changed, expl: &mut expl };
         let mut prunes = 0;
         prop_disjunctive(items, &mut ctx, &mut prunes)?;
         Ok(prunes)
@@ -213,8 +216,8 @@ mod tests {
         let mut d = mk(&[(1, 1), (0, 2), (3, 4), (1, 1), (1, 8), (9, 9)]);
         let items = [item(0), item(3)];
         let prunes = run(&items, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[4].min(), 4, "follower start raised past leader's earliest end");
-        assert_eq!(d[2].max(), 4, "leader end already below follower's latest start");
+        assert_eq!(d.min(VarId(4)), 4, "follower start raised past leader's earliest end");
+        assert_eq!(d.max(VarId(2)), 4, "leader end already below follower's latest start");
         assert_eq!(prunes, 1);
     }
 
@@ -230,7 +233,7 @@ mod tests {
         // same geometry but the second item is optional → active_j = 0
         let mut d = mk(&[(1, 1), (2, 2), (6, 6), (0, 1), (4, 4), (8, 8)]);
         let prunes = run(&[item(0), item(3)], &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[3].max(), 0);
+        assert_eq!(d.max(VarId(3)), 0);
         assert_eq!(prunes, 1);
     }
 

@@ -126,6 +126,16 @@ enum Repr {
     Explicit { vals: Arc<Vec<i64>>, off: u32 },
 }
 
+impl Repr {
+    #[inline]
+    fn value_at(&self, idx: u32) -> i64 {
+        match self {
+            Repr::Range { base } => base + idx as i64,
+            Repr::Explicit { vals, off } => vals[(off + idx) as usize],
+        }
+    }
+}
+
 /// A finite integer domain.
 #[derive(Debug, Clone)]
 pub struct Domain {
@@ -168,10 +178,7 @@ impl Domain {
 
     #[inline]
     fn value_at(&self, idx: u32) -> i64 {
-        match &self.repr {
-            Repr::Range { base } => base + idx as i64,
-            Repr::Explicit { vals, off } => vals[(off + idx) as usize],
-        }
+        self.repr.value_at(idx)
     }
 
     /// Smallest value still in the domain.
@@ -284,6 +291,183 @@ impl Domain {
     }
 }
 
+/// Structure-of-arrays store of every variable's trailed bounds, owned
+/// by the propagation engine.
+///
+/// The per-variable `[lo, hi]` index bounds — the only solver-time
+/// mutable state — live in two packed `Vec<u32>` arrays so the hot
+/// paths (`drain_events`, backtracking `restore`, the timetable /
+/// edge-finding filter scans) walk contiguous cache lines instead of
+/// pointer-hopping per-variable `Domain` structs. The immutable value
+/// universes stay in a parallel `reprs` array that is only consulted
+/// when an index bound must be mapped to a value. [`Domain`] remains
+/// the model-layer representation; `load_from` adopts a model's
+/// domains into the store at solve start, reusing the store's
+/// capacity across LNS window re-solves (the `Arc` value arenas are
+/// shared, so adoption is refcount bumps, not copies).
+#[derive(Debug, Clone, Default)]
+pub struct DomStore {
+    reprs: Vec<Repr>,
+    lo: Vec<u32>,
+    hi: Vec<u32>,
+}
+
+impl DomStore {
+    /// Number of variables in the store.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Whether the store holds no variables.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.lo.is_empty()
+    }
+
+    /// Adopt `doms` as the store's contents, reusing capacity.
+    pub fn load_from(&mut self, doms: &[Domain]) {
+        self.reprs.clear();
+        self.lo.clear();
+        self.hi.clear();
+        self.reprs.extend(doms.iter().map(|d| d.repr.clone()));
+        self.lo.extend(doms.iter().map(|d| d.lo));
+        self.hi.extend(doms.iter().map(|d| d.hi));
+    }
+
+    /// Smallest value still in `v`'s domain.
+    #[inline]
+    pub fn min(&self, v: VarId) -> i64 {
+        let i = v.0 as usize;
+        self.reprs[i].value_at(self.lo[i])
+    }
+
+    /// Largest value still in `v`'s domain.
+    #[inline]
+    pub fn max(&self, v: VarId) -> i64 {
+        let i = v.0 as usize;
+        self.reprs[i].value_at(self.hi[i])
+    }
+
+    /// Whether `v`'s domain is a singleton.
+    #[inline]
+    pub fn is_fixed(&self, v: VarId) -> bool {
+        let i = v.0 as usize;
+        self.lo[i] == self.hi[i]
+    }
+
+    /// Number of values still in `v`'s domain.
+    #[inline]
+    pub fn size(&self, v: VarId) -> usize {
+        let i = v.0 as usize;
+        (self.hi[i] - self.lo[i] + 1) as usize
+    }
+
+    /// The fixed value of `v` (debug-asserts the domain is fixed).
+    #[inline]
+    pub fn value(&self, v: VarId) -> i64 {
+        debug_assert!(self.is_fixed(v));
+        self.min(v)
+    }
+
+    /// Whether `val` is still in `v`'s domain.
+    pub fn contains(&self, v: VarId, val: i64) -> bool {
+        if val < self.min(v) || val > self.max(v) {
+            return false;
+        }
+        let i = v.0 as usize;
+        match &self.reprs[i] {
+            Repr::Range { .. } => true,
+            Repr::Explicit { vals, off } => {
+                let (lo, hi) = ((off + self.lo[i]) as usize, (off + self.hi[i]) as usize);
+                vals[lo..=hi].binary_search(&val).is_ok()
+            }
+        }
+    }
+
+    /// Tighten `v` to `>= val`. Returns whether the domain changed;
+    /// `Err` on wipe-out.
+    pub fn remove_below(&mut self, v: VarId, val: i64) -> Result<bool, ()> {
+        let i = v.0 as usize;
+        let (lo, hi) = (self.lo[i], self.hi[i]);
+        let repr = &self.reprs[i];
+        if val <= repr.value_at(lo) {
+            return Ok(false);
+        }
+        if val > repr.value_at(hi) {
+            return Err(());
+        }
+        self.lo[i] = match repr {
+            Repr::Range { base } => (val - base) as u32,
+            Repr::Explicit { vals, off } => {
+                let s = &vals[(off + lo) as usize..=(off + hi) as usize];
+                lo + s.partition_point(|&x| x < val) as u32
+            }
+        };
+        Ok(true)
+    }
+
+    /// Tighten `v` to `<= val`. Returns whether the domain changed;
+    /// `Err` on wipe-out.
+    pub fn remove_above(&mut self, v: VarId, val: i64) -> Result<bool, ()> {
+        let i = v.0 as usize;
+        let (lo, hi) = (self.lo[i], self.hi[i]);
+        let repr = &self.reprs[i];
+        if val >= repr.value_at(hi) {
+            return Ok(false);
+        }
+        if val < repr.value_at(lo) {
+            return Err(());
+        }
+        self.hi[i] = match repr {
+            Repr::Range { base } => (val - base) as u32,
+            Repr::Explicit { vals, off } => {
+                let s = &vals[(off + lo) as usize..=(off + hi) as usize];
+                lo + s.partition_point(|&x| x <= val) as u32 - 1
+            }
+        };
+        Ok(true)
+    }
+
+    /// Snapshot of `v`'s index bounds for trailing.
+    #[inline]
+    pub fn bounds(&self, v: VarId) -> (u32, u32) {
+        let i = v.0 as usize;
+        (self.lo[i], self.hi[i])
+    }
+
+    /// Restore `v`'s trailed index bounds — two packed array writes.
+    #[inline]
+    pub fn restore(&mut self, v: VarId, b: (u32, u32)) {
+        let i = v.0 as usize;
+        self.lo[i] = b.0;
+        self.hi[i] = b.1;
+    }
+}
+
+impl Lit {
+    /// Whether the predicate currently holds in `d`.
+    #[inline]
+    pub fn is_true_in(&self, d: &DomStore) -> bool {
+        if self.is_lb {
+            d.min(self.var) >= self.val
+        } else {
+            d.max(self.var) <= self.val
+        }
+    }
+
+    /// Whether the predicate is currently falsified in `d` (its
+    /// negation holds).
+    #[inline]
+    pub fn is_false_in(&self, d: &DomStore) -> bool {
+        if self.is_lb {
+            d.max(self.var) < self.val
+        } else {
+            d.min(self.var) > self.val
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,5 +564,52 @@ mod tests {
     fn arena_window_out_of_bounds_panics() {
         let arena = Arc::new(vec![1, 2, 3]);
         let _ = Domain::new_arena(arena, 2, 2);
+    }
+
+    /// The SoA store must agree with per-struct `Domain` semantics on
+    /// every operation, including snap-to-next-value tightenings.
+    #[test]
+    fn dom_store_matches_domain_semantics() {
+        let doms = vec![dom(&[2, 5, 9, 12]), Domain::new_range(10, 40), dom(&[7])];
+        let mut store = DomStore::default();
+        store.load_from(&doms);
+        assert_eq!(store.len(), 3);
+        let (a, b, c) = (VarId(0), VarId(1), VarId(2));
+        assert_eq!((store.min(a), store.max(a), store.size(a)), (2, 12, 4));
+        assert_eq!((store.min(b), store.max(b)), (10, 40));
+        assert!(store.is_fixed(c) && store.value(c) == 7);
+        assert!(store.contains(a, 9) && !store.contains(a, 3));
+
+        // snap-to-value tightenings on the explicit universe
+        assert_eq!(store.remove_below(a, 3), Ok(true));
+        assert_eq!(store.min(a), 5);
+        assert_eq!(store.remove_below(a, 5), Ok(false));
+        assert_eq!(store.remove_above(a, 11), Ok(true));
+        assert_eq!(store.max(a), 9);
+        assert_eq!(store.remove_above(a, 1), Err(()));
+
+        // range universe stays index-arithmetic only
+        assert_eq!(store.remove_below(b, 15), Ok(true));
+        assert_eq!(store.remove_above(b, 20), Ok(true));
+        assert_eq!((store.min(b), store.max(b), store.size(b)), (15, 20, 6));
+        assert_eq!(store.remove_below(b, 21), Err(()));
+
+        // trail round-trip
+        let snap = store.bounds(a);
+        assert_eq!(store.remove_below(a, 9), Ok(true));
+        assert!(store.is_fixed(a));
+        store.restore(a, snap);
+        assert_eq!((store.min(a), store.max(a)), (5, 9));
+
+        // Lit truth in the store
+        assert!(Lit::geq(a, 5).is_true_in(&store));
+        assert!(Lit::geq(a, 10).is_false_in(&store));
+        assert!(!Lit::leq(a, 7).is_true_in(&store));
+        assert!(Lit::leq(a, 4).is_false_in(&store));
+
+        // load_from resets contents while reusing the store
+        store.load_from(&doms[..2]);
+        assert_eq!(store.len(), 2);
+        assert_eq!((store.min(a), store.max(a)), (2, 12));
     }
 }

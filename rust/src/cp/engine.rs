@@ -42,6 +42,21 @@
 //!   that was a propagation fixpoint, so only the propagators watching
 //!   undone variables plus the objective (whose bound may have
 //!   tightened since the subtree was entered) are re-enqueued.
+//! * **Zero steady-state allocation.** Every buffer the engine and the
+//!   search touch per node is pooled in [`SolveCtx`] and stolen/
+//!   recycled around each solve, so re-solves on a warmed context make
+//!   no heap allocation (asserted exactly by the counting-allocator
+//!   test `reused_ctx_steady_state_is_allocation_free`). The audit of
+//!   the remaining `clone()`/`vec![]`/`Vec::new` sites under `cp/`
+//!   found these *deliberate* survivors, all off the chronological
+//!   steady-state path: learned-search no-good literal vectors (owned
+//!   by [`NoGoodDb`] across the solve, so they cannot be pooled) and
+//!   the learned activity/heap/database built per learned solve; the
+//!   linear profile's `BTreeMap` (frees nodes on `clear` — it is the
+//!   A/B oracle, not the default); profile reconstruction on a
+//!   mode-change reset (one allocation per A/B flip); model/presolve
+//!   construction (once per outer solve, outside the kernel); and the
+//!   `cfg(test)`/`prop-audit` explanation-replay harness.
 //!
 //! A `naive` mode reproduces the pre-engine reference semantics — wake
 //! every watcher on any event, one queue, `Cumulative` rebuilt from
@@ -51,18 +66,19 @@
 //! solution is verified against all constraints before it is reported.
 
 use super::disjunctive::prop_disjunctive;
-use super::domain::{event, Domain, DomainEvent, Lit, VarId};
+use super::domain::{event, DomStore, DomainEvent, Lit, VarId};
 use super::learn::NoGoodDb;
 use super::propagators::{
     edge_finding_filter_item, explain_profile_at, prop_linear_le, timetable_filter_item,
     Conflict, Ctx, CumItem, ExplState, ProfileView, Propagator, TrailEntry,
     REASON_DECISION, REASON_PROP,
 };
-use super::search::{SearchStats, SearchStrategy};
+use super::search::{SearchScratch, SearchStats, SearchStrategy};
 use super::segtree::SegTreeProfile;
 use super::Model;
 use crate::util::{Csr, Incumbent};
 use std::collections::BTreeMap;
+use std::mem;
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
@@ -178,7 +194,7 @@ impl ProfileData {
 
 /// Incremental state for one `Cumulative` propagator: the registered
 /// compulsory part per item plus the profile they induce.
-struct CumState {
+pub(crate) struct CumState {
     /// The propagator's items (copied so resyncs never borrow the
     /// model) and capacity.
     items: Vec<CumItem>,
@@ -204,10 +220,134 @@ struct CumState {
     dirty_flag: Vec<bool>,
 }
 
+impl CumState {
+    /// Refill a pooled state in place for a (possibly different)
+    /// cumulative propagator, keeping every buffer's capacity. The
+    /// profile structure is reset when its mode matches the requested
+    /// one and rebuilt otherwise (mode changes between solves are rare
+    /// — an A/B flip — and pay one allocation).
+    fn reset(&mut self, items: &[CumItem], cap: i64, profile: ProfileMode, tlo: i64, thi: i64) {
+        self.items.clear();
+        self.items.extend_from_slice(items);
+        self.cap = cap;
+        self.reg.clear();
+        self.reg.resize(items.len(), None);
+        self.nparts = 0;
+        self.version = 0;
+        self.last_filter_version = u64::MAX;
+        self.dirty.clear();
+        self.dirty_flag.clear();
+        self.dirty_flag.resize(items.len(), false);
+        match (&mut self.data, profile) {
+            (ProfileData::Linear { diff, profile, max_load, dirty }, ProfileMode::Linear) => {
+                // `BTreeMap::clear` frees its nodes, so the linear
+                // profile cannot be steady-state allocation-free — it
+                // is the A/B baseline / fuzz oracle; the segment-tree
+                // default resets without touching the heap
+                diff.clear();
+                profile.clear();
+                *max_load = 0;
+                *dirty = true;
+            }
+            (ProfileData::Seg(t), ProfileMode::SegTree) => t.reset(tlo, thi + 2),
+            (d, ProfileMode::Linear) => {
+                *d = ProfileData::Linear {
+                    diff: BTreeMap::new(),
+                    profile: Vec::new(),
+                    max_load: 0,
+                    dirty: true,
+                };
+            }
+            (d, ProfileMode::SegTree) => *d = ProfileData::Seg(SegTreeProfile::new(tlo, thi + 2)),
+        }
+    }
+
+    /// Fresh state with empty buffers (pool growth path; `reset` fills
+    /// it immediately after).
+    fn empty(profile: ProfileMode) -> Self {
+        CumState {
+            items: Vec::new(),
+            cap: 0,
+            reg: Vec::new(),
+            nparts: 0,
+            data: match profile {
+                ProfileMode::Linear => ProfileData::Linear {
+                    diff: BTreeMap::new(),
+                    profile: Vec::new(),
+                    max_load: 0,
+                    dirty: true,
+                },
+                ProfileMode::SegTree => ProfileData::Seg(SegTreeProfile::new(0, 1)),
+            },
+            version: 0,
+            last_filter_version: u64::MAX,
+            dirty: Vec::new(),
+            dirty_flag: Vec::new(),
+        }
+    }
+}
+
+/// Reusable solve-context arena: every buffer a [`PropagationEngine`]
+/// and the search layer allocate, pooled across engine constructions.
+///
+/// Constructing an engine used to allocate the domains, trail,
+/// explanation tables, queues, watcher arenas and per-`Cumulative`
+/// incremental state from scratch — a repeat cost paid once per LNS
+/// window re-solve (hundreds of times per solve on paper-scale runs).
+/// A `SolveCtx` is created once per [`crate::MoccasinSolver`] solve and
+/// threaded through every engine construction: [`PropagationEngine::new`]
+/// *steals* the buffers (capacity intact), resets their lengths for the
+/// model at hand, and [`PropagationEngine::recycle`] hands them back
+/// when the search returns. Steady-state window re-solves on a reused
+/// context perform no heap allocation at all (asserted by the
+/// counting-allocator regression test).
+///
+/// `Default` is the only constructor: an empty context is valid for any
+/// model and simply grows to fit on first use.
+#[derive(Default)]
+pub struct SolveCtx {
+    pub(crate) doms: DomStore,
+    pub(crate) trail: Vec<TrailEntry>,
+    pub(crate) expl: ExplState,
+    pub(crate) level_marks: Vec<u32>,
+    pub(crate) ng: NoGoodDb,
+    pub(crate) events: Vec<DomainEvent>,
+    pub(crate) queue_fast: Vec<u32>,
+    pub(crate) queue_slow: Vec<u32>,
+    pub(crate) in_queue: Vec<bool>,
+    pub(crate) tier_slow: Vec<bool>,
+    pub(crate) watch: Csr<(u32, u8)>,
+    pub(crate) cum_of_prop: Vec<Option<u32>>,
+    /// Pooled per-`Cumulative` incremental states, reused in order.
+    pub(crate) cum_pool: Vec<CumState>,
+    pub(crate) cum_index: Csr<(u32, u32)>,
+    /// Nested-row scratch for building `cum_index` (rows are cleared,
+    /// not dropped, so their capacity survives the rebuild).
+    pub(crate) cum_rows: Vec<Vec<(u32, u32)>>,
+    pub(crate) obj_terms: Vec<(i64, VarId)>,
+    pub(crate) obj_mask: Vec<u8>,
+    /// Search-layer scratch (branch heap, activities, analysis buffers,
+    /// solution pool) — see `cp::search`.
+    pub(crate) search: SearchScratch,
+}
+
+impl SolveCtx {
+    /// Return a solution vector previously handed out in a
+    /// `SearchResult::best` produced with this context, so the next
+    /// solve's incumbent storage comes from the pool instead of the
+    /// heap. Optional — dropping the vector is always sound, it just
+    /// costs the next solve one allocation.
+    pub fn recycle_solution(&mut self, v: Vec<i64>) {
+        self.search.recycle_solution(v);
+    }
+}
+
 /// The persistent propagation engine (see module docs).
 pub(crate) struct PropagationEngine {
-    /// Trailed domains, indexed by [`VarId`].
-    pub domains: Vec<Domain>,
+    /// Trailed domain bounds in SoA layout (packed lo/hi index arrays
+    /// over shared value representations — see `domain::DomStore`),
+    /// indexed by [`VarId`].
+    pub doms: DomStore,
     /// Trailed bound changes — undone in reverse order on backtrack.
     /// Each entry carries the literal it established plus (when
     /// explanations are on) the provenance conflict analysis needs.
@@ -239,11 +379,17 @@ pub(crate) struct PropagationEngine {
     watch: Csr<(u32, u8)>,
     /// prop id → index into `cum_states` for `Cumulative` propagators.
     cum_of_prop: Vec<Option<u32>>,
+    /// The context's `CumState` pool; entries `0..` this model's
+    /// cumulative count are live, any extras from a previous larger
+    /// model ride along inert (their capacity is the point).
     cum_states: Vec<CumState>,
     /// var → (cum state index, item index) pairs needing resync when
     /// the variable's bounds change (forward or on undo) — CSR, same
     /// rationale as `watch`.
     cum_index: Csr<(u32, u32)>,
+    /// Row scratch `cum_index` was built from, carried only so
+    /// `recycle` can hand it back to the context.
+    cum_rows: Vec<Vec<(u32, u32)>>,
     /// Persistent objective-bound propagator: Σ obj_terms ≤ obj_rhs,
     /// with `obj_rhs` tightened in place (never rebuilt per pass).
     obj_terms: Vec<(i64, VarId)>,
@@ -286,14 +432,14 @@ pub(crate) struct PropagationEngine {
     audits_done: u64,
 }
 
-/// Compulsory part of an item under `domains`: `[max(start), min(end)]`
+/// Compulsory part of an item under `doms`: `[max(start), min(end)]`
 /// when the item is certainly active and the window is nonempty.
-fn compulsory_part(domains: &[Domain], it: &CumItem) -> Option<(i64, i64)> {
-    if domains[it.active.0 as usize].min() != 1 {
+fn compulsory_part(doms: &DomStore, it: &CumItem) -> Option<(i64, i64)> {
+    if doms.min(it.active) != 1 {
         return None;
     }
-    let ms = domains[it.start.0 as usize].max();
-    let me = domains[it.end.0 as usize].min();
+    let ms = doms.max(it.start);
+    let me = doms.min(it.end);
     if ms <= me {
         Some((ms, me))
     } else {
@@ -419,7 +565,14 @@ fn cumulative_filter(
 
 impl PropagationEngine {
     /// Build an engine over `model` minimizing `objective` (empty =
-    /// satisfaction). `naive` selects the reference re-enqueue-everything
+    /// satisfaction), stealing every buffer from `ctx` — lengths are
+    /// reset for this model, capacity is kept, and nothing is
+    /// reallocated when the context has already seen a model at least
+    /// this large (the LNS window-re-solve steady state). Give the
+    /// buffers back with [`PropagationEngine::recycle`] when the search
+    /// returns.
+    ///
+    /// `naive` selects the reference re-enqueue-everything
     /// semantics; `explain` turns on explanation recording (the learned
     /// search's requirement — chronological search passes `false` and
     /// pays nothing); `strategy` carries the kernel-level knobs the
@@ -432,13 +585,17 @@ impl PropagationEngine {
         naive: bool,
         explain: bool,
         strategy: &SearchStrategy,
+        ctx: &mut SolveCtx,
     ) -> Self {
         let profile = strategy.profile;
         let nvars = model.domains.len();
         let nprops = model.props.len();
-        let domains = model.domains.clone();
+        let mut doms = mem::take(&mut ctx.doms);
+        doms.load_from(&model.domains);
         let has_obj = !objective.is_empty();
-        let mut obj_mask = vec![0u8; nvars];
+        let mut obj_mask = mem::take(&mut ctx.obj_mask);
+        obj_mask.clear();
+        obj_mask.resize(nvars, 0u8);
         for &(c, v) in objective {
             if c > 0 {
                 obj_mask[v.0 as usize] |= event::LB;
@@ -446,10 +603,40 @@ impl PropagationEngine {
                 obj_mask[v.0 as usize] |= event::UB;
             }
         }
-        let mut tier_slow = vec![false; nprops + 1];
-        let mut cum_of_prop: Vec<Option<u32>> = vec![None; nprops + 1];
-        let mut cum_states: Vec<CumState> = Vec::new();
-        let mut cum_rows: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nvars];
+        let mut obj_terms = mem::take(&mut ctx.obj_terms);
+        obj_terms.clear();
+        obj_terms.extend_from_slice(objective);
+        let mut trail = mem::take(&mut ctx.trail);
+        trail.clear();
+        let mut expl = mem::take(&mut ctx.expl);
+        expl.reset(nvars, explain);
+        let mut level_marks = mem::take(&mut ctx.level_marks);
+        level_marks.clear();
+        let mut ng = mem::take(&mut ctx.ng);
+        ng.reset(nvars);
+        let mut events = mem::take(&mut ctx.events);
+        events.clear();
+        let mut queue_fast = mem::take(&mut ctx.queue_fast);
+        queue_fast.clear();
+        let mut queue_slow = mem::take(&mut ctx.queue_slow);
+        queue_slow.clear();
+        let mut in_queue = mem::take(&mut ctx.in_queue);
+        in_queue.clear();
+        in_queue.resize(nprops + 1, false);
+        let mut tier_slow = mem::take(&mut ctx.tier_slow);
+        tier_slow.clear();
+        tier_slow.resize(nprops + 1, false);
+        let mut cum_of_prop = mem::take(&mut ctx.cum_of_prop);
+        cum_of_prop.clear();
+        cum_of_prop.resize(nprops + 1, None);
+        let mut cum_states = mem::take(&mut ctx.cum_pool);
+        let mut cum_rows = mem::take(&mut ctx.cum_rows);
+        for r in cum_rows.iter_mut() {
+            r.clear();
+        }
+        if cum_rows.len() < nvars {
+            cum_rows.resize_with(nvars, Vec::new);
+        }
         // stamp the detection result into this run's stats so portfolio
         // merges and `solve --verbose` see it on every solve path
         let mut stats = SearchStats::default();
@@ -459,35 +646,31 @@ impl PropagationEngine {
                 stats.disj_pairs_detected += h * (h - 1) / 2;
             }
         }
+        let mut used_cums = 0usize;
         for (pid, p) in model.props.iter().enumerate() {
             let Propagator::Cumulative { items, cap } = p else {
                 continue;
             };
             tier_slow[pid] = true;
-            let ci = cum_states.len() as u32;
+            let ci = used_cums as u32;
             cum_of_prop[pid] = Some(ci);
             // segment-tree coordinate range: every part boundary is a
             // value of some start/end domain, so the initial domain
             // extremes bound the axis for the whole solve
             let (mut tlo, mut thi) = (i64::MAX, i64::MIN);
             for it in items.iter() {
-                tlo = tlo.min(domains[it.start.0 as usize].min());
-                thi = thi.max(domains[it.end.0 as usize].max());
+                tlo = tlo.min(doms.min(it.start));
+                thi = thi.max(doms.max(it.end));
             }
             if tlo > thi {
                 (tlo, thi) = (0, 0); // no items: degenerate axis
             }
-            let mut data = match profile {
-                ProfileMode::Linear => ProfileData::Linear {
-                    diff: BTreeMap::new(),
-                    profile: Vec::new(),
-                    max_load: 0,
-                    dirty: true,
-                },
-                ProfileMode::SegTree => ProfileData::Seg(SegTreeProfile::new(tlo, thi + 2)),
-            };
-            let mut reg: Vec<Option<(i64, i64)>> = vec![None; items.len()];
-            let mut nparts = 0usize;
+            if used_cums == cum_states.len() {
+                cum_states.push(CumState::empty(profile));
+            }
+            let cs = &mut cum_states[used_cums];
+            used_cums += 1;
+            cs.reset(items, *cap, profile, tlo, thi);
             for (ii, it) in items.iter().enumerate() {
                 if it.demand == 0 {
                     // cannot change any load: never registered, never
@@ -500,47 +683,38 @@ impl PropagationEngine {
                 for v in [it.active, it.start, it.end] {
                     cum_rows[v.0 as usize].push((ci, ii as u32));
                 }
-                let part = compulsory_part(&domains, it);
+                let part = compulsory_part(&doms, it);
                 if let Some((a, b)) = part {
-                    data.apply(a, b, it.demand);
-                    nparts += 1;
+                    cs.data.apply(a, b, it.demand);
+                    cs.nparts += 1;
                 }
-                reg[ii] = part;
+                cs.reg[ii] = part;
             }
-            let n_items = items.len();
-            cum_states.push(CumState {
-                items: items.clone(),
-                cap: *cap,
-                reg,
-                nparts,
-                data,
-                version: 0,
-                last_filter_version: u64::MAX,
-                dirty: Vec::new(),
-                dirty_flag: vec![false; n_items],
-            });
         }
         // flatten the model's per-var watcher rows into the CSR arena
-        // the hot drain/undo loops walk
-        let watch = Csr::from_rows(&model.watches);
-        let cum_index = Csr::from_rows(&cum_rows);
+        // the hot drain/undo loops walk, reusing the context's arenas
+        let mut watch = mem::take(&mut ctx.watch);
+        watch.rebuild_from_rows(&model.watches);
+        let mut cum_index = mem::take(&mut ctx.cum_index);
+        cum_index.rebuild_from_rows(&cum_rows[..nvars]);
         PropagationEngine {
-            domains,
-            trail: Vec::new(),
-            expl: ExplState::new(nvars, explain),
-            level_marks: Vec::new(),
-            ng: NoGoodDb::new(nvars),
+            doms,
+            trail,
+            expl,
+            level_marks,
+            ng,
             stats,
-            events: Vec::new(),
-            queue_fast: Vec::with_capacity(nprops + 1),
-            queue_slow: Vec::new(),
-            in_queue: vec![false; nprops + 1],
+            events,
+            queue_fast,
+            queue_slow,
+            in_queue,
             tier_slow,
             watch,
             cum_of_prop,
             cum_states,
             cum_index,
-            obj_terms: objective.to_vec(),
+            cum_rows,
+            obj_terms,
             obj_rhs: i64::MAX / 4,
             obj_mask,
             obj_pid: nprops as u32,
@@ -555,6 +729,29 @@ impl PropagationEngine {
             #[cfg(any(test, feature = "prop-audit"))]
             audits_done: 0,
         }
+    }
+
+    /// Hand every pooled buffer back to `ctx` for the next engine
+    /// construction (capacities intact). The engine's terminal stats
+    /// stay with the caller — read them before recycling.
+    pub fn recycle(self, ctx: &mut SolveCtx) {
+        ctx.doms = self.doms;
+        ctx.trail = self.trail;
+        ctx.expl = self.expl;
+        ctx.level_marks = self.level_marks;
+        ctx.ng = self.ng;
+        ctx.events = self.events;
+        ctx.queue_fast = self.queue_fast;
+        ctx.queue_slow = self.queue_slow;
+        ctx.in_queue = self.in_queue;
+        ctx.tier_slow = self.tier_slow;
+        ctx.watch = self.watch;
+        ctx.cum_of_prop = self.cum_of_prop;
+        ctx.cum_pool = self.cum_states;
+        ctx.cum_index = self.cum_index;
+        ctx.cum_rows = self.cum_rows;
+        ctx.obj_terms = self.obj_terms;
+        ctx.obj_mask = self.obj_mask;
     }
 
     /// Attach the watchdog channel: `pulse` receives heartbeat epochs
@@ -648,7 +845,7 @@ impl PropagationEngine {
         for k in self.cum_index.span(vi) {
             let (ci, ii) = *self.cum_index.at(k);
             let (ci, ii) = (ci as usize, ii as usize);
-            let part = compulsory_part(&self.domains, &self.cum_states[ci].items[ii]);
+            let part = compulsory_part(&self.doms, &self.cum_states[ci].items[ii]);
             let cs = &mut self.cum_states[ci];
             let d = cs.items[ii].demand;
             debug_assert!(d != 0, "zero-demand items are never indexed for resync");
@@ -710,7 +907,7 @@ impl PropagationEngine {
         self.expl.reason = REASON_PROP;
         if pid == self.obj_pid {
             let mut ctx = Ctx {
-                domains: &mut self.domains,
+                doms: &mut self.doms,
                 trail: &mut self.trail,
                 changed: &mut self.events,
                 expl: &mut self.expl,
@@ -725,7 +922,7 @@ impl PropagationEngine {
                 return Ok(());
             }
             let mut ctx = Ctx {
-                domains: &mut self.domains,
+                doms: &mut self.doms,
                 trail: &mut self.trail,
                 changed: &mut self.events,
                 expl: &mut self.expl,
@@ -736,7 +933,7 @@ impl PropagationEngine {
             if let Some(ci) = self.cum_of_prop[pid as usize] {
                 let cs = &mut self.cum_states[ci as usize];
                 let mut ctx = Ctx {
-                    domains: &mut self.domains,
+                    doms: &mut self.doms,
                     trail: &mut self.trail,
                     changed: &mut self.events,
                     expl: &mut self.expl,
@@ -745,7 +942,7 @@ impl PropagationEngine {
             }
         }
         let mut ctx = Ctx {
-            domains: &mut self.domains,
+            doms: &mut self.doms,
             trail: &mut self.trail,
             changed: &mut self.events,
             expl: &mut self.expl,
@@ -756,7 +953,7 @@ impl PropagationEngine {
     /// Run one learned no-good (watched-literal propagation).
     fn run_nogood(&mut self, gid: u32) -> Result<(), Conflict> {
         let mut ctx = Ctx {
-            domains: &mut self.domains,
+            doms: &mut self.doms,
             trail: &mut self.trail,
             changed: &mut self.events,
             expl: &mut self.expl,
@@ -828,7 +1025,7 @@ impl PropagationEngine {
             self.expl.reason = REASON_DECISION;
             self.expl.scratch.clear();
             let mut ctx = Ctx {
-                domains: &mut self.domains,
+                doms: &mut self.doms,
                 trail: &mut self.trail,
                 changed: &mut self.events,
                 expl: &mut self.expl,
@@ -849,7 +1046,7 @@ impl PropagationEngine {
             self.expl.reason = REASON_DECISION;
             self.expl.scratch.clear();
             let mut ctx = Ctx {
-                domains: &mut self.domains,
+                doms: &mut self.doms,
                 trail: &mut self.trail,
                 changed: &mut self.events,
                 expl: &mut self.expl,
@@ -883,7 +1080,7 @@ impl PropagationEngine {
             self.expl.reason = REASON_DECISION;
             self.expl.scratch.clear();
             let mut ctx = Ctx {
-                domains: &mut self.domains,
+                doms: &mut self.doms,
                 trail: &mut self.trail,
                 changed: &mut self.events,
                 expl: &mut self.expl,
@@ -924,7 +1121,7 @@ impl PropagationEngine {
             self.expl.reason = REASON_PROP;
             self.expl.scratch.clear();
             let mut ctx = Ctx {
-                domains: &mut self.domains,
+                doms: &mut self.doms,
                 trail: &mut self.trail,
                 changed: &mut self.events,
                 expl: &mut self.expl,
@@ -956,16 +1153,15 @@ impl PropagationEngine {
     pub fn undo_to(&mut self, mark: usize) {
         while self.trail.len() > mark {
             let e = self.trail.pop().unwrap();
-            self.domains[e.var as usize].restore((e.old_lo, e.old_hi));
+            self.doms.restore(VarId(e.var), (e.old_lo, e.old_hi));
             if self.expl.enabled {
-                // keep the provenance meta, per-var entry chain and the
-                // explanation arena in lock-step with the trail
+                // keep the provenance columns, per-var entry chain and
+                // the explanation arena in lock-step with the trail
                 // (learned no-good watches need no update: undoing only
                 // makes watched literals less true, which preserves the
                 // invariant)
-                let m = self.expl.meta.pop().unwrap();
-                self.expl.last_entry[e.var as usize] = m.prev;
-                self.expl.arena.truncate(m.expl_start as usize);
+                let prev = self.expl.pop_meta();
+                self.expl.last_entry[e.var as usize] = prev;
             }
             if self.naive {
                 continue;
@@ -1041,11 +1237,11 @@ impl PropagationEngine {
     /// at root (including `assert_root` facts and the root fixpoint)
     /// are kept — recorded literals are post-snap values over the same
     /// root holes, so the replay must share them.
-    fn audit_root_domains(&self) -> Vec<Domain> {
-        let mut doms = self.domains.clone();
+    fn audit_root_domains(&self) -> DomStore {
+        let mut doms = self.doms.clone();
         let root = self.level_marks.first().map_or(self.trail.len(), |&m| m as usize);
         for e in self.trail[root..].iter().rev() {
-            doms[e.var as usize].restore((e.old_lo, e.old_hi));
+            doms.restore(VarId(e.var), (e.old_lo, e.old_hi));
         }
         doms
     }
@@ -1062,12 +1258,13 @@ impl PropagationEngine {
                 return;
             }
             self.audits_done += 1;
-            let meta = &self.expl.meta[idx];
-            debug_assert_eq!(meta.reason, REASON_PROP, "audit outside a propagator pass");
-            let lit = meta.lit;
-            let premise: Vec<Lit> = self.expl.arena
-                [meta.expl_start as usize..(meta.expl_start + meta.expl_len) as usize]
-                .to_vec();
+            debug_assert_eq!(
+                self.expl.reason_of[idx],
+                REASON_PROP,
+                "audit outside a propagator pass"
+            );
+            let lit = self.expl.lit[idx];
+            let premise: Vec<Lit> = self.expl.expl_window(idx as u32).to_vec();
             audit_replay(
                 model,
                 &self.obj_terms,
@@ -1121,16 +1318,16 @@ fn audit_replay(
     has_obj: bool,
     filtering: FilteringMode,
     disjunctive: bool,
-    mut domains: Vec<Domain>,
+    mut doms: DomStore,
     premise: &[Lit],
     target: Option<Lit>,
 ) {
     let mut trail: Vec<TrailEntry> = Vec::new();
     let mut changed: Vec<DomainEvent> = Vec::new();
-    let mut expl = ExplState::new(domains.len(), false);
+    let mut expl = ExplState::new(doms.len(), false);
     {
         let mut ctx = Ctx {
-            domains: &mut domains,
+            doms: &mut doms,
             trail: &mut trail,
             changed: &mut changed,
             expl: &mut expl,
@@ -1147,7 +1344,7 @@ fn audit_replay(
         let mut failed = false;
         {
             let mut ctx = Ctx {
-                domains: &mut domains,
+                doms: &mut doms,
                 trail: &mut trail,
                 changed: &mut changed,
                 expl: &mut expl,
@@ -1179,11 +1376,11 @@ fn audit_replay(
     }
     match target {
         Some(l) => assert!(
-            l.is_true(&domains[l.var.0 as usize]),
+            l.is_true_in(&doms),
             "unsound explanation: {premise:?} does not entail {l:?} \
              (replay reached min={} max={})",
-            domains[l.var.0 as usize].min(),
-            domains[l.var.0 as usize].max(),
+            doms.min(l.var),
+            doms.max(l.var),
         ),
         None => panic!("unsound conflict explanation: {premise:?} is consistent under replay"),
     }
@@ -1221,7 +1418,7 @@ fn replay_cumulative(
         if it.demand == 0 {
             continue;
         }
-        if let Some((a, b)) = compulsory_part(ctx.domains, it) {
+        if let Some((a, b)) = compulsory_part(ctx.doms, it) {
             add_diff(&mut diff, a, it.demand);
             add_diff(&mut diff, b + 1, -it.demand);
             nparts += 1;

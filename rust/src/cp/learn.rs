@@ -34,7 +34,6 @@ use super::domain::{event, Lit, VarId};
 use super::engine::PropagationEngine;
 use super::propagators::{Conflict, Ctx, REASON_DECISION, REASON_PROP};
 use super::search::SearchStats;
-use std::collections::BTreeMap;
 
 // ---------------------------------------------------------------------
 // Luby restart sequence
@@ -79,10 +78,25 @@ pub(crate) struct VarActivity {
 const ACT_DECAY: f64 = 0.95;
 const ACT_RESCALE: f64 = 1e100;
 
+impl Default for VarActivity {
+    fn default() -> Self {
+        VarActivity { act: Vec::new(), inc: 1.0, bumped: Vec::new() }
+    }
+}
+
 impl VarActivity {
     /// Zeroed activities for `nvars` variables.
     pub fn new(nvars: usize) -> Self {
         VarActivity { act: vec![0.0; nvars], inc: 1.0, bumped: Vec::new() }
+    }
+
+    /// Re-zero for a new solve over `nvars` variables, keeping buffer
+    /// capacity (the solve-context reuse path).
+    pub fn reset(&mut self, nvars: usize) {
+        self.act.clear();
+        self.act.resize(nvars, 0.0);
+        self.inc = 1.0;
+        self.bumped.clear();
     }
 
     /// Activity of `var`.
@@ -130,12 +144,26 @@ pub(crate) struct BranchHeap {
     loc: Vec<u32>,
 }
 
+impl Default for BranchHeap {
+    fn default() -> Self {
+        BranchHeap { heap: Vec::new(), loc: Vec::new() }
+    }
+}
+
 impl BranchHeap {
     const ABSENT: u32 = u32::MAX;
 
     /// Empty heap over `npos` branch positions.
     pub fn new(npos: usize) -> Self {
         BranchHeap { heap: Vec::with_capacity(npos), loc: vec![Self::ABSENT; npos] }
+    }
+
+    /// Re-empty for a new solve over `npos` branch positions, keeping
+    /// buffer capacity (the solve-context reuse path).
+    pub fn reset(&mut self, npos: usize) {
+        self.heap.clear();
+        self.loc.clear();
+        self.loc.resize(npos, Self::ABSENT);
     }
 
     /// Whether no position is queued.
@@ -255,6 +283,12 @@ pub(crate) struct NoGoodDb {
 
 const NG_DECAY: f64 = 0.999;
 
+impl Default for NoGoodDb {
+    fn default() -> Self {
+        NoGoodDb::new(0)
+    }
+}
+
 impl NoGoodDb {
     /// Empty database over `nvars` variables.
     pub fn new(nvars: usize) -> Self {
@@ -265,6 +299,23 @@ impl NoGoodDb {
             in_queue: Vec::new(),
             act_inc: 1.0,
         }
+    }
+
+    /// Re-empty for a new solve over `nvars` variables. Per-variable
+    /// watch rows and the queue keep their capacity; rows beyond
+    /// `nvars` are retained (cleared) so shrinking window re-solves
+    /// never free them.
+    pub fn reset(&mut self, nvars: usize) {
+        self.nogoods.clear();
+        for w in self.watches.iter_mut() {
+            w.clear();
+        }
+        if self.watches.len() < nvars {
+            self.watches.resize_with(nvars, Vec::new);
+        }
+        self.queue.clear();
+        self.in_queue.clear();
+        self.act_inc = 1.0;
     }
 
     /// Number of stored no-goods.
@@ -298,6 +349,11 @@ impl NoGoodDb {
 
     /// Store a new no-good (assertion literal first) and enqueue it for
     /// propagation. Returns its id.
+    ///
+    /// Clone-audit note: `lits` is a per-no-good heap allocation,
+    /// deliberately kept — the database owns each learned conjunction
+    /// for the rest of the solve (watch indices point into it), so it
+    /// cannot live in a per-conflict scratch buffer.
     pub fn add(&mut self, lits: Vec<Lit>) -> u32 {
         debug_assert!(lits.len() >= 2, "size-1 no-goods are asserted at the root");
         let gid = self.nogoods.len() as u32;
@@ -389,12 +445,11 @@ impl NoGoodDb {
         {
             let ng = &self.nogoods[g];
             for (k, l) in ng.lits.iter().enumerate() {
-                let d = &ctx.domains[l.var.0 as usize];
-                if l.is_false(d) {
+                if l.is_false_in(ctx.doms) {
                     false_at = Some(k as u32);
                     break;
                 }
-                if !l.is_true(d) {
+                if !l.is_true_in(ctx.doms) {
                     if n_unknown < 2 {
                         unknown[n_unknown] = k as u32;
                     }
@@ -463,6 +518,11 @@ impl NoGoodDb {
     /// strong). Must run with the trail at the root — no trail entry
     /// may reference a no-good id afterwards — which the learned search
     /// guarantees by reducing only at restarts.
+    ///
+    /// Clone-audit note: the `long_acts` vector and the database
+    /// rebuild below allocate, deliberately — reduction runs at restart
+    /// cadence (every `nogood_cap` conflicts at most), never inside the
+    /// per-node propagation loop.
     pub fn reduce(&mut self) {
         let mut long_acts: Vec<f64> = self
             .nogoods
@@ -530,51 +590,52 @@ pub(crate) enum Analyzed {
 fn entailing_entry(eng: &PropagationEngine, l: Lit) -> Option<u32> {
     let mut cur = eng.expl.last_entry[l.var.0 as usize];
     while cur != super::propagators::NO_ENTRY {
-        let m = &eng.expl.meta[cur as usize];
-        if m.lit.is_lb == l.is_lb {
-            let prev_entails =
-                if l.is_lb { m.old_val >= l.val } else { m.old_val <= l.val };
+        let i = cur as usize;
+        let mlit = eng.expl.lit[i];
+        if mlit.is_lb == l.is_lb {
+            let old = eng.expl.old_val[i];
+            let prev_entails = if l.is_lb { old >= l.val } else { old <= l.val };
             if !prev_entails {
                 debug_assert!(
-                    if l.is_lb { m.lit.val >= l.val } else { m.lit.val <= l.val },
+                    if l.is_lb { mlit.val >= l.val } else { mlit.val <= l.val },
                     "chain walk passed a non-entailing entry for a true literal"
                 );
                 return Some(cur);
             }
         }
-        cur = m.prev;
+        cur = eng.expl.prev[i];
     }
     None
 }
 
-/// Lower-level literals of the no-good under construction, merged per
-/// (variable, kind): for a conjunction, two lower bounds merge to the
-/// larger, two upper bounds to the smaller.
+/// Per-conflict scratch for [`analyze`], pooled in the solve context:
+/// 1UIP analysis runs once per conflict and previously allocated a
+/// pair of `BTreeMap`s plus three vectors every time — with the pool,
+/// steady-state conflict handling performs no heap allocation at all
+/// (the learned no-good's own literal vector excepted; see
+/// [`NoGoodDb::add`]).
 #[derive(Default)]
-struct OutLits {
-    lb: BTreeMap<u32, i64>,
-    ub: BTreeMap<u32, i64>,
-}
-
-impl OutLits {
-    fn merge(&mut self, l: Lit) {
-        if l.is_lb {
-            self.lb
-                .entry(l.var.0)
-                .and_modify(|v| *v = (*v).max(l.val))
-                .or_insert(l.val);
-        } else {
-            self.ub
-                .entry(l.var.0)
-                .and_modify(|v| *v = (*v).min(l.val))
-                .or_insert(l.val);
-        }
-    }
+pub(crate) struct AnalyzeScratch {
+    /// Current-decision-level marks over the trail span above the level
+    /// base.
+    mark: Vec<bool>,
+    /// Raw lower-level literals routed out of the resolution (merged
+    /// per (variable, kind) at collection time).
+    low: Vec<Lit>,
+    /// Merged lower-level literals with their decision levels.
+    rest: Vec<(usize, Lit)>,
+    /// Degenerate-cut literals kept verbatim.
+    kept: Vec<Lit>,
+    /// Ids of no-goods whose propagations were resolved through; the
+    /// caller bumps them (`analyze` borrows the engine shared, so it
+    /// cannot touch the engine-owned database itself). Cleared at the
+    /// start of every analysis.
+    pub ng_bumps: Vec<u32>,
 }
 
 /// Route one literal of the working conjunction: drop it if root-level,
-/// mark its entailing trail entry if at the conflicting level, merge it
-/// into the lower-level set otherwise. Bumps the variable's activity
+/// mark its entailing trail entry if at the conflicting level, push it
+/// onto the lower-level list otherwise. Bumps the variable's activity
 /// (conflict participation).
 #[allow(clippy::too_many_arguments)]
 fn route_lit(
@@ -583,7 +644,7 @@ fn route_lit(
     base: usize,
     mark: &mut [bool],
     count: &mut usize,
-    out: &mut OutLits,
+    low: &mut Vec<Lit>,
     act: &mut VarActivity,
 ) {
     let Some(idx) = entailing_entry(eng, l) else {
@@ -599,7 +660,7 @@ fn route_lit(
             *count += 1;
         }
     } else {
-        out.merge(l);
+        low.push(l);
     }
 }
 
@@ -607,31 +668,32 @@ fn route_lit(
 /// first unique implication point, producing a learned no-good and its
 /// backjump level, or [`Analyzed::Root`] when the conflict needs no
 /// decision. Bumps variable activities along the way; the ids of
-/// no-goods whose propagations were resolved through are appended to
-/// `ng_bumps` (the caller bumps them — `analyze` borrows the engine
-/// shared, so it cannot touch the engine-owned database itself).
+/// no-goods whose propagations were resolved through are left in
+/// `scratch.ng_bumps` for the caller to bump.
 pub(crate) fn analyze(
     eng: &PropagationEngine,
     conflict: &[Lit],
     act: &mut VarActivity,
-    ng_bumps: &mut Vec<u32>,
-    mark_buf: &mut Vec<bool>,
+    scratch: &mut AnalyzeScratch,
 ) -> Analyzed {
+    let AnalyzeScratch { mark, low, rest, kept, ng_bumps } = scratch;
+    ng_bumps.clear();
+    kept.clear();
+    low.clear();
+    rest.clear();
     let cur = eng.current_level();
     if cur == 0 {
         return Analyzed::Root;
     }
     let base = eng.level_marks[cur - 1] as usize;
     let tlen = eng.trail.len();
-    // reuse the caller's mark buffer: analysis runs once per conflict,
+    // reuse the pooled mark buffer: analysis runs once per conflict,
     // and this span allocation would otherwise dominate its cost
-    mark_buf.clear();
-    mark_buf.resize(tlen - base, false);
-    let mark = mark_buf;
+    mark.clear();
+    mark.resize(tlen - base, false);
     let mut count = 0usize;
-    let mut out = OutLits::default();
     for &l in conflict {
-        route_lit(eng, l, base, mark, &mut count, &mut out, act);
+        route_lit(eng, l, base, mark, &mut count, low, act);
     }
 
     // Resolution: repeatedly replace the newest current-level literal
@@ -639,7 +701,6 @@ pub(crate) fn analyze(
     // single literals sitting at the level start, so they can only be
     // reached last — i.e. as the UIP itself.
     let mut assertion: Option<Lit> = None;
-    let mut kept: Vec<Lit> = Vec::new();
     let mut scan = tlen;
     while count > 0 {
         let mut i = scan;
@@ -650,45 +711,51 @@ pub(crate) fn analyze(
             }
         }
         scan = i;
-        let m = &eng.expl.meta[i];
+        let reason = eng.expl.reason_of[i];
         mark[i - base] = false;
         count -= 1;
         if count == 0 {
             // exactly one current-level literal left: the UIP
-            if m.reason != REASON_PROP && m.reason != REASON_DECISION {
-                ng_bumps.push(m.reason);
+            if reason != REASON_PROP && reason != REASON_DECISION {
+                ng_bumps.push(reason);
             }
-            assertion = Some(m.lit);
+            assertion = Some(eng.expl.lit[i]);
             break;
         }
-        if m.reason == REASON_DECISION {
+        if reason == REASON_DECISION {
             // Structurally unreachable: the decision is the level's
             // first entry, so every other current-level literal is
             // resolved before the scan reaches it (making it the UIP
             // above). Keeping the literal stays sound if it ever fires.
             debug_assert!(false, "decision reached while other current-level literals pend");
-            kept.push(m.lit);
+            kept.push(eng.expl.lit[i]);
             continue;
         }
-        if m.reason != REASON_PROP {
-            ng_bumps.push(m.reason);
+        if reason != REASON_PROP {
+            ng_bumps.push(reason);
         }
-        let (s, n) = (m.expl_start as usize, m.expl_len as usize);
-        for k in s..s + n {
+        for k in eng.expl.expl_off[i] as usize..eng.expl.expl_off[i + 1] as usize {
             let l = eng.expl.arena[k];
-            route_lit(eng, l, base, mark, &mut count, &mut out, act);
+            route_lit(eng, l, base, mark, &mut count, low, act);
         }
     }
 
-    // Collect the lower-level literals with their levels.
-    let mut rest: Vec<(usize, Lit)> = Vec::with_capacity(out.lb.len() + out.ub.len());
-    for (&v, &val) in out.lb.iter() {
-        let l = Lit::geq(VarId(v), val);
-        let idx = entailing_entry(eng, l).expect("merged literal lost its entry");
-        rest.push((eng.level_of(idx), l));
-    }
-    for (&v, &val) in out.ub.iter() {
-        let l = Lit::leq(VarId(v), val);
+    // Merge the lower-level literals per (variable, kind) — lower
+    // bounds to the larger value, upper bounds to the smaller — and
+    // collect them with their levels, LB literals first and each kind
+    // in variable order (the historical map-iteration order, preserved
+    // because the degenerate-assertion fallback below tie-breaks on
+    // collection order).
+    low.sort_unstable_by_key(|l| (!l.is_lb, l.var.0));
+    let mut j = 0;
+    while j < low.len() {
+        let mut l = low[j];
+        let mut k = j + 1;
+        while k < low.len() && low[k].var == l.var && low[k].is_lb == l.is_lb {
+            l.val = if l.is_lb { l.val.max(low[k].val) } else { l.val.min(low[k].val) };
+            k += 1;
+        }
+        j = k;
         let idx = entailing_entry(eng, l).expect("merged literal lost its entry");
         rest.push((eng.level_of(idx), l));
     }
@@ -720,18 +787,21 @@ pub(crate) fn analyze(
             && l.is_lb == assertion.is_lb
             && if l.is_lb { assertion.val >= l.val } else { assertion.val <= l.val })
     });
-    // Deterministic literal order (BTreeMap iteration is ordered, but
-    // make the level-major order explicit for stable no-goods).
+    // Deterministic literal order (the merge above is ordered already,
+    // but make the level-major order explicit for stable no-goods).
     rest.sort_by_key(|&(lvl, l)| (lvl, l.var.0, l.is_lb));
     let level = if kept.is_empty() {
         rest.iter().map(|&(lvl, _)| lvl).max().unwrap_or(0)
     } else {
         cur - 1 // degenerate multi-literal cut: chronological step
     };
+    // the learned conjunction itself is a fresh allocation: the no-good
+    // database keeps it alive for the rest of the solve (see
+    // `NoGoodDb::add`)
     let mut lits = Vec::with_capacity(1 + kept.len() + rest.len());
     lits.push(assertion);
-    lits.append(&mut kept);
-    lits.extend(rest.into_iter().map(|(_, l)| l));
+    lits.append(kept);
+    lits.extend(rest.drain(..).map(|(_, l)| l));
     Analyzed::NoGood { lits, level }
 }
 

@@ -65,7 +65,7 @@ mod segtree;
 
 pub use disjunctive::DisjItem;
 pub use domain::{event, Domain, DomainEvent, Lit, VarId};
-pub use engine::{FilteringMode, ProfileMode};
+pub use engine::{FilteringMode, ProfileMode, SolveCtx};
 pub use propagators::{CumItem, Propagator};
 pub use search::{SearchMode, SearchResult, SearchStats, SearchStrategy, Solver, Status};
 

@@ -8,13 +8,13 @@
 //! soundness unconditional.
 
 use super::disjunctive::{disj_satisfied, prop_disjunctive, DisjItem};
-use super::domain::{event, Domain, DomainEvent, Lit, VarId};
+use super::domain::{event, DomainEvent, DomStore, Lit, VarId};
 use super::segtree::SegTreeProfile;
 use std::sync::Arc;
 
 /// One trailed bound change: exactly the restore data the undo path
-/// reads. Provenance for conflict analysis lives in a *parallel*
-/// [`TrailMeta`] vector inside [`ExplState`], filled only when
+/// reads. Provenance for conflict analysis lives in *parallel*
+/// structure-of-arrays columns inside [`ExplState`], filled only when
 /// explanations are enabled — the chronological / naive hot path keeps
 /// the lean 12-byte entry and pays nothing for the learned machinery.
 #[derive(Debug, Clone, Copy)]
@@ -27,53 +27,55 @@ pub(crate) struct TrailEntry {
     pub old_hi: u32,
 }
 
-/// Provenance of one trail entry (parallel to the trail; learned
-/// search only): what bound predicate the entry established and what
-/// implied it — everything 1UIP conflict analysis (`cp::learn`) reads.
-#[derive(Debug, Clone)]
-pub(crate) struct TrailMeta {
-    /// The bound predicate this entry established (post-snap value).
-    pub lit: Lit,
-    /// Value of the same bound *before* the change (previous min for an
-    /// LB entry, previous max for a UB entry) — lets analysis detect
-    /// root-entailed literals without replaying the trail.
-    pub old_val: i64,
-    /// Previous trail index writing the same variable ([`NO_ENTRY`] =
-    /// none).
-    pub prev: u32,
-    /// Explanation window start `[expl_start, expl_start + expl_len)`
-    /// into the engine's literal arena (empty for decisions / root
-    /// facts).
-    pub expl_start: u32,
-    /// Explanation window length.
-    pub expl_len: u32,
-    /// [`REASON_DECISION`], [`REASON_PROP`], or the id of the learned
-    /// no-good whose propagation set this bound (for activity bumping).
-    pub reason: u32,
-}
-
-/// `TrailEntry::prev` sentinel: no earlier entry writes this variable.
+/// `ExplState::prev` sentinel: no earlier entry writes this variable.
 pub(crate) const NO_ENTRY: u32 = u32::MAX;
-/// `TrailEntry::reason`: the entry is a search decision (unexplainable;
-/// conflict analysis keeps its literal in the no-good).
+/// `ExplState::reason_of` tag: the entry is a search decision
+/// (unexplainable; conflict analysis keeps its literal in the no-good).
 pub(crate) const REASON_DECISION: u32 = u32::MAX;
-/// `TrailEntry::reason`: the entry was set by a model propagator (its
-/// explanation, if any, lives in the arena window).
+/// `ExplState::reason_of` tag: the entry was set by a model propagator
+/// (its explanation, if any, lives in the arena window).
 pub(crate) const REASON_PROP: u32 = u32::MAX - 1;
 
 /// Explanation state shared by the engine and every propagation pass:
-/// the literal arena (explanations of trail entries), the scratch
-/// buffer propagators fill before each tightening, the conflict
-/// explanation of the latest failure, and the per-variable latest
-/// trail entry index. All dormant when `enabled` is false
-/// (chronological / naive search skips every explanation cost).
+/// per-trail-entry provenance columns, the flat literal arena holding
+/// every entry's explanation window, the scratch buffer propagators
+/// fill before each tightening, the conflict explanation of the latest
+/// failure, and the per-variable latest trail entry index. All dormant
+/// when `enabled` is false (chronological / naive search skips every
+/// explanation cost).
+///
+/// Provenance is stored structure-of-arrays: 1UIP analysis walks
+/// `reason_of` / `prev` / `old_val` in tight loops over many entries,
+/// and the columns it touches stay packed instead of striding over a
+/// 40-byte per-entry struct. Explanation windows are *offsets*: entry
+/// `i` explains itself with `arena[expl_off[i] .. expl_off[i+1]]`.
+/// The windows tile the arena exactly — `push_meta` appends the
+/// scratch explanation at `arena.len()` and undo truncates in
+/// lock-step — so one `u32` offset column replaces the old per-entry
+/// `(start, len)` pairs.
 #[derive(Debug, Default)]
 pub(crate) struct ExplState {
-    /// Per-entry provenance, parallel to the trail (pushed/popped in
-    /// lock-step with it when `enabled`).
-    pub meta: Vec<TrailMeta>,
-    /// Flat arena of explanation literals; trail metas hold windows
-    /// into it, and it is truncated in lock-step with the trail.
+    /// Per-entry: the bound predicate the entry established (post-snap
+    /// value). Parallel to the trail when `enabled`.
+    pub lit: Vec<Lit>,
+    /// Per-entry: value of the same bound *before* the change
+    /// (previous min for an LB entry, previous max for a UB entry) —
+    /// lets analysis detect root-entailed literals without replaying
+    /// the trail.
+    pub old_val: Vec<i64>,
+    /// Per-entry: previous trail index writing the same variable
+    /// ([`NO_ENTRY`] = none).
+    pub prev: Vec<u32>,
+    /// Per-entry: [`REASON_DECISION`], [`REASON_PROP`], or the id of
+    /// the learned no-good whose propagation set this bound (for
+    /// activity bumping).
+    pub reason_of: Vec<u32>,
+    /// Explanation-window offsets into `arena`: entry `i`'s window is
+    /// `[expl_off[i], expl_off[i+1])`. Length = entries + 1; the
+    /// trailing element always equals `arena.len()`.
+    pub expl_off: Vec<u32>,
+    /// Flat arena of explanation literals; truncated in lock-step with
+    /// the trail.
     pub arena: Vec<Lit>,
     /// Scratch explanation for the *next* tightening; copied into the
     /// arena by `Ctx::set_min` / `Ctx::set_max` on success.
@@ -97,16 +99,68 @@ impl ExplState {
     /// Fresh state for `nvars` variables; `enabled` selects whether any
     /// explanation work happens.
     pub fn new(nvars: usize, enabled: bool) -> Self {
-        ExplState {
-            meta: Vec::new(),
-            arena: Vec::new(),
-            scratch: Vec::new(),
-            conflict: Vec::new(),
-            last_entry: if enabled { vec![NO_ENTRY; nvars] } else { Vec::new() },
-            reason: REASON_PROP,
-            enabled,
-            cover_scratch: Vec::new(),
+        let mut s = ExplState::default();
+        s.reset(nvars, enabled);
+        s
+    }
+
+    /// Re-initialize for a new solve over `nvars` variables, keeping
+    /// every buffer's capacity (the solve-context reuse path).
+    pub fn reset(&mut self, nvars: usize, enabled: bool) {
+        self.lit.clear();
+        self.old_val.clear();
+        self.prev.clear();
+        self.reason_of.clear();
+        self.expl_off.clear();
+        self.expl_off.push(0);
+        self.arena.clear();
+        self.scratch.clear();
+        self.conflict.clear();
+        self.last_entry.clear();
+        if enabled {
+            self.last_entry.resize(nvars, NO_ENTRY);
         }
+        self.reason = REASON_PROP;
+        self.enabled = enabled;
+        self.cover_scratch.clear();
+    }
+
+    /// Number of provenance entries recorded (equals the trail length
+    /// when `enabled`).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.lit.len()
+    }
+
+    /// Entry `entry`'s explanation window in the arena.
+    #[inline]
+    pub fn expl_window(&self, entry: u32) -> &[Lit] {
+        let e = entry as usize;
+        &self.arena[self.expl_off[e] as usize..self.expl_off[e + 1] as usize]
+    }
+
+    /// Record provenance for the entry just pushed on the trail. The
+    /// caller has already appended the scratch explanation to `arena`;
+    /// this closes the window by pushing the new arena length.
+    #[inline]
+    pub fn push_meta(&mut self, lit: Lit, old_val: i64, prev: u32) {
+        self.lit.push(lit);
+        self.old_val.push(old_val);
+        self.prev.push(prev);
+        self.reason_of.push(self.reason);
+        self.expl_off.push(self.arena.len() as u32);
+    }
+
+    /// Undo the most recent provenance entry, truncating its arena
+    /// window; returns its `prev` link (for `last_entry` restoration).
+    #[inline]
+    pub fn pop_meta(&mut self) -> u32 {
+        self.lit.pop();
+        self.old_val.pop();
+        self.reason_of.pop();
+        self.expl_off.pop();
+        self.arena.truncate(*self.expl_off.last().expect("expl_off never empty") as usize);
+        self.prev.pop().expect("pop_meta on empty provenance")
     }
 }
 
@@ -161,8 +215,8 @@ pub struct Conflict;
 /// Mutable propagation context: domains + trail + typed event log +
 /// explanation state.
 pub struct Ctx<'a> {
-    /// All variable domains, indexed by [`VarId`].
-    pub domains: &'a mut [Domain],
+    /// All variable bounds, in the engine's SoA store.
+    pub doms: &'a mut DomStore,
     /// Trailed bound changes — undone in reverse order on backtrack.
     pub(crate) trail: &'a mut Vec<TrailEntry>,
     /// Typed domain events posted during the current pass (drained by
@@ -174,12 +228,6 @@ pub struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
-    /// The domain of `x`.
-    #[inline]
-    pub fn dom(&self, x: VarId) -> &Domain {
-        &self.domains[x.0 as usize]
-    }
-
     /// Whether explanations are being recorded — propagators gate every
     /// explanation-literal computation on this so the chronological /
     /// naive paths pay nothing.
@@ -212,21 +260,15 @@ impl<'a> Ctx<'a> {
 
     /// Push the trail entry for a successful tightening of `x`; when
     /// explaining, also copy the scratch explanation into the arena and
-    /// record the provenance meta.
+    /// record the provenance columns.
     fn push_entry(&mut self, x: VarId, old: (u32, u32), lit: Lit, old_val: i64) {
         if self.expl.enabled {
-            let expl_start = self.expl.arena.len() as u32;
+            // the scratch window lands at arena.len(), tiling the
+            // arena exactly; push_meta closes it with the new length
             self.expl.arena.extend_from_slice(&self.expl.scratch);
             let idx = self.trail.len() as u32;
             let prev = std::mem::replace(&mut self.expl.last_entry[x.0 as usize], idx);
-            self.expl.meta.push(TrailMeta {
-                lit,
-                old_val,
-                prev,
-                expl_start,
-                expl_len: self.expl.scratch.len() as u32,
-                reason: self.expl.reason,
-            });
+            self.expl.push_meta(lit, old_val, prev);
         }
         self.trail.push(TrailEntry { var: x.0, old_lo: old.0, old_hi: old.1 });
     }
@@ -234,43 +276,44 @@ impl<'a> Ctx<'a> {
     /// Lower bound of `x`.
     #[inline]
     pub fn min(&self, x: VarId) -> i64 {
-        self.dom(x).min()
+        self.doms.min(x)
     }
 
     /// Upper bound of `x`.
     #[inline]
     pub fn max(&self, x: VarId) -> i64 {
-        self.dom(x).max()
+        self.doms.max(x)
     }
 
     /// Whether `x` is fixed.
     #[inline]
     pub fn is_fixed(&self, x: VarId) -> bool {
-        self.dom(x).is_fixed()
+        self.doms.is_fixed(x)
     }
 
     /// x ≥ v.
     pub fn set_min(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
-        let d = &mut self.domains[x.0 as usize];
-        let old_min = d.min();
-        let (lo, hi) = d.bounds();
-        match d.remove_below(v) {
+        let old_min = self.doms.min(x);
+        let old = self.doms.bounds(x);
+        match self.doms.remove_below(x, v) {
             Ok(true) => {
-                let mask = event::LB | if d.is_fixed() { event::FIX } else { 0 };
+                let fixed = self.doms.is_fixed(x);
+                let mask = event::LB | if fixed { event::FIX } else { 0 };
                 // post-snap value: explicit domains may skip holes; the
                 // extra strength over `v` is a root-domain fact, so the
                 // scratch explanation still covers the recorded literal
-                let lit = Lit::geq(x, d.min());
-                self.push_entry(x, (lo, hi), lit, old_min);
+                let lit = Lit::geq(x, self.doms.min(x));
+                self.push_entry(x, old, lit, old_min);
                 self.changed.push(DomainEvent { var: x, mask });
                 Ok(())
             }
             Ok(false) => Ok(()),
             Err(()) => {
-                d.restore((lo, hi));
+                // wipe-out is detected before any bound write, so
+                // there is nothing to restore
                 if self.expl.enabled {
                     // scratch ⟹ x ≥ v, which contradicts x ≤ max(x)
-                    let ub = Lit::leq(x, self.domains[x.0 as usize].max());
+                    let ub = Lit::leq(x, self.doms.max(x));
                     std::mem::swap(&mut self.expl.conflict, &mut self.expl.scratch);
                     self.expl.conflict.push(ub);
                 }
@@ -281,22 +324,21 @@ impl<'a> Ctx<'a> {
 
     /// x ≤ v.
     pub fn set_max(&mut self, x: VarId, v: i64) -> Result<(), Conflict> {
-        let d = &mut self.domains[x.0 as usize];
-        let old_max = d.max();
-        let (lo, hi) = d.bounds();
-        match d.remove_above(v) {
+        let old_max = self.doms.max(x);
+        let old = self.doms.bounds(x);
+        match self.doms.remove_above(x, v) {
             Ok(true) => {
-                let mask = event::UB | if d.is_fixed() { event::FIX } else { 0 };
-                let lit = Lit::leq(x, d.max());
-                self.push_entry(x, (lo, hi), lit, old_max);
+                let fixed = self.doms.is_fixed(x);
+                let mask = event::UB | if fixed { event::FIX } else { 0 };
+                let lit = Lit::leq(x, self.doms.max(x));
+                self.push_entry(x, old, lit, old_max);
                 self.changed.push(DomainEvent { var: x, mask });
                 Ok(())
             }
             Ok(false) => Ok(()),
             Err(()) => {
-                d.restore((lo, hi));
                 if self.expl.enabled {
-                    let lb = Lit::geq(x, self.domains[x.0 as usize].min());
+                    let lb = Lit::geq(x, self.doms.min(x));
                     std::mem::swap(&mut self.expl.conflict, &mut self.expl.scratch);
                     self.expl.conflict.push(lb);
                 }
@@ -903,6 +945,12 @@ pub(crate) fn edge_finding_filter_item(
 }
 
 /// Time-table cumulative filtering over mandatory parts.
+///
+/// Clone-audit note: the `events` / `profile` vectors below are
+/// per-pass heap allocations, deliberately kept — this from-scratch
+/// build only runs on the naive reference path (`--naive`, the audit
+/// replay harness, and unit tests). The engine's production path uses
+/// the incremental `CumState` profile caches and never calls this.
 fn prop_cumulative(items: &[CumItem], cap: i64, ctx: &mut Ctx) -> Result<(), Conflict> {
     // Mandatory part of an interval that is certainly active:
     // [start.max, end.min] if nonempty.
@@ -1171,20 +1219,24 @@ fn prop_all_different(vars: &[VarId], ctx: &mut Ctx) -> Result<(), Conflict> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cp::domain::Domain;
     use std::sync::Arc;
 
-    fn mk(doms: &[(i64, i64)]) -> Vec<Domain> {
-        doms.iter()
+    fn mk(doms: &[(i64, i64)]) -> DomStore {
+        let doms: Vec<Domain> = doms
+            .iter()
             .map(|&(lo, hi)| Domain::new(Arc::new((lo..=hi).collect())))
-            .collect()
+            .collect();
+        let mut store = DomStore::default();
+        store.load_from(&doms);
+        store
     }
 
-    fn run(p: &Propagator, domains: &mut Vec<Domain>) -> Result<(), Conflict> {
+    fn run(p: &Propagator, doms: &mut DomStore) -> Result<(), Conflict> {
         let mut trail = Vec::new();
         let mut changed = Vec::new();
-        let mut expl = ExplState::new(domains.len(), false);
-        let mut ctx =
-            Ctx { domains, trail: &mut trail, changed: &mut changed, expl: &mut expl };
+        let mut expl = ExplState::new(doms.len(), false);
+        let mut ctx = Ctx { doms, trail: &mut trail, changed: &mut changed, expl: &mut expl };
         p.propagate(&mut ctx)
     }
 
@@ -1205,8 +1257,8 @@ mod tests {
             rhs: 10,
         };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[0].max(), 5);
-        assert_eq!(d[1].max(), 3);
+        assert_eq!(d.max(VarId(0)), 5);
+        assert_eq!(d.max(VarId(1)), 3);
     }
 
     #[test]
@@ -1222,7 +1274,7 @@ mod tests {
         let mut d = mk(&[(0, 5)]);
         let p = Propagator::LinearLe { terms: vec![(-1, VarId(0))], rhs: -3 };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[0].min(), 3);
+        assert_eq!(d.min(VarId(0)), 3);
     }
 
     #[test]
@@ -1231,8 +1283,8 @@ mod tests {
         let mut d = mk(&[(0, 9), (1, 6)]);
         let p = Propagator::LeOffset { b: None, x: VarId(0), c: 2, y: VarId(1) };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[0].max(), 4);
-        assert_eq!(d[1].min(), 2);
+        assert_eq!(d.max(VarId(0)), 4);
+        assert_eq!(d.min(VarId(1)), 2);
     }
 
     #[test]
@@ -1241,7 +1293,7 @@ mod tests {
         let mut d = mk(&[(0, 1), (4, 9), (0, 6)]);
         let p = Propagator::LeOffset { b: Some(VarId(0)), x: VarId(1), c: 5, y: VarId(2) };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[0].max(), 0);
+        assert_eq!(d.max(VarId(0)), 0);
     }
 
     #[test]
@@ -1271,7 +1323,7 @@ mod tests {
             cap: 3,
         };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[4].min(), 4);
+        assert_eq!(d.min(VarId(4)), 4);
     }
 
     #[test]
@@ -1287,7 +1339,7 @@ mod tests {
             cap: 3,
         };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[3].max(), 0);
+        assert_eq!(d.max(VarId(3)), 0);
     }
 
     #[test]
@@ -1305,8 +1357,8 @@ mod tests {
         let mut d = mk(&[(1, 1), (5, 5), (0, 1), (2, 2), (2, 9)]);
         let p = cover1(VarId(0), VarId(1), vec![(VarId(2), VarId(3), VarId(4))]);
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[2].min(), 1);
-        assert_eq!(d[4].min(), 5);
+        assert_eq!(d.min(VarId(2)), 1);
+        assert_eq!(d.min(VarId(4)), 5);
     }
 
     #[test]
@@ -1314,7 +1366,7 @@ mod tests {
         let mut d = mk(&[(0, 0), (5, 5), (0, 1), (2, 2), (2, 3)]);
         let p = cover1(VarId(0), VarId(1), vec![(VarId(2), VarId(3), VarId(4))]);
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[2].min(), 0); // untouched
+        assert_eq!(d.min(VarId(2)), 0); // untouched
     }
 
     #[test]
@@ -1322,8 +1374,8 @@ mod tests {
         let mut d = mk(&[(3, 3), (3, 5), (0, 3)]);
         let p = Propagator::AllDifferent { vars: vec![VarId(0), VarId(1), VarId(2)] };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[1].min(), 4);
-        assert_eq!(d[2].max(), 2);
+        assert_eq!(d.min(VarId(1)), 4);
+        assert_eq!(d.max(VarId(2)), 2);
     }
 
     #[test]
@@ -1368,7 +1420,7 @@ mod tests {
             candidates: Arc::from(vec![(VarId(4), VarId(5), VarId(6))]),
         };
         run(&p, &mut d).map_err(|_| ()).unwrap();
-        assert_eq!(d[6].min(), 7);
+        assert_eq!(d.min(VarId(6)), 7);
         // satisfaction: both targets must be covered
         assert!(p.is_satisfied(&[1, 5, 1, 7, 1, 2, 9]));
         assert!(!p.is_satisfied(&[1, 5, 1, 7, 1, 2, 6]), "second target uncovered");

@@ -12,10 +12,11 @@
 //! bugs can cost time but never correctness.
 
 use super::domain::{Lit, VarId};
-use super::engine::{FilteringMode, ProfileMode, PropagationEngine};
-use super::learn::{analyze, luby, Analyzed, BranchHeap, VarActivity};
+use super::engine::{FilteringMode, ProfileMode, PropagationEngine, SolveCtx};
+use super::learn::{analyze, luby, AnalyzeScratch, Analyzed, BranchHeap, VarActivity};
 use super::Model;
 use crate::util::{Csr, Deadline, Incumbent};
+use std::mem;
 use std::sync::Arc;
 
 /// Terminal status of a search.
@@ -359,6 +360,51 @@ struct Frame {
     saved_ptr: usize,
 }
 
+/// Search-layer scratch pooled in the [`SolveCtx`]: everything the two
+/// search loops used to allocate per solve — the frame stack, the
+/// brancher (activities, heap, position maps), 1UIP analysis buffers,
+/// value-saving and leaf scratch, and a pool of recycled solution
+/// vectors. Reset per solve with lengths for the model at hand;
+/// capacity is never given back, so window re-solves on a reused
+/// context stay allocation-free.
+#[derive(Default)]
+pub(crate) struct SearchScratch {
+    /// 1UIP conflict-analysis buffers (see `learn::AnalyzeScratch`).
+    analyze: AnalyzeScratch,
+    /// VSIDS activities (learned search).
+    act: VarActivity,
+    /// Indexed max-heap over branch positions (learned search).
+    heap: BranchHeap,
+    /// Branch position → variable id.
+    pos_var: Vec<u32>,
+    /// Nested-row scratch `var_positions` is rebuilt from (rows are
+    /// cleared, not dropped).
+    pos_rows: Vec<Vec<u32>>,
+    /// Flattened var → branch positions map.
+    var_positions: Csr<u32>,
+    /// Solution-phase saved values per variable.
+    saved: Vec<i64>,
+    /// Candidate-leaf assignment scratch.
+    leaf_buf: Vec<i64>,
+    /// Activity-bump drain buffer.
+    bumped: Vec<u32>,
+    /// Chronological DFS frame stack.
+    frames: Vec<Frame>,
+    /// Recycled solution vectors: popped to hold the incumbent, handed
+    /// out in `SearchResult::best`, returned by
+    /// [`SolveCtx::recycle_solution`].
+    sol_pool: Vec<Vec<i64>>,
+}
+
+impl SearchScratch {
+    /// Return a solution vector to the pool (see
+    /// [`SolveCtx::recycle_solution`]).
+    pub(crate) fn recycle_solution(&mut self, mut v: Vec<i64>) {
+        v.clear();
+        self.sol_pool.push(v);
+    }
+}
+
 impl Solver {
     /// Minimize `objective` (a linear expression, empty = satisfaction)
     /// over `model`, branching on `branch_order` (vars absent from the
@@ -375,10 +421,28 @@ impl Solver {
         branch_order: &[VarId],
         on_solution: impl FnMut(&[i64], i64),
     ) -> SearchResult {
+        let mut ctx = SolveCtx::default();
+        self.solve_with_ctx(model, objective, branch_order, on_solution, &mut ctx)
+    }
+
+    /// [`Solver::solve`] on a reusable [`SolveCtx`]: the engine and
+    /// search layers steal every scratch buffer from `ctx` and hand
+    /// them back (capacity intact) before returning, so repeat solves —
+    /// LNS window re-solves above all — stop paying per-solve
+    /// allocation. Behavior-identical to a fresh-context solve
+    /// (asserted by `prop_solve_ctx_reuse_matches_fresh`).
+    pub fn solve_with_ctx(
+        &self,
+        model: &Model,
+        objective: &[(i64, VarId)],
+        branch_order: &[VarId],
+        on_solution: impl FnMut(&[i64], i64),
+        ctx: &mut SolveCtx,
+    ) -> SearchResult {
         if self.strategy.mode == SearchMode::Learned && !self.naive {
-            self.solve_learned(model, objective, branch_order, on_solution)
+            self.solve_learned(model, objective, branch_order, on_solution, ctx)
         } else {
-            self.solve_chronological(model, objective, branch_order, on_solution)
+            self.solve_chronological(model, objective, branch_order, on_solution, ctx)
         }
     }
 
@@ -389,155 +453,181 @@ impl Solver {
         objective: &[(i64, VarId)],
         branch_order: &[VarId],
         mut on_solution: impl FnMut(&[i64], i64),
+        ctx: &mut SolveCtx,
     ) -> SearchResult {
         let mut eng =
-            PropagationEngine::new(model, objective, self.naive, false, &self.strategy);
+            PropagationEngine::new(model, objective, self.naive, false, &self.strategy, ctx);
         // watchdog channel: fixpoint publishes heartbeats into the
         // deadline's incumbent and aborts on cancellation / hard stop,
         // so even a single long propagation pass stays cancellable
         eng.set_watchdog(self.deadline.incumbent().cloned(), self.deadline.hard_stop());
-        let mut best: Option<(Vec<i64>, i64)> = None;
-        // seed the objective bound from the shared pruning bound when
-        // one is attached (any solver may prune against the best
-        // solution found anywhere)
-        if !objective.is_empty() {
-            if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
-                eng.tighten_obj_bound(g as i64 - 1);
-            }
-        }
+        let mut scratch = mem::take(&mut ctx.search);
+        scratch.frames.clear();
+        scratch.leaf_buf.clear();
+        // incumbent storage off the solution pool (handed out in the
+        // result; the context caller recycles it)
+        let mut best_vec = scratch.sol_pool.pop().unwrap_or_default();
+        best_vec.clear();
+        let mut best_obj: Option<i64> = None;
 
-        // root propagation
-        eng.enqueue_all();
-        if eng.fixpoint(model).is_err() {
-            return SearchResult { status: Status::Infeasible, best: None, stats: eng.stats };
-        }
-        if eng.aborted {
-            return SearchResult { status: Status::Unknown, best: None, stats: eng.stats };
-        }
-
-        let mut frames: Vec<Frame> = Vec::new();
-        // Trailed first-unfixed pointer into `branch_order`: entries
-        // before it are fixed or permanently guard-disabled on the
-        // current path (both conditions are monotone between
-        // backtracks), so selection never rescans them. Frames save the
-        // pointer; backtracking restores it.
-        let mut ptr: usize = 0;
-        let mut limit_hit = false;
-        // Loop-iteration counter driving the deadline/cancellation and
-        // shared-bound polls. Counting iterations — not nodes — matters:
-        // solution-leaf and backtrack iterations leave `nodes`
-        // unchanged, so a node-count cadence could spin through them
-        // without ever observing the deadline or a portfolio
-        // cancellation.
-        let mut iters: u64 = 0;
-        // Scratch assignment reused across candidate leaves (cloned
-        // only for an improving solution).
-        let mut leaf_buf: Vec<i64> = Vec::with_capacity(eng.domains.len());
-
-        'search: loop {
-            iters += 1;
-            // limits (the deadline poll also observes portfolio
-            // cancellation; `aborted` is the engine's in-fixpoint
-            // watchdog having tripped on the previous iteration)
-            if eng.stats.nodes >= self.node_limit
-                || eng.aborted
-                || (iters % 128 == 0 && self.deadline.exceeded())
-            {
-                limit_hit = true;
-                break 'search;
-            }
-            // portfolio pruning: tighten the bound to the best duration
-            // published by any cooperating solver
-            if iters % 128 == 0 && !objective.is_empty() {
+        // single exit: `break 'run` funnels every terminal path through
+        // the recycle below, so the context always gets its buffers back
+        let status = 'run: {
+            // seed the objective bound from the shared pruning bound
+            // when one is attached (any solver may prune against the
+            // best solution found anywhere)
+            if !objective.is_empty() {
                 if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
                     eng.tighten_obj_bound(g as i64 - 1);
                 }
             }
 
-            // advance the pointer past fixed / guard-disabled vars
-            while ptr < branch_order.len() {
-                let v = branch_order[ptr];
-                if eng.domains[v.0 as usize].is_fixed() {
-                    ptr += 1;
-                    continue;
-                }
-                if let Some(gs) = &self.guards {
-                    if let Some(Some(g)) = gs.get(ptr) {
-                        let gd = &eng.domains[g.0 as usize];
-                        if gd.is_fixed() && gd.min() == 0 {
-                            ptr += 1;
-                            continue;
-                        }
-                    }
-                }
-                break;
+            // root propagation
+            eng.enqueue_all();
+            if eng.fixpoint(model).is_err() {
+                break 'run Status::Infeasible;
+            }
+            if eng.aborted {
+                break 'run Status::Unknown;
             }
 
-            if ptr >= branch_order.len() {
-                // all branch vars fixed → candidate solution (any
-                // remaining model vars must be fixed by propagation;
-                // if not, take their minimum — sound because we
-                // verify below).
-                leaf_buf.clear();
-                leaf_buf.extend(eng.domains.iter().map(|d| d.min()));
-                if model.check(&leaf_buf).is_none() {
-                    let obj_val: i64 =
-                        objective.iter().map(|&(c, v)| c * leaf_buf[v.0 as usize]).sum();
-                    if best.as_ref().map(|&(_, b)| obj_val < b).unwrap_or(true) {
-                        eng.stats.solutions += 1;
-                        on_solution(&leaf_buf, obj_val);
-                        best = Some((leaf_buf.clone(), obj_val));
-                        eng.tighten_obj_bound(obj_val - 1);
-                        if self.first_solution || objective.is_empty() {
+            let nvars = eng.doms.len();
+            // Trailed first-unfixed pointer into `branch_order`: entries
+            // before it are fixed or permanently guard-disabled on the
+            // current path (both conditions are monotone between
+            // backtracks), so selection never rescans them. Frames save
+            // the pointer; backtracking restores it.
+            let mut ptr: usize = 0;
+            let mut limit_hit = false;
+            // Loop-iteration counter driving the deadline/cancellation
+            // and shared-bound polls. Counting iterations — not nodes —
+            // matters: solution-leaf and backtrack iterations leave
+            // `nodes` unchanged, so a node-count cadence could spin
+            // through them without ever observing the deadline or a
+            // portfolio cancellation.
+            let mut iters: u64 = 0;
+
+            'search: loop {
+                iters += 1;
+                // limits (the deadline poll also observes portfolio
+                // cancellation; `aborted` is the engine's in-fixpoint
+                // watchdog having tripped on the previous iteration)
+                if eng.stats.nodes >= self.node_limit
+                    || eng.aborted
+                    || (iters % 128 == 0 && self.deadline.exceeded())
+                {
+                    limit_hit = true;
+                    break 'search;
+                }
+                // portfolio pruning: tighten the bound to the best
+                // duration published by any cooperating solver
+                if iters % 128 == 0 && !objective.is_empty() {
+                    if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
+                        eng.tighten_obj_bound(g as i64 - 1);
+                    }
+                }
+
+                // advance the pointer past fixed / guard-disabled vars
+                while ptr < branch_order.len() {
+                    let v = branch_order[ptr];
+                    if eng.doms.is_fixed(v) {
+                        ptr += 1;
+                        continue;
+                    }
+                    if let Some(gs) = &self.guards {
+                        if let Some(Some(g)) = gs.get(ptr) {
+                            if eng.doms.is_fixed(*g) && eng.doms.min(*g) == 0 {
+                                ptr += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    break;
+                }
+
+                if ptr >= branch_order.len() {
+                    // all branch vars fixed → candidate solution (any
+                    // remaining model vars must be fixed by propagation;
+                    // if not, take their minimum — sound because we
+                    // verify below).
+                    scratch.leaf_buf.clear();
+                    scratch
+                        .leaf_buf
+                        .extend((0..nvars as u32).map(|i| eng.doms.min(VarId(i))));
+                    if model.check(&scratch.leaf_buf).is_none() {
+                        let obj_val: i64 = objective
+                            .iter()
+                            .map(|&(c, v)| c * scratch.leaf_buf[v.0 as usize])
+                            .sum();
+                        if best_obj.map(|b| obj_val < b).unwrap_or(true) {
+                            eng.stats.solutions += 1;
+                            on_solution(&scratch.leaf_buf, obj_val);
+                            best_vec.clear();
+                            best_vec.extend_from_slice(&scratch.leaf_buf);
+                            best_obj = Some(obj_val);
+                            eng.tighten_obj_bound(obj_val - 1);
+                            if self.first_solution || objective.is_empty() {
+                                break 'search;
+                            }
+                        }
+                    } else {
+                        // propagation left an unverifiable relaxed
+                        // point; treat as conflict
+                        eng.stats.conflicts += 1;
+                    }
+                    // backtrack to continue the search
+                    if !backtrack(model, &mut eng, &mut scratch.frames, &mut ptr) {
+                        break 'search;
+                    }
+                } else {
+                    let x = branch_order[ptr];
+                    eng.stats.nodes += 1;
+                    let v = eng.doms.min(x);
+                    scratch.frames.push(Frame {
+                        trail_len: eng.trail.len(),
+                        var: x,
+                        value: v,
+                        right_done: false,
+                        saved_ptr: ptr,
+                    });
+                    // left branch: x = v
+                    if eng.decide_eq(model, x, v).is_err() {
+                        eng.stats.conflicts += 1;
+                        if !backtrack(model, &mut eng, &mut scratch.frames, &mut ptr) {
                             break 'search;
                         }
                     }
-                } else {
-                    // propagation left an unverifiable relaxed point;
-                    // treat as conflict
-                    eng.stats.conflicts += 1;
-                }
-                // backtrack to continue the search
-                if !backtrack(model, &mut eng, &mut frames, &mut ptr) {
-                    break 'search;
-                }
-            } else {
-                let x = branch_order[ptr];
-                eng.stats.nodes += 1;
-                let v = eng.domains[x.0 as usize].min();
-                frames.push(Frame {
-                    trail_len: eng.trail.len(),
-                    var: x,
-                    value: v,
-                    right_done: false,
-                    saved_ptr: ptr,
-                });
-                // left branch: x = v
-                if eng.decide_eq(model, x, v).is_err() {
-                    eng.stats.conflicts += 1;
-                    if !backtrack(model, &mut eng, &mut frames, &mut ptr) {
-                        break 'search;
-                    }
                 }
             }
-        }
 
-        let status = match (&best, limit_hit) {
-            (Some(_), false) => Status::Optimal,
-            (Some(_), true) => Status::Feasible,
-            (None, false) => Status::Infeasible,
-            (None, true) => Status::Unknown,
+            let status = match (best_obj.is_some(), limit_hit) {
+                (true, false) => Status::Optimal,
+                (true, true) => Status::Feasible,
+                (false, false) => Status::Infeasible,
+                (false, true) => Status::Unknown,
+            };
+            // first_solution mode exits the loop without exhausting:
+            // report Feasible, not Optimal (unless infeasible/unknown).
+            if self.first_solution && best_obj.is_some() {
+                Status::Feasible
+            } else if !limit_hit && objective.is_empty() && best_obj.is_some() {
+                Status::Feasible // satisfaction problem: "a" solution
+            } else {
+                status
+            }
         };
-        // first_solution mode exits the loop without exhausting: report
-        // Feasible, not Optimal (unless infeasible/unknown).
-        let status = if self.first_solution && best.is_some() {
-            Status::Feasible
-        } else if !limit_hit && objective.is_empty() && best.is_some() {
-            Status::Feasible // satisfaction problem: "a" solution
-        } else {
-            status
+
+        let best = match best_obj {
+            Some(o) => Some((mem::take(&mut best_vec), o)),
+            None => {
+                scratch.sol_pool.push(best_vec);
+                None
+            }
         };
-        SearchResult { status, best, stats: eng.stats }
+        ctx.search = scratch;
+        let stats = eng.stats;
+        eng.recycle(ctx);
+        SearchResult { status, best, stats }
     }
 
     /// Conflict-driven search (see `cp::learn`): explained propagation
@@ -560,261 +650,304 @@ impl Solver {
         objective: &[(i64, VarId)],
         branch_order: &[VarId],
         mut on_solution: impl FnMut(&[i64], i64),
+        ctx: &mut SolveCtx,
     ) -> SearchResult {
         let mut eng =
-            PropagationEngine::new(model, objective, false, true, &self.strategy);
+            PropagationEngine::new(model, objective, false, true, &self.strategy, ctx);
         eng.set_watchdog(self.deadline.incumbent().cloned(), self.deadline.hard_stop());
-        let nvars = eng.domains.len();
-        let mut best: Option<(Vec<i64>, i64)> = None;
-        if !objective.is_empty() {
-            if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
-                eng.tighten_obj_bound(g as i64 - 1);
-            }
-        }
-        eng.enqueue_all();
-        if eng.fixpoint(model).is_err() {
-            return SearchResult { status: Status::Infeasible, best: None, stats: eng.stats };
-        }
-        if eng.aborted {
-            return SearchResult { status: Status::Unknown, best: None, stats: eng.stats };
-        }
+        let nvars = eng.doms.len();
+        let mut scratch = mem::take(&mut ctx.search);
+        let mut best_vec = scratch.sol_pool.pop().unwrap_or_default();
+        best_vec.clear();
+        let mut best_obj: Option<i64> = None;
 
-        // Brancher state: an indexed max-heap over branch positions
-        // keyed by variable activity, plus the var → positions map that
-        // re-queues a position whenever its variable (or guard) has a
-        // trail entry undone. Invariant: the heap always contains every
-        // unfixed, guard-enabled position — a popped position is either
-        // used (and re-inserted while unfixed), or dropped because it
-        // is fixed/disabled, in which case the trail entry that fixed
-        // or disabled it re-inserts it on undo.
-        let npos = branch_order.len();
-        let pos_var: Vec<u32> = branch_order.iter().map(|v| v.0).collect();
-        let mut pos_rows: Vec<Vec<u32>> = vec![Vec::new(); nvars];
-        for (p, v) in branch_order.iter().enumerate() {
-            pos_rows[v.0 as usize].push(p as u32);
-        }
-        if let Some(gs) = &self.guards {
-            for (p, g) in gs.iter().enumerate() {
-                if let Some(g) = g {
-                    pos_rows[g.0 as usize].push(p as u32);
-                }
-            }
-        }
-        // flattened var → branch positions map: walked on every undo
-        // and every activity bump, so it gets the CSR treatment too
-        let var_positions: Csr<u32> = Csr::from_rows(&pos_rows);
-        drop(pos_rows);
-        let mut act = VarActivity::new(nvars);
-        let mut heap = BranchHeap::new(npos);
-        for p in 0..npos as u32 {
-            heap.insert(p, &act, &pos_var);
-        }
-        // Solution-phase saving: branch toward the incumbent's value
-        // once one exists (i64::MIN = no saved phase).
-        let mut saved: Vec<i64> = vec![i64::MIN; nvars];
-
-        let mut leaf_buf: Vec<i64> = Vec::with_capacity(nvars);
-        let mut ng_bumps: Vec<u32> = Vec::new();
-        let mut bumped: Vec<u32> = Vec::new();
-        let mut mark_buf: Vec<bool> = Vec::new();
-        let mut limit_hit = false;
-        let mut iters: u64 = 0;
-        let mut restart_idx: u64 = 1;
-        let mut conflicts_since_restart: u64 = 0;
-
-        'search: loop {
-            iters += 1;
-            if eng.stats.nodes >= self.node_limit
-                || eng.aborted
-                || (iters % 128 == 0 && self.deadline.exceeded())
-            {
-                limit_hit = true;
-                break 'search;
-            }
-            if iters % 128 == 0 && !objective.is_empty() {
+        // single exit: `break 'run` funnels every terminal path through
+        // the recycle below, so the context always gets its buffers back
+        let status = 'run: {
+            if !objective.is_empty() {
                 if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
                     eng.tighten_obj_bound(g as i64 - 1);
                 }
             }
-            // Luby restart: back to the root with no-goods and
-            // activities kept; the database is reduced here (and only
-            // here) so no trail entry can reference a renumbered id.
-            if self.strategy.restart_base > 0
-                && conflicts_since_restart
-                    >= self.strategy.restart_base * luby(restart_idx)
-            {
-                restart_idx += 1;
-                conflicts_since_restart = 0;
-                eng.stats.restarts += 1;
-                requeue_undone(&mut eng, 0, &mut heap, &act, &pos_var, &var_positions);
-                if self.strategy.nogood_cap > 0 && eng.ng.len() > self.strategy.nogood_cap {
-                    crate::fail_point!("search.nogood_reduce");
-                    eng.ng.reduce();
-                    eng.stats.db_reductions += 1;
-                }
-                if eng.fixpoint(model).is_err() {
-                    break 'search; // tightened bound closed the root
-                }
-                continue 'search;
+            eng.enqueue_all();
+            if eng.fixpoint(model).is_err() {
+                break 'run Status::Infeasible;
+            }
+            if eng.aborted {
+                break 'run Status::Unknown;
             }
 
-            // variable selection: highest-activity unfixed position
-            let mut chosen: Option<(u32, VarId)> = None;
-            while let Some(p) = heap.pop(&act, &pos_var) {
-                let x = branch_order[p as usize];
-                if eng.domains[x.0 as usize].is_fixed() {
-                    continue;
-                }
-                if let Some(gs) = &self.guards {
-                    if let Some(Some(g)) = gs.get(p as usize) {
-                        let gd = &eng.domains[g.0 as usize];
-                        if gd.is_fixed() && gd.min() == 0 {
-                            continue;
-                        }
-                    }
-                }
-                chosen = Some((p, x));
-                break;
+            // Brancher state: an indexed max-heap over branch positions
+            // keyed by variable activity, plus the var → positions map
+            // that re-queues a position whenever its variable (or
+            // guard) has a trail entry undone. Invariant: the heap
+            // always contains every unfixed, guard-enabled position — a
+            // popped position is either used (and re-inserted while
+            // unfixed), or dropped because it is fixed/disabled, in
+            // which case the trail entry that fixed or disabled it
+            // re-inserts it on undo.
+            let npos = branch_order.len();
+            scratch.pos_var.clear();
+            scratch.pos_var.extend(branch_order.iter().map(|v| v.0));
+            for r in scratch.pos_rows.iter_mut() {
+                r.clear();
             }
+            if scratch.pos_rows.len() < nvars {
+                scratch.pos_rows.resize_with(nvars, Vec::new);
+            }
+            for (p, v) in branch_order.iter().enumerate() {
+                scratch.pos_rows[v.0 as usize].push(p as u32);
+            }
+            if let Some(gs) = &self.guards {
+                for (p, g) in gs.iter().enumerate() {
+                    if let Some(g) = g {
+                        scratch.pos_rows[g.0 as usize].push(p as u32);
+                    }
+                }
+            }
+            // flattened var → branch positions map: walked on every
+            // undo and every activity bump, so it gets the CSR
+            // treatment too (rebuilt in place, rows kept for next time)
+            scratch.var_positions.rebuild_from_rows(&scratch.pos_rows[..nvars]);
+            scratch.act.reset(nvars);
+            scratch.heap.reset(npos);
+            for p in 0..npos as u32 {
+                scratch.heap.insert(p, &scratch.act, &scratch.pos_var);
+            }
+            // Solution-phase saving: branch toward the incumbent's
+            // value once one exists (i64::MIN = no saved phase).
+            scratch.saved.clear();
+            scratch.saved.resize(nvars, i64::MIN);
+            scratch.leaf_buf.clear();
+            scratch.bumped.clear();
 
-            let conflict = if let Some((p, x)) = chosen {
-                // value selection: saved phase when available, else min
-                let d = &eng.domains[x.0 as usize];
-                let (mn, mx) = (d.min(), d.max());
-                let w = saved[x.0 as usize];
-                let lit = if w == i64::MIN || w <= mn {
-                    Lit::leq(x, mn) // fix at min (chronological left branch)
-                } else if w >= mx {
-                    Lit::geq(x, mx) // fix at max
-                } else {
-                    Lit::geq(x, w) // aim at the incumbent's value
-                };
-                eng.stats.nodes += 1;
-                let r = eng.decide_lit(model, lit);
-                if r.is_ok() && !eng.domains[x.0 as usize].is_fixed() {
-                    // half-decision (aimed at a phase): the variable
-                    // stays branchable
-                    heap.insert(p, &act, &pos_var);
+            let mut limit_hit = false;
+            let mut iters: u64 = 0;
+            let mut restart_idx: u64 = 1;
+            let mut conflicts_since_restart: u64 = 0;
+
+            'search: loop {
+                iters += 1;
+                if eng.stats.nodes >= self.node_limit
+                    || eng.aborted
+                    || (iters % 128 == 0 && self.deadline.exceeded())
+                {
+                    limit_hit = true;
+                    break 'search;
                 }
-                r.is_err()
-            } else {
-                // leaf: every branch var fixed or guard-disabled →
-                // candidate solution (min-completion, verified below)
-                leaf_buf.clear();
-                leaf_buf.extend(eng.domains.iter().map(|d| d.min()));
-                let mut surfaced = false;
-                if model.check(&leaf_buf).is_none() {
-                    let obj_val: i64 =
-                        objective.iter().map(|&(c, v)| c * leaf_buf[v.0 as usize]).sum();
-                    if best.as_ref().map(|&(_, b)| obj_val < b).unwrap_or(true) {
-                        eng.stats.solutions += 1;
-                        on_solution(&leaf_buf, obj_val);
-                        saved.copy_from_slice(&leaf_buf);
-                        best = Some((leaf_buf.clone(), obj_val));
-                        if self.first_solution || objective.is_empty() {
-                            break 'search;
-                        }
-                        // the trail now violates the tightened bound;
-                        // propagating surfaces a conflict whose
-                        // analysis backjumps — often far, since the
-                        // explanation only involves objective terms
-                        eng.tighten_obj_bound(obj_val - 1);
-                        surfaced = eng.fixpoint(model).is_err();
+                if iters % 128 == 0 && !objective.is_empty() {
+                    if let Some(g) = self.bound.as_ref().and_then(|i| i.best()) {
+                        eng.tighten_obj_bound(g as i64 - 1);
                     }
-                } else {
-                    // unverifiable relaxed point (chronological search
-                    // treats these as dead ends too)
-                    eng.stats.conflicts += 1;
                 }
-                if surfaced {
-                    true
-                } else {
-                    // no propagation conflict to analyze: learn the
-                    // decision no-good (the remembered chronological
-                    // backtrack) and continue
-                    let lvl = eng.current_level();
-                    if lvl == 0 {
-                        break 'search; // root leaf: space exhausted
-                    }
-                    let mut lits: Vec<Lit> = Vec::with_capacity(lvl);
-                    lits.push(eng.expl.meta[eng.level_marks[lvl - 1] as usize].lit);
-                    for i in 0..lvl - 1 {
-                        lits.push(eng.expl.meta[eng.level_marks[i] as usize].lit);
-                    }
-                    match apply_learned(
-                        model,
+                // Luby restart: back to the root with no-goods and
+                // activities kept; the database is reduced here (and
+                // only here) so no trail entry can reference a
+                // renumbered id.
+                if self.strategy.restart_base > 0
+                    && conflicts_since_restart
+                        >= self.strategy.restart_base * luby(restart_idx)
+                {
+                    restart_idx += 1;
+                    conflicts_since_restart = 0;
+                    eng.stats.restarts += 1;
+                    requeue_undone(
                         &mut eng,
-                        lits,
-                        lvl - 1,
-                        &mut heap,
-                        &act,
-                        &pos_var,
-                        &var_positions,
-                    ) {
-                        Ok(()) => false,
-                        Err(_) => true,
+                        0,
+                        &mut scratch.heap,
+                        &scratch.act,
+                        &scratch.pos_var,
+                        &scratch.var_positions,
+                    );
+                    if self.strategy.nogood_cap > 0
+                        && eng.ng.len() > self.strategy.nogood_cap
+                    {
+                        crate::fail_point!("search.nogood_reduce");
+                        eng.ng.reduce();
+                        eng.stats.db_reductions += 1;
                     }
+                    if eng.fixpoint(model).is_err() {
+                        break 'search; // tightened bound closed the root
+                    }
+                    continue 'search;
                 }
-            };
 
-            if conflict {
-                // analyze → learn → backjump → propagate; repeat while
-                // the propagation after the backjump keeps failing
-                loop {
-                    eng.stats.conflicts += 1;
-                    conflicts_since_restart += 1;
-                    act.decay();
-                    eng.ng.decay();
-                    let confl = std::mem::take(&mut eng.expl.conflict);
-                    ng_bumps.clear();
-                    let analyzed =
-                        analyze(&eng, &confl, &mut act, &mut ng_bumps, &mut mark_buf);
-                    eng.expl.conflict = confl; // hand the buffer back
-                    for &g in &ng_bumps {
-                        eng.ng.bump(g);
+                // variable selection: highest-activity unfixed position
+                let mut chosen: Option<(u32, VarId)> = None;
+                while let Some(p) = scratch.heap.pop(&scratch.act, &scratch.pos_var) {
+                    let x = branch_order[p as usize];
+                    if eng.doms.is_fixed(x) {
+                        continue;
                     }
-                    act.swap_bumped(&mut bumped);
-                    for &v in &bumped {
-                        for &p in var_positions.row(v as usize) {
-                            heap.resift(p, &act, &pos_var);
+                    if let Some(gs) = &self.guards {
+                        if let Some(Some(g)) = gs.get(p as usize) {
+                            if eng.doms.is_fixed(*g) && eng.doms.min(*g) == 0 {
+                                continue;
+                            }
                         }
                     }
-                    match analyzed {
-                        Analyzed::Root => break 'search,
-                        Analyzed::NoGood { lits, level } => {
-                            let r = apply_learned(
-                                model,
-                                &mut eng,
-                                lits,
-                                level,
-                                &mut heap,
-                                &act,
-                                &pos_var,
-                                &var_positions,
-                            );
-                            if r.is_ok() {
-                                break; // fixpoint reached: resume search
+                    chosen = Some((p, x));
+                    break;
+                }
+
+                let conflict = if let Some((p, x)) = chosen {
+                    // value selection: saved phase when available, else
+                    // min
+                    let (mn, mx) = (eng.doms.min(x), eng.doms.max(x));
+                    let w = scratch.saved[x.0 as usize];
+                    let lit = if w == i64::MIN || w <= mn {
+                        Lit::leq(x, mn) // fix at min (chronological left branch)
+                    } else if w >= mx {
+                        Lit::geq(x, mx) // fix at max
+                    } else {
+                        Lit::geq(x, w) // aim at the incumbent's value
+                    };
+                    eng.stats.nodes += 1;
+                    let r = eng.decide_lit(model, lit);
+                    if r.is_ok() && !eng.doms.is_fixed(x) {
+                        // half-decision (aimed at a phase): the
+                        // variable stays branchable
+                        scratch.heap.insert(p, &scratch.act, &scratch.pos_var);
+                    }
+                    r.is_err()
+                } else {
+                    // leaf: every branch var fixed or guard-disabled →
+                    // candidate solution (min-completion, verified
+                    // below)
+                    scratch.leaf_buf.clear();
+                    scratch
+                        .leaf_buf
+                        .extend((0..nvars as u32).map(|i| eng.doms.min(VarId(i))));
+                    let mut surfaced = false;
+                    if model.check(&scratch.leaf_buf).is_none() {
+                        let obj_val: i64 = objective
+                            .iter()
+                            .map(|&(c, v)| c * scratch.leaf_buf[v.0 as usize])
+                            .sum();
+                        if best_obj.map(|b| obj_val < b).unwrap_or(true) {
+                            eng.stats.solutions += 1;
+                            on_solution(&scratch.leaf_buf, obj_val);
+                            scratch.saved.copy_from_slice(&scratch.leaf_buf);
+                            best_vec.clear();
+                            best_vec.extend_from_slice(&scratch.leaf_buf);
+                            best_obj = Some(obj_val);
+                            if self.first_solution || objective.is_empty() {
+                                break 'search;
+                            }
+                            // the trail now violates the tightened
+                            // bound; propagating surfaces a conflict
+                            // whose analysis backjumps — often far,
+                            // since the explanation only involves
+                            // objective terms
+                            eng.tighten_obj_bound(obj_val - 1);
+                            surfaced = eng.fixpoint(model).is_err();
+                        }
+                    } else {
+                        // unverifiable relaxed point (chronological
+                        // search treats these as dead ends too)
+                        eng.stats.conflicts += 1;
+                    }
+                    if surfaced {
+                        true
+                    } else {
+                        // no propagation conflict to analyze: learn the
+                        // decision no-good (the remembered
+                        // chronological backtrack) and continue
+                        let lvl = eng.current_level();
+                        if lvl == 0 {
+                            break 'search; // root leaf: space exhausted
+                        }
+                        let mut lits: Vec<Lit> = Vec::with_capacity(lvl);
+                        lits.push(eng.expl.lit[eng.level_marks[lvl - 1] as usize]);
+                        for i in 0..lvl - 1 {
+                            lits.push(eng.expl.lit[eng.level_marks[i] as usize]);
+                        }
+                        match apply_learned(
+                            model,
+                            &mut eng,
+                            lits,
+                            lvl - 1,
+                            &mut scratch.heap,
+                            &scratch.act,
+                            &scratch.pos_var,
+                            &scratch.var_positions,
+                        ) {
+                            Ok(()) => false,
+                            Err(_) => true,
+                        }
+                    }
+                };
+
+                if conflict {
+                    // analyze → learn → backjump → propagate; repeat
+                    // while the propagation after the backjump keeps
+                    // failing
+                    loop {
+                        eng.stats.conflicts += 1;
+                        conflicts_since_restart += 1;
+                        scratch.act.decay();
+                        eng.ng.decay();
+                        let confl = mem::take(&mut eng.expl.conflict);
+                        let analyzed =
+                            analyze(&eng, &confl, &mut scratch.act, &mut scratch.analyze);
+                        eng.expl.conflict = confl; // hand the buffer back
+                        for &g in &scratch.analyze.ng_bumps {
+                            eng.ng.bump(g);
+                        }
+                        scratch.act.swap_bumped(&mut scratch.bumped);
+                        for &v in &scratch.bumped {
+                            for &p in scratch.var_positions.row(v as usize) {
+                                scratch.heap.resift(p, &scratch.act, &scratch.pos_var);
+                            }
+                        }
+                        match analyzed {
+                            Analyzed::Root => break 'search,
+                            Analyzed::NoGood { lits, level } => {
+                                let r = apply_learned(
+                                    model,
+                                    &mut eng,
+                                    lits,
+                                    level,
+                                    &mut scratch.heap,
+                                    &scratch.act,
+                                    &scratch.pos_var,
+                                    &scratch.var_positions,
+                                );
+                                if r.is_ok() {
+                                    break; // fixpoint reached: resume search
+                                }
                             }
                         }
                     }
                 }
             }
-        }
 
-        let status = match (&best, limit_hit) {
-            (Some(_), false) => Status::Optimal,
-            (Some(_), true) => Status::Feasible,
-            (None, false) => Status::Infeasible,
-            (None, true) => Status::Unknown,
+            let status = match (best_obj.is_some(), limit_hit) {
+                (true, false) => Status::Optimal,
+                (true, true) => Status::Feasible,
+                (false, false) => Status::Infeasible,
+                (false, true) => Status::Unknown,
+            };
+            if self.first_solution && best_obj.is_some() {
+                Status::Feasible
+            } else if !limit_hit && objective.is_empty() && best_obj.is_some() {
+                Status::Feasible // satisfaction problem: "a" solution
+            } else {
+                status
+            }
         };
-        let status = if self.first_solution && best.is_some() {
-            Status::Feasible
-        } else if !limit_hit && objective.is_empty() && best.is_some() {
-            Status::Feasible // satisfaction problem: "a" solution
-        } else {
-            status
+
+        let best = match best_obj {
+            Some(o) => Some((mem::take(&mut best_vec), o)),
+            None => {
+                scratch.sol_pool.push(best_vec);
+                None
+            }
         };
-        SearchResult { status, best, stats: eng.stats }
+        ctx.search = scratch;
+        let stats = eng.stats;
+        eng.recycle(ctx);
+        SearchResult { status, best, stats }
     }
 }
 

@@ -58,12 +58,19 @@ impl SegTreeProfile {
     /// Empty profile over the half-open coordinate range `[lo, hi)`
     /// (degenerate ranges are widened to one point).
     pub fn new(lo: i64, hi: i64) -> Self {
-        let hi = hi.max(lo + 1);
-        SegTreeProfile {
-            lo,
-            hi,
-            nodes: vec![Node { left: NIL, right: NIL, add: 0, max: 0 }],
-        }
+        let mut t = SegTreeProfile { lo: 0, hi: 1, nodes: Vec::with_capacity(1) };
+        t.reset(lo, hi);
+        t
+    }
+
+    /// Empty the tree and re-cover `[lo, hi)` in place, keeping the
+    /// node arena's capacity (solve-context reuse: a pooled profile is
+    /// reset once per engine construction instead of reallocated).
+    pub fn reset(&mut self, lo: i64, hi: i64) {
+        self.lo = lo;
+        self.hi = hi.max(lo + 1);
+        self.nodes.clear();
+        self.nodes.push(Node { left: NIL, right: NIL, add: 0, max: 0 });
     }
 
     /// Maximum load over the whole axis (0 when nothing is registered).

@@ -327,27 +327,25 @@ fn nogood_watches_survive_backtrack() {
     let x = m.new_var(0, 5);
     let y = m.new_var(0, 5);
     let z = m.new_var(0, 5);
-    let mut eng = PropagationEngine::new(&m, &[], false, true, &SearchStrategy::learned());
+    let mut ctx = SolveCtx::default();
+    let mut eng =
+        PropagationEngine::new(&m, &[], false, true, &SearchStrategy::learned(), &mut ctx);
     // forbid x ≥ 3 ∧ y ≥ 2 ∧ z ≥ 4
     eng.ng.add(vec![Lit::geq(x, 3), Lit::geq(y, 2), Lit::geq(z, 4)]);
     assert!(eng.fixpoint(&m).is_ok(), "nothing entailed yet");
     // first descent: x then y → the no-good must assert z ≤ 3
     assert!(eng.decide_lit(&m, Lit::geq(x, 3)).is_ok());
     assert!(eng.decide_lit(&m, Lit::geq(y, 2)).is_ok());
-    assert_eq!(eng.domains[z.0 as usize].max(), 3, "no-good must prune z");
+    assert_eq!(eng.doms.max(z), 3, "no-good must prune z");
     assert_eq!(eng.stats.nogoods_pruned, 1);
     // backtrack to the root: bounds relax, watches stay put
     eng.backjump_to(0);
-    assert_eq!(eng.domains[z.0 as usize].max(), 5);
-    assert_eq!(eng.domains[y.0 as usize].max(), 5);
+    assert_eq!(eng.doms.max(z), 5);
+    assert_eq!(eng.doms.max(y), 5);
     // second descent in a different order: z then x → y ≤ 1
     assert!(eng.decide_lit(&m, Lit::geq(z, 4)).is_ok());
     assert!(eng.decide_lit(&m, Lit::geq(x, 3)).is_ok());
-    assert_eq!(
-        eng.domains[y.0 as usize].max(),
-        1,
-        "watches must keep firing after backtrack"
-    );
+    assert_eq!(eng.doms.max(y), 1, "watches must keep firing after backtrack");
     assert_eq!(eng.stats.nogoods_pruned, 2);
 }
 
@@ -492,6 +490,78 @@ fn edge_finding_knob_preserves_optimum() {
         assert_eq!(ef.status, Status::Optimal);
         assert_eq!(tt.best.as_ref().unwrap().1, ef.best.as_ref().unwrap().1);
     }
+}
+
+/// The data-oriented memory pass, held as an exact equality: once a
+/// [`SolveCtx`] is warmed up, repeat solves of the same model — the LNS
+/// window re-solve pattern — perform **zero** heap allocations. The
+/// crate's test build runs under `util::alloc_count::CountingAlloc`
+/// (see `lib.rs`), so any stray `clone()`/`vec![]`/rebuild sneaking
+/// back into the kernel hot path fails this test with an exact count.
+///
+/// Scope: chronological search (the LNS window default) with the
+/// SegTree profile (the default; the Linear A/B oracle's `BTreeMap`
+/// frees its nodes on `clear`, so it can never be zero-alloc — see
+/// `CumState::reset`). Learned search is exempt by design: learned
+/// no-good literal vectors intentionally stay freshly allocated because
+/// `NoGoodDb` keeps them alive across the solve.
+#[test]
+fn reused_ctx_steady_state_is_allocation_free() {
+    let (m, obj, bo) = scheduling_model();
+    let solver = Solver::default();
+    let mut ctx = SolveCtx::default();
+    // two warm-up solves: the first grows every pooled buffer, the
+    // second catches capacity ratchets (e.g. a Vec that doubled late)
+    for _ in 0..2 {
+        let r = solver.solve_with_ctx(&m, &obj, &bo, |_, _| {}, &mut ctx);
+        assert_eq!(r.status, Status::Optimal);
+        if let Some((v, _)) = r.best {
+            ctx.recycle_solution(v);
+        }
+    }
+    let before = crate::util::alloc_count::thread_allocations();
+    let r = solver.solve_with_ctx(&m, &obj, &bo, |_, _| {}, &mut ctx);
+    let after = crate::util::alloc_count::thread_allocations();
+    assert_eq!(r.status, Status::Optimal);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state solve on a warmed SolveCtx allocated {} time(s)",
+        after - before
+    );
+    if let Some((v, _)) = r.best {
+        ctx.recycle_solution(v);
+    }
+}
+
+/// Same steady-state discipline for an *infeasible* re-solve (the other
+/// common LNS window outcome): no solution vector is produced and the
+/// context still round-trips allocation-free.
+#[test]
+fn reused_ctx_infeasible_resolve_is_allocation_free() {
+    let mut m = Model::new();
+    let mut items = Vec::new();
+    for _ in 0..3 {
+        let a = m.new_bool();
+        m.fix(a, 1);
+        let s = m.new_var(0, 7);
+        let e = m.new_var(0, 7);
+        m.le_offset(s, 2, e); // length >= 3; 9 slots into 8 → infeasible
+        items.push(CumItem { active: a, start: s, end: e, demand: 1 });
+    }
+    m.cumulative(items, 1);
+    let bo = all_vars(&m);
+    let solver = Solver::default();
+    let mut ctx = SolveCtx::default();
+    for _ in 0..2 {
+        let r = solver.solve_with_ctx(&m, &[], &bo, |_, _| {}, &mut ctx);
+        assert_eq!(r.status, Status::Infeasible);
+    }
+    let before = crate::util::alloc_count::thread_allocations();
+    let r = solver.solve_with_ctx(&m, &[], &bo, |_, _| {}, &mut ctx);
+    let after = crate::util::alloc_count::thread_allocations();
+    assert_eq!(r.status, Status::Infeasible);
+    assert_eq!(after - before, 0, "infeasible re-solve allocated");
 }
 
 #[test]

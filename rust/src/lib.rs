@@ -56,6 +56,14 @@
     clippy::type_complexity
 )]
 
+// Unit-test builds run under a counting allocator so allocation-
+// regression tests (zero steady-state heap allocation across re-solves
+// on a reused cp::SolveCtx) can assert exact deltas; every other build
+// profile uses the system allocator untouched.
+#[cfg(test)]
+#[global_allocator]
+static COUNTING_ALLOC: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
+
 pub mod generators;
 pub mod graph;
 pub mod util;

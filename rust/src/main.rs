@@ -11,6 +11,9 @@
 //!   bench   <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|serve-json|
 //!           ablation-c|ablation-topo|all> [--time-limit S] [--quick] [--xl]
 //!           [--socket PATH]
+//!   bench   compare --baseline A.json --current B.json [--threshold-pct P]
+//!           [--warn-only] [--report PATH]   (CI perf ratchet; exit 1 on
+//!           regression, 2 when not comparable)
 //!   serve   [--socket PATH] [--workers N] [--queue-cap N] [--cache-cap N]
 //!           [--deadline-ms MS] [--stall-ms MS]   (NDJSON over a Unix socket)
 //!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`
@@ -351,6 +354,29 @@ fn main() {
                     let socket = flag_val(&args, "--socket").map(std::path::PathBuf::from);
                     bench::bench_serve_json(quick, socket.as_deref())
                 }
+                Some("compare") => {
+                    let need = |name: &str| {
+                        flag_val(&args, name).unwrap_or_else(|| {
+                            eprintln!(
+                                "bench compare requires {name} PATH (plus optionally \
+                                 --threshold-pct P, --warn-only, --report PATH)"
+                            );
+                            std::process::exit(2);
+                        })
+                    };
+                    let baseline = std::path::PathBuf::from(need("--baseline"));
+                    let current = std::path::PathBuf::from(need("--current"));
+                    let threshold: f64 = flag_val(&args, "--threshold-pct")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(10.0);
+                    let warn_only = args.iter().any(|a| a == "--warn-only");
+                    let report = std::path::PathBuf::from(
+                        flag_val(&args, "--report").unwrap_or_else(|| "BENCH_compare.txt".into()),
+                    );
+                    std::process::exit(bench::bench_compare(
+                        &baseline, &current, threshold, warn_only, &report,
+                    ));
+                }
                 Some("ablation-c") => bench::ablation_c(time_limit),
                 Some("ablation-topo") => bench::ablation_topo(),
                 Some("all") | None => bench::run_all(time_limit, quick, search),
@@ -452,6 +478,8 @@ fn main() {
                    bench <fig1|fig5|fig6|table1|table2|sweep|solver-json|large-json|\
                  serve-json|ablation-c|ablation-topo|all> [--time-limit S] [--quick] \
                  [--xl] [--socket PATH]\n\
+                   bench compare --baseline A.json --current B.json \
+                 [--threshold-pct P] [--warn-only] [--report PATH]\n\
                    serve [--socket PATH] [--workers N] [--queue-cap N] [--cache-cap N] \
                  [--deadline-ms MS] [--stall-ms MS]\n\
                    train [--steps N] [--budget-frac F]"

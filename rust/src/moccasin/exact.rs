@@ -6,7 +6,7 @@
 
 use super::model::StagedModel;
 use super::solution::RematSolution;
-use crate::cp::{SearchStats, SearchStrategy, Solver, Status};
+use crate::cp::{SearchStats, SearchStrategy, SolveCtx, Solver, Status};
 use crate::graph::{Graph, NodeId};
 use crate::presolve::Presolve;
 use crate::util::Deadline;
@@ -31,6 +31,11 @@ pub struct ExactResult {
 /// level or an interval-length cap), exhausting the search space does
 /// not prove anything about the original problem, so
 /// [`ExactResult::proved_optimal`] stays false.
+///
+/// `ctx` is the caller's reusable solve context: the CP kernel steals
+/// its scratch buffers and hands them back before returning, so a
+/// caller running exact + LNS (or several ladder rungs) pays the kernel
+/// allocation cost once per [`super::MoccasinSolver`] solve.
 #[allow(clippy::too_many_arguments)]
 pub fn solve_exact(
     graph: &Graph,
@@ -41,6 +46,7 @@ pub fn solve_exact(
     staged: bool,
     pre: &Presolve,
     search: SearchStrategy,
+    ctx: &mut SolveCtx,
     mut on_solution: impl FnMut(&RematSolution),
 ) -> ExactResult {
     let c_v = vec![c; graph.n()];
@@ -61,15 +67,26 @@ pub fn solve_exact(
         ..Default::default()
     };
     let mut best_duration = u64::MAX;
-    let r = solver.solve(&sm.model, &sm.objective, &bo, |a, _| {
-        let seq = sm.extract_sequence(a);
-        if let Ok(sol) = RematSolution::from_seq(graph, seq) {
-            if sol.feasible(budget) && sol.eval.duration < best_duration {
-                best_duration = sol.eval.duration;
-                on_solution(&sol);
+    let r = solver.solve_with_ctx(
+        &sm.model,
+        &sm.objective,
+        &bo,
+        |a, _| {
+            let seq = sm.extract_sequence(a);
+            if let Ok(sol) = RematSolution::from_seq(graph, seq) {
+                if sol.feasible(budget) && sol.eval.duration < best_duration {
+                    best_duration = sol.eval.duration;
+                    on_solution(&sol);
+                }
             }
-        }
-    });
+        },
+        ctx,
+    );
+    // the best-assignment vector is consumed here (solutions were
+    // already extracted through the callback) — return it to the pool
+    if let Some((v, _)) = r.best {
+        ctx.recycle_solution(v);
+    }
     let mut stats = r.stats;
     stats.presolve.add(&sm.presolve);
     ExactResult {
@@ -98,6 +115,7 @@ mod tests {
         .unwrap();
         let order = topological_order(&g).unwrap();
         let mut best = None;
+        let mut ctx = SolveCtx::default();
         let r = solve_exact(
             &g,
             &order,
@@ -107,6 +125,7 @@ mod tests {
             true,
             &Presolve::new(&g, Default::default()),
             SearchStrategy::default(),
+            &mut ctx,
             |s| best = Some(s.clone()),
         );
         assert!(r.proved_optimal);
@@ -128,6 +147,7 @@ mod tests {
             true,
             &Presolve::new(&g, Default::default()),
             SearchStrategy::default(),
+            &mut SolveCtx::default(),
             |_| {},
         );
         assert!(r.proved_optimal); // proved infeasible

@@ -14,7 +14,7 @@
 
 use super::model::{event_id, StagedModel};
 use super::solution::RematSolution;
-use crate::cp::{SearchStats, SearchStrategy, Solver};
+use crate::cp::{SearchStats, SearchStrategy, SolveCtx, Solver};
 use crate::graph::{Graph, NodeId};
 use crate::presolve::Presolve;
 use crate::util::{Deadline, Rng};
@@ -156,6 +156,13 @@ pub fn canonicalize(
 /// Build the staged model with everything outside `window` (a stage
 /// range `[j0, j1)`) frozen to the incumbent, solve the window, and
 /// return an improved solution if found.
+///
+/// `ctx` is the loop's reusable solve context: window re-solves are the
+/// hot path this type exists for — every kernel scratch buffer (domain
+/// store, trail, queues, watch CSR, cumulative states, search scratch)
+/// is stolen from `ctx` and handed back, so the steady-state loop runs
+/// without per-window heap allocation (asserted by the counting-
+/// allocator regression test).
 #[allow(clippy::too_many_arguments)]
 fn solve_window(
     graph: &Graph,
@@ -168,6 +175,7 @@ fn solve_window(
     deadline: Deadline,
     pre: &Presolve,
     search: SearchStrategy,
+    ctx: &mut SolveCtx,
     stats: &mut SearchStats,
 ) -> Option<RematSolution> {
     // failpoint: a spurious timeout or error makes this window report
@@ -239,19 +247,30 @@ fn solve_window(
         ..Default::default()
     };
     let mut best: Option<RematSolution> = None;
-    let r = solver.solve(&sm.model, &sm.objective, &bo, |a, _| {
-        let seq = sm.extract_sequence(a);
-        if let Ok(sol) = RematSolution::from_seq(graph, seq) {
-            if sol.feasible(budget)
-                && best
-                    .as_ref()
-                    .map(|b| sol.eval.duration < b.eval.duration)
-                    .unwrap_or(true)
-            {
-                best = Some(sol);
+    let r = solver.solve_with_ctx(
+        &sm.model,
+        &sm.objective,
+        &bo,
+        |a, _| {
+            let seq = sm.extract_sequence(a);
+            if let Ok(sol) = RematSolution::from_seq(graph, seq) {
+                if sol.feasible(budget)
+                    && best
+                        .as_ref()
+                        .map(|b| sol.eval.duration < b.eval.duration)
+                        .unwrap_or(true)
+                {
+                    best = Some(sol);
+                }
             }
-        }
-    });
+        },
+        ctx,
+    );
+    // the raw best assignment was already decoded through the callback;
+    // recycle its vector so the next window pops it from the pool
+    if let Some((v, _)) = r.best {
+        ctx.recycle_solution(v);
+    }
     if std::env::var("MOCCASIN_DEBUG_WIN").is_ok() {
         eprintln!(
             "  window [{j0},{j1}): status={:?} nodes={} best={:?} incumbent={}",
@@ -268,7 +287,8 @@ fn solve_window(
 
 /// The anytime LNS loop: random stage windows, exact re-solve, accept
 /// improvements, until the deadline. CP kernel statistics of every
-/// window re-solve are accumulated into `stats`.
+/// window re-solve are accumulated into `stats`; all window re-solves
+/// share the caller's `ctx`, so only the first pays kernel allocation.
 #[allow(clippy::too_many_arguments)]
 pub fn lns_loop(
     graph: &Graph,
@@ -280,6 +300,7 @@ pub fn lns_loop(
     rng: &mut Rng,
     pre: &Presolve,
     search: SearchStrategy,
+    ctx: &mut SolveCtx,
     mut incumbent: RematSolution,
     stats: &mut SearchStats,
     mut on_improve: impl FnMut(&RematSolution),
@@ -351,7 +372,7 @@ pub fn lns_loop(
         // single propagation pass cannot overrun the slice unbounded.
         let sub_deadline = deadline.sub(slice);
         match solve_window(
-            graph, order, budget, c, &incumbent, j0, j1, sub_deadline, pre, search, stats,
+            graph, order, budget, c, &incumbent, j0, j1, sub_deadline, pre, search, ctx, stats,
         ) {
             Some(better) => {
                 wins += 1;
@@ -466,6 +487,7 @@ mod tests {
         let mut best = polished.clone();
         let mut rng = Rng::seed_from_u64(1);
         let mut stats = SearchStats::default();
+        let mut ctx = SolveCtx::default();
         lns_loop(
             &g,
             &order,
@@ -476,6 +498,7 @@ mod tests {
             &mut rng,
             &Presolve::new(&g, Default::default()),
             SearchStrategy::default(),
+            &mut ctx,
             polished.clone(),
             &mut stats,
             |s| best = s.clone(),

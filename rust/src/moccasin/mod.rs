@@ -40,7 +40,7 @@ pub use degradation::{Degradation, PhaseBudgets, PhaseSpend, Rung};
 pub use model::{IntervalVars, StagedModel};
 pub use solution::{intervals_from_sequence, RematSolution};
 
-use crate::cp::{SearchMode, SearchStats, SearchStrategy};
+use crate::cp::{SearchMode, SearchStats, SearchStrategy, SolveCtx};
 use crate::graph::{topological_order, Graph, NodeId};
 use crate::presolve::{GraphAnalysis, Presolve, PresolveConfig};
 use crate::util::{Deadline, Incumbent, Rng};
@@ -181,6 +181,14 @@ impl MoccasinSolver {
         let mut best: Option<RematSolution> = None;
         let mut proved_optimal = false;
         let mut stats = SearchStats::default();
+        // One reusable CP solve context for the whole solve: the exact
+        // B&B and every LNS window re-solve (across every ladder rung)
+        // steal and return the same kernel scratch buffers, so only the
+        // first kernel run pays allocation. Panic-safe: a rung that
+        // unwinds mid-solve leaves `ctx` valid but partially drained
+        // (the buffers the dying engine held are simply gone); the next
+        // rung re-grows what it needs.
+        let mut ctx = SolveCtx::default();
         let budgets = self.budgets.unwrap_or_else(|| PhaseBudgets::split(self.time_limit));
         let configured_rung = match self.search.mode {
             SearchMode::Learned => Rung::Learned,
@@ -249,6 +257,7 @@ impl MoccasinSolver {
                         self.staged,
                         &pre,
                         self.search,
+                        &mut ctx,
                         |sol| record(sol, &mut trace, &mut best),
                     )
                 }));
@@ -332,6 +341,7 @@ impl MoccasinSolver {
                         self.staged,
                         &pre,
                         *strat,
+                        &mut ctx,
                         |sol| record(sol, &mut trace, &mut best),
                     );
                     search_ms = deadline.elapsed().saturating_sub(t0).as_millis() as u64;
@@ -363,6 +373,7 @@ impl MoccasinSolver {
                         &mut rng,
                         &pre,
                         *strat,
+                        &mut ctx,
                         best.clone().unwrap(),
                         &mut astats,
                         |sol| record(sol, &mut trace, &mut best),

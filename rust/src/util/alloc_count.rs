@@ -1,0 +1,84 @@
+//! A counting global allocator for allocation-regression tests.
+//!
+//! The data-oriented kernel memory pass promises *zero* steady-state
+//! heap allocation across re-solves on a reused `SolveCtx` — a claim a
+//! profiler can only eyeball. This module makes it a unit-testable
+//! equality: the crate's test build installs [`CountingAlloc`] as the
+//! global allocator (see the `#[global_allocator]` item in `lib.rs`),
+//! and the regression test asserts that the per-thread allocation
+//! counter does not move across a warmed-up solve.
+//!
+//! Counters are per-thread (`thread_local`), so concurrently running
+//! tests cannot contaminate each other's deltas. Deallocations are not
+//! counted — the ratchet is on acquiring heap memory, and a free in the
+//! steady state implies a matching earlier allocation anyway. The
+//! allocator itself is compiled unconditionally (it is trivially thin
+//! over [`System`]) but only *installed* under `cfg(test)`; release and
+//! bench builds run the system allocator untouched.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // const-initialized: no lazy-init allocation, and usable during
+    // thread teardown via try_with (an allocation after TLS destruction
+    // is silently uncounted rather than a panic in the allocator)
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations made by the calling thread since it started
+/// (meaningful only in builds where [`CountingAlloc`] is installed;
+/// always 0 otherwise). Take a delta around the region under test.
+pub fn thread_allocations() -> u64 {
+    THREAD_ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+#[inline]
+fn bump() {
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// [`System`] plus a per-thread allocation counter. Installed as the
+/// global allocator in test builds only.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a realloc acquires memory (even in-place growth is a new
+        // capacity commitment) — counted like an alloc
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_observes_vec_growth() {
+        let before = thread_allocations();
+        let mut v: Vec<u64> = Vec::with_capacity(4);
+        v.extend([1, 2, 3, 4]);
+        let mid = thread_allocations();
+        assert!(mid > before, "with_capacity must allocate");
+        // pushing within capacity allocates nothing
+        v.clear();
+        v.extend([5, 6, 7, 8]);
+        assert_eq!(thread_allocations(), mid, "in-capacity reuse must not allocate");
+    }
+}

@@ -16,20 +16,38 @@ pub struct Csr<T> {
     dat: Vec<T>,
 }
 
+impl<T> Default for Csr<T> {
+    /// Zero-row arena (valid: `off` holds the single sentinel offset).
+    fn default() -> Self {
+        Csr { off: vec![0u32], dat: Vec::new() }
+    }
+}
+
 impl<T: Clone> Csr<T> {
     /// Flatten `rows` (consuming nothing; rows are cloned into the
     /// arena — callers build the nested form once and drop it).
     pub fn from_rows(rows: &[Vec<T>]) -> Self {
+        let mut c = Csr::default();
+        c.rebuild_from_rows(rows);
+        c
+    }
+
+    /// Refill the arena from `rows` in place, keeping the offset and
+    /// data capacity from previous builds (the solve-context reuse
+    /// path: rebuilt once per engine construction, steady-state
+    /// allocation-free once capacities have grown to fit).
+    pub fn rebuild_from_rows(&mut self, rows: &[Vec<T>]) {
         let total: usize = rows.iter().map(|r| r.len()).sum();
         assert!(total <= u32::MAX as usize, "CSR arena exceeds u32 offsets");
-        let mut off = Vec::with_capacity(rows.len() + 1);
-        let mut dat = Vec::with_capacity(total);
-        off.push(0u32);
+        self.off.clear();
+        self.dat.clear();
+        self.off.reserve(rows.len() + 1);
+        self.dat.reserve(total);
+        self.off.push(0u32);
         for r in rows {
-            dat.extend_from_slice(r);
-            off.push(dat.len() as u32);
+            self.dat.extend_from_slice(r);
+            self.off.push(self.dat.len() as u32);
         }
-        Csr { off, dat }
     }
 }
 

@@ -4,6 +4,7 @@
 //! minimal error type for the runtime layers, and the [`Csr`]
 //! flat-arena adjacency type the CP kernel's hot loops walk.
 
+pub mod alloc_count;
 mod csr;
 mod error;
 pub mod events;

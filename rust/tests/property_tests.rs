@@ -33,13 +33,18 @@
 //! 11. The disjunctive propagator emitted by heavy-clique presolve
 //!    detection preserves status and optimum when toggled, and when no
 //!    clique was detected the toggle leaves the tree bit-identical.
+//! 12. The solve-context arena is pure mechanism: a solve on a reused
+//!    (dirty) `SolveCtx` walks the *identical* tree — same status,
+//!    optimum, nodes and conflicts — as a solve on a fresh context, for
+//!    chronological and learned search on staged and unstaged models,
+//!    even when the context was last used by a different-sized model.
 //!
 //! Every randomized sweep multiplies its case count by the
 //! `MOCCASIN_PROP_CASES` env var (default 1; the nightly deep-test CI
 //! job sets 10) and stamps the generator seed into its graph names and
 //! assertion messages, so a CI failure reproduces as a one-liner.
 
-use moccasin::cp::{FilteringMode, ProfileMode, SearchStrategy, Solver, Status};
+use moccasin::cp::{FilteringMode, ProfileMode, SearchStrategy, SolveCtx, Solver, Status};
 use moccasin::generators::{cm_style, paper_graph, random_layered, real_world_like};
 use moccasin::graph::{eval_sequence, topological_order, Graph, NodeId};
 use moccasin::moccasin::lns::canonicalize;
@@ -716,6 +721,83 @@ fn prop_disjunctive_preserves_optimum() {
     // detected clique across the sweep — the on/off A/B above is never
     // vacuously exercising only the no-clique branch
     assert!(pairs_seen > 0, "no instance produced a heavy clique");
+}
+
+#[test]
+fn prop_solve_ctx_reuse_matches_fresh() {
+    // The solve-context arena (pooled kernel scratch stolen by each
+    // engine and returned on recycle) must be behavior-invisible: a
+    // solve on a context dirtied by *previous, differently-sized*
+    // models must walk the identical tree as a solve on a fresh one.
+    // Exact equality on (status, optimum, nodes, conflicts) — not just
+    // the optimum — so a buffer that leaks state across solves (a
+    // missed clear, a stale watch list, a no-good surviving its model)
+    // shows up as a trace divergence even when it happens to keep the
+    // answer right.
+    let scale = prop_case_scale();
+    let mut staged_graphs: Vec<Graph> = Vec::new();
+    for seed in 0..4 * scale {
+        let n = 10 + 2 * (seed % 4) as usize;
+        staged_graphs.push(random_layered(&format!("ctx-rl{seed}"), n, 2 * n + 4, seed));
+    }
+    staged_graphs.push(cm_style("ctx-cm", 11, 22, 3, 64));
+    // unstaged models (AllDifferent) stay tiny so they still exhaust
+    let unstaged_graphs: Vec<Graph> = [99u64, 123]
+        .iter()
+        .map(|&seed| random_layered(&format!("ctx-un{seed}"), 7, 12, seed))
+        .collect();
+    for strat in [SearchStrategy::chronological(), SearchStrategy::learned()] {
+        // ONE context per strategy sweep, reused across every graph and
+        // both model shapes — maximally dirty by the end
+        let mut ctx = SolveCtx::default();
+        for staged in [true, false] {
+            let graphs = if staged { &staged_graphs } else { &unstaged_graphs };
+            for g in graphs {
+                let order = topological_order(g).unwrap();
+                let peak = g.peak_mem_no_remat(&order).unwrap();
+                let budget = (peak as f64 * 0.9) as u64;
+                let c_v = vec![2usize; g.n()];
+                let sm = if staged {
+                    StagedModel::build(g, &order, budget, &c_v)
+                } else {
+                    StagedModel::build_unstaged(g, &order, budget, &c_v)
+                };
+                let (bo, guards) = sm.branch_order();
+                let solver = Solver {
+                    node_limit: 400_000,
+                    guards: Some(guards),
+                    strategy: strat,
+                    ..Default::default()
+                };
+                // fresh context (the compat path constructs its own)
+                let fresh = solver.solve(&sm.model, &sm.objective, &bo, |_, _| {});
+                // reused, dirty context
+                let reused =
+                    solver.solve_with_ctx(&sm.model, &sm.objective, &bo, |_, _| {}, &mut ctx);
+                assert_eq!(
+                    fresh.status, reused.status,
+                    "graph {} {strat:?} staged={staged}: status diverged on reused ctx",
+                    g.name
+                );
+                assert_eq!(
+                    fresh.best.as_ref().map(|(_, o)| *o),
+                    reused.best.as_ref().map(|(_, o)| *o),
+                    "graph {} {strat:?} staged={staged}: optimum diverged on reused ctx",
+                    g.name
+                );
+                assert_eq!(
+                    (fresh.stats.nodes, fresh.stats.conflicts),
+                    (reused.stats.nodes, reused.stats.conflicts),
+                    "graph {} {strat:?} staged={staged}: reused ctx walked a different tree",
+                    g.name
+                );
+                // close the pool loop the way the moccasin layer does
+                if let Some((v, _)) = reused.best {
+                    ctx.recycle_solution(v);
+                }
+            }
+        }
+    }
 }
 
 #[test]
