@@ -1,0 +1,122 @@
+//! The lint allowlist: checked-in, justified exemptions.
+//!
+//! Format (one entry per line, `#` comments and blank lines ignored):
+//!
+//! ```text
+//! <rule-key> <file> <atom-or-fn> — <one-line justification>
+//! ```
+//!
+//! * `rule-key` — `relaxed` (atomic-ordering rule, keyed by receiver
+//!   atom), `panic` or `lock` (panic-safety rules, keyed by enclosing
+//!   function name).
+//! * `file` — path relative to the scanned source root.
+//! * `atom-or-fn` — the receiver atomic's field/static name
+//!   (case-insensitive) for `relaxed`, the enclosing function name for
+//!   `panic`/`lock`.
+//! * justification — required free text; the lint prints it whenever
+//!   the entry is involved in drift, so it must say *why* the exemption
+//!   is sound, not just that it exists.
+//!
+//! Every entry must match at least one site: unmatched entries are
+//! reported as `MC-ALLOW-STALE`, so deleting the code that justified an
+//! exemption also forces deleting the exemption.
+
+/// One parsed allowlist entry.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    /// Rule key: `relaxed`, `panic`, or `lock`.
+    pub rule: String,
+    /// File the exemption applies to (relative to the source root).
+    pub file: String,
+    /// Receiver atom (for `relaxed`) or enclosing fn (for `panic`/`lock`).
+    pub atom: String,
+    /// Why the exemption is sound.
+    pub why: String,
+    /// 1-based line in `allowlist.txt` (for reporting).
+    pub line: u32,
+}
+
+/// The parsed allowlist.
+#[derive(Debug, Clone, Default)]
+pub struct Allowlist {
+    entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse allowlist text. Malformed lines (fewer than three fields)
+    /// are kept as entries with an empty justification and will be
+    /// reported stale unless they match — the lint never panics on its
+    /// own configuration.
+    pub fn parse(text: &str) -> Allowlist {
+        let mut entries = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let rule = it.next().unwrap_or_default().to_string();
+            let file = it.next().unwrap_or_default().to_string();
+            let atom = it.next().unwrap_or_default().to_string();
+            let why = it.collect::<Vec<_>>().join(" ");
+            if rule.is_empty() || file.is_empty() || atom.is_empty() {
+                continue;
+            }
+            entries.push(AllowEntry { rule, file, atom, why, line: (i + 1) as u32 });
+        }
+        Allowlist { entries }
+    }
+
+    /// Number of entries (used to size the per-run usage bitmap).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the allowlist has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The entries, in file order.
+    pub fn entries(&self) -> &[AllowEntry] {
+        &self.entries
+    }
+
+    /// Find the entry exempting (`rule`, `file`, `atom`), if any.
+    /// Atom/fn comparison is case-insensitive (statics vs fields).
+    pub fn lookup(&self, rule: &str, file: &str, atom: &str) -> Option<usize> {
+        self.entries.iter().position(|e| {
+            e.rule == rule && e.file == file && e.atom.eq_ignore_ascii_case(atom)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_looks_up() {
+        let a = Allowlist::parse(
+            "# comment\n\
+             relaxed util/events.rs lock_recoveries — monotone diagnostic counter\n\
+             panic cp/domain.rs assign — caller-proven containment\n\
+             \n# another comment\n",
+        );
+        assert_eq!(a.len(), 2);
+        assert!(a.lookup("relaxed", "util/events.rs", "lock_recoveries").is_some());
+        assert!(a.lookup("relaxed", "util/events.rs", "LOCK_RECOVERIES").is_some());
+        assert!(a.lookup("panic", "cp/domain.rs", "assign").is_some());
+        assert!(a.lookup("panic", "cp/domain.rs", "value").is_none());
+        assert!(a.lookup("lock", "cp/domain.rs", "assign").is_none());
+        let e = &a.entries()[0];
+        assert!(e.why.contains("monotone"));
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn malformed_lines_are_skipped_not_fatal() {
+        let a = Allowlist::parse("relaxed\nonly two\n");
+        assert_eq!(a.len(), 0);
+    }
+}

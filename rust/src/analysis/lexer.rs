@@ -1,0 +1,300 @@
+//! A minimal hand-rolled Rust lexer for the in-tree lint.
+//!
+//! Same philosophy as the in-tree JSON parser ([`crate::serve::json`]):
+//! no `syn`, no proc-macro machinery, zero dependencies — the build
+//! stays fully offline. The lexer does not need to be a complete Rust
+//! front end; it needs exactly enough fidelity for the rules in
+//! [`super::rules`]: identifiers (including raw identifiers), string /
+//! byte-string / raw-string literals (so tokens inside them are never
+//! misread as code), char literals vs lifetimes, nested block comments,
+//! line comments, numbers, and single-character punctuation — each with
+//! a 1-based line number for reporting.
+
+/// Token kind. Only the distinctions the rules need are kept.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`fn`, `unwrap`, `Ordering`, …).
+    Ident,
+    /// Single punctuation character (`.`, `(`, `{`, `#`, …).
+    Punct,
+    /// Numeric literal.
+    Num,
+    /// String literal of any flavour (`"…"`, `b"…"`, `r#"…"#`).
+    Str,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+}
+
+/// One lexed token: kind, source text, and 1-based line number.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// What the token is.
+    pub kind: Kind,
+    /// Its source text (quotes included for literals).
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` into a token stream. Unrecognized bytes become single
+/// `Punct` tokens — the rules ignore punctuation they don't care about,
+/// so the lexer never fails.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let s = src.as_bytes();
+    let n = s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let text = |a: usize, b: usize| String::from_utf8_lossy(&s[a..b.min(n)]).into_owned();
+    while i < n {
+        let c = s[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && s[i + 1] == b'/' {
+            while i < n && s[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nesting, like rustc)
+        if c == b'/' && i + 1 < n && s[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if s[i] == b'/' && i + 1 < n && s[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == b'*' && i + 1 < n && s[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings r"…" / r#"…"#, raw byte strings br"…", raw idents r#id
+        if c == b'r' || (c == b'b' && i + 1 < n && s[i + 1] == b'r') {
+            let j = if c == b'b' { i + 1 } else { i }; // position of the `r`
+            let mut k = j + 1;
+            let mut hashes = 0usize;
+            while k < n && s[k] == b'#' {
+                hashes += 1;
+                k += 1;
+            }
+            if k < n && s[k] == b'"' {
+                // raw (byte) string: scan to `"###…` with the same hash count
+                k += 1;
+                let start = i;
+                loop {
+                    if k >= n {
+                        break;
+                    }
+                    if s[k] == b'\n' {
+                        line += 1;
+                        k += 1;
+                        continue;
+                    }
+                    if s[k] == b'"' {
+                        let mut h = 0usize;
+                        while k + 1 + h < n && h < hashes && s[k + 1 + h] == b'#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            k += 1 + hashes;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                toks.push(Tok { kind: Kind::Str, text: text(start, k), line });
+                i = k;
+                continue;
+            }
+            if c == b'r' && hashes >= 1 && k < n && is_ident_byte(s[k]) {
+                // raw identifier r#ident: token text is the bare ident
+                let start = k;
+                while k < n && is_ident_byte(s[k]) {
+                    k += 1;
+                }
+                toks.push(Tok { kind: Kind::Ident, text: text(start, k), line });
+                i = k;
+                continue;
+            }
+            // plain ident starting with r/b: fall through below
+        }
+        // byte string b"…" / byte char b'…'
+        let (c, i0) = if c == b'b' && i + 1 < n && (s[i + 1] == b'"' || s[i + 1] == b'\'') {
+            (s[i + 1], i + 1)
+        } else {
+            (c, i)
+        };
+        if c == b'"' {
+            let start = i;
+            let mut j = i0 + 1;
+            while j < n {
+                if s[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if s[j] == b'"' {
+                    break;
+                }
+                if s[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Str, text: text(start, j + 1), line });
+            i = j + 1;
+            continue;
+        }
+        if c == b'\'' {
+            // lifetime: 'ident not followed by a closing quote
+            let j = i0 + 1;
+            if j < n
+                && (s[j].is_ascii_alphabetic() || s[j] == b'_')
+                && !(j + 1 < n && s[j + 1] == b'\'')
+            {
+                let start = i0;
+                let mut k = j;
+                while k < n && is_ident_byte(s[k]) {
+                    k += 1;
+                }
+                toks.push(Tok { kind: Kind::Lifetime, text: text(start, k), line });
+                i = k;
+                continue;
+            }
+            // char literal (possibly escaped, possibly \u{…})
+            let start = i;
+            let mut j = i0 + 1;
+            if j < n && s[j] == b'\\' {
+                j += 2;
+                if j <= n && j >= 1 && (s[j - 1] == b'u' || s[j - 1] == b'U') {
+                    if j < n && s[j] == b'{' {
+                        while j < n && s[j] != b'}' {
+                            j += 1;
+                        }
+                        j += 1;
+                    }
+                }
+            } else {
+                // skip one (possibly multi-byte) char
+                j += 1;
+                while j < n && (s[j] & 0xC0) == 0x80 {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Char, text: text(start, j + 1), line });
+            i = j + 1;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            let mut j = i;
+            while j < n && is_ident_byte(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: text(start, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n && (is_ident_byte(s[j]) || s[j] == b'.') {
+                // keep `0..n` from being eaten as one number
+                if s[j] == b'.' && j + 1 < n && s[j + 1] == b'.' {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Num, text: text(start, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: (c as char).to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let k = kinds("fn foo(x: u32) {}");
+        assert_eq!(k[0], (Kind::Ident, "fn".to_string()));
+        assert_eq!(k[1], (Kind::Ident, "foo".to_string()));
+        assert!(k.iter().any(|(kd, t)| *kd == Kind::Punct && t == "{"));
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        assert!(kinds("// unwrap() here\nx").iter().all(|(_, t)| t != "unwrap"));
+        assert!(kinds("/* outer /* nested unwrap() */ still */ y")
+            .iter()
+            .all(|(_, t)| t != "unwrap"));
+    }
+
+    #[test]
+    fn strings_hide_code() {
+        let k = kinds(r#"let s = "a.unwrap()"; t"#);
+        assert!(k.iter().all(|(_, t)| t != "unwrap"));
+        let k = kinds("let s = r#\"x.lock()\"#; t");
+        assert!(k.iter().all(|(_, t)| t != "lock"));
+        let k = kinds("let s = b\"x.lock()\"; t");
+        assert!(k.iter().all(|(_, t)| t != "lock"));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let k = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let e = '\\n'; }");
+        assert!(k.iter().any(|(kd, t)| *kd == Kind::Lifetime && t == "'a"));
+        assert!(k.iter().any(|(kd, t)| *kd == Kind::Char && t == "'x'"));
+        assert!(k.iter().any(|(kd, t)| *kd == Kind::Char && t == "'\\n'"));
+    }
+
+    #[test]
+    fn raw_ident() {
+        let k = kinds("let r#fn = 1;");
+        assert!(k.iter().any(|(kd, t)| *kd == Kind::Ident && t == "fn"));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn multiline_string_advances_lines() {
+        let toks = lex("let s = \"a\nb\";\nz");
+        let z = toks.iter().find(|t| t.text == "z").map(|t| t.line);
+        assert_eq!(z, Some(3));
+    }
+}

@@ -1,0 +1,388 @@
+//! In-tree static analysis: the `moccasin lint` subcommand.
+//!
+//! A dependency-free lint pass (hand-rolled lexer, no `syn` — the build
+//! stays fully offline, same philosophy as [`crate::serve::json`]) that
+//! scans `rust/src/**` and enforces the repo-specific concurrency and
+//! panic-safety contracts that `clippy` cannot express:
+//!
+//! * **Atomic-ordering contract** (`MC-ORD1`/`MC-ORD2`) — accesses to
+//!   cross-thread control flags must use `Acquire`/`Release`/`AcqRel`;
+//!   `Ordering::Relaxed` is permitted only for sites justified in
+//!   `analysis/allowlist.txt` (stat counters, the work-stealing index).
+//! * **Panic-safety contract** (`MC-PANIC`, `MC-LOCK`) — no bare
+//!   `unwrap()`/`expect()`/`panic!`/`unreachable!` in non-test code of
+//!   the solve-path modules, and every `Mutex::lock()` outside tests
+//!   routes through [`crate::util::lock_recover`].
+//! * **Gate hygiene** (`MC-GATE-FP`, `MC-GATE-AUDIT`, `MC-CLOCK`) —
+//!   failpoint and prop-audit machinery stays under its cfg gates, and
+//!   the CP kernel's hot path never reads the OS clock outside the
+//!   watchdog tick.
+//!
+//! Exit codes mirror `bench compare`: 0 clean, 1 violations, 2 usage
+//! error. See `docs/CONCURRENCY.md` for the full contract tables and
+//! how to extend the rules.
+
+mod allowlist;
+mod lexer;
+mod rules;
+
+pub use allowlist::{AllowEntry, Allowlist};
+pub use rules::Violation;
+
+use std::path::{Path, PathBuf};
+
+/// Result of linting a source tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Findings, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// True when no rule fired.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Collect every `.rs` file under `dir` (recursively), as paths
+/// relative to `root`, sorted for deterministic reports. I/O errors on
+/// individual entries are skipped — a lint must degrade, not crash.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(root, &p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = p.strip_prefix(root) {
+                out.push(rel.to_path_buf());
+            }
+        }
+    }
+}
+
+/// Lint the tree rooted at `root` (typically `rust/src`) against
+/// `allow`. Stale allowlist entries (matching no site in the tree) are
+/// reported as `MC-ALLOW-STALE` violations so every exemption stays
+/// load-bearing.
+pub fn lint_tree(root: &Path, allow: &Allowlist) -> LintReport {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, root, &mut files);
+    let mut used = vec![false; allow.len()];
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut scanned = 0usize;
+    for rel in &files {
+        let Ok(src) = std::fs::read_to_string(root.join(rel)) else { continue };
+        scanned += 1;
+        // normalize separators so allowlist entries are portable
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let toks = lexer::lex(&src);
+        violations.extend(rules::lint_file(&rel, &toks, allow, &mut used));
+    }
+    for (idx, entry) in allow.entries().iter().enumerate() {
+        if !used[idx] {
+            violations.push(Violation {
+                rule: "MC-ALLOW-STALE",
+                file: "analysis/allowlist.txt".to_string(),
+                line: entry.line,
+                msg: format!(
+                    "allowlist entry matches no site: `{} {} {}` — {}",
+                    entry.rule, entry.file, entry.atom, entry.why
+                ),
+                hint: "the code this exemption justified is gone; delete the entry",
+                allow_key: None,
+            });
+        }
+    }
+    violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    LintReport { violations, files_scanned: scanned }
+}
+
+/// Resolve the source root: an explicit `--root`, else `rust/src` or
+/// `src` relative to the working directory, else the build-time
+/// manifest location (so `cargo run -- lint` works from anywhere).
+pub fn resolve_root(explicit: Option<&str>) -> Option<PathBuf> {
+    if let Some(r) = explicit {
+        let p = PathBuf::from(r);
+        return p.is_dir().then_some(p);
+    }
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() || p.join("main.rs").is_file() {
+            return Some(p);
+        }
+    }
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    p.is_dir().then_some(p)
+}
+
+/// Load `analysis/allowlist.txt` from under `root` (empty if absent —
+/// the lint then simply reports every `Relaxed` site).
+pub fn load_allowlist(root: &Path) -> Allowlist {
+    match std::fs::read_to_string(root.join("analysis/allowlist.txt")) {
+        Ok(text) => Allowlist::parse(&text),
+        Err(_) => Allowlist::default(),
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a report as a JSON object (uploaded as a CI artifact).
+pub fn report_json(root: &Path, report: &LintReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"root\": \"{}\", \"files_scanned\": {}, \"violations\": [",
+        json_escape(&root.to_string_lossy()),
+        report.files_scanned
+    ));
+    for (i, v) in report.violations.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"msg\": \"{}\", \"hint\": \"{}\"}}",
+            v.rule,
+            json_escape(&v.file),
+            v.line,
+            json_escape(&v.msg),
+            json_escape(v.hint)
+        ));
+    }
+    out.push_str(&format!("], \"count\": {}}}", report.violations.len()));
+    out
+}
+
+/// The `moccasin lint` entry point. Returns the process exit code:
+/// 0 clean, 1 violations found, 2 usage/configuration error.
+pub fn lint_main(args: &[String]) -> i32 {
+    let mut json = false;
+    let mut fix = false;
+    let mut root_arg: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--fix-allowlist" => fix = true,
+            "--root" => match it.next() {
+                Some(r) => root_arg = Some(r.clone()),
+                None => {
+                    eprintln!("lint: --root needs a directory argument");
+                    return 2;
+                }
+            },
+            other => {
+                eprintln!("lint: unknown flag `{other}` (usage: moccasin lint [--json] [--fix-allowlist] [--root DIR])");
+                return 2;
+            }
+        }
+    }
+    let Some(root) = resolve_root(root_arg.as_deref()) else {
+        eprintln!("lint: could not locate the source tree (tried --root, rust/src, src)");
+        return 2;
+    };
+    let allow = load_allowlist(&root);
+    let report = lint_tree(&root, &allow);
+    if fix && !report.is_clean() {
+        return fix_allowlist(&root, &report);
+    }
+    if json {
+        println!("{}", report_json(&root, &report));
+    } else {
+        for v in &report.violations {
+            println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+            println!("    fix: {}", v.hint);
+        }
+        println!(
+            "lint: {} file(s), {} allowlist entr(ies), {} violation(s)",
+            report.files_scanned,
+            allow.len(),
+            report.violations.len()
+        );
+    }
+    i32::from(!report.is_clean())
+}
+
+/// Append suggested allowlist entries (with TODO justifications) for
+/// every exemptible violation, so a developer can fill in the *why*
+/// rather than re-type the keys. Non-exemptible rules (gate hygiene,
+/// hot-path clock, stale entries) still have to be fixed in code.
+fn fix_allowlist(root: &Path, report: &LintReport) -> i32 {
+    let path = root.join("analysis/allowlist.txt");
+    let mut existing = std::fs::read_to_string(&path).unwrap_or_default();
+    let mut added = 0usize;
+    let mut seen: Vec<&str> = Vec::new();
+    let mut remaining = 0usize;
+    for v in &report.violations {
+        match v.allow_key.as_deref() {
+            Some(key) if !seen.contains(&key) => {
+                seen.push(key);
+                if !existing.ends_with('\n') && !existing.is_empty() {
+                    existing.push('\n');
+                }
+                existing.push_str(key);
+                existing.push_str(" — TODO: justify this exemption\n");
+                added += 1;
+            }
+            Some(_) => {}
+            None => remaining += 1,
+        }
+    }
+    if let Err(e) = std::fs::write(&path, existing) {
+        eprintln!("lint: cannot write {}: {e}", path.display());
+        return 2;
+    }
+    println!(
+        "lint: appended {added} suggested entr(ies) to {} — fill in the justifications; \
+         {remaining} violation(s) are not exemptible and need code fixes",
+        path.display()
+    );
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_src() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+    }
+
+    /// The tentpole acceptance test: the shipped tree is clean under
+    /// the shipped allowlist.
+    #[test]
+    fn self_check_repo_tree_is_clean() {
+        let root = repo_src();
+        let allow = load_allowlist(&root);
+        assert!(!allow.is_empty(), "allowlist must exist and be non-empty");
+        let report = lint_tree(&root, &allow);
+        let rendered: Vec<String> = report
+            .violations
+            .iter()
+            .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg))
+            .collect();
+        assert!(report.is_clean(), "repo tree must lint clean:\n{}", rendered.join("\n"));
+        assert!(report.files_scanned > 30, "expected to scan the full tree");
+    }
+
+    /// Deleting any single allowlist line flips the tree to dirty:
+    /// either the exempted site fires, or (for a hypothetical unused
+    /// entry) staleness would have fired *before* deletion — both ways,
+    /// every line is load-bearing.
+    #[test]
+    fn every_allowlist_line_is_load_bearing() {
+        let root = repo_src();
+        let full = load_allowlist(&root);
+        let text = std::fs::read_to_string(root.join("analysis/allowlist.txt"))
+            .expect("allowlist readable");
+        let entry_count = full.len();
+        for drop_idx in 0..entry_count {
+            let mut kept = 0usize;
+            let reduced: String = text
+                .lines()
+                .filter(|l| {
+                    let is_entry = !l.trim().is_empty() && !l.trim().starts_with('#');
+                    if is_entry {
+                        kept += 1;
+                        kept - 1 != drop_idx
+                    } else {
+                        true
+                    }
+                })
+                .map(|l| format!("{l}\n"))
+                .collect();
+            let allow = Allowlist::parse(&reduced);
+            assert_eq!(allow.len(), entry_count - 1);
+            let report = lint_tree(&root, &allow);
+            assert!(
+                !report.is_clean(),
+                "deleting allowlist entry #{drop_idx} ({:?}) left the tree clean — stale entry?",
+                full.entries()[drop_idx]
+            );
+        }
+    }
+
+    /// Injecting a fixture violation into a scanned copy of a file is
+    /// reported with the exact file, line, and rule id.
+    #[test]
+    fn injected_violation_names_exact_site() {
+        let tmp = std::env::temp_dir().join(format!("moccasin-lint-{}", std::process::id()));
+        let serve = tmp.join("serve");
+        std::fs::create_dir_all(&serve).expect("mkdir");
+        std::fs::write(
+            serve.join("bad.rs"),
+            "fn ok() -> u32 { 1 }\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\nfn g(a: &A) { a.shutdown.store(true, Ordering::Relaxed); }\n",
+        )
+        .expect("write fixture");
+        let report = lint_tree(&tmp, &Allowlist::default());
+        let have: Vec<(String, u32, &str)> = report
+            .violations
+            .iter()
+            .map(|v| (v.file.clone(), v.line, v.rule))
+            .collect();
+        assert!(
+            have.contains(&("serve/bad.rs".to_string(), 2, "MC-PANIC")),
+            "expected serve/bad.rs:2 MC-PANIC, got {have:?}"
+        );
+        assert!(
+            have.contains(&("serve/bad.rs".to_string(), 3, "MC-ORD2")),
+            "expected serve/bad.rs:3 MC-ORD2, got {have:?}"
+        );
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    /// Stale entries are themselves violations.
+    #[test]
+    fn stale_allowlist_entry_is_flagged() {
+        let tmp = std::env::temp_dir().join(format!("moccasin-lint-stale-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).expect("mkdir");
+        std::fs::write(tmp.join("clean.rs"), "fn ok() -> u32 { 1 }\n").expect("write");
+        let allow = Allowlist::parse("relaxed clean.rs nothing — entry with no matching site\n");
+        let report = lint_tree(&tmp, &allow);
+        assert_eq!(report.violations.len(), 1);
+        assert_eq!(report.violations[0].rule, "MC-ALLOW-STALE");
+        assert_eq!(report.violations[0].line, 1);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn json_output_is_parseable_by_the_in_tree_parser() {
+        let root = repo_src();
+        let allow = load_allowlist(&root);
+        let report = lint_tree(&root, &allow);
+        let js = report_json(&root, &report);
+        let parsed = crate::serve::json::parse(&js).expect("lint --json must be valid JSON");
+        let crate::serve::json::Json::Obj(members) = parsed else {
+            panic!("expected an object")
+        };
+        assert!(members.iter().any(|(k, _)| k == "violations"));
+        assert!(members.iter().any(|(k, _)| k == "count"));
+    }
+
+    #[test]
+    fn exit_code_semantics() {
+        // unknown flag → usage
+        assert_eq!(lint_main(&["--bogus".to_string()]), 2);
+        // missing --root argument → usage
+        assert_eq!(lint_main(&["--root".to_string()]), 2);
+    }
+}

@@ -1,0 +1,568 @@
+//! The lint rules: scope annotation (what is test-gated, what function
+//! encloses a token) and the per-file rule pass.
+//!
+//! Rules enforced (see `docs/CONCURRENCY.md` for the contracts):
+//!
+//! | id              | contract |
+//! |-----------------|----------|
+//! | `MC-ORD1`       | `Ordering::Relaxed` on a non-control atomic must be justified in the allowlist |
+//! | `MC-ORD2`       | `Ordering::Relaxed` on a cross-thread control flag (`cancelled`, `shutdown`, …) |
+//! | `MC-PANIC`      | bare `unwrap()` / `expect()` / `panic!` / `unreachable!` in solve-path non-test code |
+//! | `MC-LOCK`       | raw `Mutex::lock()` outside `lock_recover` in non-test code |
+//! | `MC-GATE-FP`    | `failpoint` API call outside its cfg gate |
+//! | `MC-GATE-AUDIT` | prop-audit identifier in unguarded `cp/` code |
+//! | `MC-CLOCK`      | `Instant::now()` in `cp/` hot-path code outside `watchdog_tick` |
+
+use super::allowlist::Allowlist;
+use super::lexer::{Kind, Tok};
+
+/// Atomic-access method names that take an `Ordering` argument.
+const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "compare_exchange",
+    "compare_exchange_weak",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_min",
+    "fetch_max",
+    "fetch_update",
+    "fetch_nand",
+];
+
+/// Cross-thread control flags: `Relaxed` on these is a correctness bug
+/// (`MC-ORD2`), not a stat-counter judgement call (`MC-ORD1`).
+const CONTROL_FLAGS: &[&str] = &[
+    "cancelled",
+    "preempted",
+    "finished",
+    "shutdown",
+    "stop",
+    "proved",
+    "client_cancel",
+    "armed",
+    "joined",
+    "progress",
+    "beat",
+    "epoch",
+];
+
+/// Cfg feature names that count as test gates for rule exemption.
+const GATE_FEATURES: &[&str] = &["failpoints", "prop-audit"];
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Rule id (`MC-ORD1`, `MC-PANIC`, …).
+    pub rule: &'static str,
+    /// Path relative to the scanned source root.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// What was found.
+    pub msg: String,
+    /// How to fix it.
+    pub hint: &'static str,
+    /// Ready-made allowlist key (`<rule-key> <file> <atom-or-fn>`) for
+    /// `--fix-allowlist`, when the rule supports exemptions.
+    pub allow_key: Option<String>,
+}
+
+/// Does the token stream of `#[ … ]` describe a test/feature gate?
+///
+/// `#[test]`, `#[cfg(test)]`, `#[cfg(miri)]`, and `#[cfg(any(test,
+/// feature = "failpoints"))]`-style attributes gate their item;
+/// `#[cfg(not(…))]` does not (that is the *non*-test branch even when
+/// the ident `test` appears inside).
+fn attr_is_test_gate(attr: &[Tok]) -> bool {
+    let idents: Vec<&str> =
+        attr.iter().filter(|t| t.kind == Kind::Ident).map(|t| t.text.as_str()).collect();
+    let strs: Vec<&str> = attr
+        .iter()
+        .filter(|t| t.kind == Kind::Str)
+        .map(|t| t.text.trim_matches('"'))
+        .collect();
+    let Some(&first) = idents.first() else { return false };
+    if first == "cfg" || first == "cfg_attr" {
+        if idents.get(1) == Some(&"not") {
+            return false;
+        }
+        return idents.contains(&"test")
+            || idents.contains(&"miri")
+            || strs.iter().any(|s| GATE_FEATURES.contains(s));
+    }
+    first == "test"
+}
+
+/// Per-token scope: is it inside test-gated code, and which named
+/// function encloses it (closures inherit the nearest named fn)?
+struct Scopes {
+    /// Parallel to the token stream: (test_gated, index into `names`).
+    ann: Vec<(bool, Option<usize>)>,
+    /// Interned enclosing-function names.
+    names: Vec<String>,
+}
+
+impl Scopes {
+    fn fn_name(&self, tok_idx: usize) -> Option<&str> {
+        self.ann.get(tok_idx).and_then(|&(_, f)| f).map(|i| self.names[i].as_str())
+    }
+    fn gated(&self, tok_idx: usize) -> bool {
+        self.ann.get(tok_idx).is_some_and(|&(g, _)| g)
+    }
+}
+
+/// Annotate every token with its scope. Brace-depth driven: a `{`
+/// pushes (pending attribute gate, pending `fn` name); `}` pops; a `;`
+/// before any `{` clears pending state (gated `use` items, bodyless
+/// `fn` declarations). Tokens *between* a gating attribute and its `{`
+/// are treated as gated too, which covers attributes on statements
+/// (`#[cfg(…)] if failpoint::hit(…) { … }`).
+fn annotate(toks: &[Tok]) -> Scopes {
+    let n = toks.len();
+    let mut ann = Vec::with_capacity(n);
+    let mut names: Vec<String> = Vec::new();
+    let mut stack: Vec<(bool, Option<usize>)> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_fn: Option<usize> = None;
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        // attribute: collect tokens inside #[ … ] at matching depth
+        if t.kind == Kind::Punct && t.text == "#" && toks.get(i + 1).is_some_and(|b| b.text == "[")
+        {
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut attr: Vec<Tok> = Vec::new();
+            while j < n && depth > 0 {
+                if toks[j].kind == Kind::Punct && toks[j].text == "[" {
+                    depth += 1;
+                } else if toks[j].kind == Kind::Punct && toks[j].text == "]" {
+                    depth -= 1;
+                }
+                if depth > 0 {
+                    attr.push(toks[j].clone());
+                }
+                j += 1;
+            }
+            if attr_is_test_gate(&attr) {
+                pending_test = true;
+            }
+            let gated = stack.iter().any(|&(g, _)| g) || pending_test;
+            let f = stack.iter().rev().find_map(|&(_, f)| f);
+            for _ in i..j {
+                ann.push((gated, f));
+            }
+            i = j;
+            continue;
+        }
+        let gated = stack.iter().any(|&(g, _)| g) || pending_test;
+        let f = stack.iter().rev().find_map(|&(_, f)| f);
+        ann.push((gated, f));
+        if t.kind == Kind::Ident && t.text == "fn" {
+            if let Some(next) = toks.get(i + 1) {
+                if next.kind == Kind::Ident {
+                    names.push(next.text.clone());
+                    pending_fn = Some(names.len() - 1);
+                }
+            }
+        } else if t.kind == Kind::Punct && t.text == "{" {
+            stack.push((pending_test, pending_fn));
+            pending_test = false;
+            pending_fn = None;
+        } else if t.kind == Kind::Punct && t.text == "}" {
+            stack.pop();
+        } else if t.kind == Kind::Punct && t.text == ";" {
+            // item-level `;` with no body: the pending gate/fn is spent
+            pending_test = false;
+            pending_fn = None;
+        }
+        i += 1;
+    }
+    Scopes { ann, names }
+}
+
+/// For the `Ordering` ident of an `Ordering::Relaxed` argument, walk
+/// back to the enclosing call and return `(method, receiver_atom)` —
+/// e.g. `self.stats.cancelled.load(Ordering::Relaxed)` yields
+/// `("load", "cancelled")`. The atom is lowercased so `SHUTDOWN` /
+/// `shutdown` match the same contract entry.
+fn receiver_atom(toks: &[Tok], ord_idx: usize) -> (Option<String>, Option<String>) {
+    // back to the call's `(` at depth 0
+    let mut i = ord_idx;
+    let mut depth = 0i32;
+    let mut open: Option<usize> = None;
+    while i > 0 {
+        i -= 1;
+        let t = &toks[i];
+        if t.kind == Kind::Punct {
+            match t.text.as_str() {
+                ")" | "]" | "}" => depth += 1,
+                "(" | "[" | "{" => {
+                    if depth == 0 {
+                        open = Some(i);
+                        break;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    let Some(open) = open else { return (None, None) };
+    if toks[open].text != "(" || open == 0 {
+        return (None, None);
+    }
+    let mi = open - 1;
+    if toks[mi].kind != Kind::Ident {
+        return (None, None);
+    }
+    let method = toks[mi].text.clone();
+    if mi == 0 || toks[mi - 1].text != "." {
+        return (Some(method), None);
+    }
+    // receiver: last ident before the `.` at depth 0 (skipping any
+    // bracketed index/call expressions)
+    let mut ri = mi - 1;
+    let mut depth = 0i32;
+    while ri > 0 {
+        ri -= 1;
+        let t = &toks[ri];
+        if t.kind == Kind::Punct {
+            match t.text.as_str() {
+                ")" | "]" | "}" => depth += 1,
+                "(" | "[" | "{" => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return (Some(method), None);
+                    }
+                }
+                _ => {}
+            }
+        } else if depth == 0 && t.kind == Kind::Ident {
+            return (Some(method), Some(t.text.to_lowercase()));
+        }
+    }
+    (Some(method), None)
+}
+
+/// Is `rel` inside a solve-path module (where the panic-safety rule
+/// applies)? The lint's own tree is included — the lint lints the lint.
+fn solve_path(rel: &str) -> bool {
+    ["cp/", "coordinator/", "serve/", "moccasin/", "checkmate/", "analysis/"]
+        .iter()
+        .any(|p| rel.starts_with(p))
+}
+
+/// Run every rule over one file. `used` collects the indices of
+/// allowlist entries that matched a site (for staleness reporting).
+pub fn lint_file(
+    rel: &str,
+    toks: &[Tok],
+    allow: &Allowlist,
+    used: &mut Vec<bool>,
+) -> Vec<Violation> {
+    let scopes = annotate(toks);
+    let mut out: Vec<Violation> = Vec::new();
+    let n = toks.len();
+    let txt = |i: usize| toks.get(i).map(|t| t.text.as_str()).unwrap_or("");
+    for i in 0..n {
+        if scopes.gated(i) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let fname = scopes.fn_name(i).unwrap_or("<item>");
+        let prev = if i > 0 { txt(i - 1) } else { "" };
+        let (nxt, nxt2) = (txt(i + 1), txt(i + 2));
+
+        // ---- atomic ordering contract ----
+        if t.text == "Relaxed" && prev == ":" && i >= 3 && txt(i - 3) == "Ordering" {
+            let (method, atom) = receiver_atom(toks, i - 3);
+            let method = method.unwrap_or_default();
+            // Only `Ordering`-taking atomic ops are in scope; anything
+            // else named `Relaxed` (none in-tree) would be noise.
+            if ATOMIC_METHODS.contains(&method.as_str()) {
+                let atom = atom.unwrap_or_else(|| fname.to_lowercase());
+                match allow.lookup("relaxed", rel, &atom) {
+                    Some(idx) => used[idx] = true,
+                    None => {
+                        let control = CONTROL_FLAGS.contains(&atom.as_str());
+                        out.push(Violation {
+                            rule: if control { "MC-ORD2" } else { "MC-ORD1" },
+                            file: rel.to_string(),
+                            line: t.line,
+                            msg: format!(
+                                "Ordering::Relaxed on `{atom}` (via `{method}`) in fn {fname}"
+                            ),
+                            hint: if control {
+                                "control flag: use Acquire (load) / Release (store) / AcqRel (RMW)"
+                            } else {
+                                "upgrade the ordering, or justify the site in \
+                                 analysis/allowlist.txt (`relaxed <file> <atom> — why`)"
+                            },
+                            allow_key: Some(format!("relaxed {rel} {atom}")),
+                        });
+                    }
+                }
+            }
+        }
+
+        // ---- panic safety (solve-path modules only) ----
+        if solve_path(rel) {
+            let bare_unwrap = t.text == "unwrap" && prev == "." && nxt == "(" && nxt2 == ")";
+            let bare_expect = t.text == "expect" && prev == "." && nxt == "(";
+            let panic_macro = matches!(
+                t.text.as_str(),
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            ) && nxt == "!";
+            if bare_unwrap || bare_expect || panic_macro {
+                match allow.lookup("panic", rel, fname) {
+                    Some(idx) => used[idx] = true,
+                    None => out.push(Violation {
+                        rule: "MC-PANIC",
+                        file: rel.to_string(),
+                        line: t.line,
+                        msg: format!("`{}` in non-test fn {fname}", t.text),
+                        hint: "return a structured error / restructure the guard away, or \
+                               justify the fn in analysis/allowlist.txt (`panic <file> <fn> — why`)",
+                        allow_key: Some(format!("panic {rel} {fname}")),
+                    }),
+                }
+            }
+        }
+
+        // ---- mutex discipline ----
+        if t.text == "lock"
+            && prev == "."
+            && nxt == "("
+            && nxt2 == ")"
+            && fname != "lock_recover"
+        {
+            match allow.lookup("lock", rel, fname) {
+                Some(idx) => used[idx] = true,
+                None => out.push(Violation {
+                    rule: "MC-LOCK",
+                    file: rel.to_string(),
+                    line: t.line,
+                    msg: format!("raw Mutex::lock() in fn {fname}"),
+                    hint: "route through util::lock_recover (poison-recovering, counted)",
+                    allow_key: Some(format!("lock {rel} {fname}")),
+                }),
+            }
+        }
+
+        // ---- failpoint gate hygiene ----
+        if t.text == "failpoint"
+            && nxt == ":"
+            && nxt2 == ":"
+            && rel != "util/failpoint.rs"
+            && matches!(txt(i + 3), "hit" | "arm" | "disarm" | "reset" | "fired")
+        {
+            out.push(Violation {
+                rule: "MC-GATE-FP",
+                file: rel.to_string(),
+                line: t.line,
+                msg: format!("ungated failpoint::{} call in fn {fname}", txt(i + 3)),
+                hint: "wrap the site in #[cfg(any(test, feature = \"failpoints\"))]",
+                allow_key: None,
+            });
+        }
+
+        // ---- prop-audit gate hygiene ----
+        if rel.starts_with("cp/") && (t.text.starts_with("audit_") || t.text.starts_with("AUDIT_"))
+        {
+            out.push(Violation {
+                rule: "MC-GATE-AUDIT",
+                file: rel.to_string(),
+                line: t.line,
+                msg: format!("ungated audit ident `{}` in fn {fname}", t.text),
+                hint: "the explanation audit must sit under cfg(any(test, \
+                       feature = \"prop-audit\"))",
+                allow_key: None,
+            });
+        }
+
+        // ---- hot-path clock ----
+        if rel.starts_with("cp/")
+            && t.text == "Instant"
+            && nxt == ":"
+            && nxt2 == ":"
+            && txt(i + 3) == "now"
+            && fname != "watchdog_tick"
+        {
+            out.push(Violation {
+                rule: "MC-CLOCK",
+                file: rel.to_string(),
+                line: t.line,
+                msg: format!("Instant::now() in cp/ fn {fname}"),
+                hint: "hot loops poll the watchdog's cached tick instead of the OS clock",
+                allow_key: None,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::allowlist::Allowlist;
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run(rel: &str, src: &str, allow: &Allowlist) -> Vec<Violation> {
+        let mut used = vec![false; allow.len()];
+        lint_file(rel, &lex(src), allow, &mut used)
+    }
+
+    fn empty() -> Allowlist {
+        Allowlist::parse("")
+    }
+
+    // ---- MC-ORD1 / MC-ORD2 ----
+
+    #[test]
+    fn relaxed_on_control_flag_violates() {
+        let src = "fn f(a: &AtomicBool) { a.shutdown.load(Ordering::Relaxed); }";
+        let v = run("serve/mod.rs", src, &empty());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "MC-ORD2");
+        assert_eq!(v[0].line, 1);
+        assert!(v[0].msg.contains("shutdown"));
+    }
+
+    #[test]
+    fn acquire_on_control_flag_conforms() {
+        let src = "fn f(a: &Inner) { a.shutdown.load(Ordering::Acquire); }";
+        assert!(run("serve/mod.rs", src, &empty()).is_empty());
+    }
+
+    #[test]
+    fn relaxed_counter_is_ord1_and_allowlistable() {
+        let src = "fn f(s: &Stats) { s.cache_hits.fetch_add(1, Ordering::Relaxed); }";
+        let v = run("serve/mod.rs", src, &empty());
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "MC-ORD1");
+        let allow =
+            Allowlist::parse("relaxed serve/mod.rs cache_hits — monotone stat counter\n");
+        assert!(run("serve/mod.rs", src, &allow).is_empty());
+    }
+
+    #[test]
+    fn relaxed_in_test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n fn f(a: &A) { a.stop.store(true, Ordering::Relaxed); }\n}";
+        assert!(run("serve/mod.rs", src, &empty()).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_is_not_a_gate() {
+        let src = "#[cfg(not(any(test, feature = \"failpoints\")))]\nfn f(a: &A) { a.stop.load(Ordering::Relaxed); }";
+        let v = run("serve/mod.rs", src, &empty());
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "MC-ORD2");
+    }
+
+    // ---- MC-PANIC ----
+
+    #[test]
+    fn bare_unwrap_in_solve_path_violates() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let v = run("serve/queue.rs", src, &empty());
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "MC-PANIC");
+        assert_eq!(v[0].line, 1);
+        assert!(v[0].msg.contains("fn f"));
+    }
+
+    #[test]
+    fn unwrap_outside_solve_path_conforms() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert!(run("bench/mod.rs", src, &empty()).is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_test_fn_conforms() {
+        let src = "#[test]\nfn t() { Some(1).unwrap(); }";
+        assert!(run("serve/queue.rs", src, &empty()).is_empty());
+    }
+
+    #[test]
+    fn expect_and_panic_macros_violate() {
+        let src = "fn f(x: Option<u32>) { x.expect(\"boom\"); }\nfn g() { panic!(\"no\"); }\nfn h() { unreachable!() }";
+        let v = run("cp/engine.rs", src, &empty());
+        assert_eq!(v.len(), 3, "{v:?}");
+        assert!(v.iter().all(|v| v.rule == "MC-PANIC"));
+        assert_eq!(v[1].line, 2);
+    }
+
+    #[test]
+    fn unwrap_or_variants_conform() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) + x.unwrap_or_default() }";
+        assert!(run("cp/engine.rs", src, &empty()).is_empty());
+    }
+
+    #[test]
+    fn panic_allowlisted_by_fn_name() {
+        let src = "fn assign(&mut self, v: i64) { self.x.expect(\"in domain\"); }";
+        let allow = Allowlist::parse("panic cp/domain.rs assign — caller-proven invariant\n");
+        assert!(run("cp/domain.rs", src, &allow).is_empty());
+    }
+
+    // ---- MC-LOCK ----
+
+    #[test]
+    fn raw_lock_violates_and_lock_recover_body_is_exempt() {
+        let bad = "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap(); }";
+        let v = run("coordinator/mod.rs", bad, &empty());
+        assert!(v.iter().any(|v| v.rule == "MC-LOCK"), "{v:?}");
+        let good = "pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> { m.lock().unwrap_or_else(|p| p.into_inner()) }";
+        assert!(run("util/mod.rs", good, &empty()).is_empty());
+    }
+
+    // ---- MC-GATE-FP ----
+
+    #[test]
+    fn ungated_failpoint_call_violates_and_gated_conforms() {
+        let bad = "fn f() { crate::util::failpoint::reset(); }";
+        let v = run("bench/serve.rs", bad, &empty());
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "MC-GATE-FP");
+        let good = "fn f() {\n #[cfg(any(test, feature = \"failpoints\"))]\n crate::util::failpoint::reset();\n}";
+        assert!(run("bench/serve.rs", good, &empty()).is_empty());
+    }
+
+    // ---- MC-CLOCK ----
+
+    #[test]
+    fn instant_now_in_cp_violates_outside_watchdog_tick() {
+        let bad = "fn hot() { let t = Instant::now(); }";
+        let v = run("cp/engine.rs", bad, &empty());
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "MC-CLOCK");
+        let good = "fn watchdog_tick() { let t = Instant::now(); }";
+        assert!(run("cp/engine.rs", good, &empty()).is_empty());
+        // outside cp/ the clock is free
+        assert!(run("serve/mod.rs", bad, &empty()).is_empty());
+    }
+
+    // ---- scope tracking corner cases ----
+
+    #[test]
+    fn attribute_on_statement_gates_its_tokens() {
+        let src = "fn f() {\n #[cfg(any(test, feature = \"failpoints\"))]\n if crate::util::failpoint::hit(\"x\").is_some() { return; }\n}";
+        assert!(run("coordinator/mod.rs", src, &empty()).is_empty());
+    }
+
+    #[test]
+    fn closure_inherits_enclosing_fn_name() {
+        let src = "fn lock_recover(m: &M) { m.with(|| { m.lock() }); }";
+        // `.lock()` inside the closure is still inside fn lock_recover
+        assert!(run("util/mod.rs", src, &empty()).is_empty());
+    }
+}

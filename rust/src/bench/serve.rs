@@ -174,7 +174,10 @@ pub fn bench_serve_json(
     quick: bool,
     socket: Option<&std::path::Path>,
 ) -> crate::util::Result<()> {
-    crate::util::failpoint::reset(); // re-arm from MOCCASIN_FAILPOINTS
+    // re-arm from MOCCASIN_FAILPOINTS (fault injection only exists
+    // under its gate; the bench runs clean without it)
+    #[cfg(any(test, feature = "failpoints"))]
+    crate::util::failpoint::reset();
     let levels: &[usize] = if quick { &[4, 16] } else { &[4, 16, 64] };
     let deadline = Duration::from_secs(if quick { 10 } else { 20 });
     let workers = 2;

@@ -47,6 +47,10 @@ pub enum CheckmateError {
         /// Kernel statistics of the failed branch & bound.
         stats: crate::cp::SearchStats,
     },
+    /// A model-construction invariant failed (e.g. a free-column lookup
+    /// missed during build). Continuing would emit an unsound model, so
+    /// the attempt is abandoned with this structured error instead.
+    Internal(&'static str),
 }
 
 impl std::fmt::Display for CheckmateError {
@@ -56,6 +60,9 @@ impl std::fmt::Display for CheckmateError {
                 write!(f, "model too large: {vars} vars, {terms} constraint terms")
             }
             CheckmateError::NoSolution { .. } => write!(f, "no solution within limits"),
+            CheckmateError::Internal(what) => {
+                write!(f, "internal model-construction error: {what}")
+            }
         }
     }
 }
@@ -202,7 +209,9 @@ fn build(
     // consumers pb' > pb of the same producer
     for (e, &(pa, pb, _)) in edges_pos.iter().enumerate() {
         for t in pb..=n {
-            let f = layout.free(t, e).unwrap();
+            let Some(f) = layout.free(t, e) else {
+                return Err(CheckmateError::Internal("free-column lookup missed in build"));
+            };
             push(vec![(1, f), (-1, layout.r(t, pb))], 0, &mut terms);
             for (e2, &(pa2, pb2, _)) in edges_pos.iter().enumerate() {
                 if e2 != e && pa2 == pa && pb2 > pb && pb2 <= t {

@@ -349,10 +349,7 @@ impl Coordinator {
                                 (me.retry_after_panic(graph, req, i, &note), false)
                             }
                         };
-                        match slots[j].lock() {
-                            Ok(mut g) => *g = Some(resp),
-                            Err(poisoned) => *poisoned.into_inner() = Some(resp),
-                        }
+                        *crate::util::lock_recover(&slots[j]) = Some(resp);
                     });
                 }
             });
@@ -469,10 +466,12 @@ impl Coordinator {
         if crate::util::failpoint::hit("coordinator.solve").is_some() {
             return member_failure_response("failpoint 'coordinator.solve': injected failure");
         }
-        let order = req
-            .order
-            .clone()
-            .unwrap_or_else(|| topological_order(graph).expect("DAG required"));
+        let order = match req.order.clone().or_else(|| topological_order(graph)) {
+            Some(o) => o,
+            // cycle: no schedule exists; answer structurally, like any
+            // other member failure, instead of unwinding
+            None => return member_failure_response("graph is not a DAG (cycle detected)"),
+        };
         match req.backend {
             Backend::Moccasin => {
                 let inc = Arc::new(Incumbent::new());

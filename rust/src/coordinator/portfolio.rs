@@ -192,8 +192,11 @@ pub fn solve_portfolio(
     cfg: &PortfolioConfig,
 ) -> SolveResponse {
     let threads = cfg.effective_threads();
-    let base_order =
-        order.unwrap_or_else(|| topological_order(graph).expect("DAG required"));
+    let base_order = match order.or_else(|| topological_order(graph)) {
+        Some(o) => o,
+        // cycle: no schedule exists; fail structurally like any member
+        None => return super::member_failure_response("graph is not a DAG (cycle detected)"),
+    };
     let shared = Shared {
         incumbent: Arc::new(Incumbent::new()),
         best: Mutex::new(None),

@@ -1152,7 +1152,7 @@ impl PropagationEngine {
     /// entered. In naive mode every propagator is re-enqueued instead.
     pub fn undo_to(&mut self, mark: usize) {
         while self.trail.len() > mark {
-            let e = self.trail.pop().unwrap();
+            let Some(e) = self.trail.pop() else { break };
             self.doms.restore(VarId(e.var), (e.old_lo, e.old_hi));
             if self.expl.enabled {
                 // keep the provenance columns, per-var entry chain and

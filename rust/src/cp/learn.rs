@@ -230,7 +230,7 @@ impl BranchHeap {
     pub fn pop(&mut self, act: &VarActivity, pos_var: &[u32]) -> Option<u32> {
         let top = *self.heap.first()?;
         self.loc[top as usize] = Self::ABSENT;
-        let last = self.heap.pop().unwrap();
+        let last = self.heap.pop()?;
         if !self.heap.is_empty() {
             self.heap[0] = last;
             self.loc[last as usize] = 0;
@@ -533,7 +533,7 @@ impl NoGoodDb {
         if long_acts.is_empty() {
             return;
         }
-        long_acts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        long_acts.sort_by(f64::total_cmp);
         let threshold = long_acts[long_acts.len() / 2];
         let old = std::mem::take(&mut self.nogoods);
         for w in self.watches.iter_mut() {
@@ -762,22 +762,22 @@ pub(crate) fn analyze(
 
     let assertion = match assertion {
         Some(a) => a,
-        None if !kept.is_empty() => kept.pop().unwrap(),
-        None => {
-            // No current-level literal at all (e.g. a conflict fired by
-            // an in-place objective tightening after a solution): the
-            // deepest lower-level literal becomes the assertion.
-            if rest.is_empty() {
-                return Analyzed::Root;
+        None => match kept.pop() {
+            Some(a) => a,
+            None => {
+                // No current-level literal at all (e.g. a conflict fired
+                // by an in-place objective tightening after a solution):
+                // the deepest lower-level literal becomes the assertion;
+                // with no lower-level literal either, the conflict holds
+                // at the root.
+                let Some(deepest) =
+                    rest.iter().enumerate().max_by_key(|(_, &(lvl, _))| lvl).map(|(i, _)| i)
+                else {
+                    return Analyzed::Root;
+                };
+                rest.swap_remove(deepest).1
             }
-            let deepest = rest
-                .iter()
-                .enumerate()
-                .max_by_key(|(_, &(lvl, _))| lvl)
-                .map(|(i, _)| i)
-                .unwrap();
-            rest.swap_remove(deepest).1
-        }
+        },
     };
 
     // Drop lower-level literals the assertion already entails (same

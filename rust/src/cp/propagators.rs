@@ -159,8 +159,12 @@ impl ExplState {
         self.old_val.pop();
         self.reason_of.pop();
         self.expl_off.pop();
-        self.arena.truncate(*self.expl_off.last().expect("expl_off never empty") as usize);
-        self.prev.pop().expect("pop_meta on empty provenance")
+        // `expl_off` carries a base entry, so `last` only misses if the
+        // columns were popped past empty — degrade to a full arena clear
+        // and a NO_ENTRY link rather than panicking mid-backtrack.
+        let base = self.expl_off.last().copied().unwrap_or(0);
+        self.arena.truncate(base as usize);
+        self.prev.pop().unwrap_or(NO_ENTRY)
     }
 }
 
@@ -1106,8 +1110,12 @@ fn prop_cover(
     // candidate windows. Explanation: the target is active, every
     // candidate outside `possible` is excluded, and each possible
     // candidate's own window bound caps what it could cover.
-    let lo = possible.iter().map(|&j| ctx.min(candidates[j as usize].1) + 1).min().unwrap();
-    let hi = possible.iter().map(|&j| ctx.max(candidates[j as usize].2)).max().unwrap();
+    let (Some(lo), Some(hi)) = (
+        possible.iter().map(|&j| ctx.min(candidates[j as usize].1) + 1).min(),
+        possible.iter().map(|&j| ctx.max(candidates[j as usize].2)).max(),
+    ) else {
+        return Ok(()); // unreachable: `possible` is non-empty past the check above
+    };
     if lo > ctx.min(start) {
         if ctx.explaining() {
             explain_cover_window(active, start, candidates, possible, true, ctx);

@@ -64,6 +64,7 @@
 #[global_allocator]
 static COUNTING_ALLOC: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
 
+pub mod analysis;
 pub mod generators;
 pub mod graph;
 pub mod util;

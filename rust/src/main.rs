@@ -18,6 +18,9 @@
 //!           [--deadline-ms MS] [--stall-ms MS]   (NDJSON over a Unix socket)
 //!   train   [--steps N] [--budget-frac F]   (requires `make artifacts`
 //!           and a build with `--features pjrt`)
+//!   lint    [--json] [--fix-allowlist] [--root DIR]   (in-tree static
+//!           analysis: atomic-ordering / panic-safety / gate-hygiene
+//!           contracts; exit 1 on violations, see docs/CONCURRENCY.md)
 //!
 //! Std-only argument parsing (the build is fully offline).
 
@@ -250,6 +253,11 @@ fn main() {
                 }
             }
         }
+        Some("lint") => {
+            // static-analysis pass over rust/src/** (see docs/CONCURRENCY.md);
+            // exit 0 clean / 1 violations / 2 usage, like `bench compare`
+            std::process::exit(moccasin::analysis::lint_main(&args[1..]));
+        }
         Some("sweep") => {
             let (spec, g) = graph_or_exit(&args);
             let fracs: Vec<f64> = flag_val(&args, "--fracs")
@@ -465,7 +473,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: moccasin <solve|sweep|bench|serve|train> [options]\n\
+                "usage: moccasin <solve|sweep|bench|serve|train|lint> [options]\n\
                    solve --graph <G1..G4|RW1..RW4|CM1|CM2|L1..L4|rl:n:m:seed> \
                  [--budget-frac F] \
                  [--backend moccasin|checkmate|lp-rounding|portfolio] [--portfolio] \
@@ -482,7 +490,9 @@ fn main() {
                  [--threshold-pct P] [--warn-only] [--report PATH]\n\
                    serve [--socket PATH] [--workers N] [--queue-cap N] [--cache-cap N] \
                  [--deadline-ms MS] [--stall-ms MS]\n\
-                   train [--steps N] [--budget-frac F]"
+                   train [--steps N] [--budget-frac F]\n\
+                   lint [--json] [--fix-allowlist] [--root DIR]   \
+                 (in-tree static analysis; exit 1 on violations)"
             );
             std::process::exit(2);
         }

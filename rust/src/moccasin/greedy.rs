@@ -113,17 +113,19 @@ fn gen_candidates(graph: &Graph, st: &State, budget: u64) -> Vec<Cand> {
     let mut seen_move = std::collections::HashSet::new();
     for &hot_pos in &hot {
         for (p, cons) in consumers.iter().enumerate() {
-            if p >= hot_pos || cons.is_empty() {
+            if p >= hot_pos {
                 continue;
             }
+            let Some(&last_use) = cons.last() else { continue };
             let v = seq[p];
-            if *cons.last().unwrap() <= hot_pos {
+            if last_use <= hot_pos {
                 continue; // not live past this hot position
             }
             if cons.iter().any(|&q| q == hot_pos) {
                 continue; // input of the hot op: unavoidable there
             }
-            let nxt = *cons.iter().find(|&&q| q > hot_pos).unwrap();
+            // `last_use > hot_pos` above guarantees a later consumer
+            let Some(&nxt) = cons.iter().find(|&&q| q > hot_pos) else { continue };
             if !seen_move.insert((v, nxt)) {
                 continue;
             }
@@ -290,7 +292,8 @@ pub fn greedy_remat(graph: &Graph, order: &[NodeId], budget: u64) -> Option<Rema
                         match ns {
                             Some(ns) => eprintln!(
                                 "  cand node={} size={} ins={} chain={} -> of={} peak={}",
-                                c.chain.last().unwrap(), c.size, c.insert_at, c.chain.len(),
+                                c.chain.last().copied().unwrap_or_default(),
+                                c.size, c.insert_at, c.chain.len(),
                                 ns.overflow, ns.ev.peak_mem
                             ),
                             None => eprintln!("  cand invalid"),

@@ -110,7 +110,7 @@ fn stages_of_incumbent(
             // remat inside stage `next_stage`; a node occupies one slot
             // per stage, so a duplicate (same node, same stage) would be
             // invalid — merge it (it's redundant anyway).
-            if *stage_of[xi].last().unwrap() != next_stage {
+            if stage_of[xi].last() != Some(&next_stage) {
                 stage_of[xi].push(next_stage);
             }
         }

@@ -175,8 +175,27 @@ impl MoccasinSolver {
             (Some(a), _) => Presolve::with_shared(Arc::clone(a), self.presolve),
             (None, _) => Presolve::new(graph, self.presolve),
         };
-        let order =
-            order.unwrap_or_else(|| topological_order(graph).expect("graph must be a DAG"));
+        let order = match order.or_else(|| topological_order(graph)) {
+            Some(o) => o,
+            None => {
+                // cyclic input: no schedule exists; report a structured
+                // failure instead of unwinding through the caller
+                let rung = match self.search.mode {
+                    SearchMode::Learned => Rung::Learned,
+                    SearchMode::Chronological => Rung::Chronological,
+                };
+                let mut degradation = Degradation::clean(rung);
+                degradation.note_failure("input graph is not a DAG (cycle detected)".to_string());
+                return SolveOutcome {
+                    best: None,
+                    trace: Vec::new(),
+                    proved_optimal: false,
+                    phase1_time: Duration::ZERO,
+                    stats: SearchStats::default(),
+                    degradation,
+                };
+            }
+        };
         let mut trace: Vec<ProgressPoint> = Vec::new();
         let mut best: Option<RematSolution> = None;
         let mut proved_optimal = false;
@@ -285,7 +304,26 @@ impl MoccasinSolver {
         // ---- Phase 2: duration minimization, warm-started ----
         // 2a. Remat-removal polish: drop recomputations whose removal
         //     keeps the sequence within budget (strictly improving).
-        let polished = lns::removal_polish(graph, best.as_ref().unwrap(), budget);
+        let polished = match best.as_ref() {
+            Some(cur) => lns::removal_polish(graph, cur, budget),
+            None => {
+                // Phase 1 returned a solution but validation rejected it
+                // (record left `best` empty): report failure instead of
+                // polishing nothing.
+                let mut degradation = Degradation::clean(configured_rung);
+                degradation.spend.presolve_ms = phase1_time.as_millis() as u64;
+                degradation
+                    .note_failure("phase-1 solution failed validation".to_string());
+                return SolveOutcome {
+                    best,
+                    trace,
+                    proved_optimal,
+                    phase1_time,
+                    stats,
+                    degradation,
+                };
+            }
+        };
         record(&polished, &mut trace, &mut best);
 
         // 2b/2c. Improvement phase, run down the degradation ladder.
@@ -360,7 +398,9 @@ impl MoccasinSolver {
                             .unwrap_or(false);
                 }
                 let mut polish_ms = 0u64;
-                if !proved {
+                // `best` is Some by phase-2 entry; the guard keeps the
+                // LNS start well-defined even if a record path drained it
+                if let Some(start) = if proved { None } else { best.clone() } {
                     let t0 = deadline.elapsed();
                     let mut rng = Rng::seed_from_u64(seed);
                     lns::lns_loop(
@@ -374,7 +414,7 @@ impl MoccasinSolver {
                         &pre,
                         *strat,
                         &mut ctx,
-                        best.clone().unwrap(),
+                        start,
                         &mut astats,
                         |sol| record(sol, &mut trace, &mut best),
                     );

@@ -131,7 +131,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -198,7 +198,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             let Some(c) = self.peek() else {
@@ -228,7 +228,7 @@ impl<'a> Parser<'a> {
                             let cp = if (0xD800..0xDC00).contains(&cp) {
                                 if self.peek() == Some(b'\\') {
                                     self.i += 1;
-                                    self.expect(b'u')?;
+                                    self.expect_byte(b'u')?;
                                     let lo = self.hex4()?;
                                     0x10000 + ((cp - 0xD800) << 10) + (lo.wrapping_sub(0xDC00))
                                 } else {
@@ -269,7 +269,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self, depth: usize) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut members = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -280,7 +280,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let v = self.value(depth + 1)?;
             members.push((key, v));
             self.skip_ws();
@@ -296,7 +296,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self, depth: usize) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {

@@ -361,13 +361,12 @@ pub(crate) struct ServiceInner {
     pub(crate) worker_handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
-/// Recover a poisoned service lock: every guarded structure here (a
-/// `VecDeque`, a `HashMap`, an `LruCache`) is only ever mutated in
-/// single statements, so poisoning carries no broken invariant — and
-/// the service must keep draining its queue even after a worker panic.
-pub(crate) fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
-    m.lock().unwrap_or_else(|p| p.into_inner())
-}
+// Every service lock goes through the shared recovering helper: the
+// guarded structures here (a `VecDeque`, a `HashMap`, an `LruCache`)
+// are only ever mutated in single statements, so poisoning carries no
+// broken invariant — and the service must keep draining its queue even
+// after a worker panic.
+pub(crate) use crate::util::lock_recover;
 
 impl ServiceInner {
     /// Deliver `outcome` as the job's terminal iff no other path beat
@@ -383,7 +382,7 @@ impl ServiceInner {
         };
         if handle.finish(outcome) {
             ServiceStats::bump(class);
-            lock(&self.jobs).remove(&handle.id);
+            lock_recover(&self.jobs).remove(&handle.id);
             true
         } else {
             false
@@ -453,8 +452,18 @@ impl SolverService {
             stats: ServiceStats::default(),
             worker_handles: Mutex::new(Vec::new()),
         });
+        let mut spawned = 0usize;
         for idx in 0..workers {
-            worker::spawn_worker(&inner, idx);
+            if worker::spawn_worker(&inner, idx) {
+                spawned += 1;
+            }
+        }
+        if spawned == 0 {
+            // No worker could start: flip shutdown so every submit is
+            // answered with a structured Overloaded terminal instead of
+            // queueing jobs nothing will ever drain.
+            eprintln!("serve: no worker threads available; service starts shut down");
+            inner.shutdown.store(true, Ordering::Release);
         }
         queue::spawn_sweeper(&inner);
         SolverService { inner, joined: AtomicBool::new(false) }
@@ -469,7 +478,7 @@ impl SolverService {
         let id = inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let handle = JobHandle::new(id, events);
         ServiceStats::bump(&inner.stats.submitted);
-        lock(&inner.jobs).insert(id, Arc::clone(&handle));
+        lock_recover(&inner.jobs).insert(id, Arc::clone(&handle));
         if inner.shutdown.load(Ordering::Acquire) {
             inner.finish(
                 &handle,
@@ -482,7 +491,7 @@ impl SolverService {
             return id;
         }
         let deadline_ms = req.deadline.as_millis() as u64;
-        let mut q = lock(&inner.queue);
+        let mut q = lock_recover(&inner.queue);
         // re-check under the queue lock: shutdown drains the queue while
         // holding it, and a job enqueued after that drain would never be
         // dispatched (and so never answered)
@@ -537,7 +546,7 @@ impl SolverService {
     /// unknown or already terminated (signals are then no-ops — the
     /// terminal has been delivered).
     pub fn control(&self, job: JobId, signal: ControlSignal) -> bool {
-        let handle = lock(&self.inner.jobs).get(&job).cloned();
+        let handle = lock_recover(&self.inner.jobs).get(&job).cloned();
         let Some(handle) = handle else {
             return false;
         };
@@ -564,14 +573,14 @@ impl SolverService {
 
     /// Queued (admitted, not yet dispatched) request count.
     pub fn queue_len(&self) -> usize {
-        lock(&self.inner.queue).len()
+        lock_recover(&self.inner.queue).len()
     }
 
     /// Schedule-cache observability: (hits, misses, evictions, len) of
     /// the shared cache — lookup counters, not the request-level
     /// `cache_hits` in [`ServiceStats`].
     pub fn cache_counters(&self) -> (u64, u64, u64, usize) {
-        let c = lock(&self.inner.cache);
+        let c = lock_recover(&self.inner.cache);
         (c.hits, c.misses, c.evictions, c.len())
     }
 
@@ -585,7 +594,7 @@ impl SolverService {
         let inner = &self.inner;
         inner.shutdown.store(true, Ordering::Release);
         // fail everything still queued (each gets its one terminal)
-        let drained: Vec<QueuedJob> = lock(&inner.queue).drain(..).collect();
+        let drained: Vec<QueuedJob> = lock_recover(&inner.queue).drain(..).collect();
         for job in drained {
             inner.finish(
                 &job.handle,
@@ -593,14 +602,14 @@ impl SolverService {
             );
         }
         // ask in-flight sessions to yield their best-so-far
-        for handle in lock(&inner.jobs).values() {
+        for handle in lock_recover(&inner.jobs).values() {
             handle.incumbent.preempt();
         }
         inner.available.notify_all();
         // dying workers may push replacement handles while we join, so
         // drain until the vector stays empty
         loop {
-            let h = lock(&inner.worker_handles).pop();
+            let h = lock_recover(&inner.worker_handles).pop();
             match h {
                 Some(h) => {
                     let _ = h.join();

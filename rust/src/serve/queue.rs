@@ -6,7 +6,7 @@
 //! wins. Losers (e.g. a sweeper expiring a job the instant a worker
 //! dequeues it) see `false` and drop their outcome.
 
-use super::{lock, JobId, ServeEvent, ServeRequest, ServiceInner, Terminal};
+use super::{lock_recover, JobId, ServeEvent, ServeRequest, ServiceInner, Terminal};
 use crate::util::Incumbent;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -48,7 +48,7 @@ impl JobHandle {
     /// Best-effort progress event: a submitter that dropped its
     /// receiver just stops listening — never an error.
     pub(crate) fn emit(&self, ev: ServeEvent) {
-        let _ = lock(&self.events).send(ev);
+        let _ = lock_recover(&self.events).send(ev);
     }
 
     /// Deliver the terminal iff this caller wins the race. Exactly one
@@ -115,7 +115,7 @@ fn undispatchable_outcome(job: &QueuedJob) -> Option<Terminal> {
 fn sweep_queue(inner: &ServiceInner) {
     let mut finish: Vec<(Arc<JobHandle>, Terminal)> = Vec::new();
     {
-        let mut q = lock(&inner.queue);
+        let mut q = lock_recover(&inner.queue);
         q.retain(|job| match undispatchable_outcome(job) {
             Some(outcome) => {
                 finish.push((Arc::clone(&job.handle), outcome));
@@ -142,7 +142,7 @@ pub(crate) fn next_job(inner: &ServiceInner) -> Option<QueuedJob> {
         }
         sweep_queue(inner);
         {
-            let mut q = lock(&inner.queue);
+            let mut q = lock_recover(&inner.queue);
             if let Some(job) = q.pop_front() {
                 return Some(job);
             }
@@ -163,7 +163,7 @@ pub(crate) fn next_job(inner: &ServiceInner) -> Option<QueuedJob> {
 /// to learn it expired.
 pub(crate) fn spawn_sweeper(inner: &Arc<ServiceInner>) {
     let owned = Arc::clone(inner);
-    let h = std::thread::Builder::new()
+    let spawned = std::thread::Builder::new()
         .name("moccasin-serve-sweep".to_string())
         .spawn(move || loop {
             if owned.shutdown.load(Ordering::Acquire) {
@@ -171,7 +171,12 @@ pub(crate) fn spawn_sweeper(inner: &Arc<ServiceInner>) {
             }
             sweep_queue(&owned);
             std::thread::sleep(Duration::from_millis(10));
-        })
-        .expect("spawn sweeper thread");
-    lock(&inner.worker_handles).push(h);
+        });
+    match spawned {
+        Ok(h) => lock_recover(&inner.worker_handles).push(h),
+        // Degraded but functional: without the sweeper, expired queued
+        // jobs are still answered at dispatch (next_job re-checks the
+        // deadline) — expiry is just no longer proactive.
+        Err(e) => eprintln!("serve: could not spawn sweeper thread: {e}"),
+    }
 }

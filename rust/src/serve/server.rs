@@ -9,6 +9,7 @@
 
 use super::wire::{self, WireMsg};
 use super::{ServeConfig, ServeEvent, SolverService};
+use crate::util::lock_recover;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -57,7 +58,7 @@ impl Server {
 /// Write one NDJSON line (shared by the event pump and the reader's
 /// error answers; the mutex keeps lines whole).
 fn send_line(out: &Mutex<BufWriter<UnixStream>>, line: &str) -> bool {
-    let mut w = out.lock().unwrap_or_else(|p| p.into_inner());
+    let mut w = lock_recover(out);
     w.write_all(line.as_bytes()).and_then(|_| w.write_all(b"\n")).and_then(|_| w.flush()).is_ok()
 }
 
@@ -79,7 +80,7 @@ fn handle_connection(stream: UnixStream, svc: &SolverService, cfg: &ServeConfig)
                 // ends when every sender is gone: the reader's handle on
                 // EOF plus each job's handle at its terminal
                 while let Ok(ev) = rx.recv() {
-                    let mut map = tags.lock().unwrap_or_else(|p| p.into_inner());
+                    let mut map = lock_recover(&tags);
                     let (job, terminal) = match &ev {
                         ServeEvent::Queued { job, .. }
                         | ServeEvent::Started { job, .. }
@@ -98,7 +99,13 @@ fn handle_connection(stream: UnixStream, svc: &SolverService, cfg: &ServeConfig)
                     }
                 }
             })
-            .expect("spawn event pump")
+    };
+    // No pump thread means no way to deliver events for this
+    // connection: drop it (the client sees EOF and can reconnect)
+    // instead of taking the whole accept loop down.
+    let Ok(pump) = pump else {
+        eprintln!("serve: could not spawn event pump; dropping connection");
+        return;
     };
 
     let reader = BufReader::new(stream);
@@ -109,7 +116,7 @@ fn handle_connection(stream: UnixStream, svc: &SolverService, cfg: &ServeConfig)
         }
         match wire::parse_line(&line, cfg) {
             Ok(WireMsg::Submit { req, tag }) => {
-                let mut map = tags.lock().unwrap_or_else(|p| p.into_inner());
+                let mut map = lock_recover(&tags);
                 let id = svc.submit(req, tx.clone());
                 map.insert(id, tag);
             }

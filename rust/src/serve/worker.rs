@@ -7,7 +7,7 @@
 //! with the first attempt recorded in its degradation provenance, and
 //! (b) respawns a replacement thread so the pool never shrinks.
 
-use super::{lock, queue, JobHandle, QueuedJob, ServeEvent, ServiceInner, ServiceStats, Terminal};
+use super::{lock_recover, queue, JobHandle, QueuedJob, ServeEvent, ServiceInner, ServiceStats, Terminal};
 use crate::coordinator::{Backend, Coordinator, SolveRequest, SolveResponse};
 use crate::coordinator::{Watchdog, WatchdogConfig};
 use crate::moccasin::MoccasinSolver;
@@ -49,14 +49,24 @@ fn coord_request(inner: &ServiceInner, job: &QueuedJob) -> SolveRequest {
 }
 
 /// Spawn worker `idx` (also used to respawn after a death). The handle
-/// is pushed into `worker_handles` for shutdown to join.
-pub(crate) fn spawn_worker(inner: &Arc<ServiceInner>, idx: usize) {
+/// is pushed into `worker_handles` for shutdown to join. Returns
+/// whether the OS granted the thread: a failed spawn shrinks the pool
+/// instead of panicking (the caller decides what an empty pool means).
+pub(crate) fn spawn_worker(inner: &Arc<ServiceInner>, idx: usize) -> bool {
     let owned = Arc::clone(inner);
-    let h = std::thread::Builder::new()
+    let spawned = std::thread::Builder::new()
         .name(format!("moccasin-serve-{idx}"))
-        .spawn(move || worker_loop(&owned, idx))
-        .expect("spawn serve worker thread");
-    lock(&inner.worker_handles).push(h);
+        .spawn(move || worker_loop(&owned, idx));
+    match spawned {
+        Ok(h) => {
+            lock_recover(&inner.worker_handles).push(h);
+            true
+        }
+        Err(e) => {
+            eprintln!("serve: could not spawn worker {idx}: {e}");
+            false
+        }
+    }
 }
 
 fn worker_loop(inner: &Arc<ServiceInner>, idx: usize) {
@@ -67,7 +77,7 @@ fn worker_loop(inner: &Arc<ServiceInner>, idx: usize) {
         // shared schedule cache: an identical request already solved
         // cleanly (any submitter, any time) is answered immediately
         let key = Coordinator::cache_key(&job.req.graph, &coord_request(inner, &job));
-        let cached = lock(&inner.cache).get(&key).cloned();
+        let cached = lock_recover(&inner.cache).get(&key).cloned();
         if let Some(mut resp) = cached {
             resp.from_cache = true;
             ServiceStats::bump(&inner.stats.cache_hits);
@@ -87,7 +97,7 @@ fn worker_loop(inner: &Arc<ServiceInner>, idx: usize) {
                 inner.update_ema(t0.elapsed().as_millis() as u64);
                 if cacheable {
                     if let Terminal::Solved(resp) = &terminal {
-                        lock(&inner.cache).insert(key, (**resp).clone());
+                        lock_recover(&inner.cache).insert(key, (**resp).clone());
                     }
                 }
                 inner.finish(&job.handle, terminal);
@@ -119,7 +129,7 @@ fn worker_loop(inner: &Arc<ServiceInner>, idx: usize) {
                     // drains the queue while holding it, so a retry
                     // pushed after that drain would never be dispatched
                     // and its job would lose its terminal
-                    let mut q = lock(&inner.queue);
+                    let mut q = lock_recover(&inner.queue);
                     if inner.shutdown.load(Ordering::Acquire) {
                         drop(q);
                         inner.finish(

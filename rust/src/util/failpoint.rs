@@ -31,6 +31,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
 
+// The registry's poison recovery (a panic *is* this module's product,
+// so a fired panic-action must not wedge the registry for later tests).
+use crate::util::lock_recover as lock;
+
 /// The fault a site injects when it fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailAction {
@@ -128,10 +132,6 @@ fn state() -> &'static State {
     })
 }
 
-fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
 /// Arm `site` with `action`, firing at most `count` times (`None` =
 /// unlimited). Overrides any previous arming of the same site,
 /// including one from `MOCCASIN_FAILPOINTS`.
@@ -140,12 +140,12 @@ pub fn arm(site: &str, action: FailAction, count: Option<u64>) {
     let mut pts = lock(&st.points);
     if action == FailAction::Off {
         if pts.remove(site).is_some() {
-            st.armed.fetch_sub(1, Ordering::Relaxed);
+            st.armed.fetch_sub(1, Ordering::AcqRel);
         }
         return;
     }
     if pts.insert(site.to_string(), Armed { action, remaining: count }).is_none() {
-        st.armed.fetch_add(1, Ordering::Relaxed);
+        st.armed.fetch_add(1, Ordering::AcqRel);
     }
 }
 
@@ -160,7 +160,7 @@ pub fn reset() {
     let st = state();
     let map = parse_env();
     let mut pts = lock(&st.points);
-    st.armed.store(map.len(), Ordering::Relaxed);
+    st.armed.store(map.len(), Ordering::Release);
     *pts = map;
     lock(&st.fired).clear();
 }
@@ -176,7 +176,7 @@ pub fn fired(site: &str) -> u64 {
 /// (the overwhelmingly common case — one atomic load).
 pub fn hit(site: &str) -> Option<FailSignal> {
     let st = state();
-    if st.armed.load(Ordering::Relaxed) == 0 {
+    if st.armed.load(Ordering::Acquire) == 0 {
         return None;
     }
     let action = {
@@ -186,13 +186,13 @@ pub fn hit(site: &str) -> Option<FailSignal> {
         if let Some(rem) = &mut armed.remaining {
             if *rem == 0 {
                 pts.remove(site);
-                st.armed.fetch_sub(1, Ordering::Relaxed);
+                st.armed.fetch_sub(1, Ordering::AcqRel);
                 return None;
             }
             *rem -= 1;
             if *rem == 0 {
                 pts.remove(site);
-                st.armed.fetch_sub(1, Ordering::Relaxed);
+                st.armed.fetch_sub(1, Ordering::AcqRel);
             }
         }
         action

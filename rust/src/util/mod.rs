@@ -19,8 +19,28 @@ pub use incumbent::Incumbent;
 pub use lru::LruCache;
 pub use rng::Rng;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Acquire `m`, recovering from poisoning instead of panicking.
+///
+/// Every mutex in the runtime layers guards a structure that is only
+/// mutated in single statements (queues, maps, counters), so a panic
+/// while holding the lock leaves no broken invariant behind — the
+/// correct response is to keep going, not to cascade the panic into
+/// every other thread touching the lock. Each recovery is counted via
+/// [`events::note_lock_recovery`] so it surfaces in diagnostics instead
+/// of passing silently.
+///
+/// This is the *only* sanctioned way to lock a mutex outside tests:
+/// the `moccasin lint` panic-safety rule (`MC-LOCK`) flags every bare
+/// `.lock()` call that is not inside a function named `lock_recover`.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| {
+        events::note_lock_recovery();
+        p.into_inner()
+    })
+}
 
 /// A wall-clock deadline for anytime solvers, optionally carrying a
 /// shared [`Incumbent`] whose cancellation flag is polled alongside the

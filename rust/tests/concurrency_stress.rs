@@ -1,0 +1,387 @@
+//! Deterministic interleaving stress tests for the two concurrency
+//! invariants the serving tier leans on hardest:
+//!
+//! 1. **Exactly one terminal per job** — every delivery path (worker
+//!    completion, cancel, preempt, expiry sweep, shutdown drain) races
+//!    through one `compare_exchange` arbiter; whichever caller loses
+//!    must drop its outcome silently.
+//! 2. **`Incumbent::cancel` stickiness** — once any thread observes the
+//!    flag set it must stay set for every later read on every thread
+//!    (Release store / Acquire load on one `AtomicBool`).
+//!
+//! The tests are spawn-loops: each seed derives the whole interleaving
+//! schedule (thread counts, per-thread op mixes, signal choices) from a
+//! splitmix64 stream, so a failure reproduces from the seed printed in
+//! the assertion message. No sleeps anywhere — contention comes from
+//! running the same short race many times, not from timing.
+//!
+//! The nightly TSan CI tier re-runs this binary under
+//! `-Zsanitizer=thread` with `MOCCASIN_PROP_CASES` reduced (TSan's
+//! ~10× slowdown), so every interleaving exercised here is also a
+//! data-race witness. Under Miri the seed counts shrink further —
+//! interpreted execution is ~1000× slower, and Miri's weak-memory
+//! emulation gets its value from the op *mix*, not the rep count.
+
+use moccasin::graph::Graph;
+use moccasin::serve::{ControlSignal, ServeConfig, ServeEvent, ServeRequest, SolverService, Terminal};
+use moccasin::util::Incumbent;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Case-count multiplier (same contract as the property suites): the
+/// nightly deep-test job sets `MOCCASIN_PROP_CASES=10`, the TSan job
+/// sets it back down to keep wall-clock bounded under the sanitizer.
+fn prop_case_scale() -> u64 {
+    std::env::var("MOCCASIN_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(1)
+}
+
+/// Seeds per test: base count × env scale, shrunk under Miri (whose
+/// interpreter is slow enough that one seed already takes seconds).
+fn seed_count(base: u64) -> u64 {
+    if cfg!(miri) {
+        2
+    } else {
+        base * prop_case_scale()
+    }
+}
+
+/// splitmix64 — the repo's standard deterministic stream (same
+/// constants as `generators`): every schedule decision in these tests
+/// is a pure function of (seed, draw index).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Tiny chain with a known optimum (duration 6 at budget 10) — solves
+/// in well under a millisecond, so the signal storm genuinely races
+/// solve completion instead of always winning.
+fn chain() -> Graph {
+    Graph::from_edges(
+        "stress",
+        5,
+        &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+        vec![1; 5],
+        vec![5, 4, 4, 4, 1],
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Incumbent::cancel stickiness
+// ---------------------------------------------------------------------------
+
+/// N writer threads race records/beats/preempts against one cancelling
+/// thread while reader threads assert the stickiness contract: after
+/// the first `true` they observe, `is_cancelled()` never reads `false`
+/// again. Also checks the fetch-min bound converges to the true
+/// minimum published across all writers — cancellation must not tear
+/// the bound.
+#[test]
+fn incumbent_cancel_is_sticky_across_threads() {
+    for seed in 0..seed_count(40) {
+        let mut rng = Rng(0xC0FFEE ^ seed);
+        let writers = 2 + rng.below(3) as usize;
+        let ops_per_writer = if cfg!(miri) { 50 } else { 400 + rng.below(400) };
+        let cancel_after = rng.below(ops_per_writer);
+        let inc = Arc::new(Incumbent::new());
+        let regression = Arc::new(AtomicBool::new(false));
+        let true_min = Arc::new(AtomicU64::new(u64::MAX));
+
+        std::thread::scope(|s| {
+            for w in 0..writers {
+                let inc = Arc::clone(&inc);
+                let true_min = Arc::clone(&true_min);
+                let mut wrng = Rng(seed.wrapping_mul(0x9e37).wrapping_add(w as u64));
+                s.spawn(move || {
+                    for op in 0..ops_per_writer {
+                        match wrng.below(4) {
+                            0 => {
+                                let d = 1 + wrng.below(1000);
+                                true_min.fetch_min(d, Ordering::Relaxed);
+                                inc.record(d);
+                            }
+                            1 => inc.beat(),
+                            2 => {
+                                let _ = inc.best();
+                            }
+                            _ => {
+                                if w == 0 && op >= cancel_after {
+                                    inc.cancel();
+                                } else {
+                                    let _ = inc.should_stop();
+                                }
+                            }
+                        }
+                    }
+                    // writer 0 always cancels before exiting, so the
+                    // post-join assertions below are unconditional
+                    if w == 0 {
+                        inc.cancel();
+                    }
+                });
+            }
+            // two readers watch for a true -> false regression
+            for _ in 0..2 {
+                let inc = Arc::clone(&inc);
+                let regression = Arc::clone(&regression);
+                s.spawn(move || {
+                    let mut seen = false;
+                    for _ in 0..(if cfg!(miri) { 200 } else { 4000 }) {
+                        let now = inc.is_cancelled();
+                        if seen && !now {
+                            regression.store(true, Ordering::Release);
+                            return;
+                        }
+                        seen = seen || now;
+                        if seen {
+                            // stickiness also implies should_stop stays up
+                            if !inc.should_stop() {
+                                regression.store(true, Ordering::Release);
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        assert!(
+            !regression.load(Ordering::Acquire),
+            "cancel flag regressed from set to clear (seed {seed})"
+        );
+        assert!(inc.is_cancelled(), "cancel must be visible after join (seed {seed})");
+        let min = true_min.load(Ordering::Relaxed);
+        if min != u64::MAX {
+            assert_eq!(
+                inc.best(),
+                Some(min),
+                "shared bound must converge to the true minimum (seed {seed})"
+            );
+        } else {
+            assert_eq!(inc.best(), None, "no record, no bound (seed {seed})");
+        }
+    }
+}
+
+/// Preemption and cancellation are independent sticky flags sharing the
+/// stop surface: racing both must end with both set and neither state
+/// leaking into the other's accessor.
+#[test]
+fn incumbent_preempt_and_cancel_race_without_crosstalk() {
+    for seed in 0..seed_count(40) {
+        let inc = Arc::new(Incumbent::new());
+        std::thread::scope(|s| {
+            for flag in 0..2 {
+                let inc = Arc::clone(&inc);
+                let mut rng = Rng(seed ^ ((flag as u64) << 32));
+                s.spawn(move || {
+                    for _ in 0..rng.below(64) {
+                        inc.beat();
+                    }
+                    if flag == 0 {
+                        inc.cancel();
+                    } else {
+                        inc.preempt();
+                    }
+                });
+            }
+        });
+        assert!(inc.is_cancelled(), "seed {seed}");
+        assert!(inc.is_preempted(), "seed {seed}");
+        assert!(inc.should_stop(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serve: exactly one terminal per job under a signal storm
+// ---------------------------------------------------------------------------
+
+/// Drain a job channel until it disconnects (the service drops every
+/// sender clone once the job is finished and pruned) or goes quiet,
+/// returning all terminals received. The quiet window only matters in
+/// the disconnect-less tail; 2 s is far beyond any in-process delivery.
+fn drain_terminals(rx: &mpsc::Receiver<ServeEvent>) -> Vec<Terminal> {
+    let mut terminals = Vec::new();
+    while let Ok(ev) = rx.recv_timeout(Duration::from_secs(2)) {
+        if let ServeEvent::Terminal { outcome, .. } = ev {
+            terminals.push(outcome);
+        }
+    }
+    terminals
+}
+
+/// Submit a burst of fast jobs, then blast every job with a
+/// seed-derived mix of Cancel / Preempt / TightenBound signals from
+/// multiple threads while workers are completing them — every delivery
+/// path (solved, cancelled, preempted, shutdown-drain) races the same
+/// `finish` CAS. The contract: each channel sees exactly one terminal,
+/// no matter who wins.
+#[test]
+fn serve_delivers_exactly_one_terminal_under_signal_storm() {
+    let n_seeds = seed_count(10);
+    for seed in 0..n_seeds {
+        let mut rng = Rng(0x5EEDED ^ seed);
+        let jobs = if cfg!(miri) { 2 } else { 6 + rng.below(6) as usize };
+        let svc = Arc::new(SolverService::start(ServeConfig {
+            workers: 2,
+            queue_cap: 256,
+            cache_cap: 0, // every job must take the full solve path
+            ..Default::default()
+        }));
+        let graph = Arc::new(chain());
+
+        let mut rxs = Vec::with_capacity(jobs);
+        let mut ids = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            let (tx, rx) = mpsc::channel();
+            let req = ServeRequest {
+                deadline: Duration::from_secs(30),
+                ..ServeRequest::new(Arc::clone(&graph), 10)
+            };
+            ids.push(svc.submit(req, tx));
+            rxs.push(rx);
+        }
+
+        // signal storm: 3 threads, each walking the job list in a
+        // seed-derived order firing a seed-derived signal per job
+        std::thread::scope(|s| {
+            for t in 0..3u64 {
+                let svc = Arc::clone(&svc);
+                let ids = ids.clone();
+                let mut trng = Rng(seed.wrapping_mul(31).wrapping_add(t));
+                s.spawn(move || {
+                    let mut order: Vec<usize> = (0..ids.len()).collect();
+                    // Fisher-Yates from the seed stream
+                    for i in (1..order.len()).rev() {
+                        order.swap(i, trng.below(i as u64 + 1) as usize);
+                    }
+                    for &j in &order {
+                        match trng.below(4) {
+                            0 => {
+                                svc.control(ids[j], ControlSignal::Cancel);
+                            }
+                            1 => {
+                                svc.control(ids[j], ControlSignal::Preempt);
+                            }
+                            2 => {
+                                svc.control(ids[j], ControlSignal::TightenBound(7));
+                            }
+                            _ => {} // let this job race the workers untouched
+                        }
+                    }
+                });
+            }
+        });
+
+        // shutdown drains whatever is still queued (Failed terminals) —
+        // one more contender for the same CAS
+        svc.shutdown();
+
+        for (j, rx) in rxs.iter().enumerate() {
+            let terminals = drain_terminals(rx);
+            assert_eq!(
+                terminals.len(),
+                1,
+                "job {j} (id {}) received {} terminals, want exactly 1 (seed {seed}): {:?}",
+                ids[j],
+                terminals.len(),
+                terminals.iter().map(|t| t.name()).collect::<Vec<_>>()
+            );
+            // a solved terminal must still be the known optimum — the
+            // storm may stop work early but must never corrupt it
+            if let Terminal::Solved(resp) = &terminals[0] {
+                if let Some(sol) = &resp.solution {
+                    assert_eq!(sol.eval.duration, 6, "seed {seed} job {j}");
+                    assert!(sol.eval.peak_mem <= 10, "seed {seed} job {j}");
+                }
+            }
+        }
+    }
+}
+
+/// The storm test again, but with `workers: 1` and a queue deep enough
+/// that most jobs are still queued when the signals land — exercising
+/// the queued-side arbitration (sweeper + control path + shutdown
+/// drain) rather than the in-session side.
+#[test]
+fn serve_queued_jobs_also_get_exactly_one_terminal() {
+    for seed in 0..seed_count(10) {
+        let mut rng = Rng(0xABBA ^ seed);
+        let jobs = if cfg!(miri) { 3 } else { 8 };
+        let svc = Arc::new(SolverService::start(ServeConfig {
+            workers: 1,
+            queue_cap: 256,
+            cache_cap: 0,
+            ..Default::default()
+        }));
+        let graph = Arc::new(chain());
+
+        let mut rxs = Vec::with_capacity(jobs);
+        let mut ids = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            let (tx, rx) = mpsc::channel();
+            let req = ServeRequest {
+                deadline: Duration::from_secs(30),
+                ..ServeRequest::new(Arc::clone(&graph), 10)
+            };
+            ids.push(svc.submit(req, tx));
+            rxs.push(rx);
+        }
+
+        // cancel a seed-chosen half of the backlog from two racing
+        // threads (both threads target the SAME jobs — double-cancel
+        // must be as safe as one), then shut down under the rest
+        let victims: Vec<u64> =
+            ids.iter().copied().filter(|_| rng.below(2) == 0).collect();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let svc = Arc::clone(&svc);
+                let victims = victims.clone();
+                s.spawn(move || {
+                    for id in victims {
+                        svc.control(id, ControlSignal::Cancel);
+                    }
+                });
+            }
+        });
+        svc.shutdown();
+
+        for (j, rx) in rxs.iter().enumerate() {
+            let terminals = drain_terminals(rx);
+            assert_eq!(
+                terminals.len(),
+                1,
+                "job {j} (id {}) received {} terminals, want exactly 1 (seed {seed}): {:?}",
+                ids[j],
+                terminals.len(),
+                terminals.iter().map(|t| t.name()).collect::<Vec<_>>()
+            );
+        }
+        // cancelled victims must be answered as Cancelled or have lost
+        // the race to a worker that already finished them — but the
+        // stats ledger must balance either way
+        let s = svc.stats();
+        let answered = s.solved + s.cancelled + s.preempted + s.expired + s.failed + s.shed;
+        assert_eq!(
+            answered, jobs as u64,
+            "terminal ledger must balance: {s:?} (seed {seed})"
+        );
+    }
+}
